@@ -1,0 +1,71 @@
+//! Fig. 1 bench: regenerate the two-week LLM token-request series and
+//! verify/report its shape (small-model dominance, rapid intensity change,
+//! bursts), plus trace-generation throughput.
+//!
+//! Run: `cargo bench --bench fig1_workload` (BENCH_QUICK=1 for CI speed).
+
+use slit::config::{SystemConfig, MODELS};
+use slit::trace::Trace;
+use slit::util::benchkit::Bench;
+use slit::util::stats;
+
+fn main() {
+    let mut bench = Bench::new("fig1_workload");
+    let cfg = SystemConfig::paper_default();
+
+    // --- the Fig. 1 series itself -----------------------------------------
+    const TWO_WEEKS: usize = 14 * 96; // 1344 epochs of 15 min
+    let trace = Trace::generate(&cfg, TWO_WEEKS, cfg.seed);
+    let toks = trace.tokens_per_epoch();
+    let mean = stats::mean(&toks);
+    let (lo, hi) = stats::min_max(&toks);
+    bench.record_value("fig1: epochs", TWO_WEEKS as f64, "epochs");
+    bench.record_value("fig1: tokens/epoch mean", mean, "tokens");
+    bench.record_value("fig1: tokens/epoch min", lo, "tokens");
+    bench.record_value("fig1: tokens/epoch max (bursts)", hi, "tokens");
+    bench.record_value("fig1: burst ratio max/mean", hi / mean, "x");
+
+    // trend 1: small/old models dominate
+    let mut small = 0.0;
+    let mut large = 0.0;
+    for e in &trace.epochs {
+        for (k, c) in e.classes.iter().enumerate() {
+            if k % MODELS == 0 {
+                small += c.n_req;
+            } else {
+                large += c.n_req;
+            }
+        }
+    }
+    bench.record_value(
+        "fig1: small-model request share",
+        small / (small + large),
+        "frac",
+    );
+
+    // trend 2: rapid epoch-to-epoch change
+    let mut rel = Vec::new();
+    for w in toks.windows(2) {
+        if w[0] > 0.0 {
+            rel.push(((w[1] - w[0]) / w[0]).abs());
+        }
+    }
+    bench.record_value(
+        "fig1: mean |epoch-to-epoch change|",
+        stats::mean(&rel),
+        "frac",
+    );
+
+    // --- generation cost ---------------------------------------------------
+    bench.bench_throughput("generate 2-week trace", TWO_WEEKS as f64, "epoch", || {
+        let t = Trace::generate(&cfg, TWO_WEEKS, 1);
+        core::hint::black_box(t.epochs.len());
+    });
+    let mut rng = slit::util::rng::Rng::new(5);
+    bench.bench("sample one epoch of requests", || {
+        let reqs = trace.sample_requests(&cfg, 100, &mut rng);
+        core::hint::black_box(reqs.len());
+    });
+
+    bench.finish();
+}

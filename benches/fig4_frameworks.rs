@@ -1,0 +1,69 @@
+//! Fig. 4 bench: the framework comparison (normalized TTFT / carbon /
+//! cost / water vs Splitwise) at a reduced scale that keeps `cargo bench`
+//! tractable, plus end-to-end simulation timing per framework.
+//!
+//! The canonical full-scale numbers live in EXPERIMENTS.md (from
+//! examples/fig4_reproduction.rs); this bench tracks the same *shape*:
+//! single-objective SLIT variants dominate their metric, SLIT-Balance
+//! beats Helix everywhere.
+
+use slit::cli::{framework_names, make_scheduler};
+use slit::config::{SystemConfig, N_OBJ, OBJ_NAMES};
+use slit::power::GridSignals;
+use slit::sim::simulate;
+use slit::trace::Trace;
+use slit::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig4_frameworks").with_samples(5);
+
+    // reduced scale: full topology, 1/10 nodes, 12 epochs
+    let mut cfg = SystemConfig::paper_default();
+    cfg.epochs = 12;
+    cfg.opt.budget_s = 0.5;
+    for d in &mut cfg.datacenters {
+        d.nodes_per_type = d.nodes_per_type.iter().map(|&n| n / 10).collect();
+    }
+    cfg.workload.base_requests_per_epoch /= 10.0;
+
+    let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
+
+    let mut objs: Vec<(String, [f64; N_OBJ])> = Vec::new();
+    for name in framework_names() {
+        if name == "round-robin" {
+            continue;
+        }
+        let mut sched = make_scheduler(name, &cfg, None).expect("scheduler");
+        let res = simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
+        objs.push((name.to_string(), res.objectives()));
+    }
+
+    let base = objs
+        .iter()
+        .find(|(n, _)| n == "splitwise")
+        .map(|(_, o)| *o)
+        .unwrap();
+    for (name, o) in &objs {
+        for i in 0..N_OBJ {
+            bench.record_value(
+                &format!("fig4: {name} {} / splitwise", OBJ_NAMES[i]),
+                o[i] / base[i].max(1e-12),
+                "ratio",
+            );
+        }
+    }
+
+    // timing: one full simulate() per framework (decision + discrete exec)
+    for name in ["helix", "splitwise", "slit-balance"] {
+        bench.bench(&format!("simulate 12 epochs: {name}"), || {
+            let mut sched =
+                make_scheduler(name, &cfg, None).expect("scheduler");
+            let r =
+                simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
+            core::hint::black_box(r.total.requests);
+        });
+    }
+
+    bench.finish();
+}

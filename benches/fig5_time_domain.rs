@@ -1,0 +1,65 @@
+//! Fig. 5 bench: per-epoch time-domain comparison (Helix vs Splitwise vs
+//! SLIT-Balance) at reduced scale — reports the per-epoch medians whose
+//! full-scale counterparts are plotted in the paper's Fig. 5, plus the
+//! per-epoch decision latency of each framework (the paper caps decision
+//! time at one epoch = 15 min; ours is sub-second).
+
+use slit::cli::make_scheduler;
+use slit::config::SystemConfig;
+use slit::power::GridSignals;
+use slit::sim::simulate;
+use slit::trace::Trace;
+use slit::util::benchkit::Bench;
+use slit::util::stats;
+
+fn main() {
+    let mut bench = Bench::new("fig5_time_domain").with_samples(5);
+
+    let mut cfg = SystemConfig::paper_default();
+    cfg.epochs = 16;
+    cfg.opt.budget_s = 0.4;
+    for d in &mut cfg.datacenters {
+        d.nodes_per_type = d.nodes_per_type.iter().map(|&n| n / 10).collect();
+    }
+    cfg.workload.base_requests_per_epoch /= 10.0;
+
+    let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
+
+    for name in ["helix", "splitwise", "slit-balance"] {
+        let mut sched = make_scheduler(name, &cfg, None).expect("scheduler");
+        let res = simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
+        let series = |f: fn(&slit::models::EpochLedger) -> f64| -> Vec<f64> {
+            res.per_epoch.iter().map(|e| f(&e.ledger)).collect()
+        };
+        bench.record_value(
+            &format!("fig5: {name} ttft/epoch p50"),
+            stats::percentile(&series(|l| l.mean_ttft_s()), 50.0),
+            "s",
+        );
+        bench.record_value(
+            &format!("fig5: {name} carbon/epoch p50"),
+            stats::percentile(&series(|l| l.carbon_kg), 50.0),
+            "kg",
+        );
+        bench.record_value(
+            &format!("fig5: {name} water/epoch p50"),
+            stats::percentile(&series(|l| l.water_l), 50.0),
+            "L",
+        );
+        bench.record_value(
+            &format!("fig5: {name} cost/epoch p50"),
+            stats::percentile(&series(|l| l.cost_usd), 50.0),
+            "$",
+        );
+        let decisions: Vec<f64> =
+            res.per_epoch.iter().map(|e| e.decision_s).collect();
+        bench.record_value(
+            &format!("fig5: {name} decision time p95"),
+            stats::percentile(&decisions, 95.0),
+            "s",
+        );
+    }
+
+    bench.finish();
+}

@@ -1,0 +1,127 @@
+//! Hot-path microbenchmarks: the plan evaluator (native scalar, native
+//! batch-parallel, AOT/PJRT), the GBDT surrogate, the MCMF solver, the
+//! predictor fit, and a full optimizer generation. These are the numbers
+//! the §Perf iteration log in EXPERIMENTS.md tracks.
+
+use slit::cluster::build_panels;
+use slit::config::{SystemConfig, EVAL_POPULATION};
+use slit::eval::{AnalyticEvaluator, BatchEvaluator, EvalConsts};
+use slit::opt::{Gbdt, GbdtConfig, SlitOptimizer};
+use slit::plan::Plan;
+use slit::power::GridSignals;
+use slit::predictor::{fit_window, features};
+use slit::runtime::{artifacts_dir, artifacts_present, Engine, HloPlanEvaluator};
+use slit::trace::Trace;
+use slit::util::benchkit::Bench;
+use slit::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("hot_path");
+    let cfg = SystemConfig::paper_default();
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.0);
+    let ev =
+        AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&cfg.physics));
+
+    let mut rng = Rng::new(1);
+    let plans: Vec<Plan> = (0..EVAL_POPULATION)
+        .map(|_| Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng))
+        .collect();
+
+    // --- L3 native evaluator ------------------------------------------------
+    bench.bench_throughput("eval: native single plan", 1.0, "plan", || {
+        core::hint::black_box(ev.evaluate(&plans[0]));
+    });
+    bench.bench_throughput(
+        "eval: native batch 128 (parallel)",
+        EVAL_POPULATION as f64,
+        "plan",
+        || {
+            core::hint::black_box(ev.evaluate_batch(&plans));
+        },
+    );
+
+    // --- AOT / PJRT ----------------------------------------------------------
+    if artifacts_present() {
+        let engine = Engine::load(&artifacts_dir()).expect("engine");
+        let hlo = HloPlanEvaluator::from_analytic(engine, &ev);
+        bench.bench_throughput(
+            "eval: pjrt-hlo batch 128",
+            EVAL_POPULATION as f64,
+            "plan",
+            || {
+                core::hint::black_box(hlo.eval_batch(&plans));
+            },
+        );
+    } else {
+        eprintln!("  (skipping pjrt-hlo benches: artifacts not built)");
+    }
+
+    // --- GBDT surrogate ------------------------------------------------------
+    let xs: Vec<Vec<f64>> = plans
+        .iter()
+        .map(|p| p.as_slice().to_vec())
+        .collect();
+    let ys: Vec<f64> = plans.iter().map(|p| ev.evaluate(p)[1]).collect();
+    let gcfg = GbdtConfig {
+        trees: cfg.opt.gbdt_trees,
+        depth: cfg.opt.gbdt_depth,
+        learning_rate: cfg.opt.gbdt_lr,
+        min_leaf: cfg.opt.gbdt_min_leaf,
+        feature_sample: 16,
+    };
+    bench.bench("gbdt: fit 128x96", || {
+        let mut r = Rng::new(2);
+        core::hint::black_box(Gbdt::fit(&xs, &ys, &gcfg, &mut r));
+    });
+    let mut r2 = Rng::new(3);
+    let model = Gbdt::fit(&xs, &ys, &gcfg, &mut r2);
+    bench.bench_throughput("gbdt: predict", 1.0, "plan", || {
+        core::hint::black_box(model.predict(plans[0].as_slice()));
+    });
+
+    // --- optimizer -----------------------------------------------------------
+    let mut opt_cfg = cfg.opt.clone();
+    opt_cfg.generations = 1;
+    bench.bench("slit: one generation (analytic)", || {
+        let mut o = SlitOptimizer::new(
+            opt_cfg.clone(),
+            cfg.num_classes(),
+            ev.dcs(),
+            7,
+        );
+        core::hint::black_box(o.optimize(&ev).evaluations);
+    });
+
+    // --- Helix MCMF ----------------------------------------------------------
+    bench.bench("helix: mcmf plan for one epoch", || {
+        use slit::sim::{EpochContext, Scheduler};
+        let predicted = trace.epochs[4].clone();
+        let ctx = EpochContext {
+            cfg: &cfg,
+            epoch: 4,
+            predicted: &predicted,
+            evaluator: &ev,
+        };
+        let mut h = slit::baselines::HelixScheduler;
+        core::hint::black_box(h.plan(&ctx));
+    });
+
+    // --- predictor ------------------------------------------------------------
+    let series: Vec<f64> = (0..192)
+        .map(|t| 1000.0 + 300.0 * (t as f64 * 0.065).sin())
+        .collect();
+    bench.bench("predictor: ridge fit (window 192)", || {
+        let scale = 1000.0;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for t in 96..series.len() {
+            xs.push(features(&series, t, scale, 96));
+            ys.push(series[t] / scale);
+        }
+        core::hint::black_box(fit_window(&xs, &ys, 0.1));
+    });
+
+    bench.finish();
+}

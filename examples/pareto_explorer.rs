@@ -1,0 +1,116 @@
+//! Pareto-front explorer: run the SLIT metaheuristic for a single epoch at
+//! paper scale and inspect the solution set a datacenter manager would
+//! choose from (§6: "allow a datacenter manager to weigh solutions ...
+//! and systematically select the best solution").
+//!
+//!     cargo run --release --example pareto_explorer [-- --use-hlo]
+//!
+//! With --use-hlo the search runs on the AOT JAX/Pallas artifact via PJRT.
+
+use slit::cluster::build_panels;
+use slit::config::{SystemConfig, N_OBJ, OBJ_NAMES};
+use slit::eval::{AnalyticEvaluator, EvalConsts};
+use slit::opt::SlitOptimizer;
+use slit::pareto::hypervolume;
+use slit::power::GridSignals;
+use slit::runtime::{artifacts_dir, artifacts_present, Engine, HloPlanEvaluator};
+use slit::trace::Trace;
+
+fn main() -> anyhow::Result<()> {
+    let use_hlo = std::env::args().any(|a| a == "--use-hlo");
+    let mut cfg = SystemConfig::paper_default();
+    cfg.opt.budget_s = 10.0;
+    cfg.opt.generations = 24;
+
+    let epoch = 40; // mid-morning UTC: strong signal contrast across regions
+    let trace = Trace::generate(&cfg, epoch + 1, cfg.seed);
+    let signals = GridSignals::generate(&cfg, epoch + 1, cfg.seed);
+    let (cp, dp) = build_panels(
+        &cfg,
+        &signals,
+        epoch,
+        &trace.epochs[epoch],
+        cfg.physics.pr_off,
+    );
+    let ev =
+        AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&cfg.physics));
+
+    let mut optimizer = SlitOptimizer::new(
+        cfg.opt.clone(),
+        cfg.num_classes(),
+        cfg.datacenters.len(),
+        cfg.seed,
+    );
+    let t = std::time::Instant::now();
+    let outcome = if use_hlo {
+        anyhow::ensure!(artifacts_present(), "run `make artifacts` first");
+        let engine = Engine::load(&artifacts_dir())?;
+        let hlo = HloPlanEvaluator::from_analytic(engine, &ev);
+        optimizer.optimize(&hlo)
+    } else {
+        optimizer.optimize(&ev)
+    };
+    println!(
+        "optimized epoch {epoch} in {:.2}s: {} evaluations, {} front \
+         points, backend: {}\n",
+        t.elapsed().as_secs_f64(),
+        outcome.evaluations,
+        outcome.archive.len(),
+        if use_hlo { "pjrt-hlo" } else { "analytic" },
+    );
+
+    // showcased solutions
+    println!(
+        "| solution | {} |",
+        OBJ_NAMES.to_vec().join(" | ")
+    );
+    println!("|---|---|---|---|---|");
+    for (name, sol) in outcome.archive.showcase() {
+        println!(
+            "| {name} | {} |",
+            sol.obj
+                .iter()
+                .map(|x| format!("{x:.3}"))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        );
+    }
+
+    // front diversity: objective ranges + hypervolume
+    let (lo, hi) = outcome.archive.bounds();
+    println!("\nfront ranges:");
+    for i in 0..N_OBJ {
+        println!(
+            "  {:<10} [{:.3}, {:.3}]  spread {:.1}x",
+            OBJ_NAMES[i],
+            lo[i],
+            hi[i],
+            if lo[i] > 0.0 { hi[i] / lo[i] } else { f64::NAN }
+        );
+    }
+    let mut reference = [0.0; N_OBJ];
+    for i in 0..N_OBJ {
+        reference[i] = hi[i] * 1.1;
+    }
+    println!(
+        "hypervolume (vs 1.1x worst reference): {:.4}",
+        hypervolume(&outcome.archive.solutions, &reference, 50_000, 1)
+    );
+
+    // where does the carbon-best plan park the load?
+    if let Some(best) = outcome.archive.best_for(1) {
+        println!("\nslit-carbon placement (fraction of class 0 per site):");
+        for (l, d) in cfg.datacenters.iter().enumerate() {
+            let f = best.plan.get(0, l);
+            if f > 0.01 {
+                println!(
+                    "  {:<10} {:>5.1}%  (ci {:.3} kg/kWh)",
+                    d.name,
+                    100.0 * f,
+                    ev.dp.ci[l]
+                );
+            }
+        }
+    }
+    Ok(())
+}

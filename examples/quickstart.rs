@@ -1,0 +1,66 @@
+//! Quickstart: simulate SLIT-Balance against the two paper baselines on a
+//! small cluster and print the normalized comparison.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Takes ~10 s. For the full paper-scale reproduction see
+//! examples/fig4_reproduction.rs.
+
+use slit::baselines::{HelixScheduler, SplitwiseScheduler};
+use slit::config::SystemConfig;
+use slit::opt::{SlitScheduler, SlitVariant};
+use slit::power::GridSignals;
+use slit::sim::{simulate, Scheduler, SimResult};
+use slit::trace::Trace;
+
+fn main() -> anyhow::Result<()> {
+    // small_test(): 12 sites x 60 nodes, 8 epochs — laptop-friendly
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 8;
+    cfg.opt.budget_s = 2.0;
+
+    let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
+
+    println!(
+        "slit quickstart: {} datacenters, {} nodes/site, {} epochs, \
+         ~{:.0} requests/epoch\n",
+        cfg.datacenters.len(),
+        cfg.datacenters[0].total_nodes(),
+        cfg.epochs,
+        trace.epochs.iter().map(|e| e.total_requests()).sum::<f64>()
+            / cfg.epochs as f64,
+    );
+
+    let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(HelixScheduler),
+        Box::new(SplitwiseScheduler),
+        Box::new(SlitScheduler::new(&cfg, SlitVariant::Balance)),
+        Box::new(SlitScheduler::new(&cfg, SlitVariant::Carbon)),
+    ];
+
+    let mut results: Vec<SimResult> = Vec::new();
+    for s in &mut schedulers {
+        let t = std::time::Instant::now();
+        let r = simulate(&cfg, &trace, &signals, s.as_mut(), cfg.seed);
+        println!(
+            "  simulated {:<14} {:>6.1}s  ttft {:.3}s  carbon {:.1}kg  \
+             water {:.0}L  cost ${:.2}",
+            r.name,
+            t.elapsed().as_secs_f64(),
+            r.total.mean_ttft_s(),
+            r.total.carbon_kg,
+            r.total.water_l,
+            r.total.cost_usd
+        );
+        results.push(r);
+    }
+
+    slit::cli::print_comparison(&results);
+    println!(
+        "\nNext steps:\n  slit simulate --framework all        # full CLI\n  \
+         cargo run --release --example fig4_reproduction\n  \
+         cargo run --release --example serve_realtime"
+    );
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! END-TO-END driver: the full three-layer stack serving a live workload.
+//!
+//!   L1/L2  AOT JAX/Pallas plan-eval artifact (if built) executed via PJRT
+//!   L3     rust coordinator: router -> batcher -> local WRR placement,
+//!          epoch clock re-planning with the SLIT metaheuristic,
+//!          JSON-lines TCP front
+//!
+//! Client threads replay a scaled BurstGPT-like trace against the TCP
+//! endpoint in compressed real time; the run reports serving throughput,
+//! TTFT percentiles, and the sustainability ledger. This is the record
+//! kept in EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example serve_realtime [-- --analytic]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use slit::config::SystemConfig;
+use slit::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
+use slit::opt::SlitVariant;
+use slit::runtime::{artifacts_dir, artifacts_present, Engine};
+use slit::trace::Trace;
+use slit::util::json::Json;
+use slit::util::rng::Rng;
+use slit::util::stats;
+
+const CLIENTS: usize = 8;
+const SIM_EPOCHS: usize = 6;
+/// Real seconds per simulated 15-min epoch (time compression).
+const EPOCH_WALL_S: f64 = 3.0;
+
+fn main() -> anyhow::Result<()> {
+    let force_analytic = std::env::args().any(|a| a == "--analytic");
+    let mut cfg = SystemConfig::paper_default();
+    cfg.opt.budget_s = 1.0;
+    cfg.opt.generations = 6;
+
+    let engine = if !force_analytic && artifacts_present() {
+        println!("loading AOT artifacts (JAX/Pallas plan evaluator) ...");
+        Some(Engine::load(&artifacts_dir())?)
+    } else {
+        println!("running with the native analytic evaluator");
+        None
+    };
+
+    let ccfg = CoordinatorConfig {
+        variant: SlitVariant::Balance,
+        epoch_wall_s: EPOCH_WALL_S,
+        plan_budget_s: 1.0,
+        ..Default::default()
+    };
+    let coordinator = Coordinator::new(cfg.clone(), ccfg, engine);
+    let clock = coordinator.spawn_epoch_clock();
+    let handle = serve_forever(Arc::clone(&coordinator), 0)?;
+    println!(
+        "coordinator up on 127.0.0.1:{} (backend: {})\n",
+        handle.port,
+        coordinator.backend()
+    );
+
+    // --- load generation: replay the trace over TCP -----------------------
+    let trace = Trace::generate(&cfg, SIM_EPOCHS, cfg.seed);
+    let port = handle.port;
+    let total_sent = Arc::new(AtomicU64::new(0));
+    let t_start = std::time::Instant::now();
+    let mut latencies_per_client: Vec<Vec<f64>> = Vec::new();
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let trace = &trace;
+            let cfg = &cfg;
+            let total_sent = Arc::clone(&total_sent);
+            joins.push(scope.spawn(move || -> Vec<f64> {
+                let mut rng = Rng::new(1000 + c as u64);
+                let mut lat = Vec::new();
+                let Ok(stream) = TcpStream::connect(("127.0.0.1", port))
+                else {
+                    return lat;
+                };
+                stream.set_nodelay(true).ok(); // see §Perf: Nagle stalls
+                let mut writer = stream.try_clone().expect("clone");
+                let mut reader = BufReader::new(stream);
+                // each client replays its share of each epoch, paced so one
+                // epoch of requests spans EPOCH_WALL_S
+                for epoch in 0..SIM_EPOCHS {
+                    let reqs = trace.sample_requests(cfg, epoch, &mut rng);
+                    let share: Vec<_> = reqs
+                        .iter()
+                        .skip(c)
+                        .step_by(CLIENTS)
+                        // cap per-client per-epoch sends: this is a latency
+                        // demo, not a stress test
+                        .take(400)
+                        .collect();
+                    let pace = EPOCH_WALL_S / share.len().max(1) as f64;
+                    for r in share {
+                        let msg = format!(
+                            "{{\"region\": {}, \"model\": {}, \"tok_in\": {}, \"tok_out\": {}}}",
+                            r.region(),
+                            r.model(),
+                            r.tok_in,
+                            r.tok_out
+                        );
+                        let t0 = std::time::Instant::now();
+                        if writeln!(writer, "{msg}").is_err() {
+                            return lat;
+                        }
+                        let mut line = String::new();
+                        if reader.read_line(&mut line).is_err() {
+                            return lat;
+                        }
+                        total_sent.fetch_add(1, Ordering::Relaxed);
+                        if let Ok(j) = Json::parse(line.trim()) {
+                            if j.get("ok").and_then(Json::as_bool)
+                                == Some(true)
+                            {
+                                // end-to-end = wire round-trip + simulated TTFT
+                                let ttft_ms = j
+                                    .get("ttft_ms")
+                                    .and_then(Json::as_f64)
+                                    .unwrap_or(0.0);
+                                let wire_ms =
+                                    t0.elapsed().as_secs_f64() * 1e3;
+                                lat.push(ttft_ms + wire_ms);
+                            }
+                        }
+                        std::thread::sleep(
+                            std::time::Duration::from_secs_f64(pace * 0.8),
+                        );
+                    }
+                }
+                lat
+            }));
+        }
+        for j in joins {
+            latencies_per_client.push(j.join().expect("client"));
+        }
+    });
+
+    let wall = t_start.elapsed().as_secs_f64();
+    let sent = total_sent.load(Ordering::Relaxed);
+
+    // --- shut down ----------------------------------------------------------
+    {
+        let mut s = TcpStream::connect(("127.0.0.1", port))?;
+        writeln!(s, "{{\"op\": \"stats\"}}")?;
+        let mut reader = BufReader::new(s.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let stats_json = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("stats parse: {e}"))?;
+        writeln!(s, "{{\"op\": \"shutdown\"}}")?;
+        line.clear();
+        reader.read_line(&mut line).ok();
+
+        let all: Vec<f64> = latencies_per_client.concat();
+        println!("\n=== end-to-end serving report ===");
+        println!("backend:              {}", coordinator.backend());
+        println!("wall time:            {wall:.1} s ({SIM_EPOCHS} epochs compressed)");
+        println!("requests sent:        {sent}");
+        println!("throughput:           {:.1} req/s", sent as f64 / wall);
+        println!(
+            "served / rejected:    {} / {}",
+            stats_json.f64_or("served", 0.0),
+            stats_json.f64_or("rejected", 0.0)
+        );
+        println!(
+            "plan refreshes:       {}",
+            stats_json.f64_or("plan_refreshes", 0.0)
+        );
+        println!(
+            "TTFT e2e p50/p95/p99: {:.1} / {:.1} / {:.1} ms",
+            stats::percentile(&all, 50.0),
+            stats::percentile(&all, 95.0),
+            stats::percentile(&all, 99.0)
+        );
+        println!(
+            "sustainability ledger: carbon {:.1} kg, water {:.0} L, cost ${:.2}",
+            stats_json.f64_or("carbon_kg", 0.0),
+            stats_json.f64_or("water_l", 0.0),
+            stats_json.f64_or("cost_usd", 0.0)
+        );
+        anyhow::ensure!(sent > 0, "no requests completed");
+        anyhow::ensure!(!all.is_empty(), "no latencies recorded");
+    }
+
+    handle.thread.join().ok();
+    coordinator.stop();
+    clock.join().ok();
+    println!("\nserve_realtime OK");
+    Ok(())
+}

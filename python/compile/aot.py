@@ -1,0 +1,120 @@
+"""AOT lowering: jax (L2 + L1) -> HLO *text* -> artifacts/ for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate binds) rejects;
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Outputs (under --out-dir, default ../artifacts):
+
+    plan_eval.hlo.txt   obj[P,4] = f(a[P,K,L], cls[K,3], thr[K,L], proc[K,L],
+                                     hops[K,L], dc[8,L], consts[12])
+    predictor.hlo.txt   (preds[D], rmse[D]) = f(x[H,F], y[H], xq[F], lam[D])
+    manifest.json       shapes + argument layouts; the rust runtime refuses
+                        to run against a manifest it does not recognise
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import shapes
+from compile.model import plan_eval_model, predictor_model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_plan_eval() -> str:
+    s = jax.ShapeDtypeStruct
+    args = (
+        s((shapes.P, shapes.K, shapes.L), F32),   # a
+        s((shapes.K, 3), F32),                    # cls
+        s((shapes.K, shapes.L), F32),             # thr
+        s((shapes.K, shapes.L), F32),             # proc
+        s((shapes.K, shapes.L), F32),             # hops
+        s((8, shapes.L), F32),                    # dc
+        s((12,), F32),                            # consts
+    )
+    return to_hlo_text(jax.jit(plan_eval_model).lower(*args))
+
+
+def lower_predictor() -> str:
+    s = jax.ShapeDtypeStruct
+    args = (
+        s((shapes.H, shapes.F), F32),             # x
+        s((shapes.H,), F32),                      # y
+        s((shapes.F,), F32),                      # xq
+        s((shapes.D,), F32),                      # lambdas
+    )
+    return to_hlo_text(jax.jit(predictor_model).lower(*args))
+
+
+def manifest() -> dict:
+    return {
+        "version": 1,
+        "plan_eval": {
+            "file": "plan_eval.hlo.txt",
+            "population": shapes.P,
+            "classes": shapes.K,
+            "dc_slots": shapes.L,
+            "tile": shapes.TP,
+            "n_obj": shapes.N_OBJ,
+            "dc_rows": list(shapes.DC_ROWS),
+            "consts": list(shapes.CONSTS),
+            "objectives": ["ttft_s", "carbon_kg", "water_l", "cost_usd"],
+        },
+        "predictor": {
+            "file": "predictor.hlo.txt",
+            "window": shapes.H,
+            "features": shapes.F,
+            "lambdas": shapes.D,
+            "cg_iters": shapes.CG_ITERS,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file target (ignored; kept for Make)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    man = manifest()
+    for name, lower in (("plan_eval", lower_plan_eval),
+                        ("predictor", lower_predictor)):
+        text = lower()
+        path = os.path.join(out_dir, man[name]["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        man[name]["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(man, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: batched scheduling-plan evaluator.
+
+One grid step evaluates a tile of TP plans against the full physical model
+chain (Eqs. 1-18).  The per-tile working set is
+
+    A tile        TP x K x L x 4B   (= 4 KiB at TP=8, K=8, L=16)
+    param panels  (K x L) x 3 + (8 x L) + vectors   (< 3 KiB)
+    accumulators  TP x L, TP x 4
+
+i.e. well under VMEM even at TP=128; HBM traffic is one read of the plan
+tensor and one write of obj[P, 4].  The class contraction (K = 8) is a
+VPU multiply-reduce — at K=8 an MXU dot would run at <7% occupancy, so the
+MXU-friendly axis here is the P tiling, not the contraction (see
+DESIGN.md "Hardware adaptation").
+
+interpret=True is mandatory: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the AOT path (aot.py) inlines the interpreted kernel into
+plain HLO the rust runtime can compile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import shapes
+
+J_PER_KWH = 3.6e6
+
+
+def _plan_eval_kernel(a_ref, cls_ref, thr_ref, proc_ref, hops_ref, dc_ref,
+                      consts_ref, obj_ref):
+    a = a_ref[...]            # [TP, K, L]
+    cls = cls_ref[...]        # [K, 3]
+    thr = thr_ref[...]        # [K, L]
+    proc = proc_ref[...]
+    hops = hops_ref[...]
+    dc = dc_ref[...]          # [8, L]
+    consts = consts_ref[...]  # [12]
+
+    n_req = cls[:, 0]
+    tok = cls[:, 1]
+    mem = cls[:, 2]
+
+    nodes, tdp, cop, tou, ci, wi, bw, unused_pr = (dc[i] for i in range(8))
+    (epoch_s, pr_on, h_water, d_ratio, ei_pot, ei_waste, k_media,
+     q_coef, u_max, cold_frac) = (consts[i] for i in range(10))
+
+    # demand contraction over classes: VPU multiply-reduce over K
+    w = n_req * tok                                   # [K]
+    node_s = jnp.sum(a * (w[:, None] / thr)[None], axis=1)    # [TP, L]
+    reqs_l = jnp.sum(a * n_req[None, :, None], axis=1)        # [TP, L]
+
+    # node states (Eq. 5-6)
+    on = jnp.minimum(node_s / epoch_s, nodes[None])
+    util = on / jnp.maximum(nodes, 1.0)[None]
+    e_it = (on * pr_on + (nodes[None] - on) * unused_pr) * tdp[None] * epoch_s
+
+    # cooling + support (Eq. 7-10), cost (Eq. 11)
+    e_tot = e_it * (1.0 + 3.0 / cop + 0.13)[None]
+    e_tot_kwh = e_tot / J_PER_KWH
+    cost = jnp.sum(e_tot_kwh * tou[None], axis=-1)
+
+    # water (Eq. 12-15)
+    w_e = e_it / h_water
+    w_b = w_e / (1.0 - d_ratio)
+    w_grid = e_tot_kwh * wi[None]
+    water = jnp.sum(w_e + w_b + w_grid, axis=-1)
+
+    # carbon (Eq. 16-18)
+    c_grid = ci[None] * e_tot_kwh
+    c_w = ((w_e + w_b) * ei_pot + w_grid * ei_waste) * ci[None]
+    carbon = jnp.sum(c_grid + c_w, axis=-1)
+
+    # TTFT (Eq. 1-4)
+    base = cold_frac * mem[:, None] / bw[None, :] + 2.0 * hops * k_media + proc
+    t_base = jnp.sum(a * (n_req[:, None] * base)[None], axis=(1, 2))
+    queue = q_coef * util / (1.0 - jnp.minimum(util, u_max))
+    t_queue = jnp.sum(reqs_l * queue, axis=-1)
+    total_req = jnp.maximum(jnp.sum(n_req), 1.0)
+    ttft = (t_base + t_queue) / total_req
+
+    obj_ref[...] = jnp.stack([ttft, carbon, water, cost], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tp",))
+def plan_eval(a, cls, thr, proc, hops, dc, consts, *, tp=shapes.TP):
+    """Evaluate a population of plans a[P, K, L] -> obj[P, 4] via Pallas."""
+    p, k, l = a.shape
+    assert p % tp == 0, f"population {p} not a multiple of tile {tp}"
+    grid = (p // tp,)
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _plan_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, k, l), lambda i: (i, 0, 0)),
+            whole(cls.shape),
+            whole(thr.shape),
+            whole(proc.shape),
+            whole(hops.shape),
+            whole(dc.shape),
+            whole(consts.shape),
+        ],
+        out_specs=pl.BlockSpec((tp, shapes.N_OBJ), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, shapes.N_OBJ), a.dtype),
+        interpret=True,
+    )(a, cls, thr, proc, hops, dc, consts)

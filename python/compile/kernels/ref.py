@@ -1,0 +1,120 @@
+"""Pure-jnp oracle for the batched plan evaluator (Eqs. 1-18 of the paper).
+
+This is the correctness reference: the Pallas kernel in plan_eval.py and the
+rust `eval/` module must both agree with this function.  Every physical input
+is a runtime argument (nothing baked), so rust owns the constants.
+
+Inputs
+------
+a       f32[P, K, L]   plan population: fraction of class k routed to DC l
+cls     f32[K, 3]      per-class [n_req, tok_out, model_mem_gb]
+thr     f32[K, L]      node throughput for class k at DC l, tokens/s
+proc    f32[K, L]      time-to-first-token processing term, seconds (Eq. 4)
+hops    f32[K, L]      router hops from class k's origin region to DC l
+dc      f32[8, L]      rows: nodes, tdp_w, cop, tou, ci, wi, bw_gbs, unused_pr
+consts  f32[12]        see shapes.CONSTS
+
+Returns
+-------
+obj     f32[P, 4]      [ttft_s, carbon_kg, water_l, cost_usd]
+
+Units
+-----
+energy J internally, kWh for grid-coupled terms; water liters; carbon kg
+(ci is kg/kWh); cost currency units (TOU is per kWh).
+"""
+
+import jax.numpy as jnp
+
+J_PER_KWH = 3.6e6
+
+
+def plan_eval_ref(a, cls, thr, proc, hops, dc, consts):
+    n_req = cls[:, 0]          # [K]
+    tok = cls[:, 1]            # [K]
+    mem = cls[:, 2]            # [K] GB
+
+    nodes = dc[0]              # [L]
+    tdp = dc[1]
+    cop = dc[2]
+    tou = dc[3]
+    ci = dc[4]
+    wi = dc[5]
+    bw = dc[6]
+    unused_pr = dc[7]
+
+    epoch_s = consts[0]
+    pr_on = consts[1]
+    h_water = consts[2]
+    d_ratio = consts[3]
+    ei_pot = consts[4]
+    ei_waste = consts[5]
+    k_media = consts[6]
+    q_coef = consts[7]
+    u_max = consts[8]
+    cold_frac = consts[9]
+
+    # --- demand contraction over classes (Eq. 1 aggregate) ----------------
+    w = n_req * tok                                          # tokens/class [K]
+    node_s = jnp.einsum("pkl,kl->pl", a, w[:, None] / thr)   # node-seconds
+    reqs_l = jnp.einsum("pkl,k->pl", a, n_req)               # requests per DC
+
+    # --- node states (Eq. 5-6) ---------------------------------------------
+    on = jnp.minimum(node_s / epoch_s, nodes)                # nodes ON [P, L]
+    util = on / jnp.maximum(nodes, 1.0)
+    e_it = (on * pr_on + (nodes - on) * unused_pr) * tdp * epoch_s  # J
+
+    # --- cooling + support (Eq. 7-10) ---------------------------------------
+    e_tot = e_it * (1.0 + 3.0 / cop + 0.13)                  # J
+    e_tot_kwh = e_tot / J_PER_KWH
+
+    # --- energy cost (Eq. 11) ------------------------------------------------
+    cost = jnp.sum(e_tot_kwh * tou, axis=-1)                 # [P]
+
+    # --- water (Eq. 12-15) ----------------------------------------------------
+    w_e = e_it / h_water                                     # liters evaporated
+    w_b = w_e / (1.0 - d_ratio)
+    w_grid = e_tot_kwh * wi
+    water = jnp.sum(w_e + w_b + w_grid, axis=-1)             # [P] liters
+
+    # --- carbon (Eq. 16-18) ----------------------------------------------------
+    c_grid = ci * e_tot_kwh
+    c_w = ((w_e + w_b) * ei_pot + w_grid * ei_waste) * ci
+    carbon = jnp.sum(c_grid + c_w, axis=-1)                  # [P] kg
+
+    # --- TTFT (Eq. 1-4) ---------------------------------------------------------
+    base = cold_frac * mem[:, None] / bw[None, :] \
+        + 2.0 * hops * k_media + proc                        # [K, L]
+    t_base = jnp.einsum("pkl,kl->p", a, n_req[:, None] * base)
+    queue = q_coef * util / (1.0 - jnp.minimum(util, u_max))
+    t_queue = jnp.sum(reqs_l * queue, axis=-1)
+    total_req = jnp.maximum(jnp.sum(n_req), 1.0)
+    ttft = (t_base + t_queue) / total_req                    # [P] seconds
+
+    return jnp.stack([ttft, carbon, water, cost], axis=-1)
+
+
+def predictor_ref(x, y, xq, lambdas):
+    """Ridge-regression oracle for the workload predictor.
+
+    x f32[H, F], y f32[H], xq f32[F], lambdas f32[D]
+    returns (preds f32[D], rmse f32[D]) — one ridge fit per lambda,
+    solved exactly (the HLO version uses conjugate gradients).
+    """
+    h = x.shape[0]
+    xtx = x.T @ x
+    xty = x.T @ y
+    eye = jnp.eye(x.shape[1], dtype=x.dtype)
+
+    def fit(lam):
+        beta = jnp.linalg.solve(xtx + lam * eye, xty)
+        resid = x @ beta - y
+        rmse = jnp.sqrt(jnp.sum(resid * resid) / h)
+        return xq @ beta, rmse
+
+    preds, rmses = [], []
+    for i in range(lambdas.shape[0]):
+        p, r = fit(lambdas[i])
+        preds.append(p)
+        rmses.append(r)
+    return jnp.stack(preds), jnp.stack(rmses)

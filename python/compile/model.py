@@ -1,0 +1,70 @@
+"""L2 graph: the jax functions that get AOT-lowered for the rust runtime.
+
+Two entry points:
+
+* ``plan_eval_model`` — the metaheuristic hot path.  Wraps the L1 Pallas
+  kernel (kernels/plan_eval.py) so the kernel lowers into the same HLO
+  module the rust PJRT client executes.
+
+* ``predictor_model`` — the workload predictor: D ridge regressions over a
+  sliding window of epoch arrival counts, solved with a fixed number of
+  conjugate-gradient steps (pure dense HLO — no LAPACK custom-calls, which
+  the rust CPU client could not resolve), returning per-lambda predictions
+  and training RMSE so the rust ``best_fit`` step can pick the winner.
+
+Both return tuples because aot.py lowers with ``return_tuple=True`` and the
+rust side unwraps with ``to_tuple1``/``to_tuple2``.
+"""
+
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels.plan_eval import plan_eval
+
+
+def plan_eval_model(a, cls, thr, proc, hops, dc, consts):
+    """obj[P, 4] = f(plans, class params, dc params).  See kernels/ref.py."""
+    return (plan_eval(a, cls, thr, proc, hops, dc, consts),)
+
+
+def _cg_solve(mat, rhs, iters):
+    """Conjugate gradients on an SPD system, fixed iteration count.
+
+    Ridge normal equations (XtX + lam*I) are SPD for lam > 0; F is tiny
+    (shapes.F = 8) so `iters` >= F converges to machine precision in exact
+    arithmetic.  Unrolled python loop -> straight-line HLO.
+    """
+    x = jnp.zeros_like(rhs)
+    r = rhs
+    p = r
+    rs = jnp.dot(r, r)
+    for _ in range(iters):
+        mp = mat @ p
+        alpha = rs / jnp.maximum(jnp.dot(p, mp), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * mp
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        rs = rs_new
+    return x
+
+
+def predictor_model(x, y, xq, lambdas):
+    """(preds[D], rmse[D]) — ridge fit per lambda, CG-solved.
+
+    x f32[H, F] design matrix, y f32[H] targets, xq f32[F] query features.
+    """
+    h = x.shape[0]
+    xtx = x.T @ x
+    xty = x.T @ y
+    eye = jnp.eye(x.shape[1], dtype=x.dtype)
+
+    preds = []
+    rmses = []
+    for i in range(shapes.D):
+        beta = _cg_solve(xtx + lambdas[i] * eye, xty, shapes.CG_ITERS)
+        resid = x @ beta - y
+        rmses.append(jnp.sqrt(jnp.sum(resid * resid) / h))
+        preds.append(jnp.dot(xq, beta))
+    return jnp.stack(preds), jnp.stack(rmses)

@@ -1,0 +1,40 @@
+"""Canonical AOT shapes shared by the L1 kernel, L2 graph, AOT lowering and
+the rust runtime (via artifacts/manifest.json).
+
+The rust coordinator pads its population / datacenter arrays to these shapes
+before dispatching to the PJRT executable, and the manifest check in
+`rust/src/runtime/` refuses to run against artifacts with different shapes.
+"""
+
+# --- plan evaluator -------------------------------------------------------
+P = 128   # population tile: plans evaluated per dispatch
+K = 8     # request classes (= origin regions x models = 4 x 2)
+L = 16    # datacenter slots (12 real + 4 padding, lane-friendly)
+TP = 8    # pallas grid tile over P
+
+# dc parameter matrix rows (dc[8, L])
+DC_ROWS = ("nodes", "tdp_w", "cop", "tou", "ci", "wi", "bw_gbs", "unused_pr")
+
+# consts vector layout (consts[12])
+CONSTS = (
+    "epoch_s",      # epoch length, seconds
+    "pr_on",        # power ratio of an ON node (x TDP)
+    "h_water",      # heat absorbed per liter evaporated, J/L
+    "d_ratio",      # blowdown solids ratio D in Eq. 13
+    "ei_pot",       # potable-water treatment energy intensity, kWh/L
+    "ei_waste",     # wastewater treatment energy intensity, kWh/L
+    "k_media",      # per-hop inter-router latency, seconds
+    "q_coef",       # queueing delay coefficient, seconds
+    "u_max",        # utilisation clip for the queueing term
+    "cold_frac",    # fraction of requests paying the model-load latency
+    "pad0",
+    "pad1",
+)
+
+N_OBJ = 4  # [ttft_s, carbon_kg, water_l, cost_usd]
+
+# --- workload predictor ----------------------------------------------------
+H = 192   # history window, epochs
+F = 8     # features: [1, lag1, lag2, lag3, lag4, sin, cos, lag96]
+D = 4     # ridge lambdas tried per fit
+CG_ITERS = 12  # conjugate-gradient iterations (F=8 SPD system: 12 = 1.5x margin)

@@ -1,0 +1,72 @@
+"""Shared random-input generators for the python test suite.
+
+Values are drawn from physically plausible ranges (the same ranges the rust
+config defaults use) so the oracle comparison exercises the regime the
+scheduler actually runs in, not just abstract floats.
+"""
+
+import numpy as np
+
+from compile import shapes
+
+
+def make_inputs(rng, p=shapes.P, k=shapes.K, l=shapes.L, real_l=12,
+                dtype=np.float32):
+    """Random (a, cls, thr, proc, hops, dc, consts) with padded DC slots."""
+    # row-stochastic plans over the real DCs only
+    a = rng.gamma(0.5, 1.0, size=(p, k, l)).astype(dtype)
+    a[:, :, real_l:] = 0.0
+    a /= np.maximum(a.sum(axis=2, keepdims=True), 1e-12)
+
+    cls = np.stack([
+        rng.uniform(0.0, 5e4, size=k),      # n_req
+        rng.uniform(16.0, 1024.0, size=k),  # tok_out
+        rng.uniform(14.0, 140.0, size=k),   # model_mem GB
+    ], axis=1).astype(dtype)
+
+    thr = rng.uniform(50.0, 4000.0, size=(k, l)).astype(dtype)
+    proc = rng.uniform(0.005, 0.4, size=(k, l)).astype(dtype)
+    hops = rng.integers(0, 12, size=(k, l)).astype(dtype)
+
+    dc = np.zeros((8, l), dtype=dtype)
+    dc[0] = rng.integers(100, 1000, size=l)     # nodes
+    dc[1] = rng.uniform(1500.0, 6000.0, size=l)  # tdp W
+    dc[2] = rng.uniform(2.0, 8.0, size=l)        # cop
+    dc[3] = rng.uniform(0.04, 0.45, size=l)      # tou $/kWh
+    dc[4] = rng.uniform(0.02, 0.8, size=l)       # ci kg/kWh
+    dc[5] = rng.uniform(0.2, 67.0, size=l)       # wi L/kWh
+    dc[6] = rng.uniform(1.0, 25.0, size=l)       # bw GB/s
+    dc[7] = rng.uniform(0.01, 0.35, size=l)      # unused_pr
+    # padded slots: zero demand-side params, safe divisors
+    dc[0, real_l:] = 0.0
+    dc[2, real_l:] = 1.0
+    dc[6, real_l:] = 1.0
+    thr[:, real_l:] = 1.0
+
+    consts = np.array([
+        900.0,    # epoch_s
+        1.0,      # pr_on
+        2.45e6,   # h_water J/L (latent heat of vaporisation per liter)
+        0.3,      # d_ratio
+        0.003,    # ei_pot kWh/L
+        0.0015,   # ei_waste kWh/L
+        0.002,    # k_media s/hop
+        0.25,     # q_coef s
+        0.995,    # u_max
+        0.1,      # cold_frac
+        0.0, 0.0,
+    ], dtype=dtype)
+
+    return a, cls, thr, proc, hops, dc, consts
+
+
+def make_predictor_inputs(rng, h=shapes.H, f=shapes.F, d=shapes.D,
+                          dtype=np.float32):
+    x = rng.normal(0.0, 1.0, size=(h, f)).astype(dtype)
+    x[:, 0] = 1.0
+    beta = rng.normal(0.0, 2.0, size=f).astype(dtype)
+    y = (x @ beta + rng.normal(0.0, 0.1, size=h)).astype(dtype)
+    xq = rng.normal(0.0, 1.0, size=f).astype(dtype)
+    xq[0] = 1.0
+    lambdas = np.array([0.01, 0.1, 1.0, 10.0][:d], dtype=dtype)
+    return x, y, xq, lambdas

@@ -1,0 +1,24 @@
+"""aot.py end-to-end CLI: writes all artifacts + manifest to --out-dir."""
+
+import json
+import subprocess
+import sys
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        capture_output=True,
+        text=True,
+        cwd=".",
+    )
+    assert res.returncode == 0, res.stderr
+    for name in ("plan_eval.hlo.txt", "predictor.hlo.txt", "manifest.json"):
+        assert (out / name).exists(), name
+    man = json.loads((out / "manifest.json").read_text())
+    assert "sha256" in man["plan_eval"]
+    assert "sha256" in man["predictor"]
+    # HLO text is parseable-looking and non-trivial
+    text = (out / "plan_eval.hlo.txt").read_text()
+    assert "ENTRY" in text and len(text) > 5_000

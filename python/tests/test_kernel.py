@@ -1,0 +1,115 @@
+"""Pallas plan-eval kernel vs the pure-jnp oracle — the core L1 signal.
+
+hypothesis sweeps population sizes / tile sizes / DC counts and random
+physical parameters; dedicated cases pin the edge regimes (zero load,
+saturation, single-DC routing).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import shapes
+from compile.kernels.plan_eval import plan_eval
+from compile.kernels.ref import plan_eval_ref
+from tests.gen import make_inputs
+
+RTOL = 2e-5
+ATOL = 1e-6
+
+
+def assert_matches(inputs, tp=shapes.TP):
+    got = np.asarray(plan_eval(*[np.asarray(x) for x in inputs], tp=tp))
+    want = np.asarray(plan_eval_ref(*inputs))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    assert got.shape == (inputs[0].shape[0], shapes.N_OBJ)
+    assert np.all(np.isfinite(got))
+
+
+def test_default_shapes_match_ref():
+    rng = np.random.default_rng(0)
+    assert_matches(make_inputs(rng))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 6),
+    tp=st.sampled_from([4, 8, 16]),
+    real_l=st.integers(1, 12),
+)
+def test_shape_sweep_matches_ref(seed, tiles, tp, real_l):
+    rng = np.random.default_rng(seed)
+    inputs = make_inputs(rng, p=tiles * tp, real_l=real_l)
+    assert_matches(inputs, tp=tp)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.0, 1e3))
+def test_load_scaling_is_finite_and_monotone_energy(seed, scale):
+    """Scaling request counts up never *reduces* any objective."""
+    rng = np.random.default_rng(seed)
+    a, cls, thr, proc, hops, dc, consts = make_inputs(rng, p=shapes.TP)
+    lo = np.asarray(plan_eval_ref(a, cls, thr, proc, hops, dc, consts))
+    cls_hi = cls.copy()
+    cls_hi[:, 0] *= 1.0 + scale
+    hi = np.asarray(plan_eval_ref(a, cls_hi, thr, proc, hops, dc, consts))
+    # carbon / water / cost are monotone in load (columns 1..3)
+    assert np.all(hi[:, 1:] >= lo[:, 1:] - 1e-6)
+
+
+def test_zero_load_gives_idle_floor_only():
+    rng = np.random.default_rng(1)
+    a, cls, thr, proc, hops, dc, consts = make_inputs(rng, p=shapes.TP)
+    cls[:, 0] = 0.0
+    out = np.asarray(plan_eval(a, cls, thr, proc, hops, dc, consts))
+    want = np.asarray(plan_eval_ref(a, cls, thr, proc, hops, dc, consts))
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+    # no requests -> no TTFT, but idle nodes still burn energy/water/carbon
+    assert np.allclose(out[:, 0], 0.0, atol=1e-6)
+    assert np.all(out[:, 1:] > 0.0)
+
+
+def test_saturation_clamps_on_nodes():
+    """Demand far beyond capacity: ON nodes clamp at the node count."""
+    rng = np.random.default_rng(2)
+    a, cls, thr, proc, hops, dc, consts = make_inputs(rng, p=shapes.TP)
+    cls[:, 0] = 1e9
+    out = np.asarray(plan_eval(a, cls, thr, proc, hops, dc, consts))
+    want = np.asarray(plan_eval_ref(a, cls, thr, proc, hops, dc, consts))
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+    assert np.all(np.isfinite(out))
+
+
+def test_single_dc_routing_matches_ref():
+    """Extreme plan: everything to one DC (one of SLIT's seeded extremes)."""
+    rng = np.random.default_rng(3)
+    a, cls, thr, proc, hops, dc, consts = make_inputs(rng, p=shapes.TP)
+    a[:] = 0.0
+    a[:, :, 3] = 1.0
+    assert_matches((a, cls, thr, proc, hops, dc, consts))
+
+
+def test_population_rows_are_independent():
+    """Evaluating a plan alone or inside a batch gives identical rows."""
+    rng = np.random.default_rng(4)
+    inputs = make_inputs(rng, p=2 * shapes.TP)
+    full = np.asarray(plan_eval(*inputs))
+    a = inputs[0]
+    half = np.asarray(plan_eval(a[: shapes.TP], *inputs[1:]))
+    np.testing.assert_allclose(full[: shapes.TP], half, rtol=1e-6, atol=1e-7)
+
+
+def test_tile_size_does_not_change_results():
+    rng = np.random.default_rng(5)
+    inputs = make_inputs(rng, p=32)
+    a4 = np.asarray(plan_eval(*inputs, tp=4))
+    a16 = np.asarray(plan_eval(*inputs, tp=16))
+    np.testing.assert_allclose(a4, a16, rtol=1e-6, atol=1e-7)
+
+
+def test_non_divisible_population_rejected():
+    rng = np.random.default_rng(6)
+    inputs = make_inputs(rng, p=shapes.TP)
+    with pytest.raises(AssertionError):
+        plan_eval(inputs[0][:5], *inputs[1:], tp=4)

@@ -1,0 +1,54 @@
+"""Workload-predictor graph (CG ridge) vs the exact-solve oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import shapes
+from compile.kernels.ref import predictor_ref
+from compile.model import predictor_model
+from tests.gen import make_predictor_inputs
+
+
+def test_predictor_matches_exact_solve():
+    rng = np.random.default_rng(0)
+    x, y, xq, lam = make_predictor_inputs(rng)
+    preds, rmse = predictor_model(x, y, xq, lam)
+    want_p, want_r = predictor_ref(x, y, xq, lam)
+    np.testing.assert_allclose(np.asarray(preds), np.asarray(want_p),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rmse), np.asarray(want_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_predictor_sweep(seed):
+    rng = np.random.default_rng(seed)
+    x, y, xq, lam = make_predictor_inputs(rng)
+    preds, rmse = predictor_model(x, y, xq, lam)
+    want_p, want_r = predictor_ref(x, y, xq, lam)
+    np.testing.assert_allclose(np.asarray(preds), np.asarray(want_p),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(rmse), np.asarray(want_r),
+                               rtol=5e-3, atol=5e-3)
+    assert np.all(np.isfinite(np.asarray(preds)))
+
+
+def test_rmse_increases_with_lambda_on_noiseless_data():
+    """With clean targets, heavier regularisation can only fit worse."""
+    rng = np.random.default_rng(7)
+    x, _, xq, lam = make_predictor_inputs(rng)
+    beta = rng.normal(0.0, 1.0, size=shapes.F).astype(np.float32)
+    y = (x @ beta).astype(np.float32)
+    _, rmse = predictor_model(x, y, xq, lam)
+    r = np.asarray(rmse)
+    assert np.all(np.diff(r) >= -1e-4), r
+
+
+def test_best_fit_prefers_small_lambda_on_clean_signal():
+    rng = np.random.default_rng(8)
+    x, _, xq, lam = make_predictor_inputs(rng)
+    beta = rng.normal(0.0, 1.0, size=shapes.F).astype(np.float32)
+    y = (x @ beta).astype(np.float32)
+    _, rmse = predictor_model(x, y, xq, lam)
+    assert int(np.argmin(np.asarray(rmse))) == 0

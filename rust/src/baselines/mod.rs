@@ -1,0 +1,50 @@
+//! Comparison frameworks from §6 plus a naive round-robin comparator,
+//! and the min-cost max-flow substrate Helix builds on.
+
+pub mod helix;
+pub mod mcmf;
+pub mod splitwise;
+
+pub use helix::HelixScheduler;
+pub use splitwise::SplitwiseScheduler;
+
+use crate::config::PhysicsConfig;
+use crate::plan::Plan;
+use crate::sim::{EpochContext, Scheduler};
+
+/// Naive geo-round-robin: even split across all sites, always warm.
+/// Not in the paper's comparison set, but a useful sanity floor.
+pub struct RoundRobinScheduler;
+
+impl Scheduler for RoundRobinScheduler {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+
+    fn unused_pr(&self, phys: &PhysicsConfig) -> f64 {
+        phys.pr_idle
+    }
+
+    fn plan(&mut self, ctx: &EpochContext) -> Plan {
+        Plan::uniform(ctx.cfg.num_classes(), ctx.cfg.datacenters.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::power::GridSignals;
+    use crate::sim::simulate;
+    use crate::trace::Trace;
+
+    #[test]
+    fn round_robin_simulates() {
+        let cfg = SystemConfig::small_test();
+        let trace = Trace::generate(&cfg, cfg.epochs, 1);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 1);
+        let res = simulate(&cfg, &trace, &signals, &mut RoundRobinScheduler, 1);
+        assert!(res.total.requests > 0.0);
+        assert_eq!(res.name, "round-robin");
+    }
+}

@@ -1,0 +1,231 @@
+//! Splitwise baseline [17]: queue-based scheduling with prefill/decode
+//! phase splitting.
+//!
+//! The published system routes each request to separate prefill and decode
+//! machine pools (prefill on the fastest hardware, decode on the
+//! power-efficient pool) and keeps both pools warm for latency. At the
+//! epoch-plan granularity this becomes: per class, greedily fill sites in
+//! latency order (join-shortest-queue against both pools' remaining
+//! capacity), with H100 types as the prefill pool and A100 types as the
+//! decode pool. It is TTFT-excellent and sustainability-blind
+//! (always-warm, Fig. 4/5's shape).
+
+use crate::cluster::can_serve;
+use crate::config::{PhysicsConfig, MODELS};
+use crate::plan::Plan;
+use crate::sim::{EpochContext, Scheduler};
+
+pub struct SplitwiseScheduler;
+
+/// Node-type pool split: A100 types = decode pool, H100 types = prefill.
+fn is_prefill_type(name: &str) -> bool {
+    name.starts_with("h100")
+}
+
+impl Scheduler for SplitwiseScheduler {
+    fn name(&self) -> String {
+        "splitwise".into()
+    }
+
+    // Both pools stay warm — that's the design's latency play.
+    fn unused_pr(&self, phys: &PhysicsConfig) -> f64 {
+        phys.pr_idle
+    }
+
+    fn plan(&mut self, ctx: &EpochContext) -> Plan {
+        let cfg = ctx.cfg;
+        let ev = ctx.evaluator;
+        let k_n = ev.classes();
+        let l_n = ev.dcs();
+        let cp = &ev.cp;
+        let epoch_s = cfg.physics.epoch_s;
+
+        // remaining pool capacity per site, node-seconds
+        let mut prefill_cap = vec![0.0f64; l_n];
+        let mut decode_cap = vec![0.0f64; l_n];
+        for (l, dc) in cfg.datacenters.iter().enumerate() {
+            for (ti, nt) in cfg.node_types.iter().enumerate() {
+                let budget = dc.nodes_per_type[ti] as f64 * epoch_s;
+                if is_prefill_type(&nt.name) {
+                    prefill_cap[l] += budget;
+                } else {
+                    decode_cap[l] += budget;
+                }
+            }
+        }
+
+        // mean pool throughputs per model (tokens/s per node-second is just
+        // tokens/s; capacity bookkeeping is node-seconds)
+        let mut prefill_thr = [0.0f64; MODELS];
+        let mut decode_thr = [0.0f64; MODELS];
+        let mut pn = 0.0f64;
+        let mut dn = 0.0f64;
+        for nt in &cfg.node_types {
+            for m in 0..MODELS {
+                if is_prefill_type(&nt.name) {
+                    prefill_thr[m] += nt.thr_tokens_s[m];
+                } else {
+                    decode_thr[m] += nt.thr_tokens_s[m];
+                }
+            }
+            if is_prefill_type(&nt.name) {
+                pn += 1.0;
+            } else {
+                dn += 1.0;
+            }
+        }
+        for m in 0..MODELS {
+            prefill_thr[m] /= pn.max(1.0);
+            decode_thr[m] /= dn.max(1.0);
+        }
+
+        // process classes largest-first (queue pressure first)
+        let mut order: Vec<usize> = (0..k_n).collect();
+        order.sort_by(|&a, &b| {
+            cp.n_req[b].partial_cmp(&cp.n_req[a]).unwrap()
+        });
+
+        let mut plan = Plan::uniform(k_n, l_n);
+        for k in order {
+            let m = k % MODELS;
+            let model_spec = &cfg.models[m];
+            // site order: latency proxy (hops + proc), i.e. the queue-based
+            // scheduler's greedy preference
+            let mut sites: Vec<usize> = (0..l_n)
+                .filter(|&l| {
+                    cfg.node_types
+                        .iter()
+                        .any(|nt| can_serve(nt, model_spec.param_mem_gb))
+                        && (prefill_cap[l] > 0.0 || decode_cap[l] > 0.0)
+                })
+                .collect();
+            sites.sort_by(|&a, &b| {
+                let la = cp.hops[k * l_n + a] + 50.0 * cp.proc[k * l_n + a];
+                let lb = cp.hops[k * l_n + b] + 50.0 * cp.proc[k * l_n + b];
+                la.partial_cmp(&lb).unwrap()
+            });
+
+            let mut remaining = cp.n_req[k];
+            let mut assigned = vec![0.0f64; l_n];
+            // per-request pool demand (node-seconds)
+            let tok_in = ctx.predicted.classes[k].tok_in.max(1.0);
+            let prefill_s = tok_in / prefill_thr[m].max(1e-9);
+            let decode_s = cp.tok_out[k] / decode_thr[m].max(1e-9);
+            for &l in &sites {
+                if remaining <= 0.0 {
+                    break;
+                }
+                // JSQ: how many requests fit in the tighter pool
+                let fit_prefill = prefill_cap[l] / prefill_s.max(1e-9);
+                let fit_decode = decode_cap[l] / decode_s.max(1e-9);
+                let fit = fit_prefill.min(fit_decode).max(0.0);
+                let take = remaining.min(fit);
+                if take <= 0.0 {
+                    continue;
+                }
+                assigned[l] = take;
+                prefill_cap[l] -= take * prefill_s;
+                decode_cap[l] -= take * decode_s;
+                remaining -= take;
+            }
+            if remaining > 0.0 && !sites.is_empty() {
+                // overloaded: queue the residue on the nearest site
+                assigned[sites[0]] += remaining;
+            }
+            let total: f64 = assigned.iter().sum();
+            for l in 0..l_n {
+                plan.set(
+                    k,
+                    l,
+                    if total > 0.0 {
+                        assigned[l] / total
+                    } else {
+                        0.0
+                    },
+                );
+            }
+        }
+        plan.normalize();
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::build_panels;
+    use crate::config::SystemConfig;
+    use crate::eval::{AnalyticEvaluator, EvalConsts};
+    use crate::power::GridSignals;
+    use crate::trace::Trace;
+
+    fn plan_for(cfg: &SystemConfig, seed: u64) -> (Plan, AnalyticEvaluator) {
+        let trace = Trace::generate(cfg, 4, seed);
+        let signals = GridSignals::generate(cfg, 4, seed);
+        let (cp, dp) = build_panels(
+            cfg,
+            &signals,
+            1,
+            &trace.epochs[1],
+            cfg.physics.pr_idle,
+        );
+        let ev = AnalyticEvaluator::new(
+            cp,
+            dp,
+            EvalConsts::from_physics(&cfg.physics),
+        );
+        let predicted = trace.epochs[1].clone();
+        let ctx = EpochContext {
+            cfg,
+            epoch: 1,
+            predicted: &predicted,
+            evaluator: &ev,
+        };
+        (SplitwiseScheduler.plan(&ctx), ev)
+    }
+
+    #[test]
+    fn valid_plan_and_latency_greedy() {
+        let cfg = SystemConfig::paper_default();
+        let (plan, ev) = plan_for(&cfg, 1);
+        assert!(plan.is_valid());
+        let l_n = ev.dcs();
+        // the dominant site per class is within the origin's low-hop set
+        for k in 0..ev.classes() {
+            if ev.cp.n_req[k] <= 0.0 {
+                continue;
+            }
+            let best_l = (0..l_n)
+                .max_by(|&a, &b| {
+                    plan.get(k, a).partial_cmp(&plan.get(k, b)).unwrap()
+                })
+                .unwrap();
+            let min_hops = (0..l_n)
+                .map(|l| ev.cp.hops[k * l_n + l])
+                .fold(f64::INFINITY, f64::min);
+            assert!(ev.cp.hops[k * l_n + best_l] <= min_hops + 4.0);
+        }
+    }
+
+    #[test]
+    fn splits_under_capacity_pressure() {
+        let mut cfg = SystemConfig::paper_default();
+        for d in &mut cfg.datacenters {
+            d.nodes_per_type = vec![2, 2, 2, 2, 2, 2];
+        }
+        cfg.workload.base_requests_per_epoch = 50_000.0;
+        let (plan, ev) = plan_for(&cfg, 2);
+        assert!(plan.is_valid());
+        let spread = (0..ev.classes()).any(|k| {
+            (0..ev.dcs()).filter(|&l| plan.get(k, l) > 0.05).count() > 1
+        });
+        assert!(spread);
+    }
+
+    #[test]
+    fn always_warm_power_policy() {
+        let cfg = SystemConfig::paper_default();
+        let s = SplitwiseScheduler;
+        assert_eq!(s.unused_pr(&cfg.physics), cfg.physics.pr_idle);
+    }
+}

@@ -1,0 +1,502 @@
+//! Command-line launcher (hand-rolled parsing; the offline image has no
+//! clap). Subcommands:
+//!
+//! ```text
+//! slit simulate   run frameworks over a trace, print the Fig.4-style table
+//! slit trace      generate the synthetic BurstGPT-like trace (Fig. 1 data)
+//! slit pareto     dump one epoch's Pareto front (front.json)
+//! slit serve      start the online coordinator + TCP front
+//! slit artifacts  check the AOT artifacts load and match the build
+//! slit config     write the paper-default config as JSON
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::baselines::{HelixScheduler, RoundRobinScheduler, SplitwiseScheduler};
+use crate::config::{SystemConfig, N_OBJ, OBJ_NAMES};
+use crate::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
+use crate::opt::{SlitScheduler, SlitVariant};
+use crate::power::GridSignals;
+use crate::runtime::{artifacts_dir, artifacts_present, Engine};
+use crate::sim::{simulate, Scheduler, SimResult};
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+/// Parsed `--flag value` / `--flag` arguments.
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let command = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            anyhow::ensure!(
+                a.starts_with("--"),
+                "unexpected argument '{a}' (flags start with --)"
+            );
+            let key = a.trim_start_matches("--").to_string();
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key, argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key, "true".into());
+                i += 1;
+            }
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Load the config per --config/--scale/--epochs/--seed flags.
+pub fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::load(path)?,
+        None => match args.get("scale") {
+            Some("small") => SystemConfig::small_test(),
+            _ => SystemConfig::paper_default(),
+        },
+    };
+    if let Some(e) = args.get("epochs") {
+        cfg.epochs = e.parse()?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    if let Some(b) = args.get("budget") {
+        cfg.opt.budget_s = b.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// All framework names `simulate --framework` accepts.
+pub fn framework_names() -> Vec<&'static str> {
+    let mut v = vec!["helix", "splitwise", "round-robin"];
+    for variant in SlitVariant::all() {
+        v.push(variant.name());
+    }
+    v
+}
+
+/// Instantiate a scheduler by name.
+pub fn make_scheduler(
+    name: &str,
+    cfg: &SystemConfig,
+    engine: Option<std::sync::Arc<Engine>>,
+) -> anyhow::Result<Box<dyn Scheduler>> {
+    let sched: Box<dyn Scheduler> = match name {
+        "helix" => Box::new(HelixScheduler),
+        "splitwise" => Box::new(SplitwiseScheduler),
+        "round-robin" => Box::new(RoundRobinScheduler),
+        slit_name => {
+            let variant = SlitVariant::all()
+                .into_iter()
+                .find(|v| v.name() == slit_name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown framework '{slit_name}' (try: {})",
+                        framework_names().join(", ")
+                    )
+                })?;
+            let mut s = SlitScheduler::new(cfg, variant);
+            if let Some(engine) = engine {
+                s = s.with_engine(engine);
+            }
+            Box::new(s)
+        }
+    };
+    Ok(sched)
+}
+
+/// `slit simulate` — the Fig. 4 / Fig. 5 driver.
+pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let engine = if args.bool("use-hlo") {
+        Some(Engine::load(&artifacts_dir())?)
+    } else {
+        None
+    };
+    let which: Vec<String> = match args.get("framework") {
+        None | Some("all") => {
+            framework_names().iter().map(|s| s.to_string()).collect()
+        }
+        Some(one) => vec![one.to_string()],
+    };
+
+    let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
+    let mut results: Vec<SimResult> = Vec::new();
+    for name in &which {
+        let mut sched = make_scheduler(name, &cfg, engine.clone())?;
+        eprintln!("simulating {name} over {} epochs ...", cfg.epochs);
+        let t = std::time::Instant::now();
+        let res = simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
+        eprintln!(
+            "  {name}: {:.1}s, {} requests",
+            t.elapsed().as_secs_f64(),
+            res.total.requests
+        );
+        results.push(res);
+    }
+    print_comparison(&results);
+
+    if let Some(path) = args.get("out") {
+        write_results_json(&results, path)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Print the Fig. 4-style normalized comparison (norm = Splitwise when
+/// present, else the first framework).
+pub fn print_comparison(results: &[SimResult]) {
+    if results.is_empty() {
+        return;
+    }
+    let base_idx = results
+        .iter()
+        .position(|r| r.name == "splitwise")
+        .unwrap_or(0);
+    let base = results[base_idx].objectives();
+    println!(
+        "\n| framework | {} |",
+        OBJ_NAMES
+            .iter()
+            .map(|n| format!("{n} (norm)"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    );
+    println!("|---|---|---|---|---|");
+    for r in results {
+        let o = r.objectives();
+        let cells: Vec<String> = (0..N_OBJ)
+            .map(|i| {
+                let norm = if base[i] > 0.0 { o[i] / base[i] } else { 0.0 };
+                format!("{:.4} ({:.3})", o[i], norm)
+            })
+            .collect();
+        println!("| {} | {} |", r.name, cells.join(" | "));
+    }
+    println!("(normalized to `{}`)", results[base_idx].name);
+}
+
+/// Serialize per-framework totals + per-epoch series.
+pub fn write_results_json(results: &[SimResult], path: &str) -> anyhow::Result<()> {
+    let mut root = Json::obj();
+    for r in results {
+        let mut jr = Json::obj();
+        let o = r.objectives();
+        jr.set("objectives", Json::num_arr(&o));
+        jr.set("requests", Json::Num(r.total.requests));
+        jr.set("dropped", Json::Num(r.total.dropped));
+        jr.set("energy_kwh", Json::Num(r.total.e_tot_j / 3.6e6));
+        let mut series = Vec::new();
+        for e in &r.per_epoch {
+            series.push(Json::num_arr(&[
+                e.epoch as f64,
+                e.ledger.mean_ttft_s(),
+                e.ledger.carbon_kg,
+                e.ledger.water_l,
+                e.ledger.cost_usd,
+                e.decision_s,
+            ]));
+        }
+        jr.set("per_epoch", Json::Arr(series));
+        root.set(&r.name, jr);
+    }
+    std::fs::write(path, root.to_string_pretty())?;
+    Ok(())
+}
+
+/// `slit trace` — Fig. 1 data.
+pub fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(args)?;
+    // two weeks by default, like the BurstGPT window in Fig. 1
+    let epochs = args.usize("epochs", 1344);
+    cfg.epochs = epochs;
+    let trace = Trace::generate(&cfg, epochs, cfg.seed);
+    let out = args.get("out").unwrap_or("trace.csv");
+    trace.write_csv(out)?;
+    let toks = trace.tokens_per_epoch();
+    let (lo, hi) = crate::util::stats::min_max(&toks);
+    println!(
+        "wrote {out}: {epochs} epochs, tokens/epoch min {lo:.0} max {hi:.0} \
+         mean {:.0}",
+        crate::util::stats::mean(&toks)
+    );
+    Ok(())
+}
+
+/// `slit pareto` — dump one epoch's front.
+pub fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let epoch = args.usize("epoch", 36); // mid-morning by default
+    let trace = Trace::generate(&cfg, epoch + 1, cfg.seed);
+    let signals = GridSignals::generate(&cfg, epoch + 1, cfg.seed);
+    let (cp, dp) = crate::cluster::build_panels(
+        &cfg,
+        &signals,
+        epoch,
+        &trace.epochs[epoch],
+        cfg.physics.pr_off,
+    );
+    let ev = crate::eval::AnalyticEvaluator::new(
+        cp,
+        dp,
+        crate::eval::EvalConsts::from_physics(&cfg.physics),
+    );
+    let mut optimizer = crate::opt::SlitOptimizer::new(
+        cfg.opt.clone(),
+        cfg.num_classes(),
+        cfg.datacenters.len(),
+        cfg.seed,
+    );
+    let engine = if args.bool("use-hlo") {
+        Some(Engine::load(&artifacts_dir())?)
+    } else {
+        None
+    };
+    let outcome = match engine {
+        Some(engine) => {
+            let hlo =
+                crate::runtime::HloPlanEvaluator::from_analytic(engine, &ev);
+            optimizer.optimize(&hlo)
+        }
+        None => optimizer.optimize(&ev),
+    };
+
+    let mut front = Vec::new();
+    for s in &outcome.archive.solutions {
+        front.push(Json::num_arr(&s.obj));
+    }
+    let mut root = Json::obj();
+    root.set("epoch", Json::Num(epoch as f64));
+    root.set("objectives", Json::str_arr(&OBJ_NAMES));
+    root.set("front", Json::Arr(front));
+    let mut showcased = Json::obj();
+    for (name, sol) in outcome.archive.showcase() {
+        showcased.set(&name, Json::num_arr(&sol.obj));
+    }
+    root.set("showcase", showcased);
+    root.set("evaluations", Json::Num(outcome.evaluations as f64));
+    let out = args.get("out").unwrap_or("front.json");
+    std::fs::write(out, root.to_string_pretty())?;
+    println!(
+        "wrote {out}: {} front points, {} evaluations, {:.2}s",
+        outcome.archive.len(),
+        outcome.evaluations,
+        outcome.wall_s
+    );
+    Ok(())
+}
+
+/// `slit serve` — online coordinator + TCP front.
+pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let engine = if args.bool("use-hlo") {
+        Some(Engine::load(&artifacts_dir())?)
+    } else {
+        None
+    };
+    let variant_name = args.get("variant").unwrap_or("slit-balance");
+    let variant = SlitVariant::all()
+        .into_iter()
+        .find(|v| v.name() == variant_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown variant '{variant_name}'"))?;
+    let ccfg = CoordinatorConfig {
+        variant,
+        epoch_wall_s: args.f64("epoch-seconds", 15.0),
+        plan_budget_s: args.f64("budget", 5.0),
+        ..Default::default()
+    };
+    let coordinator = Coordinator::new(cfg, ccfg, engine);
+    let clock = coordinator.spawn_epoch_clock();
+    let handle = serve_forever(
+        std::sync::Arc::clone(&coordinator),
+        args.usize("port", 7070) as u16,
+    )?;
+    println!(
+        "slit coordinator listening on 127.0.0.1:{} (backend: {}, \
+         variant: {variant_name})",
+        handle.port,
+        coordinator.backend()
+    );
+    handle.thread.join().ok();
+    coordinator.stop();
+    clock.join().ok();
+    Ok(())
+}
+
+/// `slit artifacts` — verify the AOT artifacts.
+pub fn cmd_artifacts(_args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        artifacts_present(),
+        "artifacts missing at {} — run `make artifacts`",
+        artifacts_dir().display()
+    );
+    let engine = Engine::load(&artifacts_dir())?;
+    let m = &engine.manifest;
+    println!(
+        "artifacts OK: plan_eval P={} K={} L={}; predictor H={} F={} D={}",
+        m.population, m.classes, m.dc_slots, m.window, m.features, m.lambdas
+    );
+    Ok(())
+}
+
+/// `slit config` — dump the default config.
+pub fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get("out").unwrap_or("slit-config.json");
+    cfg.save(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+pub const USAGE: &str = "\
+slit — sustainable geo-distributed LLM scheduling (SLIT reproduction)
+
+USAGE: slit <command> [flags]
+
+COMMANDS:
+  simulate   run frameworks over a synthetic trace (Fig. 4/5 driver)
+             --framework all|helix|splitwise|round-robin|slit-{carbon,ttft,water,cost,balance}
+             --scale paper|small   --epochs N   --seed N   --out results.json
+             --use-hlo (search on the AOT/PJRT artifact)   --budget S
+  trace      write the Fig. 1 workload series  --epochs N --out trace.csv
+  pareto     dump one epoch's Pareto front     --epoch N --out front.json
+  serve      start the online coordinator      --port N --variant NAME
+             --epoch-seconds F --use-hlo
+  artifacts  verify AOT artifacts load + shape-check
+  config     write the resolved config         --out slit-config.json
+";
+
+/// Entry point used by main.rs.
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "trace" => cmd_trace(&args),
+        "pareto" => cmd_pareto(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "config" => cmd_config(&args),
+        "help" | "--help" | "-h" => {
+            // ignore broken pipes (e.g. `slit help | head`)
+            use std::io::Write;
+            let _ = writeln!(std::io::stdout(), "{USAGE}");
+            Ok(())
+        }
+        other => {
+            use std::io::Write;
+            let _ = writeln!(std::io::stdout(), "{USAGE}");
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = Args::parse(&argv(
+            "simulate --framework helix --epochs 4 --use-hlo",
+        ))
+        .unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("framework"), Some("helix"));
+        assert_eq!(a.usize("epochs", 0), 4);
+        assert!(a.bool("use-hlo"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(&argv("simulate bogus")).is_err());
+    }
+
+    #[test]
+    fn scheduler_factory_knows_all_names() {
+        let cfg = SystemConfig::small_test();
+        for name in framework_names() {
+            let s = make_scheduler(name, &cfg, None).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(make_scheduler("nope", &cfg, None).is_err());
+    }
+
+    #[test]
+    fn config_flags_override() {
+        let a = Args::parse(&argv(
+            "simulate --scale small --epochs 3 --seed 99",
+        ))
+        .unwrap();
+        let cfg = load_config(&a).unwrap();
+        assert_eq!(cfg.epochs, 3);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn trace_command_writes_csv() {
+        let tmp = std::env::temp_dir().join("slit_cli_trace.csv");
+        let a = Args::parse(&argv(&format!(
+            "trace --scale small --epochs 8 --out {}",
+            tmp.display()
+        )))
+        .unwrap();
+        cmd_trace(&a).unwrap();
+        assert!(tmp.exists());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn simulate_small_single_framework() {
+        let tmp = std::env::temp_dir().join("slit_cli_sim.json");
+        let a = Args::parse(&argv(&format!(
+            "simulate --scale small --epochs 2 --framework round-robin --out {}",
+            tmp.display()
+        )))
+        .unwrap();
+        cmd_simulate(&a).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert!(j.get("round-robin").is_some());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

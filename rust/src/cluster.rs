@@ -1,0 +1,324 @@
+//! Datacenter/cluster model: node-type capability derivation, the parameter
+//! panels consumed by the analytic evaluator + AOT kernel, and the
+//! aggregate capacity bookkeeping used by the discrete simulator.
+//!
+//! Heterogeneity (§3.2/§6): each site hosts six node types (2/4/8 x
+//! A100/H100) whose GPUs pool memory. A node type can only serve a model
+//! whose parameter memory fits the pooled memory (Eq. 1's capacity clause);
+//! per-class throughput panels are node-count-weighted means over the
+//! types that can serve the class.
+
+use crate::config::{DatacenterSpec, NodeType, SystemConfig, MODELS};
+use crate::power::GridSignals;
+use crate::trace::EpochLoad;
+
+/// Can this node type serve this model at all (parameters + some KV fit)?
+pub fn can_serve(nt: &NodeType, model_mem_gb: f64) -> bool {
+    pooled_mem_gb(nt) >= model_mem_gb * 1.05
+}
+
+/// Pooled GPU memory of a node, GB (§3.2: GPUs pool their memory).
+pub fn pooled_mem_gb(nt: &NodeType) -> f64 {
+    nt.gpus as f64 * nt.gpu_mem_gb
+}
+
+/// Per-class parameter panels in the AOT kernel's layout (see
+/// python/compile/kernels/ref.py for semantics).
+#[derive(Clone, Debug)]
+pub struct ClassPanels {
+    pub classes: usize,
+    pub dcs: usize,
+    /// [K] requests, mean output tokens, model memory GB.
+    pub n_req: Vec<f64>,
+    pub tok_out: Vec<f64>,
+    pub mem: Vec<f64>,
+    /// [K * L] node throughput tokens/s; first-token seconds; router hops.
+    pub thr: Vec<f64>,
+    pub proc: Vec<f64>,
+    pub hops: Vec<f64>,
+}
+
+/// Per-datacenter parameter panel (AOT `dc[8, L]` rows).
+#[derive(Clone, Debug)]
+pub struct DcPanels {
+    pub dcs: usize,
+    pub nodes: Vec<f64>,
+    pub tdp: Vec<f64>,
+    pub cop: Vec<f64>,
+    pub tou: Vec<f64>,
+    pub ci: Vec<f64>,
+    pub wi: Vec<f64>,
+    pub bw: Vec<f64>,
+    pub unused_pr: Vec<f64>,
+}
+
+/// Mean node throughput for a model at a site, weighted by node counts and
+/// restricted to types that can hold the model. tokens/s per node.
+pub fn mean_node_throughput(
+    cfg: &SystemConfig,
+    dc: &DatacenterSpec,
+    model: usize,
+) -> f64 {
+    let mem = cfg.models[model].param_mem_gb;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (ti, nt) in cfg.node_types.iter().enumerate() {
+        if can_serve(nt, mem) {
+            let n = dc.nodes_per_type[ti] as f64;
+            num += n * nt.thr_tokens_s[model];
+            den += n;
+        }
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Mean per-request decode rate at a site for a model, tokens/s.
+pub fn mean_decode_rate(
+    cfg: &SystemConfig,
+    dc: &DatacenterSpec,
+    model: usize,
+) -> f64 {
+    let mem = cfg.models[model].param_mem_gb;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (ti, nt) in cfg.node_types.iter().enumerate() {
+        if can_serve(nt, mem) {
+            let n = dc.nodes_per_type[ti] as f64;
+            num += n * nt.decode_tokens_s[model];
+            den += n;
+        }
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Node-count-weighted mean TDP at a site, W.
+pub fn mean_node_tdp(cfg: &SystemConfig, dc: &DatacenterSpec) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (ti, nt) in cfg.node_types.iter().enumerate() {
+        let n = dc.nodes_per_type[ti] as f64;
+        num += n * nt.tdp_w;
+        den += n;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Build the evaluator panels for one epoch.
+///
+/// `unused_pr` is the framework's power policy for nodes not serving load
+/// this epoch: `pr_off` for schedulers that scale to zero (SLIT),
+/// `pr_idle` for always-warm baselines (Splitwise).
+pub fn build_panels(
+    cfg: &SystemConfig,
+    signals: &GridSignals,
+    epoch: usize,
+    load: &EpochLoad,
+    unused_pr: f64,
+) -> (ClassPanels, DcPanels) {
+    let k_n = cfg.num_classes();
+    let l_n = cfg.datacenters.len();
+    let mut cp = ClassPanels {
+        classes: k_n,
+        dcs: l_n,
+        n_req: vec![0.0; k_n],
+        tok_out: vec![0.0; k_n],
+        mem: vec![0.0; k_n],
+        thr: vec![1.0; k_n * l_n],
+        proc: vec![0.0; k_n * l_n],
+        hops: vec![0.0; k_n * l_n],
+    };
+    for k in 0..k_n {
+        let model = k % MODELS;
+        let region = k / MODELS;
+        let c = &load.classes[k];
+        cp.n_req[k] = c.n_req;
+        cp.tok_out[k] = c.tok_out;
+        cp.mem[k] = cfg.models[model].param_mem_gb;
+        for (l, dc) in cfg.datacenters.iter().enumerate() {
+            let thr = mean_node_throughput(cfg, dc, model);
+            let dec = mean_decode_rate(cfg, dc, model);
+            cp.thr[k * l_n + l] = thr.max(1e-9);
+            cp.proc[k * l_n + l] = if dec > 0.0 { 1.0 / dec } else { 1e3 };
+            cp.hops[k * l_n + l] = cfg.hops(region, l);
+        }
+    }
+
+    let (ci, wi, tou) = signals.at(epoch);
+    let dp = DcPanels {
+        dcs: l_n,
+        nodes: cfg
+            .datacenters
+            .iter()
+            .map(|d| d.total_nodes() as f64)
+            .collect(),
+        tdp: cfg
+            .datacenters
+            .iter()
+            .map(|d| mean_node_tdp(cfg, d))
+            .collect(),
+        cop: cfg.datacenters.iter().map(|d| d.cop).collect(),
+        tou,
+        ci,
+        wi,
+        bw: cfg.datacenters.iter().map(|d| d.bw_gbs).collect(),
+        unused_pr: vec![unused_pr; l_n],
+    };
+    (cp, dp)
+}
+
+/// Aggregate per-(site, node-type) capacity bookkeeping for the discrete
+/// simulator: tracks committed node-seconds within an epoch.
+#[derive(Clone, Debug)]
+pub struct DcCapacity {
+    /// Node-seconds available per type this epoch.
+    pub budget_s: Vec<f64>,
+    /// Node-seconds committed per type.
+    pub used_s: Vec<f64>,
+    /// Nodes per type (copy of the spec).
+    pub nodes: Vec<usize>,
+}
+
+impl DcCapacity {
+    pub fn new(dc: &DatacenterSpec, epoch_s: f64) -> DcCapacity {
+        DcCapacity {
+            budget_s: dc
+                .nodes_per_type
+                .iter()
+                .map(|&n| n as f64 * epoch_s)
+                .collect(),
+            used_s: vec![0.0; dc.nodes_per_type.len()],
+            nodes: dc.nodes_per_type.clone(),
+        }
+    }
+
+    /// Commit `node_s` node-seconds on a type; returns false if exhausted.
+    pub fn commit(&mut self, node_type: usize, node_s: f64) -> bool {
+        if self.used_s[node_type] + node_s <= self.budget_s[node_type] {
+            self.used_s[node_type] += node_s;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn remaining_s(&self, node_type: usize) -> f64 {
+        self.budget_s[node_type] - self.used_s[node_type]
+    }
+
+    /// Utilisation of a node type in [0, 1].
+    pub fn utilization(&self, node_type: usize) -> f64 {
+        if self.budget_s[node_type] <= 0.0 {
+            return 1.0;
+        }
+        (self.used_s[node_type] / self.budget_s[node_type]).clamp(0.0, 1.0)
+    }
+
+    /// Whole-site utilisation.
+    pub fn site_utilization(&self) -> f64 {
+        let b: f64 = self.budget_s.iter().sum();
+        if b <= 0.0 {
+            return 1.0;
+        }
+        (self.used_s.iter().sum::<f64>() / b).clamp(0.0, 1.0)
+    }
+
+    /// Equivalent number of ON nodes per type (used node-seconds / epoch).
+    pub fn on_nodes(&self, node_type: usize, epoch_s: f64) -> f64 {
+        (self.used_s[node_type] / epoch_s).min(self.nodes[node_type] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::trace::Trace;
+
+    #[test]
+    fn small_model_fits_everywhere_large_needs_memory() {
+        let cfg = SystemConfig::paper_default();
+        for nt in &cfg.node_types {
+            assert!(can_serve(nt, cfg.models[0].param_mem_gb), "{}", nt.name);
+        }
+        // 140 GB needs > 147 GB pooled: 2-GPU nodes (160 GB) qualify,
+        // so every type should still serve it in the default config.
+        let servable = cfg
+            .node_types
+            .iter()
+            .filter(|nt| can_serve(nt, cfg.models[1].param_mem_gb))
+            .count();
+        assert_eq!(servable, 6);
+        // but a hypothetical 1-GPU type would not
+        let mut tiny = cfg.node_types[0].clone();
+        tiny.gpus = 1;
+        assert!(!can_serve(&tiny, cfg.models[1].param_mem_gb));
+    }
+
+    #[test]
+    fn throughput_weighted_mean_in_range() {
+        let cfg = SystemConfig::paper_default();
+        let dc = &cfg.datacenters[0];
+        for model in 0..MODELS {
+            let thr = mean_node_throughput(&cfg, dc, model);
+            let min = cfg
+                .node_types
+                .iter()
+                .map(|n| n.thr_tokens_s[model])
+                .fold(f64::INFINITY, f64::min);
+            let max = cfg
+                .node_types
+                .iter()
+                .map(|n| n.thr_tokens_s[model])
+                .fold(0.0, f64::max);
+            assert!(thr >= min && thr <= max, "model {model}: {thr}");
+        }
+    }
+
+    #[test]
+    fn panels_have_expected_shapes_and_ranges() {
+        let cfg = SystemConfig::paper_default();
+        let signals = GridSignals::generate(&cfg, 4, 1);
+        let trace = Trace::generate(&cfg, 4, 1);
+        let (cp, dp) = build_panels(&cfg, &signals, 2, &trace.epochs[2], 0.05);
+        assert_eq!(cp.classes, cfg.num_classes());
+        assert_eq!(cp.thr.len(), cp.classes * cp.dcs);
+        assert!(cp.thr.iter().all(|&t| t > 0.0));
+        assert!(cp.proc.iter().all(|&p| p > 0.0 && p < 10.0));
+        assert_eq!(dp.nodes.len(), cfg.datacenters.len());
+        assert!(dp.nodes.iter().all(|&n| n == 1000.0));
+        assert!(dp.tdp.iter().all(|&t| t > 1000.0 && t < 7000.0));
+        assert!(dp.unused_pr.iter().all(|&u| u == 0.05));
+        // local DC has fewer hops than cross-region for class 0 (east-asia)
+        let l_n = cp.dcs;
+        let local = cfg.datacenters.iter().position(|d| d.region == 0).unwrap();
+        let remote = cfg.datacenters.iter().position(|d| d.region == 3).unwrap();
+        assert!(cp.hops[local] < cp.hops[remote]);
+        let _ = l_n;
+    }
+
+    #[test]
+    fn capacity_commit_and_utilization() {
+        let cfg = SystemConfig::small_test();
+        let mut cap = DcCapacity::new(&cfg.datacenters[0], 900.0);
+        // type 0 has 10 nodes -> 9000 node-seconds
+        assert!(cap.commit(0, 4500.0));
+        assert!((cap.utilization(0) - 0.5).abs() < 1e-12);
+        assert!(cap.commit(0, 4500.0));
+        assert!(!cap.commit(0, 1.0));
+        assert_eq!(cap.remaining_s(0), 0.0);
+        assert!((cap.on_nodes(0, 900.0) - 10.0).abs() < 1e-12);
+        assert!(cap.site_utilization() > 0.0 && cap.site_utilization() <= 1.0);
+    }
+}

@@ -1,0 +1,807 @@
+//! Configuration system: the full experiment setup of the paper as data.
+//!
+//! The paper's testbed (§6): 12 datacenters spread over four regions
+//! (East Asia, Oceania, North America, Western Europe), 1000 heterogeneous
+//! nodes per datacenter drawn from six node types (2-8 GPUs of A100 or
+//! H100), two served models (Llama-7B / Llama-70B), 15-minute epochs, and a
+//! 24-hour evaluation window at 0.5x request delay / 3x tokens / 10x
+//! request count relative to the BurstGPT trace.
+//!
+//! Everything is plain data with JSON load/save (`util::json`), so every
+//! experiment is reproducible from a config file + seed.
+
+use crate::util::json::Json;
+
+/// Geographic regions (request origins and datacenter sites).
+pub const REGIONS: usize = 4;
+pub const REGION_NAMES: [&str; REGIONS] =
+    ["east-asia", "oceania", "north-america", "western-europe"];
+
+/// Served model families.
+pub const MODELS: usize = 2;
+pub const MODEL_NAMES: [&str; MODELS] = ["llama-7b", "llama-70b"];
+
+/// Request classes: (origin region, model) pairs; k = region * MODELS + model.
+pub const CLASSES: usize = REGIONS * MODELS;
+
+/// Datacenters in the paper's testbed.
+pub const DATACENTERS: usize = 12;
+
+/// Padded DC slots in the AOT plan-eval artifact (see python/compile/shapes.py).
+pub const DC_SLOTS: usize = 16;
+
+/// Population tile of the AOT plan evaluator.
+pub const EVAL_POPULATION: usize = 128;
+
+/// Epochs per day at 15-minute epochs.
+pub const EPOCHS_PER_DAY: usize = 96;
+
+/// Objective vector layout (all minimised).
+pub const N_OBJ: usize = 4;
+pub const OBJ_NAMES: [&str; N_OBJ] = ["ttft_s", "carbon_kg", "water_l", "cost_usd"];
+pub const OBJ_TTFT: usize = 0;
+pub const OBJ_CARBON: usize = 1;
+pub const OBJ_WATER: usize = 2;
+pub const OBJ_COST: usize = 3;
+
+/// Inter-region router hop counts (Eq. 3); symmetric, diagonal = intra-region.
+pub const REGION_HOPS: [[f64; REGIONS]; REGIONS] = [
+    [2.0, 6.0, 9.0, 11.0],  // east-asia
+    [6.0, 2.0, 10.0, 12.0], // oceania
+    [9.0, 10.0, 2.0, 7.0],  // north-america
+    [11.0, 12.0, 7.0, 2.0], // western-europe
+];
+
+/// A served LLM (Eq. 1 parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Parameter memory M_O, GB.
+    pub param_mem_gb: f64,
+    /// KV-cache growth per output token, GB (M_KV in Eq. 1).
+    pub kv_gb_per_token: f64,
+    /// Mean output tokens per request (scaled by workload token_scale).
+    pub mean_out_tokens: f64,
+    /// Mean input tokens per request.
+    pub mean_in_tokens: f64,
+}
+
+/// One of the six heterogeneous node types (§6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeType {
+    pub name: String,
+    pub gpus: usize,
+    /// Per-GPU memory, GB (pooled across the node, §3.2).
+    pub gpu_mem_gb: f64,
+    /// Node thermal design power, W (Eq. 5).
+    pub tdp_w: f64,
+    /// Serving throughput per node, tokens/s, per model.
+    pub thr_tokens_s: [f64; MODELS],
+    /// Per-request decode rate, tokens/s, per model (Eq. 4 T_exec/N term).
+    pub decode_tokens_s: [f64; MODELS],
+}
+
+/// Static description of one datacenter site.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatacenterSpec {
+    pub name: String,
+    pub region: usize,
+    /// Nodes of each node type (sums to ~1000 in the paper setup).
+    pub nodes_per_type: Vec<usize>,
+    /// Cooling coefficient of performance (Eq. 7).
+    pub cop: f64,
+    /// Model-load bandwidth, GB/s (Eq. 2).
+    pub bw_gbs: f64,
+    /// Local solar-time offset, hours (drives diurnal signals).
+    pub tz_offset_h: f64,
+    /// Carbon-intensity profile: (base kg/kWh, diurnal amplitude frac).
+    pub ci_base: f64,
+    pub ci_amp: f64,
+    /// Water intensity of the grid, L/kWh (Eq. 14), with diurnal amplitude.
+    pub wi_base: f64,
+    pub wi_amp: f64,
+    /// Time-of-use price, $/kWh base + peak uplift fraction (Eq. 11).
+    pub tou_base: f64,
+    pub tou_amp: f64,
+}
+
+impl DatacenterSpec {
+    pub fn total_nodes(&self) -> usize {
+        self.nodes_per_type.iter().sum()
+    }
+}
+
+/// Workload scaling knobs (§6: 0.5x delay, 3x tokens, 10x requests).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Multiplier on request counts vs the base trace.
+    pub request_scale: f64,
+    /// Multiplier on token counts.
+    pub token_scale: f64,
+    /// Multiplier on inter-arrival delay (0.5 = twice the arrival rate).
+    pub delay_scale: f64,
+    /// Fraction of requests hitting the small model (trend 1 from Fig. 1).
+    pub small_model_frac: f64,
+    /// Base requests per epoch across all regions (pre-scaling).
+    pub base_requests_per_epoch: f64,
+    /// Burstiness: probability an epoch is a spike, and spike multiplier.
+    pub burst_prob: f64,
+    pub burst_mult: f64,
+    /// Regional share of request origins (sums to 1).
+    pub region_mix: [f64; REGIONS],
+}
+
+/// SLIT metaheuristic knobs (Algorithm 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptConfig {
+    /// Population size X.
+    pub population: usize,
+    /// Outer iterations `gen`.
+    pub generations: usize,
+    /// Local-search steps per plan per generation.
+    pub search_steps: usize,
+    /// Neighbour candidates scored (by the surrogate) per step.
+    pub neighbors: usize,
+    /// Local-search step size (Dirichlet-ish perturbation scale).
+    pub step: f64,
+    /// Surrogate retrain frequency `freq` (generations).
+    pub train_freq: usize,
+    /// EA mutation probability per gene.
+    pub mutation_rate: f64,
+    /// GBDT: number of trees / depth / learning rate / min leaf.
+    pub gbdt_trees: usize,
+    pub gbdt_depth: usize,
+    pub gbdt_lr: f64,
+    pub gbdt_min_leaf: usize,
+    /// Pareto archive capacity.
+    pub archive_cap: usize,
+    /// Wall-clock budget per epoch decision, seconds (paper: <= 15 min).
+    pub budget_s: f64,
+}
+
+/// Physical constants shared with the AOT kernel (shapes.CONSTS layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhysicsConfig {
+    /// Epoch length, seconds (paper: 15 minutes).
+    pub epoch_s: f64,
+    /// Power ratio of ON nodes (x TDP, Eq. 5).
+    pub pr_on: f64,
+    /// Power ratio of IDLE nodes.
+    pub pr_idle: f64,
+    /// Power ratio of OFF nodes (serverless scale-to-zero floor).
+    pub pr_off: f64,
+    /// Heat absorbed per liter of evaporated water, J/L (Eq. 12).
+    pub h_water: f64,
+    /// Blowdown solids ratio D (Eq. 13).
+    pub d_ratio: f64,
+    /// Potable / wastewater treatment energy intensity, kWh/L (Eq. 17).
+    pub ei_pot: f64,
+    pub ei_waste: f64,
+    /// Inter-router latency per hop, s (Eq. 3).
+    pub k_media: f64,
+    /// Queueing-delay coefficient, s, and utilisation clip.
+    pub q_coef: f64,
+    pub u_max: f64,
+    /// Fraction of requests paying the model-load latency (Eq. 2).
+    pub cold_frac: f64,
+    /// TTFT penalty charged when a request cannot be placed anywhere this
+    /// epoch (re-queue latency), seconds.
+    pub drop_penalty_s: f64,
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub seed: u64,
+    /// Number of epochs simulated (96 = the paper's 24 h window).
+    pub epochs: usize,
+    pub physics: PhysicsConfig,
+    pub models: Vec<ModelSpec>,
+    pub node_types: Vec<NodeType>,
+    pub datacenters: Vec<DatacenterSpec>,
+    pub workload: WorkloadConfig,
+    pub opt: OptConfig,
+}
+
+impl SystemConfig {
+    /// The paper's experimental setup (§6) with public-datasheet constants.
+    pub fn paper_default() -> SystemConfig {
+        let models = vec![
+            ModelSpec {
+                name: MODEL_NAMES[0].into(),
+                param_mem_gb: 14.0,
+                kv_gb_per_token: 0.0005,
+                mean_out_tokens: 180.0,
+                mean_in_tokens: 380.0,
+            },
+            ModelSpec {
+                name: MODEL_NAMES[1].into(),
+                param_mem_gb: 140.0,
+                kv_gb_per_token: 0.0025,
+                mean_out_tokens: 260.0,
+                mean_in_tokens: 520.0,
+            },
+        ];
+
+        // Six node types: {2,4,8} GPUs x {A100, H100}. TDP = GPUs x GPU TDP
+        // + 350 W host. Throughputs from public serving benchmarks, scaled
+        // sublinearly with GPU count (NVLink batching efficiency 0.9).
+        let node_types = vec![
+            node_type("a100x2", 2, 80.0, 400.0, 1.0),
+            node_type("a100x4", 4, 80.0, 400.0, 1.0),
+            node_type("a100x8", 8, 80.0, 400.0, 1.0),
+            node_type("h100x2", 2, 80.0, 700.0, 2.0),
+            node_type("h100x4", 4, 80.0, 700.0, 2.0),
+            node_type("h100x8", 8, 80.0, 700.0, 2.0),
+        ];
+
+        // 12 datacenters, 3 per region, ~1000 nodes each (§6). Node-type
+        // mixes are heterogeneous across sites (A100-heavy / balanced /
+        // H100-heavy rotation) — §3.2's "different combinations and amounts
+        // of processing capabilities". Grid parameters straddle the cited
+        // extremes: wind-heavy grids at 0.2 L/kWh vs hydro-heavy at up to
+        // 67 L/kWh [25]; CI from ~0.02 (hydro/nuclear) to ~0.8 kg/kWh
+        // (coal).
+        const MIXES: [[usize; 6]; 3] = [
+            [250, 200, 150, 200, 150, 50],  // A100-heavy
+            [167, 167, 167, 167, 166, 166], // balanced
+            [50, 150, 200, 150, 200, 250],  // H100-heavy
+        ];
+        let mut dc_idx = 0usize;
+        let mut dc = |name: &str,
+                      region: usize,
+                      tz: f64,
+                      ci: (f64, f64),
+                      wi: (f64, f64),
+                      tou: (f64, f64),
+                      cop: f64,
+                      bw: f64| {
+            let mix = MIXES[dc_idx % MIXES.len()];
+            dc_idx += 1;
+            DatacenterSpec {
+                name: name.into(),
+                region,
+                nodes_per_type: mix.to_vec(),
+                cop,
+                bw_gbs: bw,
+                tz_offset_h: tz,
+                ci_base: ci.0,
+                ci_amp: ci.1,
+                wi_base: wi.0,
+                wi_amp: wi.1,
+                tou_base: tou.0,
+                tou_amp: tou.1,
+            }
+        };
+        let datacenters = vec![
+            // East Asia: coal-heavy grids, high CI; moderate water.
+            dc("tokyo", 0, 9.0, (0.48, 0.25), (1.9, 0.2), (0.19, 0.5), 4.5, 12.0),
+            dc("seoul", 0, 9.0, (0.42, 0.2), (1.6, 0.2), (0.17, 0.5), 4.0, 10.0),
+            dc("singapore", 0, 8.0, (0.41, 0.1), (2.3, 0.15), (0.16, 0.35), 3.2, 14.0),
+            // Oceania: solar midday dip (big diurnal CI swing), hydro NZ.
+            dc("sydney", 1, 10.0, (0.55, 0.45), (1.4, 0.25), (0.21, 0.55), 4.8, 9.0),
+            dc("melbourne", 1, 10.0, (0.60, 0.4), (1.5, 0.25), (0.2, 0.5), 5.0, 9.0),
+            dc("auckland", 1, 12.0, (0.09, 0.3), (24.0, 0.3), (0.15, 0.3), 5.5, 7.0),
+            // North America: mixed; hydro-heavy Pacific NW (high WI, low CI).
+            dc("virginia", 2, -5.0, (0.35, 0.3), (2.1, 0.2), (0.09, 0.6), 4.2, 18.0),
+            dc("oregon", 2, -8.0, (0.11, 0.35), (31.0, 0.35), (0.07, 0.45), 6.0, 16.0),
+            dc("iowa", 2, -6.0, (0.30, 0.5), (1.1, 0.3), (0.08, 0.5), 5.2, 14.0),
+            // Western Europe: wind-heavy north (low CI, very low WI).
+            dc("dublin", 3, 0.0, (0.28, 0.5), (0.7, 0.3), (0.18, 0.5), 6.5, 13.0),
+            dc("frankfurt", 3, 1.0, (0.33, 0.4), (1.2, 0.25), (0.24, 0.55), 5.0, 15.0),
+            dc("stockholm", 3, 1.0, (0.03, 0.3), (9.0, 0.3), (0.06, 0.35), 7.5, 11.0),
+        ];
+
+        SystemConfig {
+            seed: 0xC0FFEE,
+            epochs: EPOCHS_PER_DAY,
+            physics: PhysicsConfig {
+                epoch_s: 900.0,
+                pr_on: 1.0,
+                pr_idle: 0.3,
+                // serverless scale-to-zero (§6: containers on a serverless
+                // infrastructure): a site with no assigned load draws no
+                // marginal IT power — the source of SLIT's Fig. 4 wins
+                pr_off: 0.0,
+                h_water: 2.45e6,
+                d_ratio: 0.3,
+                ei_pot: 0.003,
+                ei_waste: 0.0015,
+                k_media: 0.01,
+                q_coef: 0.25,
+                u_max: 0.995,
+                cold_frac: 0.01,
+                drop_penalty_s: 60.0,
+            },
+            models,
+            node_types,
+            datacenters,
+            workload: WorkloadConfig {
+                request_scale: 10.0,
+                token_scale: 3.0,
+                delay_scale: 0.5,
+                small_model_frac: 0.8,
+                base_requests_per_epoch: 6000.0,
+                burst_prob: 0.06,
+                burst_mult: 3.5,
+                region_mix: [0.3, 0.1, 0.35, 0.25],
+            },
+            opt: OptConfig {
+                population: 24,
+                generations: 12,
+                search_steps: 6,
+                neighbors: 8,
+                step: 0.25,
+                train_freq: 3,
+                mutation_rate: 0.08,
+                gbdt_trees: 40,
+                gbdt_depth: 3,
+                gbdt_lr: 0.15,
+                gbdt_min_leaf: 8,
+                archive_cap: 128,
+                budget_s: 900.0,
+            },
+        }
+    }
+
+    /// A scaled-down configuration for unit tests and quick benches.
+    pub fn small_test() -> SystemConfig {
+        let mut c = SystemConfig::paper_default();
+        c.epochs = 8;
+        for dc in &mut c.datacenters {
+            dc.nodes_per_type = vec![10, 10, 10, 10, 10, 10];
+        }
+        c.workload.base_requests_per_epoch = 400.0;
+        c.workload.request_scale = 1.0;
+        c.opt.population = 12;
+        c.opt.generations = 4;
+        c.opt.search_steps = 3;
+        c.opt.neighbors = 4;
+        c.opt.gbdt_trees = 10;
+        c
+    }
+
+    pub fn num_classes(&self) -> usize {
+        REGIONS * self.models.len()
+    }
+
+    /// Hop count from an origin region to a datacenter (Eq. 3 R term).
+    pub fn hops(&self, origin_region: usize, dc: usize) -> f64 {
+        REGION_HOPS[origin_region][self.datacenters[dc].region]
+    }
+
+    // --- json round-trip ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set("epochs", Json::Num(self.epochs as f64));
+        let p = &self.physics;
+        j.set(
+            "physics",
+            Json::from_pairs(vec![
+                ("epoch_s", Json::Num(p.epoch_s)),
+                ("pr_on", Json::Num(p.pr_on)),
+                ("pr_idle", Json::Num(p.pr_idle)),
+                ("pr_off", Json::Num(p.pr_off)),
+                ("h_water", Json::Num(p.h_water)),
+                ("d_ratio", Json::Num(p.d_ratio)),
+                ("ei_pot", Json::Num(p.ei_pot)),
+                ("ei_waste", Json::Num(p.ei_waste)),
+                ("k_media", Json::Num(p.k_media)),
+                ("q_coef", Json::Num(p.q_coef)),
+                ("u_max", Json::Num(p.u_max)),
+                ("cold_frac", Json::Num(p.cold_frac)),
+                ("drop_penalty_s", Json::Num(p.drop_penalty_s)),
+            ]),
+        );
+        j.set(
+            "models",
+            Json::Arr(
+                self.models
+                    .iter()
+                    .map(|m| {
+                        Json::from_pairs(vec![
+                            ("name", Json::Str(m.name.clone())),
+                            ("param_mem_gb", Json::Num(m.param_mem_gb)),
+                            ("kv_gb_per_token", Json::Num(m.kv_gb_per_token)),
+                            ("mean_out_tokens", Json::Num(m.mean_out_tokens)),
+                            ("mean_in_tokens", Json::Num(m.mean_in_tokens)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "node_types",
+            Json::Arr(
+                self.node_types
+                    .iter()
+                    .map(|n| {
+                        Json::from_pairs(vec![
+                            ("name", Json::Str(n.name.clone())),
+                            ("gpus", Json::Num(n.gpus as f64)),
+                            ("gpu_mem_gb", Json::Num(n.gpu_mem_gb)),
+                            ("tdp_w", Json::Num(n.tdp_w)),
+                            ("thr_tokens_s", Json::num_arr(&n.thr_tokens_s)),
+                            (
+                                "decode_tokens_s",
+                                Json::num_arr(&n.decode_tokens_s),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "datacenters",
+            Json::Arr(
+                self.datacenters
+                    .iter()
+                    .map(|d| {
+                        Json::from_pairs(vec![
+                            ("name", Json::Str(d.name.clone())),
+                            ("region", Json::Num(d.region as f64)),
+                            (
+                                "nodes_per_type",
+                                Json::num_arr(
+                                    &d.nodes_per_type
+                                        .iter()
+                                        .map(|&n| n as f64)
+                                        .collect::<Vec<_>>(),
+                                ),
+                            ),
+                            ("cop", Json::Num(d.cop)),
+                            ("bw_gbs", Json::Num(d.bw_gbs)),
+                            ("tz_offset_h", Json::Num(d.tz_offset_h)),
+                            ("ci_base", Json::Num(d.ci_base)),
+                            ("ci_amp", Json::Num(d.ci_amp)),
+                            ("wi_base", Json::Num(d.wi_base)),
+                            ("wi_amp", Json::Num(d.wi_amp)),
+                            ("tou_base", Json::Num(d.tou_base)),
+                            ("tou_amp", Json::Num(d.tou_amp)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        let w = &self.workload;
+        j.set(
+            "workload",
+            Json::from_pairs(vec![
+                ("request_scale", Json::Num(w.request_scale)),
+                ("token_scale", Json::Num(w.token_scale)),
+                ("delay_scale", Json::Num(w.delay_scale)),
+                ("small_model_frac", Json::Num(w.small_model_frac)),
+                (
+                    "base_requests_per_epoch",
+                    Json::Num(w.base_requests_per_epoch),
+                ),
+                ("burst_prob", Json::Num(w.burst_prob)),
+                ("burst_mult", Json::Num(w.burst_mult)),
+                ("region_mix", Json::num_arr(&w.region_mix)),
+            ]),
+        );
+        let o = &self.opt;
+        j.set(
+            "opt",
+            Json::from_pairs(vec![
+                ("population", Json::Num(o.population as f64)),
+                ("generations", Json::Num(o.generations as f64)),
+                ("search_steps", Json::Num(o.search_steps as f64)),
+                ("neighbors", Json::Num(o.neighbors as f64)),
+                ("step", Json::Num(o.step)),
+                ("train_freq", Json::Num(o.train_freq as f64)),
+                ("mutation_rate", Json::Num(o.mutation_rate)),
+                ("gbdt_trees", Json::Num(o.gbdt_trees as f64)),
+                ("gbdt_depth", Json::Num(o.gbdt_depth as f64)),
+                ("gbdt_lr", Json::Num(o.gbdt_lr)),
+                ("gbdt_min_leaf", Json::Num(o.gbdt_min_leaf as f64)),
+                ("archive_cap", Json::Num(o.archive_cap as f64)),
+                ("budget_s", Json::Num(o.budget_s)),
+            ]),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SystemConfig> {
+        let mut c = SystemConfig::paper_default();
+        c.seed = j.f64_or("seed", c.seed as f64) as u64;
+        c.epochs = j.usize_or("epochs", c.epochs);
+        if let Some(p) = j.get("physics") {
+            let d = &c.physics;
+            c.physics = PhysicsConfig {
+                epoch_s: p.f64_or("epoch_s", d.epoch_s),
+                pr_on: p.f64_or("pr_on", d.pr_on),
+                pr_idle: p.f64_or("pr_idle", d.pr_idle),
+                pr_off: p.f64_or("pr_off", d.pr_off),
+                h_water: p.f64_or("h_water", d.h_water),
+                d_ratio: p.f64_or("d_ratio", d.d_ratio),
+                ei_pot: p.f64_or("ei_pot", d.ei_pot),
+                ei_waste: p.f64_or("ei_waste", d.ei_waste),
+                k_media: p.f64_or("k_media", d.k_media),
+                q_coef: p.f64_or("q_coef", d.q_coef),
+                u_max: p.f64_or("u_max", d.u_max),
+                cold_frac: p.f64_or("cold_frac", d.cold_frac),
+                drop_penalty_s: p.f64_or("drop_penalty_s", d.drop_penalty_s),
+            };
+        }
+        if let Some(ms) = j.get("models").and_then(Json::as_arr) {
+            c.models = ms
+                .iter()
+                .map(|m| ModelSpec {
+                    name: m
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("model")
+                        .into(),
+                    param_mem_gb: m.f64_or("param_mem_gb", 14.0),
+                    kv_gb_per_token: m.f64_or("kv_gb_per_token", 5e-4),
+                    mean_out_tokens: m.f64_or("mean_out_tokens", 200.0),
+                    mean_in_tokens: m.f64_or("mean_in_tokens", 400.0),
+                })
+                .collect();
+        }
+        if let Some(ns) = j.get("node_types").and_then(Json::as_arr) {
+            c.node_types = ns
+                .iter()
+                .map(|n| {
+                    let thr = n
+                        .f64_vec("thr_tokens_s")
+                        .unwrap_or_else(|| vec![1000.0, 100.0]);
+                    let dec = n
+                        .f64_vec("decode_tokens_s")
+                        .unwrap_or_else(|| vec![50.0, 10.0]);
+                    NodeType {
+                        name: n
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .unwrap_or("node")
+                            .into(),
+                        gpus: n.usize_or("gpus", 2),
+                        gpu_mem_gb: n.f64_or("gpu_mem_gb", 80.0),
+                        tdp_w: n.f64_or("tdp_w", 1200.0),
+                        thr_tokens_s: [thr[0], thr[1]],
+                        decode_tokens_s: [dec[0], dec[1]],
+                    }
+                })
+                .collect();
+        }
+        if let Some(ds) = j.get("datacenters").and_then(Json::as_arr) {
+            c.datacenters = ds
+                .iter()
+                .map(|d| DatacenterSpec {
+                    name: d
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("dc")
+                        .into(),
+                    region: d.usize_or("region", 0).min(REGIONS - 1),
+                    nodes_per_type: d
+                        .f64_vec("nodes_per_type")
+                        .unwrap_or_else(|| vec![167.0; 6])
+                        .iter()
+                        .map(|&x| x as usize)
+                        .collect(),
+                    cop: d.f64_or("cop", 4.0),
+                    bw_gbs: d.f64_or("bw_gbs", 12.0),
+                    tz_offset_h: d.f64_or("tz_offset_h", 0.0),
+                    ci_base: d.f64_or("ci_base", 0.3),
+                    ci_amp: d.f64_or("ci_amp", 0.3),
+                    wi_base: d.f64_or("wi_base", 2.0),
+                    wi_amp: d.f64_or("wi_amp", 0.2),
+                    tou_base: d.f64_or("tou_base", 0.12),
+                    tou_amp: d.f64_or("tou_amp", 0.5),
+                })
+                .collect();
+        }
+        if let Some(w) = j.get("workload") {
+            let d = &c.workload;
+            let mix = w
+                .f64_vec("region_mix")
+                .unwrap_or_else(|| d.region_mix.to_vec());
+            c.workload = WorkloadConfig {
+                request_scale: w.f64_or("request_scale", d.request_scale),
+                token_scale: w.f64_or("token_scale", d.token_scale),
+                delay_scale: w.f64_or("delay_scale", d.delay_scale),
+                small_model_frac: w
+                    .f64_or("small_model_frac", d.small_model_frac),
+                base_requests_per_epoch: w
+                    .f64_or("base_requests_per_epoch", d.base_requests_per_epoch),
+                burst_prob: w.f64_or("burst_prob", d.burst_prob),
+                burst_mult: w.f64_or("burst_mult", d.burst_mult),
+                region_mix: [mix[0], mix[1], mix[2], mix[3]],
+            };
+        }
+        if let Some(o) = j.get("opt") {
+            let d = &c.opt;
+            c.opt = OptConfig {
+                population: o.usize_or("population", d.population),
+                generations: o.usize_or("generations", d.generations),
+                search_steps: o.usize_or("search_steps", d.search_steps),
+                neighbors: o.usize_or("neighbors", d.neighbors),
+                step: o.f64_or("step", d.step),
+                train_freq: o.usize_or("train_freq", d.train_freq),
+                mutation_rate: o.f64_or("mutation_rate", d.mutation_rate),
+                gbdt_trees: o.usize_or("gbdt_trees", d.gbdt_trees),
+                gbdt_depth: o.usize_or("gbdt_depth", d.gbdt_depth),
+                gbdt_lr: o.f64_or("gbdt_lr", d.gbdt_lr),
+                gbdt_min_leaf: o.usize_or("gbdt_min_leaf", d.gbdt_min_leaf),
+                archive_cap: o.usize_or("archive_cap", d.archive_cap),
+                budget_s: o.f64_or("budget_s", d.budget_s),
+            };
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<SystemConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        SystemConfig::from_json(&j)
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Sanity-check invariants the rest of the system relies on.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.datacenters.is_empty(), "no datacenters");
+        anyhow::ensure!(
+            self.datacenters.len() <= DC_SLOTS,
+            "more datacenters ({}) than AOT slots ({DC_SLOTS})",
+            self.datacenters.len()
+        );
+        anyhow::ensure!(
+            self.models.len() == MODELS,
+            "exactly {MODELS} models expected (AOT class layout)"
+        );
+        anyhow::ensure!(self.epochs > 0, "epochs must be positive");
+        anyhow::ensure!(self.physics.epoch_s > 0.0, "epoch_s must be positive");
+        for d in &self.datacenters {
+            anyhow::ensure!(
+                d.nodes_per_type.len() == self.node_types.len(),
+                "dc {} node_per_type len mismatch",
+                d.name
+            );
+            anyhow::ensure!(d.cop > 0.0, "dc {} cop must be > 0", d.name);
+            anyhow::ensure!(d.bw_gbs > 0.0, "dc {} bw must be > 0", d.name);
+        }
+        for n in &self.node_types {
+            anyhow::ensure!(
+                n.thr_tokens_s.iter().all(|&t| t > 0.0),
+                "node {} throughput must be > 0",
+                n.name
+            );
+        }
+        let mix_sum: f64 = self.workload.region_mix.iter().sum();
+        anyhow::ensure!(
+            (mix_sum - 1.0).abs() < 1e-6,
+            "region_mix must sum to 1 (got {mix_sum})"
+        );
+        anyhow::ensure!(self.opt.population >= 4, "population too small");
+        Ok(())
+    }
+}
+
+/// Helper constructing one of the six paper node types.
+fn node_type(
+    name: &str,
+    gpus: usize,
+    gpu_mem: f64,
+    gpu_tdp: f64,
+    speed: f64,
+) -> NodeType {
+    let eff = 0.9f64.powi(gpus as i32 / 2); // multi-GPU batching efficiency
+    NodeType {
+        name: name.into(),
+        gpus,
+        gpu_mem_gb: gpu_mem,
+        tdp_w: gpus as f64 * gpu_tdp + 350.0,
+        thr_tokens_s: [
+            1500.0 * speed * gpus as f64 * eff,
+            150.0 * speed * gpus as f64 * eff,
+        ],
+        decode_tokens_s: [50.0 * speed, 10.0 * speed],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_valid() {
+        let c = SystemConfig::paper_default();
+        c.validate().unwrap();
+        assert_eq!(c.datacenters.len(), DATACENTERS);
+        assert_eq!(c.node_types.len(), 6);
+        assert_eq!(c.models.len(), MODELS);
+        assert_eq!(c.num_classes(), CLASSES);
+        // ~1000 nodes per site as in §6
+        for d in &c.datacenters {
+            assert_eq!(d.total_nodes(), 1000, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn all_regions_have_sites() {
+        let c = SystemConfig::paper_default();
+        for r in 0..REGIONS {
+            assert!(
+                c.datacenters.iter().any(|d| d.region == r),
+                "region {r} uncovered"
+            );
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_config() {
+        let c = SystemConfig::paper_default();
+        let j = c.to_json();
+        let c2 = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn json_round_trip_small() {
+        let c = SystemConfig::small_test();
+        let text = c.to_json().to_string_pretty();
+        let c2 =
+            SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn hops_symmetric_and_intra_smallest() {
+        let c = SystemConfig::paper_default();
+        for a in 0..REGIONS {
+            for b in 0..REGIONS {
+                assert_eq!(REGION_HOPS[a][b], REGION_HOPS[b][a]);
+                if a != b {
+                    assert!(REGION_HOPS[a][b] > REGION_HOPS[a][a]);
+                }
+            }
+        }
+        // a DC in the origin region is fewer hops away
+        let local = c
+            .datacenters
+            .iter()
+            .position(|d| d.region == 0)
+            .unwrap();
+        let remote = c
+            .datacenters
+            .iter()
+            .position(|d| d.region == 3)
+            .unwrap();
+        assert!(c.hops(0, local) < c.hops(0, remote));
+    }
+
+    #[test]
+    fn validate_rejects_bad_mix() {
+        let mut c = SystemConfig::paper_default();
+        c.workload.region_mix = [0.5, 0.5, 0.5, 0.5];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_too_many_dcs() {
+        let mut c = SystemConfig::paper_default();
+        while c.datacenters.len() <= DC_SLOTS {
+            let d = c.datacenters[0].clone();
+            c.datacenters.push(d);
+        }
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn node_types_h100_faster_than_a100() {
+        let c = SystemConfig::paper_default();
+        let a = c.node_types.iter().find(|n| n.name == "a100x4").unwrap();
+        let h = c.node_types.iter().find(|n| n.name == "h100x4").unwrap();
+        assert!(h.thr_tokens_s[0] > a.thr_tokens_s[0]);
+        assert!(h.tdp_w > a.tdp_w);
+    }
+}

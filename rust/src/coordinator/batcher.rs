@@ -1,0 +1,206 @@
+//! Dynamic batcher: groups requests per (site, model) before placement.
+//!
+//! Continuous batching at the node level is modelled inside the node
+//! throughput numbers; this batcher captures the *router-side* batching
+//! (one placement critical-section per group instead of per request),
+//! which is what keeps the coordinator's lock contention flat at high
+//! request rates. Flush policy: size cap or age cap, whichever first.
+
+use std::time::{Duration, Instant};
+
+use crate::trace::Request;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time a request may wait in the batcher.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(10),
+        }
+    }
+}
+
+/// A flushed batch destined for one (site, model) pair.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub dc: usize,
+    pub model: usize,
+    pub requests: Vec<Request>,
+}
+
+/// Accumulates requests per (site, model); `push` returns a batch when the
+/// flush condition triggers.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    /// (requests, oldest-arrival) per (dc, model) key
+    pending: Vec<(Vec<Request>, Option<Instant>)>,
+    models: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, dcs: usize, models: usize) -> Batcher {
+        Batcher {
+            cfg,
+            pending: (0..dcs * models).map(|_| (Vec::new(), None)).collect(),
+            models,
+        }
+    }
+
+    fn key(&self, dc: usize, model: usize) -> usize {
+        dc * self.models + model
+    }
+
+    /// Add a routed request; returns a full batch if the size cap tripped.
+    pub fn push(&mut self, dc: usize, req: Request) -> Option<Batch> {
+        let model = req.model();
+        let k = self.key(dc, model);
+        let slot = &mut self.pending[k];
+        if slot.1.is_none() {
+            slot.1 = Some(Instant::now());
+        }
+        slot.0.push(req);
+        if slot.0.len() >= self.cfg.max_batch {
+            return self.take(dc, model);
+        }
+        None
+    }
+
+    /// Collect every batch whose age exceeded the wait cap.
+    pub fn flush_expired(&mut self) -> Vec<Batch> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for k in 0..self.pending.len() {
+            let expired = matches!(
+                self.pending[k].1,
+                Some(t0) if now.duration_since(t0) >= self.cfg.max_wait
+            );
+            if expired && !self.pending[k].0.is_empty() {
+                let dc = k / self.models;
+                let model = k % self.models;
+                if let Some(b) = self.take(dc, model) {
+                    out.push(b);
+                }
+            }
+        }
+        out
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for k in 0..self.pending.len() {
+            if !self.pending[k].0.is_empty() {
+                let dc = k / self.models;
+                let model = k % self.models;
+                if let Some(b) = self.take(dc, model) {
+                    out.push(b);
+                }
+            }
+        }
+        out
+    }
+
+    fn take(&mut self, dc: usize, model: usize) -> Option<Batch> {
+        let k = self.key(dc, model);
+        let slot = &mut self.pending[k];
+        if slot.0.is_empty() {
+            return None;
+        }
+        slot.1 = None;
+        Some(Batch {
+            dc,
+            model,
+            requests: std::mem::take(&mut slot.0),
+        })
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.iter().map(|(v, _)| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(class: usize) -> Request {
+        Request {
+            arrival_s: 0.0,
+            class,
+            tok_in: 10,
+            tok_out: 20,
+        }
+    }
+
+    #[test]
+    fn size_cap_flushes() {
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 3,
+                max_wait: Duration::from_secs(60),
+            },
+            2,
+            2,
+        );
+        assert!(b.push(0, req(0)).is_none());
+        assert!(b.push(0, req(0)).is_none());
+        let batch = b.push(0, req(0)).expect("size cap");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.dc, 0);
+        assert_eq!(batch.model, 0);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn batches_keyed_by_site_and_model() {
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_secs(60),
+            },
+            2,
+            2,
+        );
+        assert!(b.push(0, req(0)).is_none()); // model 0
+        assert!(b.push(0, req(1)).is_none()); // model 1 -> other key
+        assert!(b.push(1, req(0)).is_none()); // other site
+        let batch = b.push(0, req(2)).expect("model-0 site-0 cap");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending_count(), 2);
+    }
+
+    #[test]
+    fn age_cap_flushes() {
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 100,
+                max_wait: Duration::from_millis(1),
+            },
+            1,
+            2,
+        );
+        b.push(0, req(0));
+        std::thread::sleep(Duration::from_millis(3));
+        let out = b.flush_expired();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = Batcher::new(BatcherConfig::default(), 3, 2);
+        b.push(0, req(0));
+        b.push(1, req(1));
+        b.push(2, req(0));
+        let out = b.flush_all();
+        assert_eq!(out.len(), 3);
+        assert_eq!(b.pending_count(), 0);
+    }
+}

@@ -1,0 +1,554 @@
+//! L3 online coordinator: the serving-side embodiment of SLIT.
+//!
+//! A leader process owns the epoch clock. Each (compressed) epoch it runs
+//! the SLIT metaheuristic — against the AOT/PJRT plan evaluator when
+//! artifacts are loaded, the native evaluator otherwise — and atomically
+//! swaps the active routing plan. Request handling never touches python:
+//!
+//!   request -> router (plan-weighted site choice, saturation failover)
+//!           -> per-(site, model) dynamic batcher
+//!           -> local WRR placement (sched::LocalScheduler)
+//!           -> TTFT reply + ledger accounting
+//!
+//! A JSON-lines TCP front (std::net; the offline image has no tokio — see
+//! DESIGN.md substitutions) exposes the router; `examples/serve_realtime.rs`
+//! drives it end-to-end and reports latency/throughput percentiles.
+
+mod batcher;
+mod router;
+mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use router::{RouteOutcome, Router};
+pub use server::{serve_forever, ServeHandle};
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::cluster::build_panels;
+use crate::config::{SystemConfig, MODELS};
+use crate::eval::{AnalyticEvaluator, EvalConsts};
+use crate::models::EpochLedger;
+use crate::opt::{SlitOptimizer, SlitVariant};
+use crate::plan::Plan;
+use crate::power::GridSignals;
+use crate::predictor::WorkloadPredictor;
+use crate::runtime::{Engine, HloPlanEvaluator};
+use crate::sched::LocalScheduler;
+use crate::trace::{ClassLoad, EpochLoad};
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// Coordinator deployment settings.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Which showcased SLIT solution the router deploys.
+    pub variant: SlitVariant,
+    /// Real seconds per simulated epoch (time compression for demos).
+    pub epoch_wall_s: f64,
+    /// Optimizer budget per plan refresh, seconds.
+    pub plan_budget_s: f64,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            variant: SlitVariant::Balance,
+            epoch_wall_s: 2.0,
+            plan_budget_s: 1.0,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub ttft: Welford,
+    pub served: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batch_sizes: Welford,
+    pub plan_refreshes: u64,
+    pub ledger: EpochLedger,
+}
+
+/// Shared state between the router, batcher flushers, and the epoch thread.
+pub struct Coordinator {
+    pub cfg: SystemConfig,
+    pub ccfg: CoordinatorConfig,
+    plan: RwLock<Plan>,
+    locals: Vec<Mutex<LocalScheduler>>,
+    epoch: AtomicUsize,
+    signals: GridSignals,
+    predictor: Mutex<WorkloadPredictor>,
+    /// Arrivals observed during the current epoch (per class).
+    observed: Mutex<Vec<f64>>,
+    pub metrics: Mutex<Metrics>,
+    engine: Option<Arc<Engine>>,
+    rng: Mutex<Rng>,
+    stop: AtomicBool,
+}
+
+impl Coordinator {
+    pub fn new(
+        cfg: SystemConfig,
+        ccfg: CoordinatorConfig,
+        engine: Option<Arc<Engine>>,
+    ) -> Arc<Coordinator> {
+        let horizon = cfg.epochs.max(2 * crate::config::EPOCHS_PER_DAY);
+        let signals = GridSignals::generate(&cfg, horizon, cfg.seed);
+        let locals = (0..cfg.datacenters.len())
+            .map(|l| Mutex::new(LocalScheduler::new(&cfg, l)))
+            .collect();
+        let classes = cfg.num_classes();
+        let dcs = cfg.datacenters.len();
+        Arc::new(Coordinator {
+            plan: RwLock::new(Plan::uniform(classes, dcs)),
+            locals,
+            epoch: AtomicUsize::new(0),
+            signals,
+            predictor: Mutex::new(WorkloadPredictor::new(&cfg)),
+            observed: Mutex::new(vec![0.0; classes]),
+            metrics: Mutex::new(Metrics::default()),
+            engine,
+            rng: Mutex::new(Rng::new(cfg.seed ^ 0xC0)),
+            stop: AtomicBool::new(false),
+            cfg,
+            ccfg,
+        })
+    }
+
+    pub fn current_epoch(&self) -> usize {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    pub fn current_plan(&self) -> Plan {
+        self.plan.read().expect("plan lock").clone()
+    }
+
+    pub fn backend(&self) -> &'static str {
+        if self.engine.is_some() {
+            "pjrt-hlo"
+        } else {
+            "analytic"
+        }
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Handle one request end-to-end (router -> placement -> accounting).
+    /// Returns (site index, ttft seconds) or None when rejected everywhere.
+    pub fn handle(
+        &self,
+        region: usize,
+        model: usize,
+        tok_in: u32,
+        tok_out: u32,
+    ) -> Option<(usize, f64)> {
+        let class = region * MODELS + model;
+        {
+            let mut obs = self.observed.lock().expect("observed");
+            if class < obs.len() {
+                obs[class] += 1.0;
+            }
+        }
+        let plan = self.plan.read().expect("plan lock");
+        let row = plan.row(class);
+        let req = crate::trace::Request {
+            arrival_s: 0.0,
+            class,
+            tok_in,
+            tok_out,
+        };
+        let first = self.rng.lock().expect("rng").weighted(row);
+        let dcs = self.cfg.datacenters.len();
+        // serverless container churn: a cold_frac share of requests pay the
+        // Eq. 2 load latency (consistent with the analytic/AOT evaluator)
+        let is_warm = {
+            let mut rng = self.rng.lock().expect("rng");
+            !rng.chance(self.cfg.physics.cold_frac)
+        };
+        for attempt in 0..dcs {
+            let l = (first + attempt) % dcs;
+            let hops = self.cfg.hops(region, l);
+            let placed = {
+                let mut ls = self.locals[l].lock().expect("local");
+                ls.place(&self.cfg, &req, hops, is_warm)
+            };
+            if let Some(p) = placed {
+                let mut m = self.metrics.lock().expect("metrics");
+                m.ttft.push(p.ttft_s);
+                m.served += 1;
+                return Some((l, p.ttft_s));
+            }
+        }
+        let mut m = self.metrics.lock().expect("metrics");
+        m.rejected += 1;
+        None
+    }
+
+    /// Handle a group of requests as one dynamic batch: route each request,
+    /// group per (site, model) via [`Batcher`], then place every group under
+    /// a single local-scheduler critical section. This is the router-side
+    /// batching that keeps lock contention flat at high request rates; the
+    /// TCP front exposes it as `{"op": "batch", ...}`.
+    ///
+    /// Returns one `Option<(site, ttft_s)>` per request, in input order.
+    pub fn handle_batch(
+        &self,
+        requests: &[(usize, usize, u32, u32)], // (region, model, in, out)
+    ) -> Vec<Option<(usize, f64)>> {
+        let plan = self.current_plan();
+        let mut batcher = Batcher::new(
+            self.ccfg.batcher,
+            self.cfg.datacenters.len(),
+            MODELS,
+        );
+        // route + accumulate; remember each request's batch destination
+        let mut routed: Vec<(usize, crate::trace::Request)> =
+            Vec::with_capacity(requests.len());
+        {
+            let mut rng = self.rng.lock().expect("rng");
+            let mut obs = self.observed.lock().expect("observed");
+            for &(region, model, tok_in, tok_out) in requests {
+                let class = region * MODELS + model;
+                if class < obs.len() {
+                    obs[class] += 1.0;
+                }
+                let req = crate::trace::Request {
+                    arrival_s: 0.0,
+                    class,
+                    tok_in,
+                    tok_out,
+                };
+                let dc = rng.weighted(plan.row(class));
+                routed.push((dc, req));
+            }
+        }
+        let mut results: Vec<Option<(usize, f64)>> =
+            vec![None; requests.len()];
+        // push through the batcher; flush groups as they fill, then drain
+        let mut pending_groups: Vec<Batch> = Vec::new();
+        for &(dc, req) in &routed {
+            if let Some(b) = batcher.push(dc, req) {
+                pending_groups.push(b);
+            }
+        }
+        pending_groups.extend(batcher.flush_all());
+
+        let mut served = 0u64;
+        let mut rejected = 0u64;
+        let mut batch_count = 0u64;
+        let mut cursor: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        for group in &pending_groups {
+            batch_count += 1;
+            // one critical section per group
+            let mut ls = self.locals[group.dc].lock().expect("local");
+            let mut rng = self.rng.lock().expect("rng");
+            for req in &group.requests {
+                let hops = self.cfg.hops(req.region(), group.dc);
+                let is_warm = !rng.chance(self.cfg.physics.cold_frac);
+                let placed = ls.place(&self.cfg, req, hops, is_warm);
+                // map back to the original position (requests are unique by
+                // (dc, model) arrival order)
+                let key = (group.dc, req.model());
+                let start = *cursor.get(&key).unwrap_or(&0);
+                for (i, &(rdc, rreq)) in routed.iter().enumerate().skip(start)
+                {
+                    if rdc == group.dc
+                        && rreq.model() == req.model()
+                        && results[i].is_none()
+                    {
+                        cursor.insert(key, i + 1);
+                        match placed {
+                            Some(p) => {
+                                results[i] = Some((group.dc, p.ttft_s));
+                                served += 1;
+                            }
+                            None => rejected += 1,
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        {
+            let mut m = self.metrics.lock().expect("metrics");
+            m.batches += batch_count;
+            for group in &pending_groups {
+                m.batch_sizes.push(group.requests.len() as f64);
+            }
+            m.served += served;
+            m.rejected += rejected;
+            for r in results.iter().flatten() {
+                m.ttft.push(r.1);
+            }
+        }
+        results
+    }
+
+    /// Advance the epoch clock by one epoch: account energy for the epoch
+    /// that just ended, feed the predictor, re-plan, reset capacity.
+    pub fn tick_epoch(&self) {
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst);
+
+        // --- account the epoch that just finished -------------------------
+        let (ci, wi, tou) = self.signals.at(epoch);
+        {
+            let mut m = self.metrics.lock().expect("metrics");
+            for (l, spec) in self.cfg.datacenters.iter().enumerate() {
+                let ls = self.locals[l].lock().expect("local");
+                let mut e_it = 0.0;
+                for (ti, nt) in self.cfg.node_types.iter().enumerate() {
+                    let on =
+                        ls.capacity.on_nodes(ti, self.cfg.physics.epoch_s);
+                    let nodes = spec.nodes_per_type[ti] as f64;
+                    e_it += (on * self.cfg.physics.pr_on
+                        + (nodes - on) * self.cfg.physics.pr_off)
+                        * nt.tdp_w
+                        * self.cfg.physics.epoch_s;
+                }
+                m.ledger.add_site(
+                    e_it,
+                    spec.cop,
+                    tou[l],
+                    self.cfg.physics.h_water,
+                    self.cfg.physics.d_ratio,
+                    wi[l],
+                    self.cfg.physics.ei_pot,
+                    self.cfg.physics.ei_waste,
+                    ci[l],
+                );
+            }
+        }
+
+        // --- predictor update + next-epoch forecast ------------------------
+        let observed: Vec<f64> = {
+            let mut obs = self.observed.lock().expect("observed");
+            let copy = obs.clone();
+            obs.iter_mut().for_each(|v| *v = 0.0);
+            copy
+        };
+        let predicted = {
+            let mut p = self.predictor.lock().expect("predictor");
+            let load = EpochLoad {
+                classes: observed
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &n)| ClassLoad {
+                        n_req: n,
+                        tok_in: self.cfg.models[k % MODELS].mean_in_tokens
+                            * self.cfg.workload.token_scale,
+                        tok_out: self.cfg.models[k % MODELS].mean_out_tokens
+                            * self.cfg.workload.token_scale,
+                    })
+                    .collect(),
+            };
+            p.observe(&load);
+            p.predict_next()
+        };
+
+        // --- re-plan against the forecast ----------------------------------
+        let next_epoch = epoch + 1;
+        let (cp, dp) = build_panels(
+            &self.cfg,
+            &self.signals,
+            next_epoch.min(self.signals.epochs() - 1),
+            &predicted,
+            self.cfg.physics.pr_off,
+        );
+        let analytic = AnalyticEvaluator::new(
+            cp,
+            dp,
+            EvalConsts::from_physics(&self.cfg.physics),
+        );
+        let mut opt_cfg = self.cfg.opt.clone();
+        opt_cfg.budget_s = self.ccfg.plan_budget_s;
+        let mut optimizer = SlitOptimizer::new(
+            opt_cfg,
+            self.cfg.num_classes(),
+            self.cfg.datacenters.len(),
+            self.cfg.seed ^ (next_epoch as u64),
+        );
+        let seeds = analytic.greedy_seed_plans();
+        let outcome = match &self.engine {
+            Some(engine) => {
+                let hlo =
+                    HloPlanEvaluator::from_analytic(engine.clone(), &analytic);
+                optimizer.optimize_with_seeds(&hlo, &seeds)
+            }
+            None => optimizer.optimize_with_seeds(&analytic, &seeds),
+        };
+        let new_plan = match self.ccfg.variant {
+            SlitVariant::Balance => outcome.archive.balanced().cloned(),
+            v => {
+                let idx = match v {
+                    SlitVariant::Ttft => crate::config::OBJ_TTFT,
+                    SlitVariant::Carbon => crate::config::OBJ_CARBON,
+                    SlitVariant::Water => crate::config::OBJ_WATER,
+                    SlitVariant::Cost => crate::config::OBJ_COST,
+                    SlitVariant::Balance => unreachable!(),
+                };
+                outcome.archive.best_for(idx).cloned()
+            }
+        };
+        if let Some(sol) = new_plan {
+            *self.plan.write().expect("plan lock") = sol.plan;
+            let mut m = self.metrics.lock().expect("metrics");
+            m.plan_refreshes += 1;
+        }
+
+        // --- new epoch: reset per-epoch capacity ---------------------------
+        for l in 0..self.cfg.datacenters.len() {
+            let mut ls = self.locals[l].lock().expect("local");
+            ls.new_epoch(&self.cfg);
+        }
+    }
+
+    /// Spawn the epoch clock thread (compressed time).
+    pub fn spawn_epoch_clock(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let me = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("slit-epoch-clock".into())
+            .spawn(move || {
+                while !me.stopped() {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        me.ccfg.epoch_wall_s,
+                    ));
+                    if me.stopped() {
+                        break;
+                    }
+                    me.tick_epoch();
+                }
+            })
+            .expect("spawn epoch clock")
+    }
+
+    pub fn metrics_snapshot(&self) -> Metrics {
+        self.metrics.lock().expect("metrics").clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coordinator() -> Arc<Coordinator> {
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        Coordinator::new(cfg, CoordinatorConfig::default(), None)
+    }
+
+    #[test]
+    fn handles_requests_and_accounts() {
+        let c = coordinator();
+        let mut served = 0;
+        for i in 0..200 {
+            if c.handle(i % 4, i % 2, 128, 200).is_some() {
+                served += 1;
+            }
+        }
+        let m = c.metrics_snapshot();
+        assert_eq!(m.served, served);
+        assert!(m.ttft.count() == served as u64);
+        assert!(m.ttft.mean() > 0.0);
+    }
+
+    #[test]
+    fn epoch_tick_replans_and_accounts_energy() {
+        let c = coordinator();
+        for i in 0..50 {
+            c.handle(i % 4, 0, 64, 100);
+        }
+        c.tick_epoch();
+        let m = c.metrics_snapshot();
+        assert!(m.ledger.carbon_kg > 0.0);
+        assert!(m.ledger.e_tot_j > 0.0);
+        assert_eq!(m.plan_refreshes, 1);
+        assert_eq!(c.current_epoch(), 1);
+        // plan is valid and differs from pure uniform in general
+        assert!(c.current_plan().is_valid());
+    }
+
+    #[test]
+    fn variant_controls_deployed_plan() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        let ccfg = CoordinatorConfig {
+            variant: SlitVariant::Carbon,
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg, ccfg, None);
+        for i in 0..50 {
+            c.handle(i % 4, 0, 64, 100);
+        }
+        c.tick_epoch();
+        assert!(c.current_plan().is_valid());
+    }
+
+    #[test]
+    fn stop_flag() {
+        let c = coordinator();
+        assert!(!c.stopped());
+        c.stop();
+        assert!(c.stopped());
+    }
+}
+
+#[cfg(test)]
+mod batch_tests {
+    use super::*;
+
+    fn coordinator() -> Arc<Coordinator> {
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        Coordinator::new(cfg, CoordinatorConfig::default(), None)
+    }
+
+    #[test]
+    fn batch_path_serves_everything_in_order() {
+        let c = coordinator();
+        let reqs: Vec<(usize, usize, u32, u32)> = (0..100)
+            .map(|i| (i % 4, i % 2, 64, 128))
+            .collect();
+        let out = c.handle_batch(&reqs);
+        assert_eq!(out.len(), 100);
+        assert!(out.iter().all(Option::is_some));
+        let m = c.metrics_snapshot();
+        assert_eq!(m.served, 100);
+        assert!(m.batches > 0);
+        assert!(m.batch_sizes.mean() >= 1.0);
+        assert_eq!(m.ttft.count(), 100);
+    }
+
+    #[test]
+    fn batch_and_single_paths_agree_on_accounting() {
+        let c1 = coordinator();
+        let c2 = coordinator();
+        let reqs: Vec<(usize, usize, u32, u32)> =
+            (0..60).map(|i| (i % 4, 0, 64, 128)).collect();
+        let _ = c1.handle_batch(&reqs);
+        for &(r, m, ti, to) in &reqs {
+            c2.handle(r, m, ti, to);
+        }
+        let m1 = c1.metrics_snapshot();
+        let m2 = c2.metrics_snapshot();
+        assert_eq!(m1.served, m2.served);
+        // both policies route by the same (uniform-initialised) plan; mean
+        // TTFTs should be in the same ballpark
+        let ratio = m1.ttft.mean() / m2.ttft.mean();
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+}

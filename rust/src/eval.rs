@@ -1,0 +1,569 @@
+//! Analytic batched plan evaluator — the rust mirror of the L1/L2 AOT
+//! kernel (python/compile/kernels/ref.py), arithmetic-identical.
+//!
+//! Used (a) as the fallback hot path when no PJRT artifacts are present,
+//! (b) as the parity oracle for the HLO executable in
+//! rust/tests/runtime_parity.rs, and (c) by unit tests everywhere.
+//!
+//! The chain is Eqs. 1-18 collapsed into closed form over an epoch: the
+//! contraction `node_s[l] = sum_k a[k][l] * n_req[k] * tok[k] / thr[k][l]`
+//! followed by elementwise energy -> cost/water/carbon and the TTFT
+//! aggregation (see DESIGN.md §6).
+
+use crate::cluster::{ClassPanels, DcPanels};
+use crate::config::N_OBJ;
+use crate::models::{total_energy_factor, J_PER_KWH};
+use crate::plan::Plan;
+use crate::util::threadpool;
+
+/// Physics constants in the kernel's consts layout.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalConsts {
+    pub epoch_s: f64,
+    pub pr_on: f64,
+    pub h_water: f64,
+    pub d_ratio: f64,
+    pub ei_pot: f64,
+    pub ei_waste: f64,
+    pub k_media: f64,
+    pub q_coef: f64,
+    pub u_max: f64,
+    pub cold_frac: f64,
+}
+
+impl EvalConsts {
+    pub fn from_physics(p: &crate::config::PhysicsConfig) -> EvalConsts {
+        EvalConsts {
+            epoch_s: p.epoch_s,
+            pr_on: p.pr_on,
+            h_water: p.h_water,
+            d_ratio: p.d_ratio,
+            ei_pot: p.ei_pot,
+            ei_waste: p.ei_waste,
+            k_media: p.k_media,
+            q_coef: p.q_coef,
+            u_max: p.u_max,
+            cold_frac: p.cold_frac,
+        }
+    }
+
+    /// The AOT consts[12] vector (padded), matching shapes.CONSTS.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        vec![
+            self.epoch_s as f32,
+            self.pr_on as f32,
+            self.h_water as f32,
+            self.d_ratio as f32,
+            self.ei_pot as f32,
+            self.ei_waste as f32,
+            self.k_media as f32,
+            self.q_coef as f32,
+            self.u_max as f32,
+            self.cold_frac as f32,
+            0.0,
+            0.0,
+        ]
+    }
+}
+
+/// Anything that can score a batch of plans against the four objectives.
+/// Implemented by [`AnalyticEvaluator`] (native) and by
+/// `runtime::PlanEvalEngine` (AOT HLO via PJRT).
+pub trait BatchEvaluator: Sync {
+    fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]>;
+    /// Human-readable backend name (for logs/benches).
+    fn backend(&self) -> &'static str {
+        "analytic"
+    }
+}
+
+impl BatchEvaluator for AnalyticEvaluator {
+    fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
+        self.evaluate_batch(plans)
+    }
+}
+
+/// Epoch-bound evaluator: panels are fixed, plans vary.
+#[derive(Clone, Debug)]
+pub struct AnalyticEvaluator {
+    pub cp: ClassPanels,
+    pub dp: DcPanels,
+    pub consts: EvalConsts,
+    /// Precomputed per-(k,l) weights, hoisted out of the per-plan loop:
+    /// wk[k*l+l'] = n_req[k] * tok[k] / thr[k][l'].
+    wk_node_s: Vec<f64>,
+    /// base TTFT term per (k,l) scaled by n_req[k].
+    wk_ttft: Vec<f64>,
+    total_req: f64,
+}
+
+impl AnalyticEvaluator {
+    pub fn new(cp: ClassPanels, dp: DcPanels, consts: EvalConsts) -> Self {
+        let k_n = cp.classes;
+        let l_n = cp.dcs;
+        let mut wk_node_s = vec![0.0; k_n * l_n];
+        let mut wk_ttft = vec![0.0; k_n * l_n];
+        for k in 0..k_n {
+            let w = cp.n_req[k] * cp.tok_out[k];
+            for l in 0..l_n {
+                let i = k * l_n + l;
+                wk_node_s[i] = w / cp.thr[i];
+                let base = consts.cold_frac * cp.mem[k] / dp.bw[l]
+                    + 2.0 * cp.hops[i] * consts.k_media
+                    + cp.proc[i];
+                wk_ttft[i] = cp.n_req[k] * base;
+            }
+        }
+        let total_req = cp.n_req.iter().sum::<f64>().max(1.0);
+        AnalyticEvaluator {
+            cp,
+            dp,
+            consts,
+            wk_node_s,
+            wk_ttft,
+            total_req,
+        }
+    }
+
+    pub fn dcs(&self) -> usize {
+        self.dp.dcs
+    }
+
+    pub fn classes(&self) -> usize {
+        self.cp.classes
+    }
+
+    /// Evaluate one plan -> [ttft_s, carbon_kg, water_l, cost_usd].
+    pub fn evaluate(&self, plan: &Plan) -> [f64; N_OBJ] {
+        debug_assert_eq!(plan.classes, self.cp.classes);
+        debug_assert_eq!(plan.dcs, self.dp.dcs);
+        let k_n = self.cp.classes;
+        let l_n = self.dp.dcs;
+        let c = &self.consts;
+
+        // contraction over classes
+        let mut node_s = vec![0.0f64; l_n];
+        let mut reqs_l = vec![0.0f64; l_n];
+        let mut t_base = 0.0f64;
+        let a = plan.as_slice();
+        for k in 0..k_n {
+            let n_req = self.cp.n_req[k];
+            let row = &a[k * l_n..(k + 1) * l_n];
+            let wns = &self.wk_node_s[k * l_n..(k + 1) * l_n];
+            let wtt = &self.wk_ttft[k * l_n..(k + 1) * l_n];
+            for l in 0..l_n {
+                node_s[l] += row[l] * wns[l];
+                reqs_l[l] += row[l] * n_req;
+                t_base += row[l] * wtt[l];
+            }
+        }
+
+        // per-DC physics
+        let mut cost = 0.0;
+        let mut water = 0.0;
+        let mut carbon = 0.0;
+        let mut t_queue = 0.0;
+        for l in 0..l_n {
+            let nodes = self.dp.nodes[l];
+            let on = (node_s[l] / c.epoch_s).min(nodes);
+            let util = on / nodes.max(1.0);
+            let e_it = (on * c.pr_on + (nodes - on) * self.dp.unused_pr[l])
+                * self.dp.tdp[l]
+                * c.epoch_s;
+            let e_tot = e_it * total_energy_factor(self.dp.cop[l]);
+            let e_tot_kwh = e_tot / J_PER_KWH;
+            cost += e_tot_kwh * self.dp.tou[l];
+            let w_e = e_it / c.h_water;
+            let w_b = w_e / (1.0 - c.d_ratio);
+            let w_grid = e_tot_kwh * self.dp.wi[l];
+            water += w_e + w_b + w_grid;
+            carbon += self.dp.ci[l] * e_tot_kwh
+                + ((w_e + w_b) * c.ei_pot + w_grid * c.ei_waste)
+                    * self.dp.ci[l];
+            let queue = c.q_coef * util / (1.0 - util.min(c.u_max));
+            t_queue += reqs_l[l] * queue;
+        }
+        let ttft = (t_base + t_queue) / self.total_req;
+        [ttft, carbon, water, cost]
+    }
+
+    /// Evaluate a batch of plans (parallel over plans).
+    pub fn evaluate_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
+        threadpool::par_map(plans, |p| self.evaluate(p))
+    }
+
+    /// Greedy one-hot seed plans, one per objective: route every class to
+    /// the site with the lowest marginal per-token contribution to that
+    /// objective. These seed the metaheuristic's initial population so the
+    /// archive's extreme points start from strong vertices (memetic init
+    /// on top of Algorithm 1's two extreme plans).
+    pub fn greedy_seed_plans(&self) -> Vec<Plan> {
+        let k_n = self.cp.classes;
+        let l_n = self.dp.dcs;
+        let c = &self.consts;
+        let mut plans = Vec::with_capacity(N_OBJ);
+        for obj in 0..N_OBJ {
+            let mut plan = Plan::one_dc(k_n, l_n, 0);
+            for k in 0..k_n {
+                let mut best_l = 0;
+                let mut best_cost = f64::INFINITY;
+                for l in 0..l_n {
+                    let i = k * l_n + l;
+                    // per-token energy at site l for class k, J
+                    let e_per_tok = self.dp.tdp[l] / self.cp.thr[i];
+                    let e_tot_kwh =
+                        e_per_tok * total_energy_factor(self.dp.cop[l]) / J_PER_KWH;
+                    let cost = match obj {
+                        crate::config::OBJ_TTFT => {
+                            c.cold_frac * self.cp.mem[k] / self.dp.bw[l]
+                                + 2.0 * self.cp.hops[i] * c.k_media
+                                + self.cp.proc[i]
+                        }
+                        crate::config::OBJ_CARBON => {
+                            self.dp.ci[l] * e_tot_kwh
+                        }
+                        crate::config::OBJ_WATER => {
+                            e_per_tok / c.h_water * (1.0 + 1.0 / (1.0 - c.d_ratio))
+                                + e_tot_kwh * self.dp.wi[l]
+                        }
+                        _ => self.dp.tou[l] * e_tot_kwh,
+                    };
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best_l = l;
+                    }
+                }
+                for l in 0..l_n {
+                    plan.set(k, l, if l == best_l { 1.0 } else { 0.0 });
+                }
+            }
+            plans.push(plan);
+        }
+        plans
+    }
+
+    /// Flattened f32 input panels in the AOT argument layout, padded to
+    /// `slots` DC columns. Returns (cls[K*3], thr, proc, hops, dc[8*slots]).
+    #[allow(clippy::type_complexity)]
+    pub fn to_f32_panels(
+        &self,
+        slots: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let k_n = self.cp.classes;
+        let l_n = self.dp.dcs;
+        assert!(slots >= l_n);
+        let mut cls = Vec::with_capacity(k_n * 3);
+        for k in 0..k_n {
+            cls.push(self.cp.n_req[k] as f32);
+            cls.push(self.cp.tok_out[k] as f32);
+            cls.push(self.cp.mem[k] as f32);
+        }
+        let pad_kl = |src: &[f64], pad_value: f32| -> Vec<f32> {
+            let mut out = Vec::with_capacity(k_n * slots);
+            for k in 0..k_n {
+                for l in 0..l_n {
+                    out.push(src[k * l_n + l] as f32);
+                }
+                for _ in l_n..slots {
+                    out.push(pad_value);
+                }
+            }
+            out
+        };
+        let thr = pad_kl(&self.cp.thr, 1.0);
+        let proc = pad_kl(&self.cp.proc, 0.0);
+        let hops = pad_kl(&self.cp.hops, 0.0);
+
+        let mut dc = Vec::with_capacity(8 * slots);
+        let rows: [(&[f64], f32); 8] = [
+            (&self.dp.nodes, 0.0),
+            (&self.dp.tdp, 0.0),
+            (&self.dp.cop, 1.0),
+            (&self.dp.tou, 0.0),
+            (&self.dp.ci, 0.0),
+            (&self.dp.wi, 0.0),
+            (&self.dp.bw, 1.0),
+            (&self.dp.unused_pr, 0.0),
+        ];
+        for (row, pad) in rows {
+            for l in 0..l_n {
+                dc.push(row[l] as f32);
+            }
+            for _ in l_n..slots {
+                dc.push(pad);
+            }
+        }
+        (cls, thr, proc, hops, dc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::build_panels;
+    use crate::config::{SystemConfig, OBJ_CARBON, OBJ_COST, OBJ_TTFT, OBJ_WATER};
+    use crate::power::GridSignals;
+    use crate::trace::Trace;
+    use crate::util::propkit;
+    use crate::util::rng::Rng;
+
+    fn make_eval(unused_pr: f64) -> (SystemConfig, AnalyticEvaluator) {
+        let cfg = SystemConfig::paper_default();
+        let signals = GridSignals::generate(&cfg, 8, 3);
+        let trace = Trace::generate(&cfg, 8, 3);
+        let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], unused_pr);
+        let consts = EvalConsts::from_physics(&cfg.physics);
+        let ev = AnalyticEvaluator::new(cp, dp, consts);
+        (cfg, ev)
+    }
+
+    #[test]
+    fn objectives_positive_and_finite() {
+        let (cfg, ev) = make_eval(0.05);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let p = Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng);
+            let o = ev.evaluate(&p);
+            assert!(o.iter().all(|x| x.is_finite() && *x >= 0.0), "{o:?}");
+            assert!(o[OBJ_TTFT] > 0.0);
+            assert!(o[OBJ_CARBON] > 0.0);
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (cfg, ev) = make_eval(0.05);
+        let mut rng = Rng::new(2);
+        let plans: Vec<Plan> = (0..17)
+            .map(|_| Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng))
+            .collect();
+        let batch = ev.evaluate_batch(&plans);
+        for (p, b) in plans.iter().zip(&batch) {
+            let s = ev.evaluate(p);
+            for i in 0..N_OBJ {
+                assert!((s[i] - b[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn greener_dc_reduces_carbon() {
+        // routing everything to the lowest-CI DC must beat the highest-CI DC
+        let (cfg, ev) = make_eval(0.05);
+        let ci = &ev.dp.ci;
+        let best = (0..ev.dcs())
+            .min_by(|&a, &b| ci[a].partial_cmp(&ci[b]).unwrap())
+            .unwrap();
+        let worst = (0..ev.dcs())
+            .max_by(|&a, &b| ci[a].partial_cmp(&ci[b]).unwrap())
+            .unwrap();
+        let p_best = Plan::one_dc(cfg.num_classes(), ev.dcs(), best);
+        let p_worst = Plan::one_dc(cfg.num_classes(), ev.dcs(), worst);
+        assert!(
+            ev.evaluate(&p_best)[OBJ_CARBON]
+                < ev.evaluate(&p_worst)[OBJ_CARBON]
+        );
+    }
+
+    #[test]
+    fn local_routing_beats_remote_ttft() {
+        let (cfg, ev) = make_eval(0.3);
+        // all load from region 0; route to a region-0 DC vs a region-3 DC
+        let local = cfg.datacenters.iter().position(|d| d.region == 0).unwrap();
+        let remote = cfg.datacenters.iter().position(|d| d.region == 3).unwrap();
+        let mut cp = ev.cp.clone();
+        for k in 0..cp.classes {
+            if k / 2 != 0 {
+                cp.n_req[k] = 0.0;
+            }
+        }
+        let ev2 = AnalyticEvaluator::new(cp, ev.dp.clone(), ev.consts);
+        let p_local = Plan::one_dc(cfg.num_classes(), ev2.dcs(), local);
+        let p_remote = Plan::one_dc(cfg.num_classes(), ev2.dcs(), remote);
+        assert!(
+            ev2.evaluate(&p_local)[OBJ_TTFT]
+                < ev2.evaluate(&p_remote)[OBJ_TTFT]
+        );
+    }
+
+    #[test]
+    fn idle_policy_dominates_off_policy_energy() {
+        // always-warm (pr_idle) must cost/emit more than scale-to-zero
+        let (cfg, ev_off) = make_eval(0.05);
+        let (_, ev_idle) = make_eval(0.3);
+        let p = Plan::uniform(cfg.num_classes(), ev_off.dcs());
+        let off = ev_off.evaluate(&p);
+        let idle = ev_idle.evaluate(&p);
+        assert!(idle[OBJ_CARBON] > off[OBJ_CARBON]);
+        assert!(idle[OBJ_WATER] > off[OBJ_WATER]);
+        assert!(idle[OBJ_COST] > off[OBJ_COST]);
+    }
+
+    #[test]
+    fn queueing_kicks_in_under_concentration() {
+        // at high demand, concentrating everything on one site must raise
+        // TTFT versus spreading (queue term), all else equal
+        let (cfg, ev) = make_eval(0.05);
+        let mut cp = ev.cp.clone();
+        for k in 0..cp.classes {
+            cp.n_req[k] *= 50.0; // force saturation
+        }
+        let ev2 = AnalyticEvaluator::new(cp, ev.dp.clone(), ev.consts);
+        let spread = Plan::uniform(cfg.num_classes(), ev2.dcs());
+        let single = Plan::one_dc(cfg.num_classes(), ev2.dcs(), 0);
+        assert!(
+            ev2.evaluate(&single)[OBJ_TTFT] > ev2.evaluate(&spread)[OBJ_TTFT]
+        );
+    }
+
+    #[test]
+    fn plan_mass_conservation_property() {
+        // splitting a class between two DCs interpolates node-seconds:
+        // objectives vary continuously, never exceed the one-DC extremes sum
+        let (cfg, ev) = make_eval(0.05);
+        propkit::check(
+            "eval-mix-bounded",
+            0xE7A1,
+            64,
+            |r| {
+                let w = r.f64();
+                (w, r.below(ev.dcs()), r.below(ev.dcs()))
+            },
+            |&(w, l1, l2)| {
+                let k_n = cfg.num_classes();
+                let mut mix = Plan::one_dc(k_n, ev.dcs(), l1);
+                for k in 0..k_n {
+                    mix.set(k, l1, w);
+                    mix.set(k, l2, mix.get(k, l2) + (1.0 - w));
+                }
+                mix.normalize();
+                let o = ev.evaluate(&mix);
+                let o1 = ev.evaluate(&Plan::one_dc(k_n, ev.dcs(), l1));
+                let o2 = ev.evaluate(&Plan::one_dc(k_n, ev.dcs(), l2));
+                // energy-ish objectives are concave-bounded by extremes sum
+                for i in 1..N_OBJ {
+                    let hi = o1[i].max(o2[i]) + 1e-6;
+                    let lo = 0.0;
+                    if !(lo..=hi + o1[i].min(o2[i])).contains(&o[i]) {
+                        return Err(format!("obj {i}: {} out of bounds", o[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn f32_panels_layout() {
+        let (_, ev) = make_eval(0.05);
+        let (cls, thr, proc, hops, dc) = ev.to_f32_panels(16);
+        assert_eq!(cls.len(), ev.classes() * 3);
+        assert_eq!(thr.len(), ev.classes() * 16);
+        assert_eq!(proc.len(), ev.classes() * 16);
+        assert_eq!(hops.len(), ev.classes() * 16);
+        assert_eq!(dc.len(), 8 * 16);
+        // padded thr slots are 1.0 (safe divisor), padded nodes are 0
+        assert_eq!(thr[ev.dcs()], 1.0);
+        assert_eq!(dc[ev.dcs()], 0.0);
+        // cop padding row
+        assert_eq!(dc[2 * 16 + ev.dcs()], 1.0);
+    }
+}
+
+#[cfg(test)]
+mod ledger_parity_tests {
+    use super::*;
+    use crate::cluster::build_panels;
+    use crate::config::SystemConfig;
+    use crate::models::{self, EpochLedger};
+    use crate::plan::Plan;
+    use crate::power::GridSignals;
+    use crate::trace::Trace;
+
+    /// The analytic evaluator must agree with the scalar Eq. 5-18 chain in
+    /// `models::EpochLedger` when fed the same single-site workload — this
+    /// pins the vectorised math to the per-equation implementation (which
+    /// is itself pinned to the paper's formulas by models::tests).
+    #[test]
+    fn analytic_matches_scalar_ledger_single_site() {
+        let cfg = SystemConfig::paper_default();
+        let signals = GridSignals::generate(&cfg, 4, 9);
+        let trace = Trace::generate(&cfg, 4, 9);
+        let unused_pr = 0.2;
+        let (cp, dp) = build_panels(&cfg, &signals, 2, &trace.epochs[2], unused_pr);
+        let consts = EvalConsts::from_physics(&cfg.physics);
+        let ev = AnalyticEvaluator::new(cp, dp, consts);
+
+        let target = 5usize;
+        let plan = Plan::one_dc(cfg.num_classes(), ev.dcs(), target);
+        let got = ev.evaluate(&plan);
+
+        // scalar reconstruction: node-seconds -> ON nodes -> ledger
+        let epoch_s = cfg.physics.epoch_s;
+        let l_n = ev.dcs();
+        let mut node_s = 0.0;
+        for k in 0..ev.classes() {
+            node_s += ev.cp.n_req[k] * ev.cp.tok_out[k]
+                / ev.cp.thr[k * l_n + target];
+        }
+        let (ci, wi, tou) = signals.at(2);
+        let mut ledger = EpochLedger::default();
+        for (l, _) in cfg.datacenters.iter().enumerate() {
+            let nodes = ev.dp.nodes[l];
+            let on = if l == target {
+                (node_s / epoch_s).min(nodes)
+            } else {
+                0.0
+            };
+            let e_it = (on * cfg.physics.pr_on + (nodes - on) * unused_pr)
+                * ev.dp.tdp[l]
+                * epoch_s;
+            ledger.add_site(
+                e_it,
+                ev.dp.cop[l],
+                tou[l],
+                cfg.physics.h_water,
+                cfg.physics.d_ratio,
+                wi[l],
+                cfg.physics.ei_pot,
+                cfg.physics.ei_waste,
+                ci[l],
+            );
+        }
+        let scale = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
+        assert!(
+            scale(got[crate::config::OBJ_CARBON], ledger.carbon_kg) < 1e-9,
+            "carbon {} vs {}",
+            got[1],
+            ledger.carbon_kg
+        );
+        assert!(scale(got[crate::config::OBJ_WATER], ledger.water_l) < 1e-9);
+        assert!(scale(got[crate::config::OBJ_COST], ledger.cost_usd) < 1e-9);
+
+        // TTFT: reconstruct Eq. 1-4 + queue for the single site
+        let util = (node_s / epoch_s).min(ev.dp.nodes[target])
+            / ev.dp.nodes[target];
+        let queue = cfg.physics.q_coef * util
+            / (1.0 - util.min(cfg.physics.u_max));
+        let mut t_sum = 0.0;
+        let mut n_sum = 0.0;
+        for k in 0..ev.classes() {
+            let i = k * l_n + target;
+            let load = cfg.physics.cold_frac * ev.cp.mem[k] / ev.dp.bw[target];
+            let mig = models::migration_latency_s(
+                ev.cp.hops[i],
+                cfg.physics.k_media,
+            );
+            t_sum += ev.cp.n_req[k]
+                * (load + 2.0 * mig + ev.cp.proc[i] + queue);
+            n_sum += ev.cp.n_req[k];
+        }
+        let want_ttft = t_sum / n_sum.max(1.0);
+        assert!(
+            scale(got[crate::config::OBJ_TTFT], want_ttft) < 1e-9,
+            "ttft {} vs {}",
+            got[0],
+            want_ttft
+        );
+    }
+}

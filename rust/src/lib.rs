@@ -1,0 +1,31 @@
+//! # SLIT — sustainable geo-distributed LLM inference scheduling
+//!
+//! Reproduction of *"Sustainable Carbon-Aware and Water-Efficient LLM
+//! Scheduling in Geo-Distributed Cloud Datacenters"* (CS.DC 2025): a
+//! multi-objective (TTFT / carbon / water / energy-cost) scheduler for LLM
+//! inference across geo-distributed datacenters, with the paper's
+//! metaheuristic (ML-guided local search + EA), physical models
+//! (Eqs. 1-18), baselines (Helix, Splitwise), discrete simulator, AOT
+//! JAX/Pallas plan-evaluation kernel, and PJRT runtime.
+//!
+//! See DESIGN.md for the module map and EXPERIMENTS.md for reproduced
+//! figures. Layer map: `runtime`+`coordinator` (L3 serving), the AOT
+//! artifacts under `artifacts/` (L2 JAX graph + L1 Pallas kernel).
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod models;
+pub mod opt;
+pub mod pareto;
+pub mod plan;
+pub mod power;
+pub mod predictor;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod trace;
+pub mod util;

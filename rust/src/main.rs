@@ -1,0 +1,9 @@
+//! `slit` binary: the leader entrypoint. See `slit help` / cli.rs.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = slit::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

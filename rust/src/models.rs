@@ -1,0 +1,353 @@
+//! The paper's physical models, Eqs. 1-18, as pure scalar functions plus an
+//! epoch accounting ledger.
+//!
+//! These are the single source of truth on the rust side: the discrete
+//! simulator calls them per node/request, and `eval::AnalyticEvaluator`
+//! vectorises exactly the same arithmetic (tested for parity), as does the
+//! AOT HLO kernel (tested for parity in rust/tests/runtime_parity.rs).
+//!
+//! Units: energy J internally (kWh at the grid boundary), water liters,
+//! carbon kg (CI is kg/kWh), money in $ (TOU is $/kWh), time seconds.
+
+pub const J_PER_KWH: f64 = 3.6e6;
+
+/// Node power states (Eq. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PState {
+    On,
+    Idle,
+    Off,
+}
+
+/// Eq. 1 — memory footprint of request i: KV cache grows per output token
+/// on top of the shared model parameter memory. GB.
+pub fn memory_footprint_gb(
+    out_tokens: f64,
+    kv_gb_per_token: f64,
+    model_mem_gb: f64,
+) -> f64 {
+    out_tokens * kv_gb_per_token + model_mem_gb
+}
+
+/// Eq. 2 — model loading (orchestration) overhead, s.
+pub fn load_latency_s(model_mem_gb: f64, bw_gbs: f64) -> f64 {
+    model_mem_gb / bw_gbs.max(1e-9)
+}
+
+/// Eq. 3 — cross-datacenter migration latency, s.
+pub fn migration_latency_s(hops: f64, k_media_s: f64) -> f64 {
+    hops * k_media_s
+}
+
+/// Eq. 4 — TTFT: load + 2x migration + first-token processing time, s.
+/// `t_exec_s` is the total execution time, `n_tokens` the output tokens.
+pub fn ttft_s(
+    load_s: f64,
+    migration_s: f64,
+    t_exec_s: f64,
+    n_tokens: f64,
+) -> f64 {
+    load_s + 2.0 * migration_s + t_exec_s / n_tokens.max(1.0)
+}
+
+/// Eq. 5 — node energy over an interval, J, for a power state.
+pub fn node_energy_j(
+    pstate: PState,
+    tdp_w: f64,
+    dt_s: f64,
+    pr_on: f64,
+    pr_idle: f64,
+    pr_off: f64,
+) -> f64 {
+    let pr = match pstate {
+        PState::On => pr_on,
+        PState::Idle => pr_idle,
+        PState::Off => pr_off,
+    };
+    pr * tdp_w * dt_s
+}
+
+/// Eq. 7 — CRAC energy from IT energy and cooling CoP, J.
+pub fn crac_energy_j(e_it_j: f64, cop: f64) -> f64 {
+    e_it_j / cop.max(1e-9)
+}
+
+/// Eq. 8 — total mechanical cooling energy (chillers ~ 2x CRAC on top), J.
+pub fn cooling_energy_j(e_it_j: f64, cop: f64) -> f64 {
+    3.0 * crac_energy_j(e_it_j, cop)
+}
+
+/// Eq. 9 — internal power-conditioning overhead, J.
+pub fn support_energy_j(e_it_j: f64) -> f64 {
+    0.13 * e_it_j
+}
+
+/// Eq. 10 — total site energy from IT energy, J.
+pub fn total_energy_j(e_it_j: f64, cop: f64) -> f64 {
+    e_it_j + cooling_energy_j(e_it_j, cop) + support_energy_j(e_it_j)
+}
+
+/// Multiplier from E_IT to E_tot (used by the vectorised evaluator).
+pub fn total_energy_factor(cop: f64) -> f64 {
+    1.0 + 3.0 / cop.max(1e-9) + 0.13
+}
+
+/// Eq. 11 — energy cost, $: E_tot (kWh) x TOU ($/kWh).
+pub fn energy_cost(e_tot_j: f64, tou_per_kwh: f64) -> f64 {
+    e_tot_j / J_PER_KWH * tou_per_kwh
+}
+
+/// Eq. 12 — evaporative water from IT heat, L. All IT energy becomes heat.
+pub fn evaporative_water_l(e_it_j: f64, h_water_j_per_l: f64) -> f64 {
+    e_it_j / h_water_j_per_l.max(1e-9)
+}
+
+/// Eq. 13 — blowdown water from evaporative water and solids ratio D, L.
+pub fn blowdown_water_l(w_e_l: f64, d_ratio: f64) -> f64 {
+    w_e_l / (1.0 - d_ratio).max(1e-9)
+}
+
+/// Eq. 14 — off-site water embedded in electricity, L.
+pub fn grid_water_l(e_tot_j: f64, wi_l_per_kwh: f64) -> f64 {
+    e_tot_j / J_PER_KWH * wi_l_per_kwh
+}
+
+/// Eq. 15 contribution of one site, L.
+pub fn site_water_l(
+    e_it_j: f64,
+    e_tot_j: f64,
+    h_water: f64,
+    d_ratio: f64,
+    wi: f64,
+) -> f64 {
+    let w_e = evaporative_water_l(e_it_j, h_water);
+    w_e + blowdown_water_l(w_e, d_ratio) + grid_water_l(e_tot_j, wi)
+}
+
+/// Eq. 16 — grid carbon, kg: CI (kg/kWh) x E_tot (kWh).
+pub fn grid_carbon_kg(e_tot_j: f64, ci_kg_per_kwh: f64) -> f64 {
+    e_tot_j / J_PER_KWH * ci_kg_per_kwh
+}
+
+/// Eq. 17 — carbon from water treatment energy, kg.
+pub fn water_carbon_kg(
+    w_e_l: f64,
+    w_b_l: f64,
+    w_grid_l: f64,
+    ei_pot_kwh_per_l: f64,
+    ei_waste_kwh_per_l: f64,
+    ci_kg_per_kwh: f64,
+) -> f64 {
+    ((w_e_l + w_b_l) * ei_pot_kwh_per_l + w_grid_l * ei_waste_kwh_per_l)
+        * ci_kg_per_kwh
+}
+
+/// Eq. 18 contribution of one site, kg.
+pub fn site_carbon_kg(
+    e_it_j: f64,
+    e_tot_j: f64,
+    h_water: f64,
+    d_ratio: f64,
+    wi: f64,
+    ei_pot: f64,
+    ei_waste: f64,
+    ci: f64,
+) -> f64 {
+    let w_e = evaporative_water_l(e_it_j, h_water);
+    let w_b = blowdown_water_l(w_e, d_ratio);
+    let w_g = grid_water_l(e_tot_j, wi);
+    grid_carbon_kg(e_tot_j, ci)
+        + water_carbon_kg(w_e, w_b, w_g, ei_pot, ei_waste, ci)
+}
+
+/// Accumulated sustainability + performance metrics for one epoch (or a
+/// whole run — ledgers merge).
+#[derive(Clone, Debug, Default)]
+pub struct EpochLedger {
+    pub e_it_j: f64,
+    pub e_tot_j: f64,
+    pub cost_usd: f64,
+    pub water_l: f64,
+    pub carbon_kg: f64,
+    /// Sum and count of per-request TTFTs (mean = sum/count).
+    pub ttft_sum_s: f64,
+    pub requests: f64,
+    /// Requests that could not be served this epoch.
+    pub dropped: f64,
+}
+
+impl EpochLedger {
+    pub fn add_site(
+        &mut self,
+        e_it_j: f64,
+        cop: f64,
+        tou: f64,
+        h_water: f64,
+        d_ratio: f64,
+        wi: f64,
+        ei_pot: f64,
+        ei_waste: f64,
+        ci: f64,
+    ) {
+        let e_tot = total_energy_j(e_it_j, cop);
+        self.e_it_j += e_it_j;
+        self.e_tot_j += e_tot;
+        self.cost_usd += energy_cost(e_tot, tou);
+        self.water_l += site_water_l(e_it_j, e_tot, h_water, d_ratio, wi);
+        self.carbon_kg +=
+            site_carbon_kg(e_it_j, e_tot, h_water, d_ratio, wi, ei_pot, ei_waste, ci);
+    }
+
+    pub fn add_request(&mut self, ttft_s: f64) {
+        self.ttft_sum_s += ttft_s;
+        self.requests += 1.0;
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.requests > 0.0 {
+            self.ttft_sum_s / self.requests
+        } else {
+            0.0
+        }
+    }
+
+    pub fn merge(&mut self, other: &EpochLedger) {
+        self.e_it_j += other.e_it_j;
+        self.e_tot_j += other.e_tot_j;
+        self.cost_usd += other.cost_usd;
+        self.water_l += other.water_l;
+        self.carbon_kg += other.carbon_kg;
+        self.ttft_sum_s += other.ttft_sum_s;
+        self.requests += other.requests;
+        self.dropped += other.dropped;
+    }
+
+    /// Objective vector [ttft, carbon, water, cost] (paper's four axes).
+    pub fn objectives(&self) -> [f64; 4] {
+        [
+            self.mean_ttft_s(),
+            self.carbon_kg,
+            self.water_l,
+            self.cost_usd,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_memory_footprint() {
+        // 200 output tokens of 70B KV + params
+        let m = memory_footprint_gb(200.0, 0.0025, 140.0);
+        assert!((m - 140.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_load_latency() {
+        assert!((load_latency_s(140.0, 14.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq4_ttft_combines_terms() {
+        let t = ttft_s(1.0, 0.02, 10.0, 100.0);
+        assert!((t - (1.0 + 0.04 + 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq5_pstates_ordered() {
+        let on = node_energy_j(PState::On, 1000.0, 900.0, 1.0, 0.3, 0.05);
+        let idle = node_energy_j(PState::Idle, 1000.0, 900.0, 1.0, 0.3, 0.05);
+        let off = node_energy_j(PState::Off, 1000.0, 900.0, 1.0, 0.3, 0.05);
+        assert!(on > idle && idle > off);
+        assert!((on - 900_000.0).abs() < 1e-9);
+        assert!((idle - 270_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq7_to_10_energy_chain() {
+        let e_it = 1000.0;
+        let cop = 4.0;
+        assert!((crac_energy_j(e_it, cop) - 250.0).abs() < 1e-12);
+        assert!((cooling_energy_j(e_it, cop) - 750.0).abs() < 1e-12);
+        assert!((support_energy_j(e_it) - 130.0).abs() < 1e-12);
+        let tot = total_energy_j(e_it, cop);
+        assert!((tot - 1880.0).abs() < 1e-12);
+        assert!((total_energy_factor(cop) - 1.88).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq11_cost() {
+        // 1 kWh at $0.10
+        assert!((energy_cost(J_PER_KWH, 0.1) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq12_13_water_chain() {
+        let w_e = evaporative_water_l(2.45e6, 2.45e6);
+        assert!((w_e - 1.0).abs() < 1e-12);
+        let w_b = blowdown_water_l(w_e, 0.3);
+        assert!((w_b - 1.0 / 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq14_grid_water() {
+        assert!((grid_water_l(J_PER_KWH, 3.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq16_18_carbon() {
+        let c = grid_carbon_kg(J_PER_KWH, 0.5);
+        assert!((c - 0.5).abs() < 1e-12);
+        let cw = water_carbon_kg(1.0, 1.0, 2.0, 0.003, 0.0015, 0.5);
+        assert!((cw - (2.0 * 0.003 + 2.0 * 0.0015) * 0.5).abs() < 1e-12);
+        let site = site_carbon_kg(
+            J_PER_KWH, J_PER_KWH, 2.45e6, 0.3, 3.0, 0.003, 0.0015, 0.5,
+        );
+        assert!(site > c);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = EpochLedger::default();
+        a.add_site(J_PER_KWH, 4.0, 0.1, 2.45e6, 0.3, 2.0, 0.003, 0.0015, 0.4);
+        a.add_request(0.5);
+        a.add_request(1.5);
+        assert!((a.mean_ttft_s() - 1.0).abs() < 1e-12);
+        assert!(a.carbon_kg > 0.0 && a.water_l > 0.0 && a.cost_usd > 0.0);
+
+        let mut b = EpochLedger::default();
+        b.add_request(3.0);
+        b.merge(&a);
+        assert_eq!(b.requests, 3.0);
+        assert!((b.mean_ttft_s() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(b.carbon_kg, a.carbon_kg);
+    }
+
+    #[test]
+    fn objectives_layout_matches_config() {
+        let mut l = EpochLedger::default();
+        l.add_site(1e6, 4.0, 0.1, 2.45e6, 0.3, 2.0, 0.003, 0.0015, 0.4);
+        l.add_request(0.25);
+        let o = l.objectives();
+        assert_eq!(o[crate::config::OBJ_TTFT], l.mean_ttft_s());
+        assert_eq!(o[crate::config::OBJ_CARBON], l.carbon_kg);
+        assert_eq!(o[crate::config::OBJ_WATER], l.water_l);
+        assert_eq!(o[crate::config::OBJ_COST], l.cost_usd);
+    }
+
+    #[test]
+    fn more_it_energy_more_everything() {
+        let mk = |e: f64| {
+            let mut l = EpochLedger::default();
+            l.add_site(e, 4.0, 0.1, 2.45e6, 0.3, 2.0, 0.003, 0.0015, 0.4);
+            l
+        };
+        let lo = mk(1e6);
+        let hi = mk(2e6);
+        assert!(hi.carbon_kg > lo.carbon_kg);
+        assert!(hi.water_l > lo.water_l);
+        assert!(hi.cost_usd > lo.cost_usd);
+    }
+}

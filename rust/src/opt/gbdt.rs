@@ -1,0 +1,330 @@
+//! Gradient-boosted regression trees (from scratch — §5.2's ML model [29]).
+//!
+//! SLIT's local search trains this on search trajectories (plan features ->
+//! scalarised objective) and uses it to rank candidate neighbours so only
+//! promising moves pay for a real evaluation. Least-squares boosting:
+//! each tree greedily fits the pseudo-residuals of the ensemble so far.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GbdtConfig {
+    pub trees: usize,
+    pub depth: usize,
+    pub learning_rate: f64,
+    pub min_leaf: usize,
+    /// Features sampled per split (column subsampling); 0 = all.
+    pub feature_sample: usize,
+}
+
+impl Default for GbdtConfig {
+    fn default() -> Self {
+        GbdtConfig {
+            trees: 40,
+            depth: 3,
+            learning_rate: 0.15,
+            min_leaf: 8,
+            feature_sample: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf(f64),
+    Split {
+        feat: usize,
+        thresh: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf(v) => return *v,
+                Node::Split {
+                    feat,
+                    thresh,
+                    left,
+                    right,
+                } => {
+                    i = if x[*feat] <= *thresh { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// A trained gradient-boosting model.
+#[derive(Clone, Debug)]
+pub struct Gbdt {
+    base: f64,
+    lr: f64,
+    trees: Vec<Tree>,
+    pub n_features: usize,
+}
+
+impl Gbdt {
+    /// Fit on row-major `xs` (n x d) against targets `ys`.
+    pub fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        cfg: &GbdtConfig,
+        rng: &mut Rng,
+    ) -> Gbdt {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty(), "gbdt: empty training set");
+        let d = xs[0].len();
+        let base = ys.iter().sum::<f64>() / ys.len() as f64;
+        let mut residuals: Vec<f64> = ys.iter().map(|y| y - base).collect();
+        let mut trees = Vec::with_capacity(cfg.trees);
+        let idx: Vec<usize> = (0..xs.len()).collect();
+
+        for _ in 0..cfg.trees {
+            let mut nodes = Vec::new();
+            build_node(
+                xs,
+                &residuals,
+                &idx,
+                cfg,
+                cfg.depth,
+                &mut nodes,
+                rng,
+                d,
+            );
+            let tree = Tree { nodes };
+            for (i, x) in xs.iter().enumerate() {
+                residuals[i] -= cfg.learning_rate * tree.predict(x);
+            }
+            trees.push(tree);
+        }
+        Gbdt {
+            base,
+            lr: cfg.learning_rate,
+            trees,
+            n_features: d,
+        }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.n_features);
+        let sum: f64 = self.trees.iter().map(|t| t.predict(x)).sum();
+        self.base + self.lr * sum
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// Recursively grow a tree node; returns its index in `nodes`.
+#[allow(clippy::too_many_arguments)]
+fn build_node(
+    xs: &[Vec<f64>],
+    res: &[f64],
+    idx: &[usize],
+    cfg: &GbdtConfig,
+    depth_left: usize,
+    nodes: &mut Vec<Node>,
+    rng: &mut Rng,
+    d: usize,
+) -> usize {
+    let mean: f64 =
+        idx.iter().map(|&i| res[i]).sum::<f64>() / idx.len().max(1) as f64;
+    if depth_left == 0 || idx.len() < 2 * cfg.min_leaf {
+        nodes.push(Node::Leaf(mean));
+        return nodes.len() - 1;
+    }
+
+    // choose candidate features
+    let feats: Vec<usize> = if cfg.feature_sample > 0 && cfg.feature_sample < d
+    {
+        let mut all: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut all);
+        all.truncate(cfg.feature_sample);
+        all
+    } else {
+        (0..d).collect()
+    };
+
+    // best split by SSE reduction
+    let total_sum: f64 = idx.iter().map(|&i| res[i]).sum();
+    let n = idx.len() as f64;
+    let mut best: Option<(usize, f64, f64)> = None; // feat, thresh, gain
+    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
+    for &feat in &feats {
+        vals.clear();
+        vals.extend(idx.iter().map(|&i| (xs[i][feat], res[i])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut left_sum = 0.0;
+        let mut left_n = 0.0;
+        for w in 0..vals.len() - 1 {
+            left_sum += vals[w].1;
+            left_n += 1.0;
+            if vals[w].0 == vals[w + 1].0 {
+                continue; // can't split between equal values
+            }
+            if (left_n as usize) < cfg.min_leaf
+                || (idx.len() - left_n as usize) < cfg.min_leaf
+            {
+                continue;
+            }
+            let right_sum = total_sum - left_sum;
+            let right_n = n - left_n;
+            // gain = sum^2/n improvements (variance reduction x n)
+            let gain = left_sum * left_sum / left_n
+                + right_sum * right_sum / right_n
+                - total_sum * total_sum / n;
+            if best.map(|(_, _, g)| gain > g).unwrap_or(gain > 1e-12) {
+                let thresh = 0.5 * (vals[w].0 + vals[w + 1].0);
+                best = Some((feat, thresh, gain));
+            }
+        }
+    }
+
+    let Some((feat, thresh, _)) = best else {
+        nodes.push(Node::Leaf(mean));
+        return nodes.len() - 1;
+    };
+
+    let (li, ri): (Vec<usize>, Vec<usize>) =
+        idx.iter().partition(|&&i| xs[i][feat] <= thresh);
+    // placeholder, fix up children after recursion
+    nodes.push(Node::Leaf(0.0));
+    let me = nodes.len() - 1;
+    let left = build_node(xs, res, &li, cfg, depth_left - 1, nodes, rng, d);
+    let right = build_node(xs, res, &ri, cfg, depth_left - 1, nodes, rng, d);
+    nodes[me] = Node::Split {
+        feat,
+        thresh,
+        left,
+        right,
+    };
+    me
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mse(model: &Gbdt, xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+        xs.iter()
+            .zip(ys)
+            .map(|(x, y)| (model.predict(x) - y).powi(2))
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<Vec<f64>> =
+            (0..400).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| if x[0] > 0.5 { 3.0 } else { -1.0 })
+            .collect();
+        let model = Gbdt::fit(&xs, &ys, &GbdtConfig::default(), &mut rng);
+        assert!(mse(&model, &xs, &ys) < 0.05);
+        assert!(model.predict(&[0.9, 0.5]) > 2.0);
+        assert!(model.predict(&[0.1, 0.5]) < 0.0);
+    }
+
+    #[test]
+    fn fits_additive_signal_better_with_more_trees() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..600)
+            .map(|_| vec![rng.f64(), rng.f64(), rng.f64()])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 * x[0] - 3.0 * x[1] + (x[2] * 6.0).sin())
+            .collect();
+        let small = Gbdt::fit(
+            &xs,
+            &ys,
+            &GbdtConfig {
+                trees: 5,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let big = Gbdt::fit(
+            &xs,
+            &ys,
+            &GbdtConfig {
+                trees: 80,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        assert!(mse(&big, &xs, &ys) < mse(&small, &xs, &ys));
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<f64>> = (0..50).map(|_| vec![rng.f64()]).collect();
+        let ys = vec![7.5; 50];
+        let model = Gbdt::fit(&xs, &ys, &GbdtConfig::default(), &mut rng);
+        for x in &xs {
+            assert!((model.predict(x) - 7.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn respects_min_leaf() {
+        let mut rng = Rng::new(4);
+        // 10 points, min_leaf 8 -> no split possible -> pure base model
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let model = Gbdt::fit(
+            &xs,
+            &ys,
+            &GbdtConfig {
+                trees: 3,
+                min_leaf: 8,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mean = 4.5;
+        assert!((model.predict(&[0.0]) - mean).abs() < 1e-9);
+        assert!((model.predict(&[9.0]) - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranking_quality_on_plan_like_features() {
+        // GBDT must rank plans by a synthetic objective well enough that
+        // the top-quartile prediction overlaps the true top quartile
+        let mut rng = Rng::new(5);
+        let d = 24;
+        let xs: Vec<Vec<f64>> = (0..500)
+            .map(|_| (0..d).map(|_| rng.f64()).collect())
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| x[0] * 5.0 + x[1] * x[2] * 3.0 - x[3])
+            .collect();
+        let model = Gbdt::fit(&xs, &ys, &GbdtConfig::default(), &mut rng);
+        let mut by_pred: Vec<usize> = (0..xs.len()).collect();
+        by_pred.sort_by(|&a, &b| {
+            model.predict(&xs[a]).partial_cmp(&model.predict(&xs[b])).unwrap()
+        });
+        let mut by_true: Vec<usize> = (0..xs.len()).collect();
+        by_true.sort_by(|&a, &b| ys[a].partial_cmp(&ys[b]).unwrap());
+        let top: std::collections::HashSet<usize> =
+            by_true[..125].iter().copied().collect();
+        let hits = by_pred[..125].iter().filter(|i| top.contains(i)).count();
+        assert!(hits > 60, "ranking overlap too weak: {hits}/125");
+    }
+}

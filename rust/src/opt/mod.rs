@@ -1,0 +1,11 @@
+//! The SLIT metaheuristic (§5): gradient-boosting surrogate, ML-guided
+//! local search, the evolutionary algorithm (Algorithm 1), and the
+//! simulator-facing scheduler adapter.
+
+pub mod gbdt;
+pub mod scheduler;
+pub mod slit;
+
+pub use gbdt::{Gbdt, GbdtConfig};
+pub use scheduler::{SlitScheduler, SlitStats, SlitVariant};
+pub use slit::{select_population, SlitOptimizer, SlitOptions, SlitOutcome};

@@ -1,0 +1,200 @@
+//! SLIT as a `sim::Scheduler`: runs Algorithm 1 each epoch against the
+//! epoch-bound evaluator and picks one of the five showcased solutions
+//! (§6: SLIT-Carbon / -TTFT / -Water / -Cost / -Balance).
+//!
+//! SLIT scales unused nodes to zero (`pr_off`) — serverless containers are
+//! torn down when the plan parks no load on a site, which is where the
+//! large single-objective wins in Fig. 4 come from.
+
+use crate::config::{OptConfig, PhysicsConfig, OBJ_CARBON, OBJ_COST, OBJ_TTFT, OBJ_WATER};
+use crate::pareto::ParetoArchive;
+use crate::plan::Plan;
+use crate::sim::{EpochContext, Scheduler};
+use crate::opt::slit::{SlitOptimizer, SlitOptions};
+
+/// Which showcased Pareto solution this scheduler deploys.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlitVariant {
+    Carbon,
+    Ttft,
+    Water,
+    Cost,
+    Balance,
+}
+
+impl SlitVariant {
+    pub fn all() -> [SlitVariant; 5] {
+        [
+            SlitVariant::Carbon,
+            SlitVariant::Ttft,
+            SlitVariant::Water,
+            SlitVariant::Cost,
+            SlitVariant::Balance,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlitVariant::Carbon => "slit-carbon",
+            SlitVariant::Ttft => "slit-ttft",
+            SlitVariant::Water => "slit-water",
+            SlitVariant::Cost => "slit-cost",
+            SlitVariant::Balance => "slit-balance",
+        }
+    }
+
+    fn pick(&self, archive: &ParetoArchive) -> Option<Plan> {
+        let sol = match self {
+            SlitVariant::Carbon => archive.best_for(OBJ_CARBON),
+            SlitVariant::Ttft => archive.best_for(OBJ_TTFT),
+            SlitVariant::Water => archive.best_for(OBJ_WATER),
+            SlitVariant::Cost => archive.best_for(OBJ_COST),
+            SlitVariant::Balance => archive.balanced(),
+        };
+        sol.map(|s| s.plan.clone())
+    }
+}
+
+/// Per-epoch optimizer statistics (for EXPERIMENTS.md and benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlitStats {
+    pub epochs: usize,
+    pub evaluations: usize,
+    pub generations: usize,
+    pub surrogate_trainings: usize,
+    pub wall_s: f64,
+}
+
+pub struct SlitScheduler {
+    pub variant: SlitVariant,
+    pub options: SlitOptions,
+    opt: OptConfig,
+    seed: u64,
+    epoch_counter: u64,
+    pub stats: SlitStats,
+    /// When set, plan search runs on the AOT/PJRT engine: each epoch an
+    /// `HloPlanEvaluator` is bound to that epoch's panels.
+    engine: Option<std::sync::Arc<crate::runtime::Engine>>,
+}
+
+impl SlitScheduler {
+    pub fn new(cfg: &crate::config::SystemConfig, variant: SlitVariant) -> Self {
+        SlitScheduler {
+            variant,
+            options: SlitOptions::default(),
+            opt: cfg.opt.clone(),
+            seed: cfg.seed,
+            epoch_counter: 0,
+            stats: SlitStats::default(),
+            engine: None,
+        }
+    }
+
+    pub fn with_options(mut self, options: SlitOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Route plan search through the AOT/PJRT engine.
+    pub fn with_engine(
+        mut self,
+        engine: std::sync::Arc<crate::runtime::Engine>,
+    ) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+}
+
+impl Scheduler for SlitScheduler {
+    fn name(&self) -> String {
+        self.variant.name().into()
+    }
+
+    fn unused_pr(&self, phys: &PhysicsConfig) -> f64 {
+        phys.pr_off
+    }
+
+    fn plan(&mut self, ctx: &EpochContext) -> Plan {
+        self.epoch_counter += 1;
+        let mut optimizer = SlitOptimizer::new(
+            self.opt.clone(),
+            ctx.cfg.num_classes(),
+            ctx.cfg.datacenters.len(),
+            self.seed ^ self.epoch_counter.wrapping_mul(0x9E37_79B9),
+        )
+        .with_options(self.options);
+        let seeds = ctx.evaluator.greedy_seed_plans();
+        let outcome = match &self.engine {
+            Some(engine) => {
+                let hlo = crate::runtime::HloPlanEvaluator::from_analytic(
+                    engine.clone(),
+                    ctx.evaluator,
+                );
+                optimizer.optimize_with_seeds(&hlo, &seeds)
+            }
+            None => optimizer.optimize_with_seeds(ctx.evaluator, &seeds),
+        };
+        self.stats.epochs += 1;
+        self.stats.evaluations += outcome.evaluations;
+        self.stats.generations += outcome.generations_run;
+        self.stats.surrogate_trainings += outcome.surrogate_trainings;
+        self.stats.wall_s += outcome.wall_s;
+        self.variant
+            .pick(&outcome.archive)
+            .unwrap_or_else(|| {
+                Plan::uniform(ctx.cfg.num_classes(), ctx.cfg.datacenters.len())
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::power::GridSignals;
+    use crate::sim::simulate;
+    use crate::trace::Trace;
+
+    fn run_variant(variant: SlitVariant, seed: u64) -> crate::sim::SimResult {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 4;
+        let trace = Trace::generate(&cfg, cfg.epochs, seed);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, seed);
+        let mut s = SlitScheduler::new(&cfg, variant);
+        simulate(&cfg, &trace, &signals, &mut s, seed)
+    }
+
+    #[test]
+    fn slit_simulates_all_variants() {
+        for v in SlitVariant::all() {
+            let res = run_variant(v, 3);
+            assert!(res.total.requests > 0.0, "{}", v.name());
+            assert_eq!(res.name, v.name());
+        }
+    }
+
+    #[test]
+    fn carbon_variant_beats_ttft_variant_on_carbon() {
+        let carbon = run_variant(SlitVariant::Carbon, 5);
+        let ttft = run_variant(SlitVariant::Ttft, 5);
+        assert!(
+            carbon.total.carbon_kg <= ttft.total.carbon_kg * 1.05,
+            "carbon {} vs ttft-variant {}",
+            carbon.total.carbon_kg,
+            ttft.total.carbon_kg
+        );
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let trace = Trace::generate(&cfg, cfg.epochs, 1);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 1);
+        let mut s = SlitScheduler::new(&cfg, SlitVariant::Balance);
+        let _ = simulate(&cfg, &trace, &signals, &mut s, 1);
+        assert_eq!(s.stats.epochs, 3);
+        assert!(s.stats.evaluations > 0);
+        assert!(s.stats.wall_s > 0.0);
+    }
+}

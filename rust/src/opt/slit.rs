@@ -1,0 +1,559 @@
+//! The SLIT metaheuristic (Algorithm 1): ML-guided local search + an
+//! evolutionary algorithm over scheduling plans, maintaining a Pareto
+//! archive across the four objectives.
+//!
+//! Structure follows the paper's pseudocode:
+//!   * init: partially random population including the two extreme plans
+//!     (evenly-distributed, single-location);
+//!   * ML-guided search (lines 3-11): per plan, candidate neighbours are
+//!     ranked by the gradient-boosting surrogate and only the promising
+//!     ones pay for a true evaluation; trajectories accumulate in Y_train
+//!     and the surrogate retrains every `freq` generations;
+//!   * EA (lines 12-20): random-parent crossover + mutation injects the
+//!     searched traits into unexplored regions;
+//!   * `update_population` keeps only dominant plans (pareto::ParetoArchive)
+//!     and the working population is refreshed by rank + crowding.
+
+use std::time::Instant;
+
+use crate::config::{OptConfig, N_OBJ};
+use crate::eval::BatchEvaluator;
+use crate::opt::gbdt::{Gbdt, GbdtConfig};
+use crate::pareto::{crowding_distances, dominates, ParetoArchive, Solution};
+use crate::plan::Plan;
+use crate::util::rng::Rng;
+
+/// Cap on the surrogate training-set size (most recent trajectories win).
+const MAX_TRAIN_SAMPLES: usize = 768;
+
+/// Ablation / instrumentation switches.
+#[derive(Clone, Copy, Debug)]
+pub struct SlitOptions {
+    /// Use the GBDT surrogate to pre-rank neighbours (off = random half).
+    pub use_surrogate: bool,
+    /// Run the EA phase.
+    pub use_ea: bool,
+}
+
+impl Default for SlitOptions {
+    fn default() -> Self {
+        SlitOptions {
+            use_surrogate: true,
+            use_ea: true,
+        }
+    }
+}
+
+/// Result of one optimizer run (one epoch's planning).
+#[derive(Debug)]
+pub struct SlitOutcome {
+    pub archive: ParetoArchive,
+    /// True-evaluator calls spent.
+    pub evaluations: usize,
+    pub generations_run: usize,
+    pub surrogate_trainings: usize,
+    pub wall_s: f64,
+}
+
+/// The metaheuristic runner. Stateless across epochs except the RNG; the
+/// surrogate is rebuilt per epoch because the objective landscape moves
+/// with the grid signals and predicted load.
+pub struct SlitOptimizer {
+    pub opt: OptConfig,
+    pub options: SlitOptions,
+    classes: usize,
+    dcs: usize,
+    rng: Rng,
+}
+
+impl SlitOptimizer {
+    pub fn new(opt: OptConfig, classes: usize, dcs: usize, seed: u64) -> Self {
+        SlitOptimizer {
+            opt,
+            options: SlitOptions::default(),
+            classes,
+            dcs,
+            rng: Rng::new(seed ^ 0x534C_4954), // "SLIT"
+        }
+    }
+
+    pub fn with_options(mut self, options: SlitOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Run Algorithm 1 against `eval`; respects the per-epoch budget.
+    pub fn optimize(&mut self, eval: &dyn BatchEvaluator) -> SlitOutcome {
+        self.optimize_with_seeds(eval, &[])
+    }
+
+    /// Run Algorithm 1 with extra seed plans injected into the initial
+    /// population (e.g. `AnalyticEvaluator::greedy_seed_plans`).
+    pub fn optimize_with_seeds(
+        &mut self,
+        eval: &dyn BatchEvaluator,
+        seeds: &[Plan],
+    ) -> SlitOutcome {
+        let start = Instant::now();
+        let budget = self.opt.budget_s;
+        let x = self.opt.population;
+        let mut archive = ParetoArchive::new(self.opt.archive_cap);
+        let mut evaluations = 0usize;
+        let mut surrogate: Option<Gbdt> = None;
+        let mut surrogate_trainings = 0usize;
+        // Y_train: (plan features, scalarised score)
+        let mut y_train: Vec<(Vec<f64>, f64)> = Vec::new();
+        // running objective bounds for scalarisation
+        let mut lo = [f64::INFINITY; N_OBJ];
+        let mut hi = [f64::NEG_INFINITY; N_OBJ];
+
+        // --- initial population: two extremes + seeds + random
+        //     (Algorithm 1 init, memetically strengthened)
+        let mut plans: Vec<Plan> = Vec::with_capacity(x);
+        plans.push(Plan::uniform(self.classes, self.dcs));
+        plans.push(Plan::one_dc(
+            self.classes,
+            self.dcs,
+            self.rng.below(self.dcs),
+        ));
+        for s in seeds.iter().take(x.saturating_sub(plans.len())) {
+            debug_assert_eq!(s.classes, self.classes);
+            debug_assert_eq!(s.dcs, self.dcs);
+            plans.push(s.clone());
+        }
+        while plans.len() < x {
+            let alpha = self.rng.range(0.1, 1.0);
+            plans.push(Plan::random(self.classes, self.dcs, alpha, &mut self.rng));
+        }
+        let objs = eval.eval_batch(&plans);
+        evaluations += plans.len();
+        let mut population: Vec<Solution> = plans
+            .into_iter()
+            .zip(objs)
+            .map(|(plan, obj)| Solution { plan, obj })
+            .collect();
+        for s in &population {
+            update_bounds(&mut lo, &mut hi, &s.obj);
+            archive.insert(s.clone());
+        }
+
+        let mut generations_run = 0usize;
+        for gen in 0..self.opt.generations {
+            if start.elapsed().as_secs_f64() > budget {
+                break;
+            }
+            generations_run = gen + 1;
+
+            // --- ML-guided local search (lines 3-11) -----------------------
+            // diversified scalarisation: each population slot climbs its own
+            // objective mix (4 single-objective specialists + balanced),
+            // so the archive's extreme points get real search pressure —
+            // that's where SLIT-Carbon/-TTFT/-Water/-Cost come from.
+            let mut new_solutions: Vec<Solution> = Vec::new();
+            for si in 0..population.len() {
+                if start.elapsed().as_secs_f64() > budget {
+                    break;
+                }
+                let weights = slot_weights(si);
+                let mut current = population[si].clone();
+                for _ in 0..self.opt.search_steps {
+                    // propose neighbours
+                    let mut cands: Vec<Plan> =
+                        Vec::with_capacity(self.opt.neighbors);
+                    for c in 0..self.opt.neighbors {
+                        let p = match c % 4 {
+                            // directed move toward a random DC
+                            2 => {
+                                let k = self.rng.below(self.classes);
+                                let to = self.rng.below(self.dcs);
+                                current.plan.shifted_toward(
+                                    k,
+                                    to,
+                                    self.rng.range(0.2, 0.8),
+                                )
+                            }
+                            // snap-to-vertex: collapse one row onto its
+                            // argmax, erasing residual routing mass (the
+                            // single-objective optima live on vertices)
+                            3 => {
+                                let k = self.rng.below(self.classes);
+                                let row = current.plan.row(k);
+                                let best = row
+                                    .iter()
+                                    .enumerate()
+                                    .max_by(|a, b| {
+                                        a.1.partial_cmp(b.1).unwrap()
+                                    })
+                                    .map(|(l, _)| l)
+                                    .unwrap_or(0);
+                                current.plan.shifted_toward(k, best, 1.0)
+                            }
+                            _ => current
+                                .plan
+                                .perturbed(self.opt.step, &mut self.rng),
+                        };
+                        cands.push(p);
+                    }
+                    // surrogate pre-ranking: keep the most promising half
+                    let chosen: Vec<Plan> = match (&surrogate,
+                        self.options.use_surrogate)
+                    {
+                        (Some(model), true) => {
+                            let mut scored: Vec<(f64, Plan)> = cands
+                                .into_iter()
+                                .map(|p| {
+                                    (model.predict(p.as_slice()), p)
+                                })
+                                .collect();
+                            scored.sort_by(|a, b| {
+                                a.0.partial_cmp(&b.0).unwrap()
+                            });
+                            scored
+                                .into_iter()
+                                .take((self.opt.neighbors / 2).max(1))
+                                .map(|(_, p)| p)
+                                .collect()
+                        }
+                        _ => cands
+                            .into_iter()
+                            .take((self.opt.neighbors / 2).max(1))
+                            .collect(),
+                    };
+                    // true evaluation (batch)
+                    let objs = eval.eval_batch(&chosen);
+                    evaluations += chosen.len();
+                    // trajectory capture + archive update + move selection
+                    let mut best: Option<Solution> = None;
+                    for (plan, obj) in chosen.into_iter().zip(objs) {
+                        update_bounds(&mut lo, &mut hi, &obj);
+                        let score = scalarize(&obj, &lo, &hi);
+                        y_train.push((plan.as_slice().to_vec(), score));
+                        let sol = Solution { plan, obj };
+                        archive.insert(sol.clone());
+                        let better = match &best {
+                            None => true,
+                            Some(b) => {
+                                scalarize_w(&obj, &weights, &lo, &hi)
+                                    < scalarize_w(&b.obj, &weights, &lo, &hi)
+                            }
+                        };
+                        if better {
+                            best = Some(sol);
+                        }
+                    }
+                    if let Some(cand) = best {
+                        let cur_score =
+                            scalarize_w(&current.obj, &weights, &lo, &hi);
+                        let cand_score =
+                            scalarize_w(&cand.obj, &weights, &lo, &hi);
+                        if dominates(&cand.obj, &current.obj)
+                            || cand_score < cur_score
+                        {
+                            current = cand;
+                        }
+                    }
+                    if start.elapsed().as_secs_f64() > budget {
+                        break;
+                    }
+                }
+                new_solutions.push(current);
+            }
+            population = select_population(
+                population.into_iter().chain(new_solutions).collect(),
+                x,
+            );
+
+            // --- surrogate retraining (lines 10-11) ------------------------
+            if self.options.use_surrogate
+                && gen % self.opt.train_freq == self.opt.train_freq - 1
+                && y_train.len() >= 32
+                && start.elapsed().as_secs_f64() <= budget
+            {
+                // keep training bounded: most recent trajectories + column
+                // subsampling keep one fit well inside the epoch budget
+                let take = y_train.len().min(MAX_TRAIN_SAMPLES);
+                let tail = &y_train[y_train.len() - take..];
+                let xs: Vec<Vec<f64>> =
+                    tail.iter().map(|(f, _)| f.clone()).collect();
+                let ys: Vec<f64> = tail.iter().map(|(_, s)| *s).collect();
+                let d = xs[0].len();
+                let cfg = GbdtConfig {
+                    trees: self.opt.gbdt_trees,
+                    depth: self.opt.gbdt_depth,
+                    learning_rate: self.opt.gbdt_lr,
+                    min_leaf: self.opt.gbdt_min_leaf,
+                    feature_sample: (d / 6).max(8).min(d),
+                };
+                surrogate = Some(Gbdt::fit(&xs, &ys, &cfg, &mut self.rng));
+                surrogate_trainings += 1;
+                y_train.clear(); // paper: Y_train = empty after training
+            }
+
+            // --- EA phase (lines 12-20) ------------------------------------
+            if self.options.use_ea && start.elapsed().as_secs_f64() <= budget {
+                let mut children: Vec<Plan> = Vec::with_capacity(x);
+                for _ in 0..x {
+                    let p1 = self.rng.below(population.len());
+                    let p2 = self.rng.below(population.len());
+                    let child = population[p1]
+                        .plan
+                        .crossover(&population[p2].plan, &mut self.rng)
+                        .mutated(self.opt.mutation_rate, &mut self.rng);
+                    children.push(child);
+                }
+                let objs = eval.eval_batch(&children);
+                evaluations += children.len();
+                let mut child_solutions = Vec::with_capacity(children.len());
+                for (plan, obj) in children.into_iter().zip(objs) {
+                    update_bounds(&mut lo, &mut hi, &obj);
+                    y_train.push((
+                        plan.as_slice().to_vec(),
+                        scalarize(&obj, &lo, &hi),
+                    ));
+                    let sol = Solution { plan, obj };
+                    archive.insert(sol.clone());
+                    child_solutions.push(sol);
+                }
+                population = select_population(
+                    population.into_iter().chain(child_solutions).collect(),
+                    x,
+                );
+            }
+        }
+
+        SlitOutcome {
+            archive,
+            evaluations,
+            generations_run,
+            surrogate_trainings,
+            wall_s: start.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+fn update_bounds(lo: &mut [f64; N_OBJ], hi: &mut [f64; N_OBJ], obj: &[f64; N_OBJ]) {
+    for i in 0..N_OBJ {
+        lo[i] = lo[i].min(obj[i]);
+        hi[i] = hi[i].max(obj[i]);
+    }
+}
+
+/// Normalised-sum scalarisation against running bounds (lower is better).
+fn scalarize(obj: &[f64; N_OBJ], lo: &[f64; N_OBJ], hi: &[f64; N_OBJ]) -> f64 {
+    scalarize_w(obj, &[1.0; N_OBJ], lo, hi)
+}
+
+/// Weighted normalised-sum scalarisation.
+fn scalarize_w(
+    obj: &[f64; N_OBJ],
+    weights: &[f64; N_OBJ],
+    lo: &[f64; N_OBJ],
+    hi: &[f64; N_OBJ],
+) -> f64 {
+    let mut s = 0.0;
+    for i in 0..N_OBJ {
+        if hi[i] - lo[i] > 1e-15 {
+            s += weights[i] * (obj[i] - lo[i]) / (hi[i] - lo[i]);
+        }
+    }
+    s
+}
+
+/// Objective-mix rotation over population slots: slots 0..3 specialise on
+/// one objective each (with a small balanced regulariser so they don't
+/// wander into absurd corners), the rest climb the balanced sum.
+fn slot_weights(slot: usize) -> [f64; N_OBJ] {
+    match slot % (N_OBJ + 1) {
+        i if i < N_OBJ => {
+            let mut w = [0.05; N_OBJ];
+            w[i] = 1.0;
+            w
+        }
+        _ => [1.0; N_OBJ],
+    }
+}
+
+/// Keep `cap` solutions: non-dominated first, then crowding-sorted fill
+/// (a light NSGA-II environmental selection).
+pub fn select_population(mut pool: Vec<Solution>, cap: usize) -> Vec<Solution> {
+    if pool.len() <= cap {
+        return pool;
+    }
+    let mut out: Vec<Solution> = Vec::with_capacity(cap);
+    while out.len() < cap && !pool.is_empty() {
+        // current non-dominated front of the pool
+        let mut front_idx: Vec<usize> = Vec::new();
+        for i in 0..pool.len() {
+            let dominated = pool
+                .iter()
+                .enumerate()
+                .any(|(j, s)| j != i && dominates(&s.obj, &pool[i].obj));
+            if !dominated {
+                front_idx.push(i);
+            }
+        }
+        if front_idx.is_empty() {
+            // all mutually dominated cycles shouldn't happen; guard anyway
+            front_idx = (0..pool.len()).collect();
+        }
+        let mut front: Vec<Solution> = Vec::with_capacity(front_idx.len());
+        for &i in front_idx.iter().rev() {
+            front.push(pool.swap_remove(i));
+        }
+        if out.len() + front.len() <= cap {
+            out.extend(front);
+        } else {
+            let crowd = crowding_distances(&front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| {
+                crowd[b].partial_cmp(&crowd[a]).unwrap()
+            });
+            for &i in order.iter().take(cap - out.len()) {
+                out.push(front[i].clone());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::build_panels;
+    use crate::config::{SystemConfig, OBJ_CARBON, OBJ_TTFT};
+    use crate::eval::{AnalyticEvaluator, EvalConsts};
+    use crate::power::GridSignals;
+    use crate::trace::Trace;
+
+    fn make_eval() -> (SystemConfig, AnalyticEvaluator) {
+        let cfg = SystemConfig::paper_default();
+        let signals = GridSignals::generate(&cfg, 8, 3);
+        let trace = Trace::generate(&cfg, 8, 3);
+        let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+        let consts = EvalConsts::from_physics(&cfg.physics);
+        (cfg.clone(), AnalyticEvaluator::new(cp, dp, consts))
+    }
+
+    fn run_opt(options: SlitOptions, seed: u64) -> (SystemConfig, SlitOutcome) {
+        let (cfg, ev) = make_eval();
+        let mut opt_cfg = cfg.opt.clone();
+        opt_cfg.population = 12;
+        opt_cfg.generations = 5;
+        opt_cfg.search_steps = 3;
+        opt_cfg.neighbors = 6;
+        opt_cfg.gbdt_trees = 10;
+        opt_cfg.train_freq = 2;
+        let mut o = SlitOptimizer::new(
+            opt_cfg,
+            cfg.num_classes(),
+            ev.dcs(),
+            seed,
+        )
+        .with_options(options);
+        let out = o.optimize(&ev);
+        (cfg, out)
+    }
+
+    #[test]
+    fn produces_consistent_nonempty_archive() {
+        let (_, out) = run_opt(SlitOptions::default(), 1);
+        assert!(!out.archive.is_empty());
+        assert!(out.archive.is_consistent());
+        assert!(out.evaluations > 50);
+        assert_eq!(out.generations_run, 5);
+        assert!(out.surrogate_trainings >= 1);
+    }
+
+    #[test]
+    fn showcase_solutions_specialise() {
+        let (_, out) = run_opt(SlitOptions::default(), 2);
+        let show = out.archive.showcase();
+        assert_eq!(show.len(), 5);
+        // best-carbon has carbon <= best-ttft's carbon, and vice versa
+        let carbon_sol = &show[OBJ_CARBON].1;
+        let ttft_sol = &show[OBJ_TTFT].1;
+        assert!(carbon_sol.obj[OBJ_CARBON] <= ttft_sol.obj[OBJ_CARBON]);
+        assert!(ttft_sol.obj[OBJ_TTFT] <= carbon_sol.obj[OBJ_TTFT]);
+    }
+
+    #[test]
+    fn optimizer_beats_uniform_plan_on_every_showcased_objective() {
+        let (cfg, out) = run_opt(SlitOptions::default(), 3);
+        let (_, ev) = make_eval();
+        let uniform =
+            ev.evaluate(&Plan::uniform(cfg.num_classes(), ev.dcs()));
+        for (i, _) in crate::config::OBJ_NAMES.iter().enumerate() {
+            let best = out.archive.best_for(i).unwrap();
+            assert!(
+                best.obj[i] <= uniform[i] * 1.001,
+                "objective {i}: best {} vs uniform {}",
+                best.obj[i],
+                uniform[i]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (_, a) = run_opt(SlitOptions::default(), 7);
+        let (_, b) = run_opt(SlitOptions::default(), 7);
+        assert_eq!(a.evaluations, b.evaluations);
+        let oa: Vec<_> = a.archive.solutions.iter().map(|s| s.obj).collect();
+        let ob: Vec<_> = b.archive.solutions.iter().map(|s| s.obj).collect();
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn ablations_run() {
+        let (_, no_sur) = run_opt(
+            SlitOptions {
+                use_surrogate: false,
+                use_ea: true,
+            },
+            4,
+        );
+        assert_eq!(no_sur.surrogate_trainings, 0);
+        let (_, no_ea) = run_opt(
+            SlitOptions {
+                use_surrogate: true,
+                use_ea: false,
+            },
+            4,
+        );
+        assert!(!no_ea.archive.is_empty());
+        assert!(no_ea.evaluations < no_sur.evaluations);
+    }
+
+    #[test]
+    fn select_population_caps_and_keeps_nondominated() {
+        let mk = |o: [f64; N_OBJ]| Solution {
+            plan: Plan::uniform(2, 3),
+            obj: o,
+        };
+        let pool = vec![
+            mk([1.0, 9.0, 9.0, 9.0]),
+            mk([9.0, 1.0, 9.0, 9.0]),
+            mk([5.0, 5.0, 5.0, 5.0]),
+            mk([6.0, 6.0, 6.0, 6.0]), // dominated by the previous
+            mk([9.0, 9.0, 1.0, 9.0]),
+        ];
+        let sel = select_population(pool, 4);
+        assert_eq!(sel.len(), 4);
+        assert!(!sel.iter().any(|s| s.obj == [6.0, 6.0, 6.0, 6.0]));
+    }
+
+    #[test]
+    fn budget_is_respected() {
+        let (cfg, ev) = make_eval();
+        let mut opt_cfg = cfg.opt.clone();
+        opt_cfg.generations = 10_000;
+        opt_cfg.budget_s = 0.2;
+        let mut o =
+            SlitOptimizer::new(opt_cfg, cfg.num_classes(), ev.dcs(), 1);
+        let t = std::time::Instant::now();
+        let out = o.optimize(&ev);
+        assert!(t.elapsed().as_secs_f64() < 5.0);
+        assert!(out.generations_run < 10_000);
+        assert!(!out.archive.is_empty());
+    }
+}

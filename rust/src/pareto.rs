@@ -1,0 +1,404 @@
+//! Pareto machinery for the 4-objective minimisation problem: dominance,
+//! a bounded non-dominated archive with crowding-distance pruning (NSGA-II
+//! style), hypervolume estimation, and the paper's five showcased solution
+//! selectors (SLIT-Carbon/TTFT/Water/Cost best-single-objective plus
+//! SLIT-Balance = minimal normalised sum, §6).
+
+use crate::config::{N_OBJ, OBJ_NAMES};
+use crate::plan::Plan;
+use crate::util::rng::Rng;
+
+/// A plan with its evaluated objective vector.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub plan: Plan,
+    pub obj: [f64; N_OBJ],
+}
+
+/// True iff `a` Pareto-dominates `b` (<= everywhere, < somewhere).
+pub fn dominates(a: &[f64; N_OBJ], b: &[f64; N_OBJ]) -> bool {
+    let mut strictly = false;
+    for i in 0..N_OBJ {
+        if a[i] > b[i] {
+            return false;
+        }
+        if a[i] < b[i] {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Bounded non-dominated archive (Algorithm 1's `update_population`: only
+/// dominant plans are retained).
+#[derive(Clone, Debug)]
+pub struct ParetoArchive {
+    pub solutions: Vec<Solution>,
+    cap: usize,
+}
+
+impl ParetoArchive {
+    pub fn new(cap: usize) -> Self {
+        ParetoArchive {
+            solutions: Vec::new(),
+            cap: cap.max(4),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.solutions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.solutions.is_empty()
+    }
+
+    /// Try to insert; returns true if the solution enters the archive
+    /// (i.e. it is not dominated by any member).
+    pub fn insert(&mut self, sol: Solution) -> bool {
+        if self
+            .solutions
+            .iter()
+            .any(|s| dominates(&s.obj, &sol.obj) || s.obj == sol.obj)
+        {
+            return false;
+        }
+        self.solutions.retain(|s| !dominates(&sol.obj, &s.obj));
+        self.solutions.push(sol);
+        if self.solutions.len() > self.cap {
+            self.prune();
+        }
+        true
+    }
+
+    /// Drop the most crowded members until within capacity.
+    fn prune(&mut self) {
+        while self.solutions.len() > self.cap {
+            let crowd = crowding_distances(&self.solutions);
+            // never drop an objective-extreme point (infinite crowding)
+            let victim = crowd
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            self.solutions.swap_remove(victim);
+        }
+    }
+
+    /// Verify the non-domination invariant (tests / debug).
+    pub fn is_consistent(&self) -> bool {
+        for (i, a) in self.solutions.iter().enumerate() {
+            for (j, b) in self.solutions.iter().enumerate() {
+                if i != j && dominates(&a.obj, &b.obj) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Best solution for a single objective index.
+    pub fn best_for(&self, obj: usize) -> Option<&Solution> {
+        self.solutions.iter().min_by(|a, b| {
+            a.obj[obj].partial_cmp(&b.obj[obj]).unwrap()
+        })
+    }
+
+    /// The balanced solution: minimal sum of per-objective min-max
+    /// normalised values across the archive (§6 SLIT-Balance).
+    pub fn balanced(&self) -> Option<&Solution> {
+        if self.solutions.is_empty() {
+            return None;
+        }
+        let (lo, hi) = self.bounds();
+        self.solutions.iter().min_by(|a, b| {
+            let na = norm_sum(&a.obj, &lo, &hi);
+            let nb = norm_sum(&b.obj, &lo, &hi);
+            na.partial_cmp(&nb).unwrap()
+        })
+    }
+
+    /// Per-objective (min, max) over the archive.
+    pub fn bounds(&self) -> ([f64; N_OBJ], [f64; N_OBJ]) {
+        let mut lo = [f64::INFINITY; N_OBJ];
+        let mut hi = [f64::NEG_INFINITY; N_OBJ];
+        for s in &self.solutions {
+            for i in 0..N_OBJ {
+                lo[i] = lo[i].min(s.obj[i]);
+                hi[i] = hi[i].max(s.obj[i]);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// The paper's five showcased solutions, in OBJ order + balance.
+    pub fn showcase(&self) -> Vec<(String, Solution)> {
+        let mut out = Vec::new();
+        for (i, name) in OBJ_NAMES.iter().enumerate() {
+            if let Some(s) = self.best_for(i) {
+                out.push((format!("slit-{}", short_name(name)), s.clone()));
+            }
+        }
+        if let Some(s) = self.balanced() {
+            out.push(("slit-balance".to_string(), s.clone()));
+        }
+        out
+    }
+}
+
+fn short_name(obj_name: &str) -> &str {
+    match obj_name {
+        "ttft_s" => "ttft",
+        "carbon_kg" => "carbon",
+        "water_l" => "water",
+        "cost_usd" => "cost",
+        other => other,
+    }
+}
+
+fn norm_sum(obj: &[f64; N_OBJ], lo: &[f64; N_OBJ], hi: &[f64; N_OBJ]) -> f64 {
+    (0..N_OBJ)
+        .map(|i| {
+            if hi[i] - lo[i] > 1e-15 {
+                (obj[i] - lo[i]) / (hi[i] - lo[i])
+            } else {
+                0.0
+            }
+        })
+        .sum()
+}
+
+/// NSGA-II crowding distance for each solution (extremes get +inf).
+pub fn crowding_distances(sols: &[Solution]) -> Vec<f64> {
+    let n = sols.len();
+    let mut d = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    for obj in 0..N_OBJ {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            sols[a].obj[obj].partial_cmp(&sols[b].obj[obj]).unwrap()
+        });
+        let lo = sols[idx[0]].obj[obj];
+        let hi = sols[idx[n - 1]].obj[obj];
+        d[idx[0]] = f64::INFINITY;
+        d[idx[n - 1]] = f64::INFINITY;
+        if hi - lo <= 1e-15 {
+            continue;
+        }
+        for w in 1..n - 1 {
+            let prev = sols[idx[w - 1]].obj[obj];
+            let next = sols[idx[w + 1]].obj[obj];
+            d[idx[w]] += (next - prev) / (hi - lo);
+        }
+    }
+    d
+}
+
+/// Monte-Carlo hypervolume: the fraction of the `[0, reference]` box
+/// dominated by the front (objectives are non-negative here). Exact HV in
+/// 4D is expensive; sampling is plenty for tracking optimizer progress and
+/// ablations, and the fixed box keeps values comparable across fronts.
+pub fn hypervolume(
+    front: &[Solution],
+    reference: &[f64; N_OBJ],
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    if front.is_empty() {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut hits = 0usize;
+    for _ in 0..samples {
+        let mut pt = [0.0; N_OBJ];
+        for i in 0..N_OBJ {
+            pt[i] = rng.range(0.0, reference[i].max(1e-12));
+        }
+        if front.iter().any(|s| {
+            (0..N_OBJ).all(|i| s.obj[i] <= pt[i])
+        }) {
+            hits += 1;
+        }
+    }
+    hits as f64 / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit;
+
+    fn sol(obj: [f64; N_OBJ]) -> Solution {
+        Solution {
+            plan: Plan::uniform(2, 3),
+            obj,
+        }
+    }
+
+    #[test]
+    fn dominance_basics() {
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let b = [2.0, 2.0, 2.0, 2.0];
+        let c = [0.5, 3.0, 1.0, 1.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &c));
+        assert!(!dominates(&c, &a));
+        assert!(!dominates(&a, &a));
+    }
+
+    #[test]
+    fn dominance_is_a_strict_partial_order() {
+        propkit::check(
+            "dominance-partial-order",
+            0xD0,
+            300,
+            |r| {
+                let a: [f64; N_OBJ] =
+                    [r.below(5) as f64, r.below(5) as f64, r.below(5) as f64, r.below(5) as f64];
+                let b: [f64; N_OBJ] =
+                    [r.below(5) as f64, r.below(5) as f64, r.below(5) as f64, r.below(5) as f64];
+                let c: [f64; N_OBJ] =
+                    [r.below(5) as f64, r.below(5) as f64, r.below(5) as f64, r.below(5) as f64];
+                (a, b, c)
+            },
+            |&(a, b, c)| {
+                // irreflexive
+                if dominates(&a, &a) {
+                    return Err("reflexive".into());
+                }
+                // antisymmetric
+                if dominates(&a, &b) && dominates(&b, &a) {
+                    return Err("symmetric".into());
+                }
+                // transitive
+                if dominates(&a, &b) && dominates(&b, &c) && !dominates(&a, &c)
+                {
+                    return Err("not transitive".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn archive_keeps_only_nondominated() {
+        let mut ar = ParetoArchive::new(16);
+        assert!(ar.insert(sol([2.0, 2.0, 2.0, 2.0])));
+        assert!(ar.insert(sol([1.0, 3.0, 2.0, 2.0]))); // tradeoff
+        assert!(!ar.insert(sol([3.0, 3.0, 3.0, 3.0]))); // dominated
+        assert!(ar.insert(sol([1.0, 1.0, 1.0, 1.0]))); // dominates all
+        assert_eq!(ar.len(), 1);
+        assert!(ar.is_consistent());
+    }
+
+    #[test]
+    fn archive_rejects_duplicates() {
+        let mut ar = ParetoArchive::new(8);
+        assert!(ar.insert(sol([1.0, 2.0, 3.0, 4.0])));
+        assert!(!ar.insert(sol([1.0, 2.0, 3.0, 4.0])));
+        assert_eq!(ar.len(), 1);
+    }
+
+    #[test]
+    fn archive_respects_capacity_and_keeps_extremes() {
+        let mut ar = ParetoArchive::new(8);
+        // a 2-objective-ish tradeoff curve embedded in 4D
+        for i in 0..50 {
+            let x = i as f64;
+            ar.insert(sol([x, 49.0 - x, 10.0, 10.0]));
+        }
+        assert!(ar.len() <= 8);
+        assert!(ar.is_consistent());
+        // extremes survive pruning
+        let (lo, _) = ar.bounds();
+        assert_eq!(lo[0], 0.0);
+        assert_eq!(lo[1], 0.0);
+    }
+
+    #[test]
+    fn archive_nondomination_invariant_property() {
+        propkit::check(
+            "archive-invariant",
+            0xAC,
+            60,
+            |r| {
+                let mut ar = ParetoArchive::new(12);
+                for _ in 0..80 {
+                    let o = [
+                        r.range(0.0, 10.0),
+                        r.range(0.0, 10.0),
+                        r.range(0.0, 10.0),
+                        r.range(0.0, 10.0),
+                    ];
+                    ar.insert(sol(o));
+                }
+                ar
+            },
+            |ar| {
+                if !ar.is_consistent() {
+                    return Err("dominated member retained".into());
+                }
+                if ar.len() > 12 {
+                    return Err("capacity exceeded".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn best_for_and_balanced() {
+        let mut ar = ParetoArchive::new(16);
+        ar.insert(sol([1.0, 9.0, 9.0, 9.0]));
+        ar.insert(sol([9.0, 1.0, 9.0, 9.0]));
+        ar.insert(sol([9.0, 9.0, 1.0, 9.0]));
+        ar.insert(sol([9.0, 9.0, 9.0, 1.0]));
+        ar.insert(sol([3.0, 3.0, 3.0, 3.0]));
+        assert_eq!(ar.best_for(0).unwrap().obj[0], 1.0);
+        assert_eq!(ar.best_for(3).unwrap().obj[3], 1.0);
+        let b = ar.balanced().unwrap();
+        assert_eq!(b.obj, [3.0, 3.0, 3.0, 3.0]);
+        let names: Vec<String> =
+            ar.showcase().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(
+            names,
+            vec![
+                "slit-ttft",
+                "slit-carbon",
+                "slit-water",
+                "slit-cost",
+                "slit-balance"
+            ]
+        );
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let sols = vec![
+            sol([0.0, 4.0, 1.0, 1.0]),
+            sol([1.0, 3.0, 1.0, 1.0]),
+            sol([2.0, 2.0, 1.0, 1.0]),
+            sol([3.0, 1.0, 1.0, 1.0]),
+            sol([4.0, 0.0, 1.0, 1.0]),
+        ];
+        let d = crowding_distances(&sols);
+        assert!(d[0].is_infinite());
+        assert!(d[4].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite());
+    }
+
+    #[test]
+    fn hypervolume_monotone_in_front_quality() {
+        let far = vec![sol([8.0, 8.0, 8.0, 8.0])];
+        let near = vec![sol([1.0, 1.0, 1.0, 1.0])];
+        let reference = [10.0, 10.0, 10.0, 10.0];
+        let hv_far = hypervolume(&far, &reference, 20_000, 1);
+        let hv_near = hypervolume(&near, &reference, 20_000, 1);
+        assert!(hv_near > hv_far);
+        assert!(hypervolume(&[], &reference, 100, 1) == 0.0);
+    }
+}

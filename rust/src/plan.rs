@@ -1,0 +1,324 @@
+//! Scheduling-plan representation.
+//!
+//! A plan is the unit the SLIT metaheuristic searches over: for every
+//! request class k (origin region x model) a distribution over datacenters,
+//! i.e. a row-stochastic matrix `a[k][l]` — the fraction of class-k
+//! requests routed to datacenter l in the upcoming epoch (§4: "workload
+//! assignment to each location"; within a location the local round-robin
+//! scheduler takes over).
+
+use crate::util::rng::Rng;
+
+/// Row-stochastic assignment matrix, flattened `[k * dcs + l]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub classes: usize,
+    pub dcs: usize,
+    a: Vec<f64>,
+}
+
+impl Plan {
+    /// The "evenly distributed" extreme plan (Algorithm 1 init).
+    pub fn uniform(classes: usize, dcs: usize) -> Plan {
+        Plan {
+            classes,
+            dcs,
+            a: vec![1.0 / dcs as f64; classes * dcs],
+        }
+    }
+
+    /// The "only one location" extreme plan (Algorithm 1 init).
+    pub fn one_dc(classes: usize, dcs: usize, dc: usize) -> Plan {
+        let mut p = Plan {
+            classes,
+            dcs,
+            a: vec![0.0; classes * dcs],
+        };
+        for k in 0..classes {
+            p.a[k * dcs + dc] = 1.0;
+        }
+        p
+    }
+
+    /// Random plan: Dirichlet(alpha)-distributed rows (sparse for small
+    /// alpha, which matches how real schedulers concentrate load).
+    pub fn random(classes: usize, dcs: usize, alpha: f64, rng: &mut Rng) -> Plan {
+        let mut p = Plan {
+            classes,
+            dcs,
+            a: vec![0.0; classes * dcs],
+        };
+        for k in 0..classes {
+            for l in 0..dcs {
+                p.a[k * dcs + l] = rng.gamma(alpha).max(1e-12);
+            }
+        }
+        p.normalize();
+        p
+    }
+
+    #[inline]
+    pub fn get(&self, k: usize, l: usize) -> f64 {
+        self.a[k * self.dcs + l]
+    }
+
+    #[inline]
+    pub fn set(&mut self, k: usize, l: usize, v: f64) {
+        self.a[k * self.dcs + l] = v;
+    }
+
+    pub fn row(&self, k: usize) -> &[f64] {
+        &self.a[k * self.dcs..(k + 1) * self.dcs]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.a
+    }
+
+    /// Renormalise every row to sum to 1 (clamping negatives to 0).
+    pub fn normalize(&mut self) {
+        for k in 0..self.classes {
+            self.normalize_row(k);
+        }
+    }
+
+    /// Renormalise a single row (others untouched).
+    pub fn normalize_row(&mut self, k: usize) {
+        let row = &mut self.a[k * self.dcs..(k + 1) * self.dcs];
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+            sum += *v;
+        }
+        if sum <= 1e-15 {
+            let u = 1.0 / row.len() as f64;
+            row.iter_mut().for_each(|v| *v = u);
+        } else {
+            row.iter_mut().for_each(|v| *v /= sum);
+        }
+    }
+
+    /// True when every row sums to 1 within tolerance and is non-negative.
+    pub fn is_valid(&self) -> bool {
+        (0..self.classes).all(|k| {
+            let row = self.row(k);
+            let sum: f64 = row.iter().sum();
+            row.iter().all(|&v| v >= -1e-12) && (sum - 1.0).abs() < 1e-6
+        })
+    }
+
+    /// Local-search neighbour: shift `step` of mass in a few random rows
+    /// from one DC to another, renormalise.
+    pub fn perturbed(&self, step: f64, rng: &mut Rng) -> Plan {
+        let mut p = self.clone();
+        let touched = 1 + rng.below(self.classes.max(1));
+        for _ in 0..touched {
+            let k = rng.below(self.classes);
+            let from = rng.below(self.dcs);
+            let to = rng.below(self.dcs);
+            if from == to {
+                continue;
+            }
+            let amount = (p.get(k, from) * rng.range(0.0, step)).min(p.get(k, from));
+            p.set(k, from, p.get(k, from) - amount);
+            p.set(k, to, p.get(k, to) + amount);
+        }
+        p.normalize();
+        p
+    }
+
+    /// Directed neighbour: move mass in row `k` toward DC `to`. Other rows
+    /// are untouched (mass within row `k` is conserved by construction).
+    pub fn shifted_toward(&self, k: usize, to: usize, frac: f64) -> Plan {
+        let mut p = self.clone();
+        for l in 0..self.dcs {
+            if l != to {
+                let take = p.get(k, l) * frac;
+                p.set(k, l, p.get(k, l) - take);
+                p.set(k, to, p.get(k, to) + take);
+            }
+        }
+        p.normalize_row(k);
+        p
+    }
+
+    /// EA crossover (Algorithm 1 line 14): per-row arithmetic blend with a
+    /// random mixing coefficient — children inherit whole-row traits.
+    pub fn crossover(&self, other: &Plan, rng: &mut Rng) -> Plan {
+        assert_eq!(self.classes, other.classes);
+        assert_eq!(self.dcs, other.dcs);
+        let mut child = self.clone();
+        for k in 0..self.classes {
+            let w = rng.f64();
+            for l in 0..self.dcs {
+                let v = w * self.get(k, l) + (1.0 - w) * other.get(k, l);
+                child.set(k, l, v);
+            }
+        }
+        child.normalize();
+        child
+    }
+
+    /// EA mutation (Algorithm 1 line 15): random gene resampling.
+    pub fn mutated(&self, rate: f64, rng: &mut Rng) -> Plan {
+        let mut p = self.clone();
+        for k in 0..self.classes {
+            for l in 0..self.dcs {
+                if rng.chance(rate) {
+                    p.set(k, l, rng.gamma(0.5).max(1e-12));
+                }
+            }
+        }
+        p.normalize();
+        p
+    }
+
+    /// L1 distance between plans (diversity metric for the archive).
+    pub fn distance(&self, other: &Plan) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(x, y)| (x - y).abs())
+            .sum()
+    }
+
+    /// Flatten into the AOT layout: f32 row-major `[k][slot]` with `slots`
+    /// padded DC columns (zeros beyond `self.dcs`).
+    pub fn to_f32_padded(&self, slots: usize, out: &mut Vec<f32>) {
+        debug_assert!(slots >= self.dcs);
+        for k in 0..self.classes {
+            for l in 0..self.dcs {
+                out.push(self.get(k, l) as f32);
+            }
+            for _ in self.dcs..slots {
+                out.push(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit;
+
+    #[test]
+    fn uniform_and_one_dc_are_valid() {
+        let u = Plan::uniform(8, 12);
+        assert!(u.is_valid());
+        assert!((u.get(3, 7) - 1.0 / 12.0).abs() < 1e-12);
+        let o = Plan::one_dc(8, 12, 4);
+        assert!(o.is_valid());
+        assert_eq!(o.get(2, 4), 1.0);
+        assert_eq!(o.get(2, 5), 0.0);
+    }
+
+    #[test]
+    fn random_plans_are_valid_property() {
+        propkit::check(
+            "random-plan-valid",
+            0xA11CE,
+            200,
+            |r| Plan::random(8, 12, r.range(0.05, 2.0), r),
+            |p| {
+                if p.is_valid() {
+                    Ok(())
+                } else {
+                    Err("row not stochastic".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn perturb_crossover_mutate_preserve_validity() {
+        propkit::check(
+            "plan-ops-valid",
+            0xBEEF,
+            200,
+            |r| {
+                let a = Plan::random(8, 12, 0.5, r);
+                let b = Plan::random(8, 12, 0.5, r);
+                let mut r2 = r.fork(1);
+                let p = a.perturbed(0.4, &mut r2);
+                let c = a.crossover(&b, &mut r2);
+                let m = c.mutated(0.2, &mut r2);
+                let s = m.shifted_toward(3, 5, 0.7);
+                (p, c, m, s)
+            },
+            |(p, c, m, s)| {
+                for (name, plan) in [
+                    ("perturbed", p),
+                    ("crossover", c),
+                    ("mutated", m),
+                    ("shifted", s),
+                ] {
+                    if !plan.is_valid() {
+                        return Err(format!("{name} broke stochasticity"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shifted_toward_concentrates() {
+        let u = Plan::uniform(4, 6);
+        let s = u.shifted_toward(2, 3, 0.5);
+        assert!(s.get(2, 3) > u.get(2, 3));
+        assert!(s.get(2, 0) < u.get(2, 0));
+        // other rows untouched
+        assert_eq!(s.row(1), u.row(1));
+    }
+
+    #[test]
+    fn crossover_stays_within_parents_hull() {
+        let mut rng = Rng::new(3);
+        let a = Plan::random(4, 6, 0.5, &mut rng);
+        let b = Plan::random(4, 6, 0.5, &mut rng);
+        let c = a.crossover(&b, &mut rng);
+        for k in 0..4 {
+            for l in 0..6 {
+                let lo = a.get(k, l).min(b.get(k, l)) - 1e-9;
+                let hi = a.get(k, l).max(b.get(k, l)) + 1e-9;
+                // blend preserves row sums at 1 so no renorm distortion
+                assert!(c.get(k, l) >= lo && c.get(k, l) <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn distance_zero_iff_equal() {
+        let mut rng = Rng::new(4);
+        let a = Plan::random(8, 12, 0.5, &mut rng);
+        assert_eq!(a.distance(&a), 0.0);
+        let b = a.perturbed(0.5, &mut rng);
+        assert!(a.distance(&b) > 0.0);
+    }
+
+    #[test]
+    fn normalize_rescues_degenerate_rows() {
+        let mut p = Plan::one_dc(2, 3, 0);
+        p.set(1, 0, 0.0);
+        p.set(1, 1, 0.0);
+        p.set(1, 2, 0.0);
+        p.normalize();
+        assert!(p.is_valid());
+        assert!((p.get(1, 1) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_padding_layout() {
+        let p = Plan::one_dc(2, 3, 1);
+        let mut out = Vec::new();
+        p.to_f32_padded(5, &mut out);
+        assert_eq!(out.len(), 2 * 5);
+        assert_eq!(out[1], 1.0);
+        assert_eq!(out[3], 0.0); // padded
+        assert_eq!(out[4], 0.0);
+        assert_eq!(out[5 + 1], 1.0);
+    }
+}

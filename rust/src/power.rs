@@ -1,0 +1,225 @@
+//! Grid signal synthesis: time-varying carbon intensity CI_{l,t}, water
+//! intensity WI_{l,t}, and time-of-use price TOU_{l,t} per datacenter.
+//!
+//! The paper consumes electricitymaps-style feeds; we synthesise them
+//! (repro substitution, DESIGN.md §3): each signal is a diurnal curve in
+//! the site's local solar time plus a weekly modulation and deterministic
+//! seeded noise. Carbon follows the classic duck shape for solar-heavy
+//! grids (midday dip, evening peak); TOU peaks in business hours; WI is
+//! flatter but follows the generation mix.
+
+use crate::config::SystemConfig;
+use crate::util::rng::Rng;
+
+/// Precomputed per-epoch grid signals for every datacenter.
+#[derive(Clone, Debug)]
+pub struct GridSignals {
+    /// Carbon intensity, kg CO2 per kWh: `ci[dc][epoch]`.
+    pub ci: Vec<Vec<f64>>,
+    /// Water intensity of electricity, L per kWh.
+    pub wi: Vec<Vec<f64>>,
+    /// Time-of-use price, $ per kWh.
+    pub tou: Vec<Vec<f64>>,
+    /// Epoch length in seconds (to map epoch -> local hour).
+    pub epoch_s: f64,
+}
+
+impl GridSignals {
+    /// Synthesise `epochs` epochs of signals for every DC in the config.
+    pub fn generate(cfg: &SystemConfig, epochs: usize, seed: u64) -> Self {
+        let mut root = Rng::new(seed ^ 0x5157_4752_4944); // "QWGRID"
+        let mut ci = Vec::with_capacity(cfg.datacenters.len());
+        let mut wi = Vec::with_capacity(cfg.datacenters.len());
+        let mut tou = Vec::with_capacity(cfg.datacenters.len());
+
+        for (l, dc) in cfg.datacenters.iter().enumerate() {
+            let mut r = root.fork(l as u64 + 1);
+            let mut ci_l = Vec::with_capacity(epochs);
+            let mut wi_l = Vec::with_capacity(epochs);
+            let mut tou_l = Vec::with_capacity(epochs);
+            // smooth AR(1) noise so adjacent epochs are correlated
+            let mut noise_ci = 0.0f64;
+            let mut noise_tou = 0.0f64;
+            for t in 0..epochs {
+                let hour = local_hour(t, cfg.physics.epoch_s, dc.tz_offset_h);
+                let day = (t as f64 * cfg.physics.epoch_s / 86_400.0).floor();
+                let weekly = 1.0 + 0.05 * (day * 0.9).sin();
+
+                noise_ci = 0.9 * noise_ci + 0.1 * r.gauss();
+                noise_tou = 0.9 * noise_tou + 0.1 * r.gauss();
+
+                // duck curve: dip centred at 13:00 local, peak ~19:00
+                let solar_dip = (-((hour - 13.0) / 3.5).powi(2)).exp();
+                let evening_peak = (-((hour - 19.0) / 2.5).powi(2)).exp();
+                let ci_shape = 1.0 - dc.ci_amp * solar_dip
+                    + 0.6 * dc.ci_amp * evening_peak;
+                let ci_v = (dc.ci_base * ci_shape * weekly
+                    * (1.0 + 0.08 * noise_ci))
+                    .max(0.005);
+
+                // business-hours TOU: peak 8:00-21:00, shoulder edges
+                let peak = smooth_window(hour, 8.0, 21.0);
+                let tou_v = (dc.tou_base * (1.0 + dc.tou_amp * peak)
+                    * (1.0 + 0.04 * noise_tou))
+                    .max(0.005);
+
+                // WI follows the mix: when solar displaces thermal (midday),
+                // evaporative-cooled thermal generation recedes slightly.
+                let wi_v = (dc.wi_base
+                    * (1.0 - 0.5 * dc.wi_amp * solar_dip)
+                    * weekly)
+                    .max(0.05);
+
+                ci_l.push(ci_v);
+                tou_l.push(tou_v);
+                wi_l.push(wi_v);
+            }
+            ci.push(ci_l);
+            wi.push(wi_l);
+            tou.push(tou_l);
+        }
+        GridSignals {
+            ci,
+            wi,
+            tou,
+            epoch_s: cfg.physics.epoch_s,
+        }
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.ci.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Signal snapshot for one epoch: (ci, wi, tou) per DC.
+    pub fn at(&self, epoch: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let t = epoch.min(self.epochs().saturating_sub(1));
+        (
+            self.ci.iter().map(|v| v[t]).collect(),
+            self.wi.iter().map(|v| v[t]).collect(),
+            self.tou.iter().map(|v| v[t]).collect(),
+        )
+    }
+}
+
+/// Local solar hour-of-day for an epoch index.
+pub fn local_hour(epoch: usize, epoch_s: f64, tz_offset_h: f64) -> f64 {
+    let h = epoch as f64 * epoch_s / 3600.0 + tz_offset_h;
+    h.rem_euclid(24.0)
+}
+
+/// Smooth 0..1 indicator of `x` in [lo, hi] with soft 1 h edges.
+fn smooth_window(x: f64, lo: f64, hi: f64) -> f64 {
+    let rise = sigmoid((x - lo) / 0.5);
+    let fall = sigmoid((hi - x) / 0.5);
+    rise * fall
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn signals() -> (SystemConfig, GridSignals) {
+        let cfg = SystemConfig::paper_default();
+        let s = GridSignals::generate(&cfg, 192, 7);
+        (cfg, s)
+    }
+
+    #[test]
+    fn shapes_and_positivity() {
+        let (cfg, s) = signals();
+        assert_eq!(s.ci.len(), cfg.datacenters.len());
+        assert_eq!(s.epochs(), 192);
+        for l in 0..cfg.datacenters.len() {
+            for t in 0..192 {
+                assert!(s.ci[l][t] > 0.0);
+                assert!(s.wi[l][t] > 0.0);
+                assert!(s.tou[l][t] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = SystemConfig::paper_default();
+        let a = GridSignals::generate(&cfg, 96, 1);
+        let b = GridSignals::generate(&cfg, 96, 1);
+        let c = GridSignals::generate(&cfg, 96, 2);
+        assert_eq!(a.ci, b.ci);
+        assert_ne!(a.ci, c.ci);
+    }
+
+    #[test]
+    fn ci_reflects_base_ordering() {
+        // stockholm (0.03 base) must stay under tokyo (0.48 base) on average
+        let (cfg, s) = signals();
+        let idx = |name: &str| {
+            cfg.datacenters.iter().position(|d| d.name == name).unwrap()
+        };
+        let avg = |l: usize| -> f64 {
+            s.ci[l].iter().sum::<f64>() / s.ci[l].len() as f64
+        };
+        assert!(avg(idx("stockholm")) < 0.2 * avg(idx("tokyo")));
+    }
+
+    #[test]
+    fn tou_peaks_during_business_hours() {
+        let (cfg, s) = signals();
+        // virginia, epochs covering one day
+        let l = cfg
+            .datacenters
+            .iter()
+            .position(|d| d.name == "virginia")
+            .unwrap();
+        let mut peak_sum = 0.0;
+        let mut peak_n = 0;
+        let mut night_sum = 0.0;
+        let mut night_n = 0;
+        for t in 0..96 {
+            let h = local_hour(t, cfg.physics.epoch_s, cfg.datacenters[l].tz_offset_h);
+            if (10.0..18.0).contains(&h) {
+                peak_sum += s.tou[l][t];
+                peak_n += 1;
+            } else if !(7.0..22.0).contains(&h) {
+                night_sum += s.tou[l][t];
+                night_n += 1;
+            }
+        }
+        assert!(peak_n > 0 && night_n > 0);
+        assert!(peak_sum / peak_n as f64 > 1.2 * night_sum / night_n as f64);
+    }
+
+    #[test]
+    fn duck_dip_for_solar_heavy_site() {
+        let (cfg, s) = signals();
+        let l = cfg
+            .datacenters
+            .iter()
+            .position(|d| d.name == "melbourne") // ci_amp 0.4
+            .unwrap();
+        let mut noon = Vec::new();
+        let mut evening = Vec::new();
+        for t in 0..96 {
+            let h = local_hour(t, cfg.physics.epoch_s, cfg.datacenters[l].tz_offset_h);
+            if (12.0..14.0).contains(&h) {
+                noon.push(s.ci[l][t]);
+            }
+            if (18.5..20.0).contains(&h) {
+                evening.push(s.ci[l][t]);
+            }
+        }
+        let m = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(m(&noon) < m(&evening), "no duck curve dip");
+    }
+
+    #[test]
+    fn local_hour_wraps() {
+        assert!((local_hour(0, 900.0, 9.0) - 9.0).abs() < 1e-9);
+        assert!((local_hour(96, 900.0, 9.0) - 9.0).abs() < 1e-9);
+        assert!(local_hour(4, 900.0, 23.5) < 24.0);
+    }
+}

@@ -1,0 +1,546 @@
+//! The PJRT engine thread and its thread-safe handles.
+//!
+//! One OS thread owns the (non-`Send`) `xla::PjRtClient` plus the two
+//! compiled executables; requests arrive over an mpsc channel and return
+//! over per-call reply channels. Dispatch overhead is amortised by the
+//! population-sized batches the optimizer sends (P = 128 plans/call).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{CLASSES, DC_SLOTS, EVAL_POPULATION, N_OBJ};
+use crate::eval::{AnalyticEvaluator, BatchEvaluator};
+use crate::plan::Plan;
+
+use super::Manifest;
+
+enum Job {
+    /// Upload an epoch's parameter panels once; later PlanEval jobs refer
+    /// to them by token (saves 5 host->device transfers per dispatch).
+    BindPanels {
+        token: u64,
+        cls: Vec<f32>,
+        thr: Vec<f32>,
+        proc: Vec<f32>,
+        hops: Vec<f32>,
+        dc: Vec<f32>,
+        consts: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    UnbindPanels {
+        token: u64,
+    },
+    /// Evaluate one population tile against bound panels.
+    PlanEvalBound {
+        token: u64,
+        a: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+    PlanEval {
+        /// Flattened f32 inputs in the artifact's argument order.
+        a: Vec<f32>,
+        cls: Vec<f32>,
+        thr: Vec<f32>,
+        proc: Vec<f32>,
+        hops: Vec<f32>,
+        dc: Vec<f32>,
+        consts: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Predict {
+        x: Vec<f32>,
+        y: Vec<f32>,
+        xq: Vec<f32>,
+        lambdas: Vec<f32>,
+        reply: mpsc::Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the PJRT engine thread.
+pub struct Engine {
+    tx: Mutex<mpsc::Sender<Job>>,
+    pub manifest: Manifest,
+    /// Executions served (coarse metric; includes both executables).
+    dispatches: std::sync::atomic::AtomicU64,
+    /// Panel-binding token source.
+    next_token: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load artifacts from `dir`, compile on a fresh engine thread, and
+    /// block until the thread reports readiness (propagating any error).
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<Arc<Engine>> {
+        let manifest = Manifest::load(dir)?;
+        let plan_path = dir.join(&manifest.plan_eval_file);
+        let pred_path = dir.join(&manifest.predictor_file);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                engine_thread(plan_path, pred_path, rx, ready_tx);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during init"))??;
+        Ok(Arc::new(Engine {
+            tx: Mutex::new(tx),
+            manifest,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+            next_token: std::sync::atomic::AtomicU64::new(1),
+        }))
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn send(&self, job: Job) {
+        self.tx
+            .lock()
+            .expect("engine tx poisoned")
+            .send(job)
+            .expect("engine thread gone");
+    }
+
+    /// Bind an epoch's panels on the engine thread; returns a token for
+    /// [`Engine::plan_eval_bound`]. Panels stay device-resident until
+    /// [`Engine::unbind_panels`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn bind_panels(
+        &self,
+        cls: Vec<f32>,
+        thr: Vec<f32>,
+        proc: Vec<f32>,
+        hops: Vec<f32>,
+        dc: Vec<f32>,
+        consts: Vec<f32>,
+    ) -> anyhow::Result<u64> {
+        let token = self
+            .next_token
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::BindPanels {
+            token,
+            cls,
+            thr,
+            proc,
+            hops,
+            dc,
+            consts,
+            reply,
+        });
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped bind reply"))??;
+        Ok(token)
+    }
+
+    pub fn unbind_panels(&self, token: u64) {
+        self.send(Job::UnbindPanels { token });
+    }
+
+    /// Evaluate one padded population tile against previously-bound panels.
+    pub fn plan_eval_bound(
+        &self,
+        token: u64,
+        a: Vec<f32>,
+    ) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(a.len(), EVAL_POPULATION * CLASSES * DC_SLOTS);
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::PlanEvalBound { token, a, reply });
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+
+    /// Execute the plan-eval artifact on one padded population tile.
+    /// `a` must be P*K*L floats; returns P*N_OBJ objective floats.
+    pub fn plan_eval_raw(
+        &self,
+        a: Vec<f32>,
+        cls: Vec<f32>,
+        thr: Vec<f32>,
+        proc: Vec<f32>,
+        hops: Vec<f32>,
+        dc: Vec<f32>,
+        consts: Vec<f32>,
+    ) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(a.len(), EVAL_POPULATION * CLASSES * DC_SLOTS);
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::PlanEval {
+            a,
+            cls,
+            thr,
+            proc,
+            hops,
+            dc,
+            consts,
+            reply,
+        });
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+
+    /// Execute the predictor artifact: returns (preds[D], rmse[D]).
+    pub fn predict_raw(
+        &self,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        xq: Vec<f32>,
+        lambdas: Vec<f32>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(x.len(), self.manifest.window * self.manifest.features);
+        let (reply, rx) = mpsc::channel();
+        self.send(Job::Predict {
+            x,
+            y,
+            xq,
+            lambdas,
+            reply,
+        });
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Job::Shutdown);
+        }
+    }
+}
+
+fn engine_thread(
+    plan_path: std::path::PathBuf,
+    pred_path: std::path::PathBuf,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    let init = (|| -> anyhow::Result<_> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        let load = |p: &std::path::Path| -> anyhow::Result<_> {
+            let proto = xla::HloModuleProto::from_text_file(p)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", p.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", p.display()))
+        };
+        let plan_exe = load(&plan_path)?;
+        let pred_exe = load(&pred_path)?;
+        Ok((client, plan_exe, pred_exe))
+    })();
+
+    let (client, plan_exe, pred_exe) = match init {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let lit = |data: &[f32], dims: &[i64]| -> anyhow::Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+    };
+
+    let buf = |data: &[f32], dims: &[usize]| -> anyhow::Result<xla::PjRtBuffer> {
+        client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("host->device: {e:?}"))
+    };
+    // device-resident panel sets keyed by binding token
+    let mut bound: std::collections::HashMap<u64, Vec<xla::PjRtBuffer>> =
+        std::collections::HashMap::new();
+    let kk = CLASSES;
+    let ll = DC_SLOTS;
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::BindPanels {
+                token,
+                cls,
+                thr,
+                proc,
+                hops,
+                dc,
+                consts,
+                reply,
+            } => {
+                let run = (|| -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+                    Ok(vec![
+                        buf(&cls, &[kk, 3])?,
+                        buf(&thr, &[kk, ll])?,
+                        buf(&proc, &[kk, ll])?,
+                        buf(&hops, &[kk, ll])?,
+                        buf(&dc, &[8, ll])?,
+                        buf(&consts, &[12])?,
+                    ])
+                })();
+                let _ = match run {
+                    Ok(bufs) => {
+                        bound.insert(token, bufs);
+                        reply.send(Ok(()))
+                    }
+                    Err(e) => reply.send(Err(e)),
+                };
+            }
+            Job::UnbindPanels { token } => {
+                bound.remove(&token);
+            }
+            Job::PlanEvalBound { token, a, reply } => {
+                let run = (|| -> anyhow::Result<Vec<f32>> {
+                    let panels = bound.get(&token).ok_or_else(|| {
+                        anyhow::anyhow!("panels token {token} not bound")
+                    })?;
+                    let a_buf = buf(&a, &[EVAL_POPULATION, kk, ll])?;
+                    let args: Vec<&xla::PjRtBuffer> =
+                        std::iter::once(&a_buf).chain(panels.iter()).collect();
+                    let result = plan_exe
+                        .execute_b::<&xla::PjRtBuffer>(&args)
+                        .map_err(|e| anyhow::anyhow!("execute_b: {e:?}"))?[0]
+                        [0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+                    let out = result
+                        .to_tuple1()
+                        .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+                    out.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+                })();
+                let _ = reply.send(run);
+            }
+            Job::PlanEval {
+                a,
+                cls,
+                thr,
+                proc,
+                hops,
+                dc,
+                consts,
+                reply,
+            } => {
+                let run = (|| -> anyhow::Result<Vec<f32>> {
+                    let p = EVAL_POPULATION as i64;
+                    let k = CLASSES as i64;
+                    let l = DC_SLOTS as i64;
+                    let args = [
+                        lit(&a, &[p, k, l])?,
+                        lit(&cls, &[k, 3])?,
+                        lit(&thr, &[k, l])?,
+                        lit(&proc, &[k, l])?,
+                        lit(&hops, &[k, l])?,
+                        lit(&dc, &[8, l])?,
+                        lit(&consts, &[12])?,
+                    ];
+                    let result = plan_exe
+                        .execute::<xla::Literal>(&args)
+                        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+                    // aot.py lowers with return_tuple=True -> 1-tuple
+                    let out = result
+                        .to_tuple1()
+                        .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+                    out.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+                })();
+                let _ = reply.send(run);
+            }
+            Job::Predict {
+                x,
+                y,
+                xq,
+                lambdas,
+                reply,
+            } => {
+                let run = (|| -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+                    let h = x.len() as i64 / xq.len() as i64;
+                    let f = xq.len() as i64;
+                    let d = lambdas.len() as i64;
+                    let args = [
+                        lit(&x, &[h, f])?,
+                        lit(&y, &[h])?,
+                        lit(&xq, &[f])?,
+                        lit(&lambdas, &[d])?,
+                    ];
+                    let result = pred_exe
+                        .execute::<xla::Literal>(&args)
+                        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+                    let (preds, rmse) = result
+                        .to_tuple2()
+                        .map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+                    Ok((
+                        preds
+                            .to_vec::<f32>()
+                            .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                        rmse.to_vec::<f32>()
+                            .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                    ))
+                })();
+                let _ = reply.send(run);
+            }
+        }
+    }
+}
+
+/// Epoch-bound plan evaluator running on the AOT artifact. Panels are
+/// captured as f32 once; each `eval_batch` pads the population to tiles of
+/// P and dispatches to the engine thread.
+pub struct HloPlanEvaluator {
+    engine: Arc<Engine>,
+    /// Device-resident panel binding (uploaded once per epoch; see §Perf).
+    token: u64,
+    classes: usize,
+    dcs: usize,
+}
+
+impl HloPlanEvaluator {
+    /// Build from the same analytic evaluator the native path uses — the
+    /// panels are shared, so parity failures point at the kernel, not the
+    /// plumbing. Panels are uploaded to the device once, here.
+    pub fn from_analytic(engine: Arc<Engine>, ev: &AnalyticEvaluator) -> Self {
+        let (cls, thr, proc, hops, dc) = ev.to_f32_panels(DC_SLOTS);
+        let token = engine
+            .bind_panels(cls, thr, proc, hops, dc, ev.consts.to_f32_vec())
+            .expect("panel binding failed");
+        HloPlanEvaluator {
+            engine,
+            token,
+            classes: ev.classes(),
+            dcs: ev.dcs(),
+        }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl Drop for HloPlanEvaluator {
+    fn drop(&mut self) {
+        self.engine.unbind_panels(self.token);
+    }
+}
+
+impl BatchEvaluator for HloPlanEvaluator {
+    fn backend(&self) -> &'static str {
+        "pjrt-hlo"
+    }
+
+    fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
+        let mut out = Vec::with_capacity(plans.len());
+        for tile in plans.chunks(EVAL_POPULATION) {
+            let mut a =
+                Vec::with_capacity(EVAL_POPULATION * self.classes * DC_SLOTS);
+            for p in tile {
+                debug_assert_eq!(p.classes, self.classes);
+                debug_assert_eq!(p.dcs, self.dcs);
+                p.to_f32_padded(DC_SLOTS, &mut a);
+            }
+            // pad the tile with copies of the first plan
+            let pad_plan = &tile[0];
+            for _ in tile.len()..EVAL_POPULATION {
+                pad_plan.to_f32_padded(DC_SLOTS, &mut a);
+            }
+            let objs = self
+                .engine
+                .plan_eval_bound(self.token, a)
+                .expect("plan_eval artifact execution failed");
+            for (i, _) in tile.iter().enumerate() {
+                let mut o = [0.0f64; N_OBJ];
+                for j in 0..N_OBJ {
+                    o[j] = objs[i * N_OBJ + j] as f64;
+                }
+                out.push(o);
+            }
+        }
+        out
+    }
+}
+
+/// Workload predictor running on the AOT ridge-regression artifact.
+pub struct HloPredictor {
+    engine: Arc<Engine>,
+}
+
+impl HloPredictor {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        HloPredictor { engine }
+    }
+
+    /// One-step-ahead prediction for a scalar series. Builds the same
+    /// feature matrix as `crate::predictor` (window/lags/harmonics), runs
+    /// the D-lambda ridge fit on the artifact, returns the best_fit
+    /// prediction (min train RMSE member).
+    pub fn predict_series(
+        &self,
+        series: &[f64],
+        epochs_per_day: usize,
+    ) -> anyhow::Result<f64> {
+        let man = &self.engine.manifest;
+        let h = man.window;
+        let f = man.features;
+        anyhow::ensure!(f == crate::predictor::FEATURES, "feature mismatch");
+        if series.len() < 8 {
+            return Ok(series.last().copied().unwrap_or(0.0));
+        }
+        let scale = (series.iter().sum::<f64>() / series.len() as f64).max(1.0);
+        // last `h` targets (pad the front by repeating the first value)
+        let mut x = Vec::with_capacity(h * f);
+        let mut y = Vec::with_capacity(h);
+        let start = series.len().saturating_sub(h);
+        for t in start..series.len() {
+            let feats =
+                crate::predictor::features(series, t, scale, epochs_per_day);
+            x.extend(feats.iter().map(|&v| v as f32));
+            y.push((series[t] / scale) as f32);
+        }
+        while y.len() < h {
+            // replicate the oldest row to fill the fixed window
+            let row: Vec<f32> = x[..f].to_vec();
+            x.splice(0..0, row);
+            let v = y[0];
+            y.insert(0, v);
+        }
+        let xq = crate::predictor::features(
+            series,
+            series.len(),
+            scale,
+            epochs_per_day,
+        );
+        let lambdas: Vec<f32> = crate::predictor::LAMBDAS
+            .iter()
+            .map(|&l| l as f32)
+            .collect();
+        let (preds, rmse) = self.engine.predict_raw(
+            x,
+            y,
+            xq.iter().map(|&v| v as f32).collect(),
+            lambdas,
+        )?;
+        let best = rmse
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok((preds[best] as f64 * scale).max(0.0))
+    }
+}

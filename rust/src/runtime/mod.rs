@@ -1,0 +1,148 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text lowered from the L2 JAX
+//! graph + L1 Pallas kernel by `make artifacts`) and executes them on the
+//! `xla` crate's CPU PJRT client from the rust hot path.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a dedicated engine thread
+//! owns the client and compiled executables; callers talk to it over
+//! channels. [`Engine`] is the cloneable, thread-safe handle;
+//! [`HloPlanEvaluator`] binds an epoch's parameter panels and implements
+//! [`crate::eval::BatchEvaluator`] so the SLIT optimizer can search against
+//! the AOT artifact transparently.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md for why serialized protos are rejected).
+
+mod engine;
+
+pub use engine::{Engine, HloPlanEvaluator, HloPredictor};
+
+use crate::util::json::Json;
+
+/// Parsed artifacts/manifest.json, checked against the crate's constants.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub plan_eval_file: String,
+    pub predictor_file: String,
+    /// Population tile P the plan_eval artifact was lowered for.
+    pub population: usize,
+    pub classes: usize,
+    pub dc_slots: usize,
+    pub n_obj: usize,
+    pub window: usize,
+    pub features: usize,
+    pub lambdas: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let pe = j
+            .get("plan_eval")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing plan_eval"))?;
+        let pr = j
+            .get("predictor")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing predictor"))?;
+        let m = Manifest {
+            plan_eval_file: pe
+                .get("file")
+                .and_then(Json::as_str)
+                .unwrap_or("plan_eval.hlo.txt")
+                .to_string(),
+            predictor_file: pr
+                .get("file")
+                .and_then(Json::as_str)
+                .unwrap_or("predictor.hlo.txt")
+                .to_string(),
+            population: pe.usize_or("population", 0),
+            classes: pe.usize_or("classes", 0),
+            dc_slots: pe.usize_or("dc_slots", 0),
+            n_obj: pe.usize_or("n_obj", 4),
+            window: pr.usize_or("window", 0),
+            features: pr.usize_or("features", 0),
+            lambdas: pr.usize_or("lambdas", 0),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Refuse to run against artifacts whose shapes disagree with the
+    /// crate's compiled-in layout.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use crate::config::{CLASSES, DC_SLOTS, EVAL_POPULATION, N_OBJ};
+        anyhow::ensure!(
+            self.population == EVAL_POPULATION,
+            "artifact population {} != crate {}",
+            self.population,
+            EVAL_POPULATION
+        );
+        anyhow::ensure!(
+            self.classes == CLASSES,
+            "artifact classes {} != crate {}",
+            self.classes,
+            CLASSES
+        );
+        anyhow::ensure!(
+            self.dc_slots == DC_SLOTS,
+            "artifact dc_slots {} != crate {}",
+            self.dc_slots,
+            DC_SLOTS
+        );
+        anyhow::ensure!(self.n_obj == N_OBJ, "objective count mismatch");
+        anyhow::ensure!(
+            self.window > 0 && self.features > 0 && self.lambdas > 0,
+            "degenerate predictor shapes"
+        );
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: $SLIT_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SLIT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when the AOT artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_present() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_rejects_bad_shapes() {
+        let m = Manifest {
+            plan_eval_file: "x".into(),
+            predictor_file: "y".into(),
+            population: 64, // wrong
+            classes: crate::config::CLASSES,
+            dc_slots: crate::config::DC_SLOTS,
+            n_obj: 4,
+            window: 192,
+            features: 8,
+            lambdas: 4,
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn manifest_loads_real_artifacts_when_present() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.population, crate::config::EVAL_POPULATION);
+        assert_eq!(m.dc_slots, crate::config::DC_SLOTS);
+    }
+}

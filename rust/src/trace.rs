@@ -1,0 +1,421 @@
+//! LLM workload model: a BurstGPT-like synthetic trace (repro substitution
+//! for [19], DESIGN.md §3) plus request-level sampling.
+//!
+//! The generator reproduces the two trends the paper reads off Fig. 1:
+//!   1. usage is dominated by smaller/older models (`small_model_frac`), and
+//!   2. request intensity changes rapidly epoch-to-epoch (diurnal base x
+//!      AR(1) jitter x heavy-tailed burst spikes).
+//!
+//! Epoch-level aggregates (`EpochLoad`) feed the analytic evaluator and the
+//! predictor; request-level samples (`Request`) feed the discrete simulator
+//! and the online serving example.
+
+use crate::config::{SystemConfig, CLASSES, MODELS, REGIONS};
+use crate::util::csv;
+use crate::util::rng::Rng;
+
+/// Aggregate demand of one (origin region, model) class within an epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassLoad {
+    /// Number of requests arriving this epoch.
+    pub n_req: f64,
+    /// Mean input tokens per request.
+    pub tok_in: f64,
+    /// Mean output tokens per request.
+    pub tok_out: f64,
+}
+
+/// Demand of all classes within one epoch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EpochLoad {
+    pub classes: Vec<ClassLoad>, // len = CLASSES
+}
+
+impl EpochLoad {
+    pub fn total_requests(&self) -> f64 {
+        self.classes.iter().map(|c| c.n_req).sum()
+    }
+
+    pub fn total_tokens(&self) -> f64 {
+        self.classes
+            .iter()
+            .map(|c| c.n_req * (c.tok_in + c.tok_out))
+            .sum()
+    }
+
+    /// Scale request counts (used when realising predictions).
+    pub fn scaled(&self, f: f64) -> EpochLoad {
+        EpochLoad {
+            classes: self
+                .classes
+                .iter()
+                .map(|c| ClassLoad {
+                    n_req: c.n_req * f,
+                    ..*c
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A single inference request (discrete simulator / serving front).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Arrival offset within the epoch, seconds.
+    pub arrival_s: f64,
+    /// Class index k = region * MODELS + model.
+    pub class: usize,
+    pub tok_in: u32,
+    pub tok_out: u32,
+}
+
+impl Request {
+    pub fn region(&self) -> usize {
+        self.class / MODELS
+    }
+
+    pub fn model(&self) -> usize {
+        self.class % MODELS
+    }
+}
+
+/// A generated multi-epoch workload trace.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub epochs: Vec<EpochLoad>,
+    pub seed: u64,
+}
+
+impl Trace {
+    /// Generate `epochs` epochs of synthetic demand per the config knobs.
+    pub fn generate(cfg: &SystemConfig, epochs: usize, seed: u64) -> Trace {
+        let w = &cfg.workload;
+        let mut rng = Rng::new(seed ^ 0x5452_4143_45); // "TRACE"
+        let mut out = Vec::with_capacity(epochs);
+        // AR(1) intensity jitter — "request intensity changes rapidly"
+        let mut jitter = 0.0f64;
+        for t in 0..epochs {
+            // diurnal base in UTC weighted by the region mix and its local time
+            let mut region_intensity = [0.0f64; REGIONS];
+            for r in 0..REGIONS {
+                // region local-time proxy: use the mean tz of sites there
+                let tz = mean_region_tz(cfg, r);
+                let hour =
+                    (t as f64 * cfg.physics.epoch_s / 3600.0 + tz).rem_euclid(24.0);
+                // daytime hump 8..23 local
+                let day = (std::f64::consts::PI * ((hour - 7.0) / 16.0))
+                    .sin()
+                    .max(0.05);
+                region_intensity[r] = w.region_mix[r] * day;
+            }
+            let mix_total: f64 = region_intensity.iter().sum();
+
+            jitter = 0.55 * jitter + 0.45 * rng.gauss();
+            let burst = if rng.chance(w.burst_prob) {
+                1.0 + rng.gamma(2.0) * (w.burst_mult - 1.0) / 2.0
+            } else {
+                1.0
+            };
+            let intensity = (1.0 + 0.35 * jitter).max(0.1) * burst;
+
+            let total_req = w.base_requests_per_epoch
+                * w.request_scale
+                * intensity
+                * mix_total
+                / w.delay_scale.max(1e-6); // shorter delays => more arrivals
+
+            let mut classes = vec![ClassLoad::default(); CLASSES];
+            for r in 0..REGIONS {
+                let region_req = if mix_total > 0.0 {
+                    total_req * region_intensity[r] / mix_total
+                } else {
+                    0.0
+                };
+                for m in 0..MODELS {
+                    let share = if m == 0 {
+                        w.small_model_frac
+                    } else {
+                        1.0 - w.small_model_frac
+                    };
+                    let spec = &cfg.models[m];
+                    let n = rng.poisson(region_req * share) as f64;
+                    classes[r * MODELS + m] = ClassLoad {
+                        n_req: n,
+                        tok_in: (spec.mean_in_tokens
+                            * w.token_scale
+                            * rng.lognormal(0.0, 0.12))
+                        .max(1.0),
+                        tok_out: (spec.mean_out_tokens
+                            * w.token_scale
+                            * rng.lognormal(0.0, 0.12))
+                        .max(1.0),
+                    };
+                }
+            }
+            out.push(EpochLoad { classes });
+        }
+        Trace { epochs: out, seed }
+    }
+
+    /// Sample individual requests for one epoch (Poisson arrivals within
+    /// the epoch, log-normal token counts around the class means).
+    pub fn sample_requests(
+        &self,
+        cfg: &SystemConfig,
+        epoch: usize,
+        rng: &mut Rng,
+    ) -> Vec<Request> {
+        let load = &self.epochs[epoch];
+        let mut reqs = Vec::new();
+        for (k, c) in load.classes.iter().enumerate() {
+            let n = c.n_req.round() as usize;
+            for _ in 0..n {
+                reqs.push(Request {
+                    arrival_s: rng.f64() * cfg.physics.epoch_s,
+                    class: k,
+                    tok_in: (c.tok_in * rng.lognormal(0.0, 0.35)).max(1.0)
+                        as u32,
+                    tok_out: (c.tok_out * rng.lognormal(0.0, 0.35)).max(1.0)
+                        as u32,
+                });
+            }
+        }
+        reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        reqs
+    }
+
+    /// Import a trace previously exported by [`Trace::write_csv`] (or an
+    /// external trace converted to the same schema) — lets experiments run
+    /// against real request logs instead of the synthetic generator.
+    pub fn from_csv(path: &str, cfg: &SystemConfig) -> anyhow::Result<Trace> {
+        let (header, rows) = csv::read_file(path)?;
+        anyhow::ensure!(
+            header.first().map(String::as_str) == Some("epoch"),
+            "not a slit trace csv (header {header:?})"
+        );
+        let class_cols: Vec<usize> = (0..CLASSES)
+            .map(|k| {
+                header
+                    .iter()
+                    .position(|h| h == &format!("class{k}_req"))
+                    .ok_or_else(|| anyhow::anyhow!("missing class{k}_req"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut epochs = Vec::with_capacity(rows.len());
+        for row in rows {
+            let mut classes = vec![ClassLoad::default(); CLASSES];
+            for (k, &col) in class_cols.iter().enumerate() {
+                let spec = &cfg.models[k % MODELS];
+                classes[k] = ClassLoad {
+                    n_req: row
+                        .get(col)
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0.0),
+                    tok_in: spec.mean_in_tokens * cfg.workload.token_scale,
+                    tok_out: spec.mean_out_tokens * cfg.workload.token_scale,
+                };
+            }
+            epochs.push(EpochLoad { classes });
+        }
+        Ok(Trace { epochs, seed: 0 })
+    }
+
+    /// Tokens requested per epoch — the Fig. 1 series.
+    pub fn tokens_per_epoch(&self) -> Vec<f64> {
+        self.epochs.iter().map(EpochLoad::total_tokens).collect()
+    }
+
+    /// Export the Fig. 1 series + per-class counts to CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut header: Vec<String> =
+            vec!["epoch".into(), "total_tokens".into(), "total_requests".into()];
+        for k in 0..CLASSES {
+            header.push(format!("class{k}_req"));
+        }
+        let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut w = csv::CsvWriter::create(path, &refs)?;
+        for (t, e) in self.epochs.iter().enumerate() {
+            let mut row = vec![
+                t as f64,
+                e.total_tokens(),
+                e.total_requests(),
+            ];
+            for c in &e.classes {
+                row.push(c.n_req);
+            }
+            w.row_f64(&row)?;
+        }
+        w.finish()
+    }
+}
+
+fn mean_region_tz(cfg: &SystemConfig, region: usize) -> f64 {
+    let tzs: Vec<f64> = cfg
+        .datacenters
+        .iter()
+        .filter(|d| d.region == region)
+        .map(|d| d.tz_offset_h)
+        .collect();
+    if tzs.is_empty() {
+        0.0
+    } else {
+        tzs.iter().sum::<f64>() / tzs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn small_trace() -> (SystemConfig, Trace) {
+        let cfg = SystemConfig::small_test();
+        let t = Trace::generate(&cfg, 96, 11);
+        (cfg, t)
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = SystemConfig::small_test();
+        let a = Trace::generate(&cfg, 32, 5);
+        let b = Trace::generate(&cfg, 32, 5);
+        let c = Trace::generate(&cfg, 32, 6);
+        assert_eq!(a.epochs, b.epochs);
+        assert_ne!(a.epochs, c.epochs);
+    }
+
+    #[test]
+    fn small_model_dominates() {
+        let (_, t) = small_trace();
+        let mut small = 0.0;
+        let mut large = 0.0;
+        for e in &t.epochs {
+            for (k, c) in e.classes.iter().enumerate() {
+                if k % MODELS == 0 {
+                    small += c.n_req;
+                } else {
+                    large += c.n_req;
+                }
+            }
+        }
+        assert!(small > 2.5 * large, "small {small} large {large}");
+    }
+
+    #[test]
+    fn intensity_varies_rapidly() {
+        // trend 2: neighbouring epochs should differ noticeably
+        let (_, t) = small_trace();
+        let toks = t.tokens_per_epoch();
+        let mut rel_changes = Vec::new();
+        for w in toks.windows(2) {
+            if w[0] > 0.0 {
+                rel_changes.push(((w[1] - w[0]) / w[0]).abs());
+            }
+        }
+        let mean_change =
+            rel_changes.iter().sum::<f64>() / rel_changes.len() as f64;
+        assert!(mean_change > 0.05, "trace too smooth: {mean_change}");
+    }
+
+    #[test]
+    fn request_scale_scales_requests() {
+        let mut cfg = SystemConfig::small_test();
+        let lo = Trace::generate(&cfg, 48, 3);
+        cfg.workload.request_scale = 10.0;
+        let hi = Trace::generate(&cfg, 48, 3);
+        let sum = |t: &Trace| -> f64 {
+            t.epochs.iter().map(EpochLoad::total_requests).sum()
+        };
+        let ratio = sum(&hi) / sum(&lo).max(1.0);
+        assert!((6.0..14.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn token_scale_scales_tokens_per_request() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.workload.token_scale = 1.0;
+        let lo = Trace::generate(&cfg, 48, 3);
+        cfg.workload.token_scale = 3.0;
+        let hi = Trace::generate(&cfg, 48, 3);
+        let mean_tok = |t: &Trace| -> f64 {
+            let (mut s, mut n) = (0.0, 0.0);
+            for e in &t.epochs {
+                for c in &e.classes {
+                    s += c.tok_out * c.n_req;
+                    n += c.n_req;
+                }
+            }
+            s / n.max(1.0)
+        };
+        let ratio = mean_tok(&hi) / mean_tok(&lo);
+        assert!((2.5..3.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn sampled_requests_match_epoch_counts() {
+        let (cfg, t) = small_trace();
+        let mut rng = Rng::new(1);
+        let reqs = t.sample_requests(&cfg, 10, &mut rng);
+        assert_eq!(reqs.len() as f64, t.epochs[10].total_requests());
+        // arrivals sorted and within the epoch
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        for r in &reqs {
+            assert!(r.arrival_s >= 0.0 && r.arrival_s < cfg.physics.epoch_s);
+            assert!(r.class < CLASSES);
+            assert!(r.tok_in >= 1 && r.tok_out >= 1);
+        }
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let (_, t) = small_trace();
+        let dir = std::env::temp_dir().join("slit_trace_test.csv");
+        let path = dir.to_str().unwrap();
+        t.write_csv(path).unwrap();
+        let (header, rows) = crate::util::csv::read_file(path).unwrap();
+        assert_eq!(header[0], "epoch");
+        assert_eq!(rows.len(), t.epochs.len());
+        let tok0: f64 = rows[0][1].parse().unwrap();
+        assert!((tok0 - t.epochs[0].total_tokens()).abs() < 1.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_import_preserves_request_counts() {
+        let (cfg, t) = small_trace();
+        let dir = std::env::temp_dir().join("slit_trace_import.csv");
+        let path = dir.to_str().unwrap();
+        t.write_csv(path).unwrap();
+        let t2 = Trace::from_csv(path, &cfg).unwrap();
+        assert_eq!(t2.epochs.len(), t.epochs.len());
+        for (a, b) in t.epochs.iter().zip(&t2.epochs) {
+            for k in 0..CLASSES {
+                assert!(
+                    (a.classes[k].n_req - b.classes[k].n_req).abs() < 1e-9
+                );
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_import_rejects_garbage() {
+        let dir = std::env::temp_dir().join("slit_trace_bad.csv");
+        std::fs::write(&dir, "foo,bar\n1,2\n").unwrap();
+        let cfg = SystemConfig::small_test();
+        assert!(Trace::from_csv(dir.to_str().unwrap(), &cfg).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn bursts_present_at_paper_scale() {
+        let cfg = SystemConfig::paper_default();
+        let t = Trace::generate(&cfg, 1344, 9); // two weeks
+        let toks = t.tokens_per_epoch();
+        let mean = toks.iter().sum::<f64>() / toks.len() as f64;
+        let max = toks.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 2.0 * mean, "no bursts: max {max} mean {mean}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Criterion-like micro/macro benchmark harness (the offline image has no
+//! criterion). Used by every target under `benches/`.
+//!
+//! Features: warm-up, fixed sample count, median/mean/p95/min, throughput
+//! units, and a markdown-table reporter whose output goes to stdout (and is
+//! captured into bench_output.txt by the final run).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration (or a raw value)
+    pub throughput: Option<(f64, &'static str)>, // items per iter, unit label
+    /// True for `record_value` entries: samples are raw metric values,
+    /// not durations, and are reported unformatted.
+    pub is_value: bool,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        stats::min_max(&self.samples).0
+    }
+}
+
+/// Benchmark runner: collects measurements, prints a report on `finish`.
+pub struct Bench {
+    suite: String,
+    warmup: Duration,
+    samples: usize,
+    min_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Honor a quick mode so `cargo bench` stays fast in CI-like runs.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            samples: if quick { 10 } else { 30 },
+            min_iters: 1,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Measure `f`, timing one call per sample (for macro benchmarks).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        self.bench_with_throughput(name, None, &mut f);
+    }
+
+    /// Measure with a throughput annotation (items processed per call).
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        mut f: F,
+    ) {
+        self.bench_with_throughput(name, Some((items, unit)), &mut f);
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut(),
+    ) {
+        // warm-up: run until the warm-up budget elapses
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < self.min_iters {
+            f();
+            warm_iters += 1;
+        }
+        // choose an inner-iteration count targeting ~10ms per sample
+        let per_call = start.elapsed().as_secs_f64() / warm_iters as f64;
+        let inner = ((0.01 / per_call.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..inner {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / inner as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples,
+            throughput,
+            is_value: false,
+        };
+        eprintln!(
+            "  {:<48} median {:>12}  p95 {:>12}{}",
+            m.name,
+            fmt_time(m.median_s()),
+            fmt_time(m.p95_s()),
+            m.throughput
+                .map(|(items, unit)| format!(
+                    "  {:>12.1} {}/s",
+                    items / m.median_s(),
+                    unit
+                ))
+                .unwrap_or_default()
+        );
+        self.results.push(m);
+    }
+
+    /// Record an already-computed scalar series (for figure regeneration
+    /// benches that report metric values rather than wall time).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &'static str) {
+        eprintln!("  {name:<48} value {value:>14.4} {unit}");
+        self.results.push(Measurement {
+            name: format!("{name} [{unit}]"),
+            samples: vec![value],
+            throughput: None,
+            is_value: true,
+        });
+    }
+
+    /// Print the final markdown table. Returns results for programmatic use.
+    pub fn finish(self) -> Vec<Measurement> {
+        println!("\n## bench suite: {}\n", self.suite);
+        println!("| benchmark | median | mean | p95 | min | throughput |");
+        println!("|---|---|---|---|---|---|");
+        for m in &self.results {
+            if m.is_value {
+                println!(
+                    "| {} | {:.4} | - | - | - | - |",
+                    m.name, m.samples[0]
+                );
+                continue;
+            }
+            let tp = m
+                .throughput
+                .map(|(items, unit)| {
+                    format!("{:.1} {}/s", items / m.median_s(), unit)
+                })
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "| {} | {} | {} | {} | {} | {} |",
+                m.name,
+                fmt_time(m.median_s()),
+                fmt_time(m.mean_s()),
+                fmt_time(m.p95_s()),
+                fmt_time(m.min_s()),
+                tp
+            );
+        }
+        println!();
+        self.results
+    }
+}
+
+/// Human-readable time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest").with_samples(5);
+        let mut x = 0u64;
+        b.bench("noop-ish", || {
+            x = x.wrapping_add(core::hint::black_box(1));
+        });
+        let results = b.finish();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].median_s() > 0.0);
+        assert!(results[0].median_s() < 1.0);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn record_value_keeps_value() {
+        let mut b = Bench::new("values");
+        b.record_value("carbon", 123.4, "kg");
+        let r = b.finish();
+        assert_eq!(r[0].samples, vec![123.4]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Tiny CSV writer/reader for traces and experiment outputs.
+//!
+//! Quoting rules: fields containing `,`, `"` or newlines are quoted with
+//! doubled inner quotes — enough for our own round-trips and for external
+//! plotting tools.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter<W: Write> {
+    w: W,
+    cols: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> io::Result<Self> {
+        let f = File::create(path)?;
+        CsvWriter::new(BufWriter::new(f), header)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn new(mut w: W, header: &[&str]) -> io::Result<Self> {
+        write_row(&mut w, header)?;
+        Ok(CsvWriter {
+            w,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "csv row width mismatch");
+        let refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+        write_row(&mut self.w, &refs)
+    }
+
+    pub fn row_f64(&mut self, fields: &[f64]) -> io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn finish(mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn write_row<W: Write>(w: &mut W, fields: &[&str]) -> io::Result<()> {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') {
+            w.write_all(b"\"")?;
+            w.write_all(f.replace('"', "\"\"").as_bytes())?;
+            w.write_all(b"\"")?;
+        } else {
+            w.write_all(f.as_bytes())?;
+        }
+    }
+    w.write_all(b"\n")
+}
+
+/// Parse a single CSV line (quoted fields supported).
+pub fn parse_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    field.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                field.push(c);
+            }
+        } else if c == '"' && field.is_empty() {
+            in_quotes = true;
+        } else if c == ',' {
+            out.push(std::mem::take(&mut field));
+        } else {
+            field.push(c);
+        }
+    }
+    out.push(field);
+    out
+}
+
+/// Read a whole CSV file: (header, rows).
+pub fn read_file<P: AsRef<Path>>(
+    path: P,
+) -> io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let f = File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(h) => parse_line(&h?),
+        None => return Ok((Vec::new(), Vec::new())),
+    };
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        rows.push(parse_line(&line));
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_with_quoting() {
+        let mut buf = Vec::new();
+        {
+            let mut w =
+                CsvWriter::new(&mut buf, &["a", "b,comma", "c"]).unwrap();
+            w.row(&[
+                "plain".into(),
+                "has,comma".into(),
+                "has\"quote".into(),
+            ])
+            .unwrap();
+            w.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(
+            parse_line(lines.next().unwrap()),
+            vec!["a", "b,comma", "c"]
+        );
+        assert_eq!(
+            parse_line(lines.next().unwrap()),
+            vec!["plain", "has,comma", "has\"quote"]
+        );
+    }
+
+    #[test]
+    fn parse_simple() {
+        assert_eq!(parse_line("1,2,3"), vec!["1", "2", "3"]);
+        assert_eq!(parse_line("a,,c"), vec!["a", "", "c"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn width_checked() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

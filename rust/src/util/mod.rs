@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! deterministic RNG, JSON, statistics, CSV, scoped parallelism, a
+//! property-testing helper and a criterion-like bench harness.
+
+pub mod benchkit;
+pub mod csv;
+pub mod json;
+pub mod propkit;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

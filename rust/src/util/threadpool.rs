@@ -1,0 +1,104 @@
+//! Scoped data-parallel helpers (no rayon in the offline image).
+//!
+//! `par_map` fans a slice out over `std::thread::scope` workers with static
+//! chunking; `par_for_each_mut` does the same over mutable chunks. Both fall
+//! back to the serial path for small inputs where spawn overhead dominates.
+
+/// Number of worker threads to use (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Parallel map over a slice preserving order.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let threads = default_threads();
+    if items.len() < 2 * threads || threads == 1 {
+        return items.iter().map(|x| f(x)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+            let (head, tail) = rest.split_at_mut(chunk_items.len());
+            rest = tail;
+            let f = &f;
+            let base = ci * chunk;
+            let _ = base;
+            s.spawn(move || {
+                for (slot, item) in head.iter_mut().zip(chunk_items) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("worker filled slot")).collect()
+}
+
+/// Parallel in-place transform over mutable chunks.
+pub fn par_for_each_mut<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let threads = default_threads();
+    if items.len() < 2 * threads || threads == 1 {
+        items.iter_mut().for_each(|x| f(x));
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for chunk_items in items.chunks_mut(chunk) {
+            let f = &f;
+            s.spawn(move || {
+                for item in chunk_items {
+                    f(item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        let par = par_map(&xs, |&x| x * x + 1);
+        let ser: Vec<u64> = xs.iter().map(|&x| x * x + 1).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn par_map_small_input() {
+        let xs = [1, 2, 3];
+        assert_eq!(par_map(&xs, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_for_each_mut_applies_everywhere() {
+        let mut xs: Vec<u64> = (0..5_000).collect();
+        par_for_each_mut(&mut xs, |x| *x += 7);
+        assert!(xs.iter().enumerate().all(|(i, &x)| x == i as u64 + 7));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let xs: Vec<u32> = vec![];
+        assert!(par_map(&xs, |&x| x).is_empty());
+        let mut ys: Vec<u32> = vec![];
+        par_for_each_mut(&mut ys, |_| {});
+    }
+}

@@ -1,0 +1,129 @@
+//! Integration: the AOT HLO artifacts executed via PJRT must agree with
+//! the native rust evaluator (which itself is pytest-verified against the
+//! Pallas kernel and the pure-jnp oracle). This closes the three-layer
+//! parity loop: Pallas kernel == jnp oracle == rust eval == PJRT artifact.
+
+use std::sync::Arc;
+
+use slit::cluster::build_panels;
+use slit::config::{SystemConfig, N_OBJ};
+use slit::eval::{AnalyticEvaluator, BatchEvaluator, EvalConsts};
+use slit::opt::{SlitOptimizer, SlitVariant};
+use slit::plan::Plan;
+use slit::power::GridSignals;
+use slit::runtime::{artifacts_dir, artifacts_present, Engine, HloPlanEvaluator, HloPredictor};
+use slit::trace::Trace;
+use slit::util::rng::Rng;
+
+fn engine() -> Option<Arc<Engine>> {
+    if !artifacts_present() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&artifacts_dir()).expect("engine load"))
+}
+
+fn make_eval(seed: u64) -> (SystemConfig, AnalyticEvaluator) {
+    let cfg = SystemConfig::paper_default();
+    let signals = GridSignals::generate(&cfg, 8, seed);
+    let trace = Trace::generate(&cfg, 8, seed);
+    let (cp, dp) = build_panels(&cfg, &signals, 3, &trace.epochs[3], 0.05);
+    let ev =
+        AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&cfg.physics));
+    (cfg, ev)
+}
+
+#[test]
+fn hlo_plan_eval_matches_rust_evaluator() {
+    let Some(engine) = engine() else { return };
+    let (cfg, ev) = make_eval(42);
+    let hlo = HloPlanEvaluator::from_analytic(engine, &ev);
+
+    let mut rng = Rng::new(7);
+    let mut plans: Vec<Plan> = vec![
+        Plan::uniform(cfg.num_classes(), ev.dcs()),
+        Plan::one_dc(cfg.num_classes(), ev.dcs(), 5),
+    ];
+    for _ in 0..130 {
+        // > one tile: exercises padding + multi-dispatch
+        plans.push(Plan::random(cfg.num_classes(), ev.dcs(), 0.4, &mut rng));
+    }
+
+    let native = ev.eval_batch(&plans);
+    let aot = hlo.eval_batch(&plans);
+    assert_eq!(native.len(), aot.len());
+    for (i, (n, a)) in native.iter().zip(&aot).enumerate() {
+        for j in 0..N_OBJ {
+            let scale = n[j].abs().max(1e-9);
+            let rel = (n[j] - a[j]).abs() / scale;
+            assert!(
+                rel < 2e-4,
+                "plan {i} obj {j}: native {} vs aot {} (rel {rel})",
+                n[j],
+                a[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn optimizer_runs_against_hlo_backend() {
+    let Some(engine) = engine() else { return };
+    let (cfg, ev) = make_eval(43);
+    let hlo = HloPlanEvaluator::from_analytic(engine.clone(), &ev);
+
+    let mut opt_cfg = cfg.opt.clone();
+    opt_cfg.population = 12;
+    opt_cfg.generations = 3;
+    opt_cfg.search_steps = 2;
+    opt_cfg.neighbors = 4;
+    let mut o = SlitOptimizer::new(opt_cfg, cfg.num_classes(), ev.dcs(), 1);
+    let out = o.optimize(&hlo);
+    assert!(!out.archive.is_empty());
+    assert!(out.archive.is_consistent());
+    assert!(engine.dispatches() > 0, "no PJRT dispatches recorded");
+
+    // the HLO-backed archive should contain solutions whose native scores
+    // confirm specialisation (carbon best <= balance's carbon)
+    let show = out.archive.showcase();
+    assert_eq!(show.len(), 5);
+    let carbon = &show[1].1;
+    let native = ev.evaluate(&carbon.plan);
+    let rel = (native[1] - carbon.obj[1]).abs() / native[1].max(1e-9);
+    assert!(rel < 2e-4, "archive objective drifted from native: {rel}");
+    let _ = SlitVariant::all();
+}
+
+#[test]
+fn hlo_predictor_tracks_series() {
+    let Some(engine) = engine() else { return };
+    let p = HloPredictor::new(engine);
+    let series: Vec<f64> = (0..250)
+        .map(|t| {
+            1000.0
+                + 350.0
+                    * (2.0 * std::f64::consts::PI * t as f64 / 96.0).sin()
+        })
+        .collect();
+    let pred = p.predict_series(&series, 96).unwrap();
+    let actual = 1000.0
+        + 350.0 * (2.0 * std::f64::consts::PI * 250.0 / 96.0).sin();
+    let rel = (pred - actual).abs() / actual.abs();
+    assert!(rel < 0.15, "pred {pred} vs actual {actual}");
+}
+
+#[test]
+fn engine_survives_many_sequential_dispatches() {
+    let Some(engine) = engine() else { return };
+    let (cfg, ev) = make_eval(44);
+    let hlo = HloPlanEvaluator::from_analytic(engine, &ev);
+    let mut rng = Rng::new(9);
+    for _ in 0..5 {
+        let plans: Vec<Plan> = (0..32)
+            .map(|_| Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng))
+            .collect();
+        let objs = hlo.eval_batch(&plans);
+        assert_eq!(objs.len(), 32);
+        assert!(objs.iter().all(|o| o.iter().all(|x| x.is_finite())));
+    }
+}
