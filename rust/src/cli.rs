@@ -18,6 +18,7 @@ use crate::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
 use crate::opt::{SlitScheduler, SlitVariant};
 use crate::power::GridSignals;
 use crate::runtime::{artifacts_dir, artifacts_present, Engine};
+use crate::scenario::Scenario;
 use crate::sim::{simulate, Scheduler, SimResult};
 use crate::trace::Trace;
 use crate::util::json::Json;
@@ -139,9 +140,80 @@ pub fn make_scheduler(
     Ok(sched)
 }
 
-/// `slit simulate` — the Fig. 4 / Fig. 5 driver.
+/// Resolve the `--scenario` flag (defaults to the untouched baseline).
+pub fn load_scenario(args: &Args) -> anyhow::Result<Scenario> {
+    match args.get("scenario") {
+        None => Ok(Scenario::Baseline),
+        Some(name) => Scenario::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario '{name}' (try: {})",
+                Scenario::all()
+                    .iter()
+                    .map(|s| s.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        }),
+    }
+}
+
+/// Run every named framework over one shared world, each framework on its
+/// own OS thread — Fig. 4-style comparisons spend almost all their wall
+/// time inside per-framework `simulate` calls that share nothing but the
+/// read-only trace/signals, so they scale near-linearly with cores.
+/// Results come back in input order, and per-framework seeding matches the
+/// sequential path exactly. The one caveat: SLIT's per-epoch wall-clock
+/// budget (`--budget`) is the sole time-dependent input, so on a machine
+/// where concurrent frameworks contend for cores a *tight* budget can
+/// truncate the search at different points than an uncontended sequential
+/// run would — budget-independent schedulers are bit-for-bit identical.
+pub fn simulate_frameworks(
+    cfg: &SystemConfig,
+    trace: &Trace,
+    signals: &GridSignals,
+    names: &[String],
+    engine: Option<std::sync::Arc<Engine>>,
+) -> anyhow::Result<Vec<SimResult>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = names
+            .iter()
+            .map(|name| {
+                let engine = engine.clone();
+                scope.spawn(move || -> anyhow::Result<SimResult> {
+                    let mut sched = make_scheduler(name, cfg, engine)?;
+                    let t = std::time::Instant::now();
+                    let res = simulate(
+                        cfg,
+                        trace,
+                        signals,
+                        sched.as_mut(),
+                        cfg.seed,
+                    );
+                    eprintln!(
+                        "  {name}: {:.1}s, {} requests",
+                        t.elapsed().as_secs_f64(),
+                        res.total.requests
+                    );
+                    Ok(res)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| -> anyhow::Result<SimResult> {
+                h.join().map_err(|_| {
+                    anyhow::anyhow!("framework simulation thread panicked")
+                })?
+            })
+            .collect()
+    })
+}
+
+/// `slit simulate` — the Fig. 4 / Fig. 5 driver. All requested frameworks
+/// run concurrently over the same (optionally scenario-shaped) world.
 pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
+    let scenario = load_scenario(args)?;
     let engine = if args.bool("use-hlo") {
         Some(Engine::load(&artifacts_dir())?)
     } else {
@@ -154,26 +226,60 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         Some(one) => vec![one.to_string()],
     };
 
-    let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
-    let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
-    let mut results: Vec<SimResult> = Vec::new();
-    for name in &which {
-        let mut sched = make_scheduler(name, &cfg, engine.clone())?;
-        eprintln!("simulating {name} over {} epochs ...", cfg.epochs);
-        let t = std::time::Instant::now();
-        let res = simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
-        eprintln!(
-            "  {name}: {:.1}s, {} requests",
-            t.elapsed().as_secs_f64(),
-            res.total.requests
-        );
-        results.push(res);
-    }
+    let world = scenario.build(&cfg, cfg.epochs, cfg.seed);
+    // --serial: run frameworks one at a time. With a *tight* --budget the
+    // SLIT variants' wall-clock-bounded searches are sensitive to core
+    // contention from concurrent runs; sequential execution reproduces the
+    // uncontended paper-comparison numbers exactly.
+    let serial = args.bool("serial");
+    eprintln!(
+        "simulating {} framework(s) over {} epochs (scenario: {}{}) ...",
+        which.len(),
+        world.cfg.epochs,
+        scenario.name(),
+        if serial { ", serial" } else { "" }
+    );
+    let results = if serial {
+        let mut out = Vec::with_capacity(which.len());
+        for name in &which {
+            out.extend(simulate_frameworks(
+                &world.cfg,
+                &world.trace,
+                &world.signals,
+                std::slice::from_ref(name),
+                engine.clone(),
+            )?);
+        }
+        out
+    } else {
+        simulate_frameworks(
+            &world.cfg,
+            &world.trace,
+            &world.signals,
+            &which,
+            engine,
+        )?
+    };
     print_comparison(&results);
 
     if let Some(path) = args.get("out") {
         write_results_json(&results, path)?;
         eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `slit scenarios` — list the named workload/grid regimes.
+pub fn cmd_scenarios(_args: &Args) -> anyhow::Result<()> {
+    println!("| scenario | stressed objective | description |");
+    println!("|---|---|---|");
+    for s in Scenario::all() {
+        println!(
+            "| {} | {} | {} |",
+            s.name(),
+            OBJ_NAMES[s.target_objective()],
+            s.description()
+        );
     }
     Ok(())
 }
@@ -239,13 +345,14 @@ pub fn write_results_json(results: &[SimResult], path: &str) -> anyhow::Result<(
     Ok(())
 }
 
-/// `slit trace` — Fig. 1 data.
+/// `slit trace` — Fig. 1 data (optionally shaped by `--scenario`).
 pub fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let mut cfg = load_config(args)?;
+    let scenario = load_scenario(args)?;
     // two weeks by default, like the BurstGPT window in Fig. 1
     let epochs = args.usize("epochs", 1344);
     cfg.epochs = epochs;
-    let trace = Trace::generate(&cfg, epochs, cfg.seed);
+    let trace = scenario.build(&cfg, epochs, cfg.seed).trace;
     let out = args.get("out").unwrap_or("trace.csv");
     trace.write_csv(out)?;
     let toks = trace.tokens_per_epoch();
@@ -389,11 +496,16 @@ slit — sustainable geo-distributed LLM scheduling (SLIT reproduction)
 USAGE: slit <command> [flags]
 
 COMMANDS:
-  simulate   run frameworks over a synthetic trace (Fig. 4/5 driver)
+  simulate   run frameworks concurrently over a trace (Fig. 4/5 driver)
              --framework all|helix|splitwise|round-robin|slit-{carbon,ttft,water,cost,balance}
+             --scenario baseline|diurnal|bursty|outage|carbon-spike|water-summer
              --scale paper|small   --epochs N   --seed N   --out results.json
              --use-hlo (search on the AOT/PJRT artifact)   --budget S
+             --serial (one framework at a time; exact timing reproducibility
+                       when a tight --budget bounds the SLIT search)
   trace      write the Fig. 1 workload series  --epochs N --out trace.csv
+             --scenario NAME
+  scenarios  list the named workload/grid regimes
   pareto     dump one epoch's Pareto front     --epoch N --out front.json
   serve      start the online coordinator      --port N --variant NAME
              --epoch-seconds F --use-hlo
@@ -407,6 +519,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     match args.command.as_str() {
         "simulate" => cmd_simulate(&args),
         "trace" => cmd_trace(&args),
+        "scenarios" => cmd_scenarios(&args),
         "pareto" => cmd_pareto(&args),
         "serve" => cmd_serve(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -498,5 +611,66 @@ mod tests {
         let j = Json::parse(&text).unwrap();
         assert!(j.get("round-robin").is_some());
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn scenario_flag_resolves_and_rejects_unknown() {
+        let a = Args::parse(&argv("simulate --scenario bursty")).unwrap();
+        assert_eq!(
+            load_scenario(&a).unwrap(),
+            Scenario::BurstyHeavyTail
+        );
+        let d = Args::parse(&argv("simulate")).unwrap();
+        assert_eq!(load_scenario(&d).unwrap(), Scenario::Baseline);
+        let bad = Args::parse(&argv("simulate --scenario nope")).unwrap();
+        assert!(load_scenario(&bad).is_err());
+    }
+
+    #[test]
+    fn simulate_with_scenario_runs() {
+        let tmp = std::env::temp_dir().join("slit_cli_sim_scenario.json");
+        let a = Args::parse(&argv(&format!(
+            "simulate --scale small --epochs 2 --framework round-robin \
+             --scenario outage --out {}",
+            tmp.display()
+        )))
+        .unwrap();
+        cmd_simulate(&a).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert!(Json::parse(&text).unwrap().get("round-robin").is_some());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn parallel_framework_runs_match_sequential_results() {
+        // the scoped-thread fan-out must be invisible in the numbers
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 2;
+        let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
+        let names: Vec<String> = vec![
+            "round-robin".into(),
+            "helix".into(),
+            "splitwise".into(),
+        ];
+        let par =
+            simulate_frameworks(&cfg, &trace, &signals, &names, None)
+                .unwrap();
+        assert_eq!(par.len(), 3);
+        for (name, res) in names.iter().zip(&par) {
+            let mut sched = make_scheduler(name, &cfg, None).unwrap();
+            let seq =
+                simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
+            assert_eq!(res.name, seq.name);
+            assert_eq!(res.total.requests, seq.total.requests);
+            assert_eq!(res.total.carbon_kg, seq.total.carbon_kg);
+            assert_eq!(res.total.ttft_sum_s, seq.total.ttft_sum_s);
+        }
+    }
+
+    #[test]
+    fn scenarios_command_lists_all() {
+        let a = Args::parse(&argv("scenarios")).unwrap();
+        cmd_scenarios(&a).unwrap();
     }
 }

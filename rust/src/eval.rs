@@ -10,6 +10,10 @@
 //! followed by elementwise energy -> cost/water/carbon and the TTFT
 //! aggregation (see DESIGN.md §6).
 
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::cluster::{ClassPanels, DcPanels};
 use crate::config::N_OBJ;
 use crate::models::{total_energy_factor, J_PER_KWH};
@@ -80,6 +84,129 @@ pub trait BatchEvaluator: Sync {
 impl BatchEvaluator for AnalyticEvaluator {
     fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
         self.evaluate_batch(plans)
+    }
+}
+
+/// 128-bit fingerprint of a plan's exact bit pattern (two independent
+/// 64-bit mixes over the f64 bits + the matrix shape). Used as the
+/// memoization key: no allocation per lookup, and a collision needs both
+/// halves to collide (~2^-128 per pair — negligible across the ~10^4 plans
+/// one epoch's search ever touches).
+pub fn plan_fingerprint(plan: &Plan) -> (u64, u64) {
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+    let mut h2: u64 = 0x9e37_79b9_7f4a_7c15;
+    for &v in plan.as_slice() {
+        let b = v.to_bits();
+        h1 = (h1 ^ b).wrapping_mul(0x0000_0100_0000_01b3);
+        h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h2 ^= h2 >> 33;
+    }
+    h1 ^= (plan.classes as u64) << 32 | plan.dcs as u64;
+    (h1, h2)
+}
+
+/// Memoizing wrapper around any [`BatchEvaluator`]: repeated plans (the
+/// SLIT local search revisits neighbours constantly, and snap-to-vertex
+/// moves regenerate identical one-hot plans) are answered from a
+/// fingerprint cache instead of paying for a true evaluation. Misses are
+/// forwarded to the inner evaluator as one batch, so they still fan out
+/// over the thread pool. Order-preserving and — because the inner
+/// evaluator is pure — bit-deterministic regardless of hit pattern.
+pub struct MemoizedEvaluator<'a> {
+    inner: &'a dyn BatchEvaluator,
+    cache: Mutex<HashMap<(u64, u64), [f64; N_OBJ]>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl<'a> MemoizedEvaluator<'a> {
+    pub fn new(inner: &'a dyn BatchEvaluator) -> Self {
+        MemoizedEvaluator {
+            inner,
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cached answers served so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// True evaluations forwarded to the inner evaluator so far.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct plans cached.
+    pub fn len(&self) -> usize {
+        self.cache.lock().expect("memo cache").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl BatchEvaluator for MemoizedEvaluator<'_> {
+    fn backend(&self) -> &'static str {
+        self.inner.backend()
+    }
+
+    fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
+        let keys: Vec<(u64, u64)> =
+            plans.iter().map(plan_fingerprint).collect();
+        let mut out: Vec<Option<[f64; N_OBJ]>> = vec![None; plans.len()];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        {
+            let cache = self.cache.lock().expect("memo cache");
+            for (i, key) in keys.iter().enumerate() {
+                match cache.get(key) {
+                    Some(obj) => out[i] = Some(*obj),
+                    None => miss_idx.push(i),
+                }
+            }
+        }
+        if !miss_idx.is_empty() {
+            // duplicates of the same new plan within one batch evaluate
+            // once: later copies resolve against the freshly filled cache
+            let mut fresh: Vec<usize> = Vec::with_capacity(miss_idx.len());
+            {
+                let mut seen: HashSet<(u64, u64)> = HashSet::new();
+                for &i in &miss_idx {
+                    if seen.insert(keys[i]) {
+                        fresh.push(i);
+                    }
+                }
+            }
+            let miss_plans: Vec<Plan> =
+                fresh.iter().map(|&i| plans[i].clone()).collect();
+            let objs = self.inner.eval_batch(&miss_plans);
+            let mut cache = self.cache.lock().expect("memo cache");
+            for (&i, obj) in fresh.iter().zip(&objs) {
+                cache.insert(keys[i], *obj);
+                out[i] = Some(*obj);
+            }
+            // only in-batch duplicates of a fresh plan still need a lookup
+            for &i in &miss_idx {
+                if out[i].is_none() {
+                    out[i] = Some(
+                        *cache
+                            .get(&keys[i])
+                            .expect("missed plan just cached"),
+                    );
+                }
+            }
+            self.misses.fetch_add(fresh.len(), Ordering::Relaxed);
+            self.hits
+                .fetch_add(plans.len() - fresh.len(), Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(plans.len(), Ordering::Relaxed);
+        }
+        out.into_iter()
+            .map(|o| o.expect("memo slot filled"))
+            .collect()
     }
 }
 
@@ -451,6 +578,58 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn memoized_matches_direct_and_counts_hits() {
+        let (cfg, ev) = make_eval(0.05);
+        let mut rng = Rng::new(3);
+        let plans: Vec<Plan> = (0..40)
+            .map(|_| Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng))
+            .collect();
+        let memo = MemoizedEvaluator::new(&ev);
+        let first = memo.eval_batch(&plans);
+        let direct = ev.eval_batch(&plans);
+        assert_eq!(first, direct);
+        assert_eq!(memo.misses(), 40);
+        assert_eq!(memo.hits(), 0);
+        assert_eq!(memo.len(), 40);
+        // the whole batch again: pure cache hits, identical bits
+        let second = memo.eval_batch(&plans);
+        assert_eq!(second, direct);
+        assert_eq!(memo.misses(), 40);
+        assert_eq!(memo.hits(), 40);
+    }
+
+    #[test]
+    fn memoized_dedups_within_one_batch() {
+        let (cfg, ev) = make_eval(0.05);
+        let p = Plan::uniform(cfg.num_classes(), ev.dcs());
+        let q = Plan::one_dc(cfg.num_classes(), ev.dcs(), 1);
+        let batch = vec![p.clone(), q.clone(), p.clone(), q.clone(), p];
+        let memo = MemoizedEvaluator::new(&ev);
+        let out = memo.eval_batch(&batch);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0], out[2]);
+        assert_eq!(out[0], out[4]);
+        assert_eq!(out[1], out[3]);
+        assert_eq!(memo.misses(), 2, "duplicates must not pay twice");
+        assert_eq!(memo.hits(), 3);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_plans_and_shapes() {
+        let a = Plan::uniform(4, 6);
+        let b = Plan::one_dc(4, 6, 2);
+        assert_ne!(plan_fingerprint(&a), plan_fingerprint(&b));
+        assert_eq!(plan_fingerprint(&a), plan_fingerprint(&a.clone()));
+        // same cell values, different shape
+        let c = Plan::uniform(6, 4);
+        assert_ne!(plan_fingerprint(&Plan::uniform(4, 6)), plan_fingerprint(&c));
+        // a tiny perturbation changes the exact bit pattern
+        let mut d = a.clone();
+        d.set(0, 0, d.get(0, 0) + 1e-13);
+        assert_ne!(plan_fingerprint(&a), plan_fingerprint(&d));
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod plan;
 pub mod power;
 pub mod predictor;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod trace;

@@ -60,6 +60,8 @@ impl SlitVariant {
 pub struct SlitStats {
     pub epochs: usize,
     pub evaluations: usize,
+    /// Evaluations answered by the plan-fingerprint memo cache.
+    pub cache_hits: usize,
     pub generations: usize,
     pub surrogate_trainings: usize,
     pub wall_s: f64,
@@ -136,6 +138,7 @@ impl Scheduler for SlitScheduler {
         };
         self.stats.epochs += 1;
         self.stats.evaluations += outcome.evaluations;
+        self.stats.cache_hits += outcome.cache_hits;
         self.stats.generations += outcome.generations_run;
         self.stats.surrogate_trainings += outcome.surrogate_trainings;
         self.stats.wall_s += outcome.wall_s;

@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use crate::config::{OptConfig, N_OBJ};
-use crate::eval::BatchEvaluator;
+use crate::eval::{BatchEvaluator, MemoizedEvaluator};
 use crate::opt::gbdt::{Gbdt, GbdtConfig};
 use crate::pareto::{crowding_distances, dominates, ParetoArchive, Solution};
 use crate::plan::Plan;
@@ -48,8 +48,10 @@ impl Default for SlitOptions {
 #[derive(Debug)]
 pub struct SlitOutcome {
     pub archive: ParetoArchive,
-    /// True-evaluator calls spent.
+    /// True-evaluator calls spent (memoization cache misses).
     pub evaluations: usize,
+    /// Evaluations answered from the plan-fingerprint cache for free.
+    pub cache_hits: usize,
     pub generations_run: usize,
     pub surrogate_trainings: usize,
     pub wall_s: f64,
@@ -89,6 +91,13 @@ impl SlitOptimizer {
 
     /// Run Algorithm 1 with extra seed plans injected into the initial
     /// population (e.g. `AnalyticEvaluator::greedy_seed_plans`).
+    ///
+    /// Every true evaluation goes through a [`MemoizedEvaluator`] wrapped
+    /// around `eval`, and the ML-guided search advances all population
+    /// slots in lockstep so each step's surviving candidates form **one**
+    /// batch — that batch is what fans out over the thread pool
+    /// (`util::threadpool::par_map` inside the evaluator), instead of the
+    /// per-slot trickle of tiny batches the per-plan loop used to emit.
     pub fn optimize_with_seeds(
         &mut self,
         eval: &dyn BatchEvaluator,
@@ -97,8 +106,8 @@ impl SlitOptimizer {
         let start = Instant::now();
         let budget = self.opt.budget_s;
         let x = self.opt.population;
+        let memo = MemoizedEvaluator::new(eval);
         let mut archive = ParetoArchive::new(self.opt.archive_cap);
-        let mut evaluations = 0usize;
         let mut surrogate: Option<Gbdt> = None;
         let mut surrogate_trainings = 0usize;
         // Y_train: (plan features, scalarised score)
@@ -125,8 +134,7 @@ impl SlitOptimizer {
             let alpha = self.rng.range(0.1, 1.0);
             plans.push(Plan::random(self.classes, self.dcs, alpha, &mut self.rng));
         }
-        let objs = eval.eval_batch(&plans);
-        evaluations += plans.len();
+        let objs = memo.eval_batch(&plans);
         let mut population: Vec<Solution> = plans
             .into_iter()
             .zip(objs)
@@ -149,15 +157,33 @@ impl SlitOptimizer {
             // objective mix (4 single-objective specialists + balanced),
             // so the archive's extreme points get real search pressure —
             // that's where SLIT-Carbon/-TTFT/-Water/-Cost come from.
-            let mut new_solutions: Vec<Solution> = Vec::new();
-            for si in 0..population.len() {
+            //
+            // All slots move in lockstep: per step, neighbour generation and
+            // surrogate ranking stay sequential on the main thread (they own
+            // the RNG, keeping runs seed-deterministic), while the one merged
+            // candidate batch pays for true evaluations in parallel.
+            let mut current: Vec<Solution> = population.clone();
+            let mut out_of_budget = false;
+            for _ in 0..self.opt.search_steps {
                 if start.elapsed().as_secs_f64() > budget {
                     break;
                 }
-                let weights = slot_weights(si);
-                let mut current = population[si].clone();
-                for _ in 0..self.opt.search_steps {
-                    // propose neighbours
+                // 1) propose + surrogate-filter candidates for every slot.
+                //    The budget is re-checked per slot (the old per-plan
+                //    granularity): on overrun the remaining slots are
+                //    skipped, the truncated batch still gets evaluated —
+                //    ranges and candidates stay aligned — and the search
+                //    ends after this step.
+                let mut chosen_all: Vec<Plan> = Vec::with_capacity(
+                    current.len() * (self.opt.neighbors / 2).max(1),
+                );
+                let mut ranges: Vec<(usize, usize)> =
+                    Vec::with_capacity(current.len());
+                for cur in &current {
+                    if start.elapsed().as_secs_f64() > budget {
+                        out_of_budget = true;
+                        break;
+                    }
                     let mut cands: Vec<Plan> =
                         Vec::with_capacity(self.opt.neighbors);
                     for c in 0..self.opt.neighbors {
@@ -166,7 +192,7 @@ impl SlitOptimizer {
                             2 => {
                                 let k = self.rng.below(self.classes);
                                 let to = self.rng.below(self.dcs);
-                                current.plan.shifted_toward(
+                                cur.plan.shifted_toward(
                                     k,
                                     to,
                                     self.rng.range(0.2, 0.8),
@@ -177,7 +203,7 @@ impl SlitOptimizer {
                             // single-objective optima live on vertices)
                             3 => {
                                 let k = self.rng.below(self.classes);
-                                let row = current.plan.row(k);
+                                let row = cur.plan.row(k);
                                 let best = row
                                     .iter()
                                     .enumerate()
@@ -186,9 +212,9 @@ impl SlitOptimizer {
                                     })
                                     .map(|(l, _)| l)
                                     .unwrap_or(0);
-                                current.plan.shifted_toward(k, best, 1.0)
+                                cur.plan.shifted_toward(k, best, 1.0)
                             }
-                            _ => current
+                            _ => cur
                                 .plan
                                 .perturbed(self.opt.step, &mut self.rng),
                         };
@@ -219,12 +245,24 @@ impl SlitOptimizer {
                             .take((self.opt.neighbors / 2).max(1))
                             .collect(),
                     };
-                    // true evaluation (batch)
-                    let objs = eval.eval_batch(&chosen);
-                    evaluations += chosen.len();
-                    // trajectory capture + archive update + move selection
+                    let lo_i = chosen_all.len();
+                    chosen_all.extend(chosen);
+                    ranges.push((lo_i, chosen_all.len()));
+                }
+                // 2) one true-evaluation batch for the whole population
+                //    (parallel inside, memoized across steps/generations)
+                let objs = memo.eval_batch(&chosen_all);
+                // 3) trajectory capture + archive update + move selection;
+                //    ranges are consecutive, so the batch is consumed in
+                //    order by value (no per-candidate plan clone)
+                let mut candidates = chosen_all.into_iter().zip(objs);
+                for (si, &(s_i, e_i)) in ranges.iter().enumerate() {
+                    let weights = slot_weights(si);
                     let mut best: Option<Solution> = None;
-                    for (plan, obj) in chosen.into_iter().zip(objs) {
+                    for _ in s_i..e_i {
+                        let (plan, obj) = candidates
+                            .next()
+                            .expect("candidate count matches ranges");
                         update_bounds(&mut lo, &mut hi, &obj);
                         let score = scalarize(&obj, &lo, &hi);
                         y_train.push((plan.as_slice().to_vec(), score));
@@ -242,24 +280,27 @@ impl SlitOptimizer {
                         }
                     }
                     if let Some(cand) = best {
-                        let cur_score =
-                            scalarize_w(&current.obj, &weights, &lo, &hi);
+                        let cur_score = scalarize_w(
+                            &current[si].obj,
+                            &weights,
+                            &lo,
+                            &hi,
+                        );
                         let cand_score =
                             scalarize_w(&cand.obj, &weights, &lo, &hi);
-                        if dominates(&cand.obj, &current.obj)
+                        if dominates(&cand.obj, &current[si].obj)
                             || cand_score < cur_score
                         {
-                            current = cand;
+                            current[si] = cand;
                         }
                     }
-                    if start.elapsed().as_secs_f64() > budget {
-                        break;
-                    }
                 }
-                new_solutions.push(current);
+                if out_of_budget {
+                    break;
+                }
             }
             population = select_population(
-                population.into_iter().chain(new_solutions).collect(),
+                population.into_iter().chain(current).collect(),
                 x,
             );
 
@@ -301,8 +342,7 @@ impl SlitOptimizer {
                         .mutated(self.opt.mutation_rate, &mut self.rng);
                     children.push(child);
                 }
-                let objs = eval.eval_batch(&children);
-                evaluations += children.len();
+                let objs = memo.eval_batch(&children);
                 let mut child_solutions = Vec::with_capacity(children.len());
                 for (plan, obj) in children.into_iter().zip(objs) {
                     update_bounds(&mut lo, &mut hi, &obj);
@@ -323,7 +363,8 @@ impl SlitOptimizer {
 
         SlitOutcome {
             archive,
-            evaluations,
+            evaluations: memo.misses(),
+            cache_hits: memo.hits(),
             generations_run,
             surrogate_trainings,
             wall_s: start.elapsed().as_secs_f64(),
@@ -498,9 +539,22 @@ mod tests {
         let (_, a) = run_opt(SlitOptions::default(), 7);
         let (_, b) = run_opt(SlitOptions::default(), 7);
         assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.cache_hits, b.cache_hits);
         let oa: Vec<_> = a.archive.solutions.iter().map(|s| s.obj).collect();
         let ob: Vec<_> = b.archive.solutions.iter().map(|s| s.obj).collect();
         assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn memoized_evaluation_accounting_is_consistent() {
+        // evaluations = cache misses; hits are free repeats — together they
+        // cover every eval_batch slot the search requested
+        let (_, out) = run_opt(SlitOptions::default(), 12);
+        assert!(out.evaluations > 50, "unique evals {}", out.evaluations);
+        // repeated runs under the same seed spend the same true-eval budget
+        let (_, again) = run_opt(SlitOptions::default(), 12);
+        assert_eq!(out.evaluations, again.evaluations);
+        assert_eq!(out.cache_hits, again.cache_hits);
     }
 
     #[test]

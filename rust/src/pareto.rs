@@ -376,6 +376,117 @@ mod tests {
         );
     }
 
+    /// Brute-force reference: the unique non-dominated subset of a point
+    /// set (first occurrence wins on exact ties).
+    fn bruteforce_front(points: &[[f64; N_OBJ]]) -> Vec<[f64; N_OBJ]> {
+        let mut front: Vec<[f64; N_OBJ]> = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            let dominated_or_dup = points.iter().enumerate().any(|(j, q)| {
+                (j != i && dominates(q, p))
+                    || (j < i && q == p)
+            });
+            if !dominated_or_dup {
+                front.push(*p);
+            }
+        }
+        front
+    }
+
+    fn sorted_objs(mut objs: Vec<[f64; N_OBJ]>) -> Vec<[f64; N_OBJ]> {
+        objs.sort_by(|a, b| {
+            a.iter()
+                .zip(b.iter())
+                .find_map(|(x, y)| {
+                    let ord = x.partial_cmp(y).unwrap();
+                    if ord == std::cmp::Ordering::Equal {
+                        None
+                    } else {
+                        Some(ord)
+                    }
+                })
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        objs
+    }
+
+    #[test]
+    fn archive_equals_bruteforce_front_in_any_insertion_order() {
+        // integer-ish coordinates force plenty of exact duplicates and
+        // dominance ties; the archive must converge to the same unique
+        // front as the brute-force reference under every insertion order
+        propkit::check(
+            "archive-order-invariant",
+            0x04D3,
+            60,
+            |r| {
+                let n = 12 + r.below(20);
+                let points: Vec<[f64; N_OBJ]> = (0..n)
+                    .map(|_| {
+                        [
+                            r.below(5) as f64,
+                            r.below(5) as f64,
+                            r.below(5) as f64,
+                            r.below(5) as f64,
+                        ]
+                    })
+                    .collect();
+                let mut shuffled = points.clone();
+                r.shuffle(&mut shuffled);
+                (points, shuffled)
+            },
+            |(points, shuffled)| {
+                let want = sorted_objs(bruteforce_front(points));
+                for order in [points, shuffled] {
+                    let mut ar = ParetoArchive::new(256);
+                    for &o in order {
+                        ar.insert(sol(o));
+                    }
+                    if !ar.is_consistent() {
+                        return Err("dominated member retained".into());
+                    }
+                    let got = sorted_objs(
+                        ar.solutions.iter().map(|s| s.obj).collect(),
+                    );
+                    if got != want {
+                        return Err(format!(
+                            "front mismatch: got {got:?}, want {want:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn crowding_gives_every_objective_boundary_infinite_distance() {
+        // each objective's min and max holders must be uncrowdable, on all
+        // four axes — not just the first
+        let sols = vec![
+            sol([0.0, 5.0, 5.0, 5.0]),
+            sol([9.0, 0.0, 5.0, 5.0]),
+            sol([5.0, 9.0, 0.0, 5.0]),
+            sol([5.0, 5.0, 9.0, 0.0]),
+            sol([4.0, 4.0, 4.0, 9.0]),
+            sol([3.0, 3.0, 3.0, 3.0]),
+        ];
+        let d = crowding_distances(&sols);
+        for obj in 0..N_OBJ {
+            let min_i = (0..sols.len())
+                .min_by(|&a, &b| {
+                    sols[a].obj[obj].partial_cmp(&sols[b].obj[obj]).unwrap()
+                })
+                .unwrap();
+            let max_i = (0..sols.len())
+                .max_by(|&a, &b| {
+                    sols[a].obj[obj].partial_cmp(&sols[b].obj[obj]).unwrap()
+                })
+                .unwrap();
+            assert!(d[min_i].is_infinite(), "obj {obj} min not boundary");
+            assert!(d[max_i].is_infinite(), "obj {obj} max not boundary");
+        }
+    }
+
     #[test]
     fn crowding_extremes_infinite() {
         let sols = vec![

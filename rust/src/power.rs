@@ -90,6 +90,39 @@ impl GridSignals {
         self.ci.first().map(|v| v.len()).unwrap_or(0)
     }
 
+    /// Scale one datacenter's signals over an epoch window (scenario
+    /// shaping hook: carbon-intensity spikes, drought-driven WI surges,
+    /// price shocks). The range is clamped to the generated horizon.
+    pub fn scale_window(
+        &mut self,
+        dc: usize,
+        epochs: std::ops::Range<usize>,
+        ci_mult: f64,
+        wi_mult: f64,
+        tou_mult: f64,
+    ) {
+        let n = self.epochs();
+        let lo = epochs.start.min(n);
+        let hi = epochs.end.min(n);
+        for t in lo..hi {
+            self.ci[dc][t] *= ci_mult;
+            self.wi[dc][t] *= wi_mult;
+            self.tou[dc][t] *= tou_mult;
+        }
+    }
+
+    /// Mean of the carbon signal over an epoch window for one DC
+    /// (scenario shaping and its tests).
+    pub fn mean_ci(&self, dc: usize, epochs: std::ops::Range<usize>) -> f64 {
+        let n = self.epochs();
+        let lo = epochs.start.min(n);
+        let hi = epochs.end.min(n);
+        if hi <= lo {
+            return 0.0;
+        }
+        self.ci[dc][lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+    }
+
     /// Signal snapshot for one epoch: (ci, wi, tou) per DC.
     pub fn at(&self, epoch: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
         let t = epoch.min(self.epochs().saturating_sub(1));

@@ -1,0 +1,91 @@
+//! API-compatible stand-in for the PJRT engine, compiled when the `pjrt`
+//! cargo feature is off (the offline image ships no `xla` crate to link).
+//!
+//! [`Engine::load`] always fails with a clear message, so every caller that
+//! gates on it (`--use-hlo`, runtime_parity tests, benches) degrades
+//! gracefully; [`HloPlanEvaluator`] falls back to the analytic evaluator so
+//! optimizer plumbing that is generic over [`BatchEvaluator`] typechecks
+//! and still produces correct numbers if one is ever constructed by hand.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::N_OBJ;
+use crate::eval::{AnalyticEvaluator, BatchEvaluator};
+use crate::plan::Plan;
+
+use super::Manifest;
+
+/// Stub engine handle. Never constructed via [`Engine::load`]; exists so
+/// `Arc<Engine>`-typed plumbing compiles without the XLA runtime.
+pub struct Engine {
+    pub manifest: Manifest,
+    dispatches: AtomicU64,
+}
+
+impl Engine {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<Arc<Engine>> {
+        anyhow::bail!(
+            "AOT/PJRT backend unavailable: built without the `pjrt` cargo \
+             feature (no XLA runtime linked; artifacts dir was {})",
+            dir.display()
+        )
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+}
+
+/// Stub plan evaluator: carries the engine handle for API parity but
+/// evaluates on the native analytic path.
+pub struct HloPlanEvaluator {
+    engine: Arc<Engine>,
+    fallback: AnalyticEvaluator,
+}
+
+impl HloPlanEvaluator {
+    pub fn from_analytic(engine: Arc<Engine>, ev: &AnalyticEvaluator) -> Self {
+        HloPlanEvaluator {
+            engine,
+            fallback: ev.clone(),
+        }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl BatchEvaluator for HloPlanEvaluator {
+    fn backend(&self) -> &'static str {
+        "analytic (pjrt stub)"
+    }
+
+    fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
+        self.engine.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.fallback.eval_batch(plans)
+    }
+}
+
+/// Stub predictor: reports the missing backend instead of predicting.
+pub struct HloPredictor {
+    _engine: Arc<Engine>,
+}
+
+impl HloPredictor {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        HloPredictor { _engine: engine }
+    }
+
+    pub fn predict_series(
+        &self,
+        _series: &[f64],
+        _epochs_per_day: usize,
+    ) -> anyhow::Result<f64> {
+        anyhow::bail!(
+            "predictor artifact execution requires the `pjrt` cargo feature"
+        )
+    }
+}

@@ -12,6 +12,10 @@
 //! Interchange is HLO *text* (see python/compile/aot.py and
 //! /opt/xla-example/README.md for why serialized protos are rejected).
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 
 pub use engine::{Engine, HloPlanEvaluator, HloPredictor};
@@ -113,6 +117,14 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 /// True when the AOT artifacts exist (tests skip gracefully otherwise).
 pub fn artifacts_present() -> bool {
     artifacts_dir().join("manifest.json").exists()
+}
+
+/// True when the crate links the real PJRT engine (`pjrt` feature). Tests
+/// and benches that would execute artifacts must gate on this **and**
+/// [`artifacts_present`] — with the stub build, `Engine::load` always
+/// fails even if artifacts exist on disk.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 #[cfg(test)]

@@ -1,0 +1,368 @@
+//! Named workload/grid regimes — the scenario suite behind the ROADMAP's
+//! "as many scenarios as you can imagine" mandate.
+//!
+//! A [`Scenario`] is a deterministic transform over the experiment world:
+//! it adjusts the [`SystemConfig`] before generation (workload knobs, site
+//! capacity, water/cooling parameters) and reshapes the generated
+//! [`Trace`] / [`GridSignals`] through the hooks `trace::Trace::
+//! scale_epoch` and `power::GridSignals::scale_window`. Every regime is
+//! seeded, so scenario runs are exactly reproducible and comparable across
+//! frameworks.
+//!
+//! The five named regimes (plus the untouched baseline):
+//!   * `diurnal` — sharpened day/night demand swing, no bursts: the
+//!     follow-the-sun routing case (cf. Fig. 1's diurnal trend).
+//!   * `bursty` — heavy-tailed demand spikes on top of frequent bursts:
+//!     the BurstGPT "intensity changes rapidly" trend, exaggerated.
+//!   * `outage` — a whole region's datacenters lose 90% of their nodes
+//!     while its users keep sending traffic: forced cross-region failover.
+//!   * `carbon-spike` — the cleanest grids suffer a mid-window carbon
+//!     event (wind lull / coal backup): carbon-aware routing must re-plan
+//!     away from its favourite sites.
+//!   * `water-summer` — drought summer: grid water intensity triples and
+//!     cooling COP degrades everywhere, stressing the water objective.
+
+use crate::config::{SystemConfig, OBJ_CARBON, OBJ_COST, OBJ_WATER};
+use crate::power::GridSignals;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+/// The region taken down by [`Scenario::RegionalOutage`] (north-america:
+/// the largest origin share in the paper's region mix).
+pub const OUTAGE_REGION: usize = 2;
+
+/// Fraction of nodes that survive the outage at affected sites.
+pub const OUTAGE_SURVIVING_FRAC: f64 = 0.1;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// The untouched paper setup.
+    Baseline,
+    /// Sharpened diurnal demand, bursts disabled.
+    Diurnal,
+    /// Heavy-tailed burst spikes on top of a high burst rate.
+    BurstyHeavyTail,
+    /// One region's sites lose 90% of capacity; demand unchanged.
+    RegionalOutage,
+    /// Mid-window carbon-intensity spike on the cleanest grids.
+    CarbonSpike,
+    /// Drought summer: high water intensity, degraded cooling COP.
+    WaterStressedSummer,
+}
+
+/// A generated experiment world: config + matching trace and grid signals.
+pub struct ScenarioWorld {
+    pub cfg: SystemConfig,
+    pub trace: Trace,
+    pub signals: GridSignals,
+}
+
+impl Scenario {
+    /// Every scenario including the baseline.
+    pub fn all() -> [Scenario; 6] {
+        [
+            Scenario::Baseline,
+            Scenario::Diurnal,
+            Scenario::BurstyHeavyTail,
+            Scenario::RegionalOutage,
+            Scenario::CarbonSpike,
+            Scenario::WaterStressedSummer,
+        ]
+    }
+
+    /// The five named non-baseline regimes (the scenario-matrix set).
+    pub fn named() -> [Scenario; 5] {
+        [
+            Scenario::Diurnal,
+            Scenario::BurstyHeavyTail,
+            Scenario::RegionalOutage,
+            Scenario::CarbonSpike,
+            Scenario::WaterStressedSummer,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Baseline => "baseline",
+            Scenario::Diurnal => "diurnal",
+            Scenario::BurstyHeavyTail => "bursty",
+            Scenario::RegionalOutage => "outage",
+            Scenario::CarbonSpike => "carbon-spike",
+            Scenario::WaterStressedSummer => "water-summer",
+        }
+    }
+
+    pub fn description(&self) -> &'static str {
+        match self {
+            Scenario::Baseline => "paper-default workload and grid signals",
+            Scenario::Diurnal => {
+                "sharpened day/night demand swing, bursts disabled"
+            }
+            Scenario::BurstyHeavyTail => {
+                "heavy-tailed demand spikes (BurstGPT trend 2, exaggerated)"
+            }
+            Scenario::RegionalOutage => {
+                "north-america sites lose 90% of nodes; demand unchanged"
+            }
+            Scenario::CarbonSpike => {
+                "cleanest grids suffer a mid-window 4x carbon event"
+            }
+            Scenario::WaterStressedSummer => {
+                "drought summer: 3x grid water intensity, degraded COP"
+            }
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Scenario> {
+        Scenario::all().into_iter().find(|s| s.name() == name)
+    }
+
+    /// The objective axis this regime stresses — the scenario-matrix test
+    /// requires SLIT's matching variant to stay non-dominated here.
+    pub fn target_objective(&self) -> usize {
+        match self {
+            Scenario::Baseline => OBJ_COST,
+            Scenario::Diurnal => OBJ_CARBON,
+            Scenario::BurstyHeavyTail => OBJ_COST,
+            Scenario::RegionalOutage => OBJ_COST,
+            Scenario::CarbonSpike => OBJ_CARBON,
+            Scenario::WaterStressedSummer => OBJ_WATER,
+        }
+    }
+
+    /// Pre-generation config adjustments.
+    pub fn apply_config(&self, cfg: &mut SystemConfig) {
+        match self {
+            Scenario::Baseline => {}
+            Scenario::Diurnal => {
+                cfg.workload.burst_prob = 0.0;
+            }
+            Scenario::BurstyHeavyTail => {
+                cfg.workload.burst_prob = 0.18;
+                cfg.workload.burst_mult = 6.0;
+            }
+            Scenario::RegionalOutage => {
+                for d in &mut cfg.datacenters {
+                    if d.region == OUTAGE_REGION {
+                        d.nodes_per_type = d
+                            .nodes_per_type
+                            .iter()
+                            .map(|&n| {
+                                ((n as f64 * OUTAGE_SURVIVING_FRAC) as usize)
+                                    .max(1)
+                            })
+                            .collect();
+                    }
+                }
+            }
+            Scenario::CarbonSpike => {}
+            Scenario::WaterStressedSummer => {
+                for d in &mut cfg.datacenters {
+                    d.wi_base *= 3.0;
+                    d.cop = (d.cop * 0.75).max(1.0);
+                }
+            }
+        }
+    }
+
+    /// Post-generation trace shaping (deterministic per seed).
+    fn shape_trace(&self, cfg: &SystemConfig, trace: &mut Trace, seed: u64) {
+        let epochs = trace.epochs.len();
+        match self {
+            Scenario::Diurnal => {
+                // sharpen the global day/night contrast on top of the
+                // generator's per-region diurnal base
+                for t in 0..epochs {
+                    let hour = (t as f64 * cfg.physics.epoch_s / 3600.0)
+                        .rem_euclid(24.0);
+                    let day = (std::f64::consts::PI * ((hour - 7.0) / 16.0))
+                        .sin()
+                        .max(0.0);
+                    trace.scale_epoch(t, 0.45 + 1.4 * day);
+                }
+            }
+            Scenario::BurstyHeavyTail => {
+                // extra heavy-tail spikes: rare epochs multiply by
+                // 1 + Gamma(0.7)-scaled surges (approximate Pareto tail)
+                let mut rng = Rng::new(seed ^ 0x5C3A_4210);
+                for t in 0..epochs {
+                    if rng.chance(0.08) {
+                        trace.scale_epoch(t, 1.0 + 4.0 * rng.gamma(0.7));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Post-generation grid-signal shaping.
+    fn shape_signals(&self, cfg: &SystemConfig, signals: &mut GridSignals) {
+        if let Scenario::CarbonSpike = self {
+            // the cleanest quarter of sites (by CI base) spike 4x during
+            // the middle third of the horizon — a wind lull backed by coal
+            let epochs = signals.epochs();
+            let window = epochs / 3..(2 * epochs) / 3;
+            let mut order: Vec<usize> = (0..cfg.datacenters.len()).collect();
+            order.sort_by(|&a, &b| {
+                cfg.datacenters[a]
+                    .ci_base
+                    .partial_cmp(&cfg.datacenters[b].ci_base)
+                    .unwrap()
+            });
+            let afflicted = (cfg.datacenters.len() / 4).max(1);
+            for &dc in order.iter().take(afflicted) {
+                signals.scale_window(dc, window.clone(), 4.0, 1.0, 1.0);
+            }
+        }
+    }
+
+    /// Generate the full world for this regime: mutated config, then the
+    /// trace/signal generators (trace.rs / power.rs), then the shaping
+    /// passes. Deterministic in (base config, epochs, seed).
+    pub fn build(
+        &self,
+        base: &SystemConfig,
+        epochs: usize,
+        seed: u64,
+    ) -> ScenarioWorld {
+        let mut cfg = base.clone();
+        self.apply_config(&mut cfg);
+        cfg.epochs = epochs;
+        let mut trace = Trace::generate(&cfg, epochs, seed);
+        let mut signals = GridSignals::generate(&cfg, epochs, seed);
+        self.shape_trace(&cfg, &mut trace, seed);
+        self.shape_signals(&cfg, &mut signals);
+        ScenarioWorld {
+            cfg,
+            trace,
+            signals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn base() -> SystemConfig {
+        SystemConfig::paper_default()
+    }
+
+    #[test]
+    fn names_round_trip_and_are_unique() {
+        let mut seen = Vec::new();
+        for s in Scenario::all() {
+            assert_eq!(Scenario::from_name(s.name()), Some(s));
+            assert!(!seen.contains(&s.name()), "duplicate {}", s.name());
+            seen.push(s.name());
+            assert!(!s.description().is_empty());
+            assert!(s.target_objective() < crate::config::N_OBJ);
+        }
+        assert_eq!(Scenario::from_name("nope"), None);
+        assert_eq!(Scenario::named().len(), 5);
+    }
+
+    #[test]
+    fn builds_are_deterministic_and_valid() {
+        for s in Scenario::all() {
+            let a = s.build(&base(), 48, 7);
+            let b = s.build(&base(), 48, 7);
+            a.cfg.validate().unwrap();
+            assert_eq!(a.trace.epochs, b.trace.epochs, "{}", s.name());
+            assert_eq!(a.signals.ci, b.signals.ci, "{}", s.name());
+            assert!(
+                a.trace.epochs.iter().map(|e| e.total_requests()).sum::<f64>()
+                    > 0.0,
+                "{} generated no demand",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_disables_bursts_and_keeps_day_night_contrast() {
+        let w = Scenario::Diurnal.build(&base(), 192, 3);
+        assert_eq!(w.cfg.workload.burst_prob, 0.0);
+        let toks = w.trace.tokens_per_epoch();
+        let (lo, hi) = crate::util::stats::min_max(&toks);
+        assert!(hi > 3.0 * lo.max(1.0), "no day/night contrast: {lo} {hi}");
+    }
+
+    #[test]
+    fn bursty_exhibits_a_heavy_tail() {
+        // enforce the regime's mechanism (3x the baseline burst rate, a
+        // bigger multiplier) and the resulting shape: a clearly heavy
+        // peak plus multiple spike epochs — absolute bounds, since a
+        // cross-seed max/mean comparison against baseline would be too
+        // noisy to pin down
+        let s = Scenario::BurstyHeavyTail.build(&base(), 288, 5);
+        assert!(s.cfg.workload.burst_prob >= 2.0 * base().workload.burst_prob);
+        assert!(s.cfg.workload.burst_mult > base().workload.burst_mult);
+        let toks = s.trace.tokens_per_epoch();
+        let mean = crate::util::stats::mean(&toks).max(1.0);
+        let max = toks.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 2.5 * mean, "bursty trace too flat: {}", max / mean);
+        let spikes = toks.iter().filter(|&&t| t > 2.0 * mean).count();
+        assert!(spikes >= 3, "too few spike epochs: {spikes}");
+    }
+
+    #[test]
+    fn outage_shrinks_only_the_afflicted_region() {
+        let b = base();
+        let w = Scenario::RegionalOutage.build(&b, 24, 1);
+        for (orig, out) in b.datacenters.iter().zip(&w.cfg.datacenters) {
+            if orig.region == OUTAGE_REGION {
+                assert!(
+                    out.total_nodes() * 5 < orig.total_nodes(),
+                    "{} not degraded",
+                    out.name
+                );
+            } else {
+                assert_eq!(out.total_nodes(), orig.total_nodes());
+            }
+        }
+        // demand from the afflicted region is NOT shed
+        let total: f64 =
+            w.trace.epochs.iter().map(|e| e.total_requests()).sum();
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn carbon_spike_raises_clean_site_ci_in_window_only() {
+        let b = Scenario::Baseline.build(&base(), 96, 9);
+        let s = Scenario::CarbonSpike.build(&base(), 96, 9);
+        let cfg = base();
+        // cleanest site by base CI
+        let clean = (0..cfg.datacenters.len())
+            .min_by(|&a, &b| {
+                cfg.datacenters[a]
+                    .ci_base
+                    .partial_cmp(&cfg.datacenters[b].ci_base)
+                    .unwrap()
+            })
+            .unwrap();
+        let window = 96 / 3..2 * 96 / 3;
+        let inside_base = b.signals.mean_ci(clean, window.clone());
+        let inside_spike = s.signals.mean_ci(clean, window);
+        assert!(
+            inside_spike > 3.0 * inside_base,
+            "no spike: {inside_spike} vs {inside_base}"
+        );
+        // outside the window the signals are untouched
+        let before_base = b.signals.mean_ci(clean, 0..96 / 3);
+        let before_spike = s.signals.mean_ci(clean, 0..96 / 3);
+        assert!((before_base - before_spike).abs() < 1e-12);
+    }
+
+    #[test]
+    fn water_summer_raises_wi_and_degrades_cop() {
+        let b = base();
+        let w = Scenario::WaterStressedSummer.build(&b, 24, 1);
+        for (orig, out) in b.datacenters.iter().zip(&w.cfg.datacenters) {
+            assert!(out.wi_base > 2.9 * orig.wi_base, "{}", out.name);
+            assert!(out.cop <= orig.cop);
+            assert!(out.cop >= 1.0);
+        }
+    }
+}

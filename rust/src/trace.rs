@@ -220,6 +220,14 @@ impl Trace {
         Ok(Trace { epochs, seed: 0 })
     }
 
+    /// Scale one epoch's request counts in place (scenario shaping hook:
+    /// diurnal amplification, burst injection, demand shedding).
+    pub fn scale_epoch(&mut self, epoch: usize, factor: f64) {
+        if let Some(e) = self.epochs.get_mut(epoch) {
+            *e = e.scaled(factor);
+        }
+    }
+
     /// Tokens requested per epoch — the Fig. 1 series.
     pub fn tokens_per_epoch(&self) -> Vec<f64> {
         self.epochs.iter().map(EpochLoad::total_tokens).collect()

@@ -1,15 +1,240 @@
-//! Scoped data-parallel helpers (no rayon in the offline image).
+//! Scoped data-parallel helpers on a persistent worker pool (no rayon in
+//! the offline image).
 //!
-//! `par_map` fans a slice out over `std::thread::scope` workers with static
-//! chunking; `par_for_each_mut` does the same over mutable chunks. Both fall
-//! back to the serial path for small inputs where spawn overhead dominates.
+//! The first parallel call lazily spawns a process-wide pool of workers;
+//! afterwards `par_map` / `par_for_each_mut` dispatch chunk tasks over a
+//! shared channel instead of spawning OS threads per call — at SLIT's hot
+//! path granularity (hundreds of sub-microsecond plan evaluations per
+//! batch) per-call `thread::scope` spawning used to cost more than the work
+//! itself. Both helpers preserve item order, fall back to the serial path
+//! for small inputs, and run serially when invoked *from* a pool worker so
+//! nested parallelism cannot deadlock the fixed-size pool.
+//!
+//! Determinism: chunk results are written into disjoint, position-stable
+//! output slots, so for a pure `f` the result is bit-identical to the
+//! serial path regardless of worker count or scheduling order (see
+//! rust/tests/determinism.rs for the end-to-end regression).
 
-/// Number of worker threads to use (cores, capped).
-pub fn default_threads() -> usize {
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Below this many items per chunk, dispatch overhead dominates; inputs
+/// smaller than two chunks take the serial path outright.
+const MIN_CHUNK: usize = 16;
+
+/// 0 = no override (use SLIT_THREADS env or the hardware count).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Set inside pool workers; parallel helpers invoked from a worker run
+    /// serially instead of re-entering the (finite) pool.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Force the logical thread count used by the parallel helpers (tests use
+/// 1 vs many to pin down determinism). 0 restores the default.
+pub fn set_thread_override(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Physical worker count: cores, capped (also the pool size).
+pub fn hardware_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
+}
+
+/// Number of logical worker threads to use: the override if set, else the
+/// `SLIT_THREADS` environment variable (read once — this sits on the
+/// per-dispatch hot path and env lookups take a process-global lock), else
+/// the hardware count.
+pub fn default_threads() -> usize {
+    let forced = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if forced > 0 {
+        return forced;
+    }
+    static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+    let env = *ENV_THREADS.get_or_init(|| {
+        std::env::var("SLIT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    });
+    env.unwrap_or_else(hardware_threads)
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    tx: Mutex<Sender<Task>>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..hardware_threads() {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("slit-pool-{i}"))
+                .spawn(move || worker_loop(&rx))
+                .expect("spawn pool worker");
+        }
+        Pool { tx: Mutex::new(tx) }
+    })
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Task>>) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        // Hold the receiver lock only while pulling one task; the blocked
+        // recv() hands tasks out one at a time (natural load balancing).
+        let task = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return,
+        };
+        match task {
+            // A panic inside `f` must not kill the worker: the caller
+            // notices via its unfilled output slot (see DoneGuard).
+            Ok(task) => {
+                let _ = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(move || task()),
+                );
+            }
+            Err(_) => return, // all senders gone: process shutting down
+        }
+    }
+}
+
+fn submit(task: Task) {
+    pool()
+        .tx
+        .lock()
+        .expect("pool sender poisoned")
+        .send(task)
+        .expect("pool workers gone");
+}
+
+/// Signals chunk completion to the dispatching caller even when the chunk
+/// task panics or is dropped unrun: the wrapper in [`run_scoped`] stores
+/// the task's outcome (capturing the original panic message) before the
+/// guard drops, and dropping sends whatever is stored — so exactly one
+/// signal per task, on every path.
+struct DoneGuard {
+    tx: Sender<Result<(), String>>,
+    outcome: Result<(), String>,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let outcome =
+            std::mem::replace(&mut self.outcome, Ok(()));
+        let _ = self.tx.send(outcome);
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// True when the calling code should not fan out (single logical thread,
+/// or already running on a pool worker).
+fn must_run_serial() -> bool {
+    default_threads() <= 1 || IN_POOL.with(|c| c.get())
+}
+
+/// Tracks submitted chunk tasks and drains their completion signals — also
+/// on unwind (Drop), which closes the soundness gap of the lifetime-erased
+/// tasks: if anything panics in the dispatch loop after some tasks are
+/// already in flight, the guard still blocks until every such task has
+/// finished (or been dropped, which fires its DoneGuard) before the
+/// caller's borrows can die. `pending` is incremented *before* submit, and
+/// every panic path inside submit ends with the task being dropped, so the
+/// signal count always matches. Drop never panics (unwind-safe); the
+/// normal path re-raises a recorded worker panic via [`run_scoped`].
+struct PendingJobs<'a> {
+    rx: &'a Receiver<Result<(), String>>,
+    pending: usize,
+    first_error: Option<String>,
+}
+
+impl PendingJobs<'_> {
+    fn new(rx: &Receiver<Result<(), String>>) -> PendingJobs<'_> {
+        PendingJobs {
+            rx,
+            pending: 0,
+            first_error: None,
+        }
+    }
+
+    fn drain(&mut self) {
+        while self.pending > 0 {
+            match self.rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    self.first_error.get_or_insert(msg);
+                }
+                Err(_) => {
+                    self.first_error
+                        .get_or_insert_with(|| "pool disconnected".into());
+                }
+            }
+            self.pending -= 1;
+        }
+    }
+}
+
+impl Drop for PendingJobs<'_> {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Dispatch a batch of lifetime-bound tasks to the pool and block until
+/// every one has finished; a worker panic is re-raised here with its
+/// original message. This is the single home of the lifetime-erasing
+/// `transmute` both parallel helpers build on.
+fn run_scoped(tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let (done_tx, done_rx) = channel::<Result<(), String>>();
+    let mut pending = PendingJobs::new(&done_rx);
+    for task in tasks {
+        let mut done = DoneGuard {
+            tx: done_tx.clone(),
+            outcome: Err("task dropped before running".into()),
+        };
+        let wrapped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(task),
+            );
+            done.outcome = result.map_err(|p| panic_message(&*p));
+        });
+        // SAFETY: the borrows captured by `wrapped` stay alive until one
+        // completion signal per submitted task has been received — by the
+        // explicit drain below on the normal path, or by `pending`'s Drop
+        // on any unwind (including a panic inside `submit` itself, whose
+        // dropped task still fires its DoneGuard) — and DoneGuard sends
+        // exactly once at the end of the task's life (run, unwound, or
+        // dropped unrun). So no task can touch the borrows of the caller's
+        // frame after they die.
+        let wrapped: Task = unsafe { std::mem::transmute(wrapped) };
+        pending.pending += 1;
+        submit(wrapped);
+    }
+    pending.drain();
+    if let Some(msg) = pending.first_error.take() {
+        panic!("parallel worker panicked: {msg}");
+    }
 }
 
 /// Parallel map over a slice preserving order.
@@ -19,54 +244,58 @@ where
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
-    let threads = default_threads();
-    if items.len() < 2 * threads || threads == 1 {
+    if must_run_serial() || items.len() < 2 * MIN_CHUNK {
         return items.iter().map(|x| f(x)).collect();
     }
-    let chunk = items.len().div_ceil(threads);
+    let threads = default_threads();
+    let chunk = items.len().div_ceil(threads).max(MIN_CHUNK);
     let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
     out.resize_with(items.len(), || None);
 
-    std::thread::scope(|s| {
+    {
+        let f = &f;
         let mut rest = out.as_mut_slice();
-        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(items.len() / chunk + 1);
+        for chunk_items in items.chunks(chunk) {
             let (head, tail) = rest.split_at_mut(chunk_items.len());
             rest = tail;
-            let f = &f;
-            let base = ci * chunk;
-            let _ = base;
-            s.spawn(move || {
+            tasks.push(Box::new(move || {
                 for (slot, item) in head.iter_mut().zip(chunk_items) {
                     *slot = Some(f(item));
                 }
-            });
+            }));
         }
-    });
+        // run_scoped blocks until every task has finished, so the borrows
+        // of `items`, `f`, and `out` the tasks carry cannot dangle
+        run_scoped(tasks);
+    }
     out.into_iter().map(|x| x.expect("worker filled slot")).collect()
 }
 
-/// Parallel in-place transform over mutable chunks.
+/// Parallel in-place transform over mutable chunks (order-stable).
 pub fn par_for_each_mut<T, F>(items: &mut [T], f: F)
 where
     T: Send,
     F: Fn(&mut T) + Sync,
 {
-    let threads = default_threads();
-    if items.len() < 2 * threads || threads == 1 {
+    if must_run_serial() || items.len() < 2 * MIN_CHUNK {
         items.iter_mut().for_each(|x| f(x));
         return;
     }
-    let chunk = items.len().div_ceil(threads);
-    std::thread::scope(|s| {
-        for chunk_items in items.chunks_mut(chunk) {
-            let f = &f;
-            s.spawn(move || {
-                for item in chunk_items {
-                    f(item);
-                }
-            });
-        }
-    });
+    let threads = default_threads();
+    let chunk = items.len().div_ceil(threads).max(MIN_CHUNK);
+    let f = &f;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(items.len() / chunk + 1);
+    for chunk_items in items.chunks_mut(chunk) {
+        tasks.push(Box::new(move || {
+            for item in chunk_items {
+                f(item);
+            }
+        }));
+    }
+    run_scoped(tasks);
 }
 
 #[cfg(test)]
@@ -82,9 +311,46 @@ mod tests {
     }
 
     #[test]
-    fn par_map_small_input() {
-        let xs = [1, 2, 3];
-        assert_eq!(par_map(&xs, |&x| x + 1), vec![2, 3, 4]);
+    fn par_map_small_input_takes_serial_path() {
+        // below 2 * MIN_CHUNK the serial fallback runs on the caller thread
+        let xs: Vec<i32> = (0..(2 * MIN_CHUNK as i32 - 1)).collect();
+        let caller = std::thread::current().id();
+        let ids = par_map(&xs, |&x| {
+            assert_eq!(std::thread::current().id(), caller);
+            x + 1
+        });
+        assert_eq!(ids.len(), xs.len());
+        assert_eq!(ids[0], 1);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        // results land at their input positions even though chunks finish
+        // in arbitrary order
+        let xs: Vec<usize> = (0..5_000).collect();
+        let out = par_map(&xs, |&x| x * 3);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn par_map_non_divisible_chunking() {
+        // lengths that do not divide evenly across threads/chunks must not
+        // drop or duplicate items
+        for n in [
+            2 * MIN_CHUNK,
+            2 * MIN_CHUNK + 1,
+            257,
+            1000,
+            1001,
+            MIN_CHUNK * 17 + 5,
+        ] {
+            let xs: Vec<u64> = (0..n as u64).collect();
+            let out = par_map(&xs, |&x| x + 10);
+            assert_eq!(out.len(), n);
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 + 10));
+        }
     }
 
     #[test]
@@ -95,10 +361,75 @@ mod tests {
     }
 
     #[test]
+    fn par_for_each_mut_non_divisible_and_order() {
+        let mut xs: Vec<usize> = (0..(MIN_CHUNK * 13 + 3)).collect();
+        par_for_each_mut(&mut xs, |x| *x = *x * 2 + 1);
+        assert!(xs.iter().enumerate().all(|(i, &x)| x == i * 2 + 1));
+    }
+
+    #[test]
     fn empty_inputs() {
         let xs: Vec<u32> = vec![];
         assert!(par_map(&xs, |&x| x).is_empty());
         let mut ys: Vec<u32> = vec![];
         par_for_each_mut(&mut ys, |_| {});
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        // inner par_map calls run serially on pool workers (no deadlock)
+        let xs: Vec<u64> = (0..256).collect();
+        let out = par_map(&xs, |&x| {
+            let inner: Vec<u64> = (0..64).collect();
+            par_map(&inner, |&y| y + x).iter().sum::<u64>()
+        });
+        assert_eq!(out.len(), 256);
+        assert_eq!(out[0], (0..64).sum::<u64>());
+    }
+
+    #[test]
+    fn thread_override_forces_serial_and_is_deterministic() {
+        let xs: Vec<u64> = (0..4_096).collect();
+        set_thread_override(1);
+        let caller = std::thread::current().id();
+        let serial = par_map(&xs, |&x| {
+            assert_eq!(std::thread::current().id(), caller);
+            x.wrapping_mul(0x9E37_79B9)
+        });
+        set_thread_override(8);
+        let parallel = par_map(&xs, |&x| x.wrapping_mul(0x9E37_79B9));
+        set_thread_override(0);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn worker_panics_propagate_to_caller() {
+        // a panicking closure must abort the call (serial path re-raises
+        // directly; pool path re-raises via the DoneGuard ok flag), never
+        // return partially-filled results
+        let xs: Vec<u64> = (0..256).collect();
+        let result = std::panic::catch_unwind(|| {
+            par_map(&xs, |&x| {
+                if x == 200 {
+                    panic!("boom");
+                }
+                x
+            })
+        });
+        assert!(result.is_err());
+        // the pool survives the panic and keeps serving
+        let ok = par_map(&xs, |&x| x + 1);
+        assert_eq!(ok.len(), 256);
+    }
+
+    #[test]
+    fn many_sequential_batches_reuse_the_pool() {
+        // regression for pool lifetime: thousands of dispatches must not
+        // exhaust resources the way per-call thread spawning would
+        for round in 0..200u64 {
+            let xs: Vec<u64> = (0..128).collect();
+            let out = par_map(&xs, |&x| x + round);
+            assert_eq!(out[127], 127 + round);
+        }
     }
 }

@@ -1,0 +1,74 @@
+//! Determinism regression: the same seed must produce bit-identical
+//! `SimResult` objectives regardless of how many threads the parallel
+//! evaluation hot path uses. This pins down the tentpole guarantees:
+//! order-preserving `par_map`, the pure plan-fingerprint memo cache, and
+//! the optimizer's main-thread-only RNG.
+//!
+//! This lives in its own integration binary so the global thread override
+//! cannot race with other tests.
+
+use slit::config::SystemConfig;
+use slit::opt::{SlitScheduler, SlitVariant};
+use slit::power::GridSignals;
+use slit::scenario::Scenario;
+use slit::sim::{simulate, SimResult};
+use slit::trace::Trace;
+use slit::util::threadpool;
+
+/// Both tests flip the process-global thread override, so they must not
+/// interleave (the test harness runs #[test] fns concurrently).
+static OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn run_world(cfg: &SystemConfig, trace: &Trace, signals: &GridSignals) -> SimResult {
+    let mut sched = SlitScheduler::new(cfg, SlitVariant::Balance);
+    simulate(cfg, trace, signals, &mut sched, 9)
+}
+
+#[test]
+fn same_seed_same_objectives_for_any_thread_count() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 3;
+    // wall-clock must never truncate the search, or timing differences
+    // between thread counts would leak into the result
+    cfg.opt.budget_s = 1e9;
+    let trace = Trace::generate(&cfg, cfg.epochs, 9);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, 9);
+
+    threadpool::set_thread_override(1);
+    let serial = run_world(&cfg, &trace, &signals);
+
+    threadpool::set_thread_override(threadpool::hardware_threads().max(4));
+    let parallel = run_world(&cfg, &trace, &signals);
+
+    threadpool::set_thread_override(0);
+    let default = run_world(&cfg, &trace, &signals);
+
+    assert_eq!(serial.objectives(), parallel.objectives());
+    assert_eq!(serial.objectives(), default.objectives());
+    assert_eq!(serial.total.requests, parallel.total.requests);
+    assert_eq!(serial.total.dropped, parallel.total.dropped);
+    assert_eq!(serial.total.e_it_j, parallel.total.e_it_j);
+    assert_eq!(serial.total.ttft_sum_s, parallel.total.ttft_sum_s);
+    // per-epoch plans are bit-identical too
+    for (a, b) in serial.per_epoch.iter().zip(&parallel.per_epoch) {
+        assert_eq!(a.plan, b.plan, "epoch {} plan diverged", a.epoch);
+    }
+}
+
+#[test]
+fn scenario_worlds_are_thread_count_invariant_too() {
+    let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 2;
+    cfg.opt.budget_s = 1e9;
+    let world = Scenario::CarbonSpike.build(&cfg, cfg.epochs, 5);
+
+    threadpool::set_thread_override(1);
+    let serial = run_world(&world.cfg, &world.trace, &world.signals);
+    threadpool::set_thread_override(8);
+    let parallel = run_world(&world.cfg, &world.trace, &world.signals);
+    threadpool::set_thread_override(0);
+
+    assert_eq!(serial.objectives(), parallel.objectives());
+}

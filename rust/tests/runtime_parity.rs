@@ -11,11 +11,18 @@ use slit::eval::{AnalyticEvaluator, BatchEvaluator, EvalConsts};
 use slit::opt::{SlitOptimizer, SlitVariant};
 use slit::plan::Plan;
 use slit::power::GridSignals;
-use slit::runtime::{artifacts_dir, artifacts_present, Engine, HloPlanEvaluator, HloPredictor};
+use slit::runtime::{
+    artifacts_dir, artifacts_present, pjrt_enabled, Engine, HloPlanEvaluator,
+    HloPredictor,
+};
 use slit::trace::Trace;
 use slit::util::rng::Rng;
 
 fn engine() -> Option<Arc<Engine>> {
+    if !pjrt_enabled() {
+        eprintln!("SKIP: built without the `pjrt` feature (stub engine)");
+        return None;
+    }
     if !artifacts_present() {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
         return None;

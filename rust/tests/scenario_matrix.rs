@@ -1,0 +1,143 @@
+//! Scenario-matrix integration: every named workload/grid regime ×
+//! (SLIT target variant, Helix, Splitwise) on the discrete simulator.
+//!
+//! The paper's qualitative claim, generalised across regimes: on the
+//! objective a scenario stresses, the matching SLIT variant must stay
+//! non-dominated against both baselines — and on the sustainability axes
+//! its scale-to-zero + grid-aware routing must win by a wide margin.
+
+use slit::baselines::{HelixScheduler, SplitwiseScheduler};
+use slit::config::{
+    SystemConfig, OBJ_CARBON, OBJ_NAMES, OBJ_TTFT, OBJ_WATER,
+};
+use slit::opt::{SlitScheduler, SlitVariant};
+use slit::pareto::dominates;
+use slit::scenario::Scenario;
+use slit::sim::{simulate, Scheduler, SimResult};
+
+/// Test-scale config with enough pressure that schedulers differ. The
+/// generation count bounds the runtime; the wall-clock budget is kept far
+/// above it so a slow CI box cannot truncate the search and flake the
+/// quantitative margins below.
+fn pressured_config() -> SystemConfig {
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 4;
+    cfg.opt.budget_s = 60.0;
+    cfg.opt.generations = 5;
+    cfg.workload.base_requests_per_epoch = 1200.0;
+    cfg
+}
+
+fn variant_for(obj: usize) -> SlitVariant {
+    match obj {
+        OBJ_TTFT => SlitVariant::Ttft,
+        OBJ_CARBON => SlitVariant::Carbon,
+        OBJ_WATER => SlitVariant::Water,
+        _ => SlitVariant::Cost,
+    }
+}
+
+#[test]
+fn slit_stays_nondominated_on_target_objective_in_every_scenario() {
+    let base = pressured_config();
+    for sc in Scenario::named() {
+        let world = sc.build(&base, base.epochs, 42);
+        let target = sc.target_objective();
+        let run = |s: &mut dyn Scheduler| -> SimResult {
+            simulate(&world.cfg, &world.trace, &world.signals, s, 42)
+        };
+        let helix = run(&mut HelixScheduler);
+        let splitwise = run(&mut SplitwiseScheduler);
+        let mut slit_sched =
+            SlitScheduler::new(&world.cfg, variant_for(target));
+        let slit = run(&mut slit_sched);
+
+        let so = slit.objectives();
+        let ho = helix.objectives();
+        let po = splitwise.objectives();
+        assert!(slit.total.requests > 0.0, "{}: no traffic", sc.name());
+
+        // non-domination: no baseline beats SLIT on every axis at once
+        assert!(
+            !dominates(&ho, &so),
+            "{}: helix dominates slit ({ho:?} vs {so:?})",
+            sc.name()
+        );
+        assert!(
+            !dominates(&po, &so),
+            "{}: splitwise dominates slit ({po:?} vs {so:?})",
+            sc.name()
+        );
+
+        // ...and on the regime's stressed (sustainability) objective the
+        // win must be wide, as in Fig. 4
+        assert!(
+            so[target] < 0.75 * ho[target],
+            "{} ({}): slit {} vs helix {}",
+            sc.name(),
+            OBJ_NAMES[target],
+            so[target],
+            ho[target]
+        );
+        assert!(
+            so[target] < 0.75 * po[target],
+            "{} ({}): slit {} vs splitwise {}",
+            sc.name(),
+            OBJ_NAMES[target],
+            so[target],
+            po[target]
+        );
+    }
+}
+
+#[test]
+fn named_scenarios_actually_change_the_world() {
+    let base = pressured_config();
+    let b = Scenario::Baseline.build(&base, base.epochs, 7);
+    for sc in Scenario::named() {
+        let w = sc.build(&base, base.epochs, 7);
+        let changed = w.cfg != b.cfg
+            || w.trace.epochs != b.trace.epochs
+            || w.signals.ci != b.signals.ci;
+        assert!(changed, "{} did not alter the world", sc.name());
+    }
+}
+
+#[test]
+fn scenario_worlds_account_all_frameworks_consistently() {
+    // every framework must serve (or account as dropped) the same request
+    // mass within one scenario world
+    let base = pressured_config();
+    for sc in [Scenario::RegionalOutage, Scenario::BurstyHeavyTail] {
+        let world = sc.build(&base, base.epochs, 11);
+        // the simulator samples round(n_req) requests per class
+        let expected: f64 = world.trace.epochs[..world.cfg.epochs]
+            .iter()
+            .map(|e| {
+                e.classes.iter().map(|c| c.n_req.round()).sum::<f64>()
+            })
+            .sum();
+        let mut frameworks: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(HelixScheduler),
+            Box::new(SplitwiseScheduler),
+        ];
+        for f in &mut frameworks {
+            let r = simulate(
+                &world.cfg,
+                &world.trace,
+                &world.signals,
+                f.as_mut(),
+                11,
+            );
+            assert!(
+                (r.total.requests - expected).abs() < 1e-6,
+                "{}/{}: {} vs {}",
+                sc.name(),
+                r.name,
+                r.total.requests,
+                expected
+            );
+            assert!(r.total.e_tot_j >= r.total.e_it_j);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io registry, so this vendored crate covers
+//! exactly the API surface the workspace uses: [`Error`], [`Result`], and
+//! the `anyhow!` / `bail!` / `ensure!` macros, plus `From<E: std::error::
+//! Error>` so `?` converts std errors. The real crate additionally carries
+//! source chains and backtraces; this one flattens everything to a message,
+//! which is all the callers format (`{e}` / `{e:#}`).
+
+use std::fmt;
+
+/// A message-carrying error type. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From` impl below does not overlap
+/// with the reflexive `impl From<T> for T` (same trick as the real crate).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    fn ensured(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        ensure!(x < 100);
+        Ok(x)
+    }
+
+    fn bailing() -> Result<()> {
+        bail!("bailed with {}", 42)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let v = 7;
+        let e = anyhow!("value {v} and {}", 8);
+        assert_eq!(e.to_string(), "value 7 and 8");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(ensured(5).unwrap(), 5);
+        let e = ensured(-1).unwrap_err();
+        assert_eq!(e.to_string(), "x must be positive, got -1");
+        let e = ensured(200).unwrap_err();
+        assert!(e.to_string().contains("condition failed"));
+        let e = bailing().unwrap_err();
+        assert_eq!(e.to_string(), "bailed with 42");
+    }
+
+    #[test]
+    fn display_alternate_matches_plain() {
+        let e = anyhow!("msg");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+        assert_eq!(format!("{e:?}"), "msg");
+    }
+}
