@@ -138,7 +138,7 @@ fn main() {
     // deliberately stale (previous-epoch) forecast by zeroing the predictor
     // via a one-epoch-shifted trace comparison
     {
-        use slit::cli::make_scheduler;
+        use slit::registry;
         use slit::sim::simulate;
         let mut small = SystemConfig::paper_default();
         small.epochs = 8;
@@ -151,7 +151,7 @@ fn main() {
         let trace = Trace::generate(&small, small.epochs, small.seed);
         let signals = GridSignals::generate(&small, small.epochs, small.seed);
         let mut sched =
-            make_scheduler("slit-balance", &small, None).expect("scheduler");
+            registry::build("slit-balance", &small, None).expect("scheduler");
         let live = simulate(&small, &trace, &signals, sched.as_mut(), 1);
         bench.record_value(
             "ablation: predictor live ttft",

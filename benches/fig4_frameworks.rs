@@ -7,9 +7,9 @@
 //! single-objective SLIT variants dominate their metric, SLIT-Balance
 //! beats Helix everywhere.
 
-use slit::cli::{framework_names, make_scheduler};
 use slit::config::{SystemConfig, N_OBJ, OBJ_NAMES};
 use slit::power::GridSignals;
+use slit::registry;
 use slit::sim::simulate;
 use slit::trace::Trace;
 use slit::util::benchkit::Bench;
@@ -30,13 +30,10 @@ fn main() {
     let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
 
     let mut objs: Vec<(String, [f64; N_OBJ])> = Vec::new();
-    for name in framework_names() {
-        if name == "round-robin" {
-            continue;
-        }
-        let mut sched = make_scheduler(name, &cfg, None).expect("scheduler");
+    for spec in registry::all().iter().filter(|f| f.in_paper_set) {
+        let mut sched = (spec.build)(&cfg);
         let res = simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
-        objs.push((name.to_string(), res.objectives()));
+        objs.push((spec.name.to_string(), res.objectives()));
     }
 
     let base = objs
@@ -58,7 +55,7 @@ fn main() {
     for name in ["helix", "splitwise", "slit-balance"] {
         bench.bench(&format!("simulate 12 epochs: {name}"), || {
             let mut sched =
-                make_scheduler(name, &cfg, None).expect("scheduler");
+                registry::build(name, &cfg, None).expect("scheduler");
             let r =
                 simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
             core::hint::black_box(r.total.requests);

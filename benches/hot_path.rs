@@ -163,13 +163,17 @@ fn main() {
 
     // --- Helix MCMF ----------------------------------------------------------
     bench.bench("helix: mcmf plan for one epoch", || {
+        use slit::cluster::ClusterState;
         use slit::sim::{EpochContext, Scheduler};
         let predicted = trace.epochs[4].clone();
+        let cluster = ClusterState::from_config(&cfg);
         let ctx = EpochContext {
             cfg: &cfg,
             epoch: 4,
             predicted: &predicted,
             evaluator: &ev,
+            cluster: &cluster,
+            prev: None,
         };
         let mut h = slit::baselines::HelixScheduler;
         core::hint::black_box(h.plan(&ctx));

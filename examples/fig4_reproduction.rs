@@ -9,9 +9,10 @@
 //! results/fig4.json + a markdown table on stdout (EXPERIMENTS.md records
 //! the canonical run).
 
-use slit::cli::{framework_names, make_scheduler, print_comparison, write_results_json};
+use slit::cli::{print_comparison, write_results_json};
 use slit::config::{SystemConfig, N_OBJ, OBJ_NAMES};
 use slit::power::GridSignals;
+use slit::registry;
 use slit::sim::{simulate, SimResult};
 use slit::trace::Trace;
 
@@ -40,16 +41,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut results: Vec<SimResult> = Vec::new();
-    for name in framework_names() {
-        if name == "round-robin" {
-            continue; // not part of the paper's Fig. 4 comparison set
-        }
-        let mut sched = make_scheduler(name, &cfg, None)?;
+    // the registry's paper set = the Fig. 4 comparison rows
+    for spec in registry::all().iter().filter(|f| f.in_paper_set) {
+        let mut sched = (spec.build)(&cfg);
         let t = std::time::Instant::now();
         let r = simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
         println!(
-            "  {name:<14} done in {:>6.1}s (decision time avg \
+            "  {:<14} done in {:>6.1}s (decision time avg \
              {:.3}s/epoch)",
+            spec.name,
             t.elapsed().as_secs_f64(),
             r.per_epoch.iter().map(|e| e.decision_s).sum::<f64>()
                 / r.per_epoch.len() as f64

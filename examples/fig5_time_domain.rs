@@ -6,8 +6,8 @@
 //! Writes results/fig5.csv with one row per (framework, epoch) — ready for
 //! any plotting tool — and prints a per-framework epoch summary.
 
-use slit::cli::make_scheduler;
 use slit::config::SystemConfig;
+use slit::registry;
 use slit::power::GridSignals;
 use slit::sim::{simulate, SimResult};
 use slit::trace::Trace;
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let frameworks = ["helix", "splitwise", "slit-balance"];
     let mut results: Vec<SimResult> = Vec::new();
     for name in frameworks {
-        let mut sched = make_scheduler(name, &cfg, None)?;
+        let mut sched = registry::build(name, &cfg, None)?;
         let t = std::time::Instant::now();
         results.push(simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed));
         eprintln!("  {name}: {:.1}s", t.elapsed().as_secs_f64());

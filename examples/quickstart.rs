@@ -6,10 +6,9 @@
 //! Takes ~10 s. For the full paper-scale reproduction see
 //! examples/fig4_reproduction.rs.
 
-use slit::baselines::{HelixScheduler, SplitwiseScheduler};
 use slit::config::SystemConfig;
-use slit::opt::{SlitScheduler, SlitVariant};
 use slit::power::GridSignals;
+use slit::registry;
 use slit::sim::{simulate, Scheduler, SimResult};
 use slit::trace::Trace;
 
@@ -32,12 +31,11 @@ fn main() -> anyhow::Result<()> {
             / cfg.epochs as f64,
     );
 
-    let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
-        Box::new(HelixScheduler),
-        Box::new(SplitwiseScheduler),
-        Box::new(SlitScheduler::new(&cfg, SlitVariant::Balance)),
-        Box::new(SlitScheduler::new(&cfg, SlitVariant::Carbon)),
-    ];
+    let mut schedulers: Vec<Box<dyn Scheduler>> =
+        ["helix", "splitwise", "slit-balance", "slit-carbon"]
+            .into_iter()
+            .map(|name| registry::build(name, &cfg, None))
+            .collect::<anyhow::Result<_>>()?;
 
     let mut results: Vec<SimResult> = Vec::new();
     for s in &mut schedulers {

@@ -181,11 +181,14 @@ mod tests {
             EvalConsts::from_physics(&cfg.physics),
         );
         let predicted = trace.epochs[1].clone();
+        let cluster = crate::cluster::ClusterState::from_config(cfg);
         let ctx = EpochContext {
             cfg,
             epoch: 1,
             predicted: &predicted,
             evaluator: &ev,
+            cluster: &cluster,
+            prev: None,
         };
         let mut h = HelixScheduler;
         (h.plan(&ctx), ev)
@@ -261,11 +264,14 @@ mod tests {
             dp,
             EvalConsts::from_physics(&cfg.physics),
         );
+        let cluster = crate::cluster::ClusterState::from_config(&cfg);
         let ctx = EpochContext {
             cfg: &cfg,
             epoch: 0,
             predicted: &zero,
             evaluator: &ev,
+            cluster: &cluster,
+            prev: None,
         };
         let plan = HelixScheduler.plan(&ctx);
         assert!(plan.is_valid());

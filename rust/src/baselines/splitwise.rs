@@ -40,12 +40,14 @@ impl Scheduler for SplitwiseScheduler {
         let cp = &ev.cp;
         let epoch_s = cfg.physics.epoch_s;
 
-        // remaining pool capacity per site, node-seconds
+        // remaining pool capacity per site, node-seconds — from the LIVE
+        // cluster state, so mid-run outages/brownouts shrink the pools
         let mut prefill_cap = vec![0.0f64; l_n];
         let mut decode_cap = vec![0.0f64; l_n];
-        for (l, dc) in cfg.datacenters.iter().enumerate() {
+        for l in 0..l_n {
+            let live = ctx.cluster.nodes(l);
             for (ti, nt) in cfg.node_types.iter().enumerate() {
-                let budget = dc.nodes_per_type[ti] as f64 * epoch_s;
+                let budget = live[ti] as f64 * epoch_s;
                 if is_prefill_type(&nt.name) {
                     prefill_cap[l] += budget;
                 } else {
@@ -175,11 +177,14 @@ mod tests {
             EvalConsts::from_physics(&cfg.physics),
         );
         let predicted = trace.epochs[1].clone();
+        let cluster = crate::cluster::ClusterState::from_config(cfg);
         let ctx = EpochContext {
             cfg,
             epoch: 1,
             predicted: &predicted,
             evaluator: &ev,
+            cluster: &cluster,
+            prev: None,
         };
         (SplitwiseScheduler.plan(&ctx), ev)
     }
@@ -220,6 +225,54 @@ mod tests {
             (0..ev.dcs()).filter(|&l| plan.get(k, l) > 0.05).count() > 1
         });
         assert!(spread);
+    }
+
+    #[test]
+    fn dark_region_receives_no_assignment() {
+        use crate::cluster::{ClusterAction, ClusterState};
+        let cfg = SystemConfig::paper_default();
+        let trace = Trace::generate(&cfg, 4, 5);
+        let signals = GridSignals::generate(&cfg, 4, 5);
+        let mut cluster = ClusterState::from_config(&cfg);
+        cluster.apply(&ClusterAction::ScaleRegion {
+            region: 2,
+            frac: 0.0,
+        });
+        let (cp, dp) = crate::cluster::build_panels_dyn(
+            &cfg,
+            &cluster,
+            &signals,
+            1,
+            &trace.epochs[1],
+            cfg.physics.pr_idle,
+        );
+        let ev = AnalyticEvaluator::new(
+            cp,
+            dp,
+            EvalConsts::from_physics(&cfg.physics),
+        );
+        let predicted = trace.epochs[1].clone();
+        let ctx = EpochContext {
+            cfg: &cfg,
+            epoch: 1,
+            predicted: &predicted,
+            evaluator: &ev,
+            cluster: &cluster,
+            prev: None,
+        };
+        let plan = SplitwiseScheduler.plan(&ctx);
+        assert!(plan.is_valid());
+        for k in 0..ev.classes() {
+            for (l, d) in cfg.datacenters.iter().enumerate() {
+                if d.region == 2 {
+                    assert!(
+                        plan.get(k, l) < 1e-9,
+                        "class {k} routed to dark {}",
+                        d.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -2,24 +2,30 @@
 //! clap). Subcommands:
 //!
 //! ```text
-//! slit simulate   run frameworks over a trace, print the Fig.4-style table
-//! slit trace      generate the synthetic BurstGPT-like trace (Fig. 1 data)
-//! slit pareto     dump one epoch's Pareto front (front.json)
-//! slit serve      start the online coordinator + TCP front
-//! slit artifacts  check the AOT artifacts load and match the build
-//! slit config     write the paper-default config as JSON
+//! slit simulate    run frameworks over a trace, print the Fig.4-style table
+//! slit trace       generate the synthetic BurstGPT-like trace (Fig. 1 data)
+//! slit frameworks  list the registered scheduling frameworks
+//! slit scenarios   list the named workload/grid regimes
+//! slit pareto      dump one epoch's Pareto front (front.json)
+//! slit serve       start the online coordinator + TCP front
+//! slit artifacts   check the AOT artifacts load and match the build
+//! slit config      write the paper-default config as JSON
 //! ```
+//!
+//! Framework names resolve through `crate::registry` (the single source
+//! of truth); this module contains no framework string-matching.
 
 use std::collections::BTreeMap;
 
-use crate::baselines::{HelixScheduler, RoundRobinScheduler, SplitwiseScheduler};
 use crate::config::{SystemConfig, N_OBJ, OBJ_NAMES};
 use crate::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
-use crate::opt::{SlitScheduler, SlitVariant};
+use crate::opt::SlitVariant;
 use crate::power::GridSignals;
+use crate::registry;
 use crate::runtime::{artifacts_dir, artifacts_present, Engine};
-use crate::scenario::Scenario;
-use crate::sim::{simulate, Scheduler, SimResult};
+use crate::scenario::{Scenario, ScenarioWorld};
+use crate::session::CsvEpochObserver;
+use crate::sim::{Scheduler, SimResult};
 use crate::trace::Trace;
 use crate::util::json::Json;
 
@@ -101,43 +107,18 @@ pub fn load_config(args: &Args) -> anyhow::Result<SystemConfig> {
     Ok(cfg)
 }
 
-/// All framework names `simulate --framework` accepts.
+/// All framework names `simulate --framework` accepts (registry order).
 pub fn framework_names() -> Vec<&'static str> {
-    let mut v = vec!["helix", "splitwise", "round-robin"];
-    for variant in SlitVariant::all() {
-        v.push(variant.name());
-    }
-    v
+    registry::names()
 }
 
-/// Instantiate a scheduler by name.
+/// Instantiate a scheduler by name — a thin alias over the registry.
 pub fn make_scheduler(
     name: &str,
     cfg: &SystemConfig,
     engine: Option<std::sync::Arc<Engine>>,
 ) -> anyhow::Result<Box<dyn Scheduler>> {
-    let sched: Box<dyn Scheduler> = match name {
-        "helix" => Box::new(HelixScheduler),
-        "splitwise" => Box::new(SplitwiseScheduler),
-        "round-robin" => Box::new(RoundRobinScheduler),
-        slit_name => {
-            let variant = SlitVariant::all()
-                .into_iter()
-                .find(|v| v.name() == slit_name)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown framework '{slit_name}' (try: {})",
-                        framework_names().join(", ")
-                    )
-                })?;
-            let mut s = SlitScheduler::new(cfg, variant);
-            if let Some(engine) = engine {
-                s = s.with_engine(engine);
-            }
-            Box::new(s)
-        }
-    };
-    Ok(sched)
+    registry::build(name, cfg, engine)
 }
 
 /// Resolve the `--scenario` flag (defaults to the untouched baseline).
@@ -157,22 +138,48 @@ pub fn load_scenario(args: &Args) -> anyhow::Result<Scenario> {
     }
 }
 
-/// Run every named framework over one shared world, each framework on its
-/// own OS thread — Fig. 4-style comparisons spend almost all their wall
-/// time inside per-framework `simulate` calls that share nothing but the
-/// read-only trace/signals, so they scale near-linearly with cores.
-/// Results come back in input order, and per-framework seeding matches the
-/// sequential path exactly. The one caveat: SLIT's per-epoch wall-clock
-/// budget (`--budget`) is the sole time-dependent input, so on a machine
-/// where concurrent frameworks contend for cores a *tight* budget can
-/// truncate the search at different points than an uncontended sequential
-/// run would — budget-independent schedulers are bit-for-bit identical.
+/// Per-framework epoch-CSV path: `out.csv` -> `out.helix.csv` when more
+/// than one framework runs (each session streams its own time series).
+/// Only the file name is split, so dotted directory names stay intact.
+fn epoch_csv_path(base: &str, framework: &str, multi: bool) -> String {
+    if !multi {
+        return base.to_string();
+    }
+    let (dir, file) = match base.rsplit_once('/') {
+        Some((dir, file)) => (Some(dir), file),
+        None => (None, base),
+    };
+    let suffixed = match file.rsplit_once('.') {
+        Some((stem, ext)) => format!("{stem}.{framework}.{ext}"),
+        None => format!("{file}.{framework}"),
+    };
+    match dir {
+        Some(dir) => format!("{dir}/{suffixed}"),
+        None => suffixed,
+    }
+}
+
+/// Run every named framework over one shared scenario world, each
+/// framework on its own OS thread — Fig. 4-style comparisons spend almost
+/// all their wall time inside per-framework sessions that share nothing
+/// but the read-only trace/signals, so they scale near-linearly with
+/// cores. Each thread drives a `SimSession` with the world's scheduled
+/// `ScenarioEvent`s attached (rolling outages etc. fire identically for
+/// every framework). Results come back in input order, and per-framework
+/// seeding matches the sequential path exactly. The one caveat: SLIT's
+/// per-epoch wall-clock budget (`--budget`) is the sole time-dependent
+/// input, so on a machine where concurrent frameworks contend for cores a
+/// *tight* budget can truncate the search at different points than an
+/// uncontended sequential run would — budget-independent schedulers are
+/// bit-for-bit identical.
+///
+/// `epoch_csv` is `(base path, multi)`: when set, each session streams its
+/// per-epoch time series to [`epoch_csv_path`]`(base, name, multi)`.
 pub fn simulate_frameworks(
-    cfg: &SystemConfig,
-    trace: &Trace,
-    signals: &GridSignals,
+    world: &ScenarioWorld,
     names: &[String],
     engine: Option<std::sync::Arc<Engine>>,
+    epoch_csv: Option<(&str, bool)>,
 ) -> anyhow::Result<Vec<SimResult>> {
     std::thread::scope(|scope| {
         let handles: Vec<_> = names
@@ -180,15 +187,18 @@ pub fn simulate_frameworks(
             .map(|name| {
                 let engine = engine.clone();
                 scope.spawn(move || -> anyhow::Result<SimResult> {
-                    let mut sched = make_scheduler(name, cfg, engine)?;
+                    let mut sched =
+                        registry::build(name, &world.cfg, engine)?;
+                    let mut session =
+                        world.session(sched.as_mut(), world.cfg.seed);
+                    if let Some((base, multi)) = epoch_csv {
+                        let path = epoch_csv_path(base, name, multi);
+                        session.add_observer(Box::new(
+                            CsvEpochObserver::create(&path)?,
+                        ));
+                    }
                     let t = std::time::Instant::now();
-                    let res = simulate(
-                        cfg,
-                        trace,
-                        signals,
-                        sched.as_mut(),
-                        cfg.seed,
-                    );
+                    let res = session.run();
                     eprintln!(
                         "  {name}: {:.1}s, {} requests",
                         t.elapsed().as_secs_f64(),
@@ -232,6 +242,8 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // contention from concurrent runs; sequential execution reproduces the
     // uncontended paper-comparison numbers exactly.
     let serial = args.bool("serial");
+    let epoch_csv = args.get("epoch-csv");
+    let multi = which.len() > 1;
     eprintln!(
         "simulating {} framework(s) over {} epochs (scenario: {}{}) ...",
         which.len(),
@@ -239,26 +251,22 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         scenario.name(),
         if serial { ", serial" } else { "" }
     );
+    // the per-framework CSV suffix decision is made once here (`multi`)
+    // and applied inside simulate_frameworks, for both execution modes
+    let csv = epoch_csv.map(|base| (base, multi));
     let results = if serial {
         let mut out = Vec::with_capacity(which.len());
         for name in &which {
             out.extend(simulate_frameworks(
-                &world.cfg,
-                &world.trace,
-                &world.signals,
+                &world,
                 std::slice::from_ref(name),
                 engine.clone(),
+                csv,
             )?);
         }
         out
     } else {
-        simulate_frameworks(
-            &world.cfg,
-            &world.trace,
-            &world.signals,
-            &which,
-            engine,
-        )?
+        simulate_frameworks(&world, &which, engine, csv)?
     };
     print_comparison(&results);
 
@@ -279,6 +287,26 @@ pub fn cmd_scenarios(_args: &Args) -> anyhow::Result<()> {
             s.name(),
             OBJ_NAMES[s.target_objective()],
             s.description()
+        );
+    }
+    Ok(())
+}
+
+/// `slit frameworks` — list the registered scheduling frameworks.
+pub fn cmd_frameworks(_args: &Args) -> anyhow::Result<()> {
+    println!("| framework | aliases | paper set | description |");
+    println!("|---|---|---|---|");
+    for spec in registry::all() {
+        println!(
+            "| {} | {} | {} | {} |",
+            spec.name,
+            if spec.aliases.is_empty() {
+                "-".to_string()
+            } else {
+                spec.aliases.join(", ")
+            },
+            if spec.in_paper_set { "yes" } else { "no" },
+            spec.description
         );
     }
     Ok(())
@@ -496,21 +524,25 @@ slit — sustainable geo-distributed LLM scheduling (SLIT reproduction)
 USAGE: slit <command> [flags]
 
 COMMANDS:
-  simulate   run frameworks concurrently over a trace (Fig. 4/5 driver)
-             --framework all|helix|splitwise|round-robin|slit-{carbon,ttft,water,cost,balance}
-             --scenario baseline|diurnal|bursty|outage|carbon-spike|water-summer
-             --scale paper|small   --epochs N   --seed N   --out results.json
-             --use-hlo (search on the AOT/PJRT artifact)   --budget S
-             --serial (one framework at a time; exact timing reproducibility
-                       when a tight --budget bounds the SLIT search)
-  trace      write the Fig. 1 workload series  --epochs N --out trace.csv
-             --scenario NAME
-  scenarios  list the named workload/grid regimes
-  pareto     dump one epoch's Pareto front     --epoch N --out front.json
-  serve      start the online coordinator      --port N --variant NAME
-             --epoch-seconds F --use-hlo
-  artifacts  verify AOT artifacts load + shape-check
-  config     write the resolved config         --out slit-config.json
+  simulate    run frameworks concurrently over a trace (Fig. 4/5 driver)
+              --framework all|NAME (see `slit frameworks` for the registry)
+              --scenario NAME (see `slit scenarios`; e.g. outage-rolling
+                               takes a region dark mid-run and restores it)
+              --scale paper|small   --epochs N   --seed N   --out results.json
+              --epoch-csv FILE (stream the per-epoch time series; one file
+                                per framework when several run)
+              --use-hlo (search on the AOT/PJRT artifact)   --budget S
+              --serial (one framework at a time; exact timing reproducibility
+                        when a tight --budget bounds the SLIT search)
+  trace       write the Fig. 1 workload series  --epochs N --out trace.csv
+              --scenario NAME
+  frameworks  list the registered scheduling frameworks (names, aliases)
+  scenarios   list the named workload/grid regimes
+  pareto      dump one epoch's Pareto front     --epoch N --out front.json
+  serve       start the online coordinator      --port N --variant NAME
+              --epoch-seconds F --use-hlo
+  artifacts   verify AOT artifacts load + shape-check
+  config      write the resolved config         --out slit-config.json
 ";
 
 /// Entry point used by main.rs.
@@ -519,6 +551,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     match args.command.as_str() {
         "simulate" => cmd_simulate(&args),
         "trace" => cmd_trace(&args),
+        "frameworks" => cmd_frameworks(&args),
         "scenarios" => cmd_scenarios(&args),
         "pareto" => cmd_pareto(&args),
         "serve" => cmd_serve(&args),
@@ -648,19 +681,29 @@ mod tests {
         cfg.epochs = 2;
         let trace = Trace::generate(&cfg, cfg.epochs, cfg.seed);
         let signals = GridSignals::generate(&cfg, cfg.epochs, cfg.seed);
+        let seed = cfg.seed;
+        let world = ScenarioWorld {
+            cfg,
+            trace,
+            signals,
+            events: Vec::new(),
+        };
         let names: Vec<String> = vec![
             "round-robin".into(),
             "helix".into(),
             "splitwise".into(),
         ];
-        let par =
-            simulate_frameworks(&cfg, &trace, &signals, &names, None)
-                .unwrap();
+        let par = simulate_frameworks(&world, &names, None, None).unwrap();
         assert_eq!(par.len(), 3);
         for (name, res) in names.iter().zip(&par) {
-            let mut sched = make_scheduler(name, &cfg, None).unwrap();
-            let seq =
-                simulate(&cfg, &trace, &signals, sched.as_mut(), cfg.seed);
+            let mut sched = make_scheduler(name, &world.cfg, None).unwrap();
+            let seq = crate::sim::simulate(
+                &world.cfg,
+                &world.trace,
+                &world.signals,
+                sched.as_mut(),
+                seed,
+            );
             assert_eq!(res.name, seq.name);
             assert_eq!(res.total.requests, seq.total.requests);
             assert_eq!(res.total.carbon_kg, seq.total.carbon_kg);
@@ -672,5 +715,68 @@ mod tests {
     fn scenarios_command_lists_all() {
         let a = Args::parse(&argv("scenarios")).unwrap();
         cmd_scenarios(&a).unwrap();
+    }
+
+    #[test]
+    fn frameworks_command_lists_registry() {
+        let a = Args::parse(&argv("frameworks")).unwrap();
+        cmd_frameworks(&a).unwrap();
+        // the CLI's framework vocabulary IS the registry's
+        assert_eq!(framework_names(), crate::registry::names());
+    }
+
+    #[test]
+    fn epoch_csv_paths_split_per_framework() {
+        assert_eq!(epoch_csv_path("out.csv", "helix", false), "out.csv");
+        assert_eq!(
+            epoch_csv_path("out.csv", "helix", true),
+            "out.helix.csv"
+        );
+        assert_eq!(
+            epoch_csv_path("series", "slit-balance", true),
+            "series.slit-balance"
+        );
+        // dotted directory names are left intact: only the file name splits
+        assert_eq!(
+            epoch_csv_path("results.v2/series", "helix", true),
+            "results.v2/series.helix"
+        );
+        assert_eq!(
+            epoch_csv_path("results.v2/series.csv", "helix", true),
+            "results.v2/series.helix.csv"
+        );
+    }
+
+    #[test]
+    fn simulate_rolling_outage_end_to_end_with_epoch_csv() {
+        let tmp = std::env::temp_dir().join("slit_cli_rolling.json");
+        let csv = std::env::temp_dir().join("slit_cli_rolling.csv");
+        let a = Args::parse(&argv(&format!(
+            "simulate --scale small --epochs 4 --framework round-robin \
+             --scenario outage-rolling --out {} --epoch-csv {}",
+            tmp.display(),
+            csv.display()
+        )))
+        .unwrap();
+        cmd_simulate(&a).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert!(Json::parse(&text).unwrap().get("round-robin").is_some());
+        // the streamed time series shows the capacity dip: epoch 1 (the
+        // 4-epoch schedule darkens north-america at epochs/4 = 1) has
+        // fewer live nodes than epoch 0
+        let (header, rows) = crate::util::csv::read_file(&csv).unwrap();
+        let col = header
+            .iter()
+            .position(|h| h == "nodes_total")
+            .expect("nodes_total column");
+        let nodes: Vec<f64> = rows
+            .iter()
+            .map(|r| r[col].parse::<f64>().unwrap())
+            .collect();
+        assert_eq!(nodes.len(), 4);
+        assert!(nodes[1] < nodes[0], "no dip in csv: {nodes:?}");
+        assert_eq!(nodes[2], nodes[0], "no recovery in csv: {nodes:?}");
+        std::fs::remove_file(&tmp).ok();
+        std::fs::remove_file(&csv).ok();
     }
 }

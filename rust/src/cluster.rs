@@ -12,6 +12,115 @@ use crate::config::{DatacenterSpec, NodeType, SystemConfig, MODELS};
 use crate::power::GridSignals;
 use crate::trace::EpochLoad;
 
+/// Mutable per-run cluster topology: the live node counts a
+/// [`crate::session::SimSession`] owns and [`ClusterAction`]s mutate
+/// mid-run (rolling outages, node additions, brownouts). Derived from,
+/// but no longer identical to, the static `SystemConfig` — panels and
+/// capacity bookkeeping are rebuilt from this state every epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterState {
+    /// Config-derived counts, kept for exact restores: `[dc][node_type]`.
+    baseline: Vec<Vec<usize>>,
+    /// Live counts the current epoch runs against: `[dc][node_type]`.
+    nodes: Vec<Vec<usize>>,
+    /// Region of each site (so region-wide actions need no config).
+    regions: Vec<usize>,
+}
+
+/// One mutation of the live cluster topology.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterAction {
+    /// Scale every site in a region to `frac` of its baseline node count
+    /// (`frac = 0.0` takes the region fully dark).
+    ScaleRegion { region: usize, frac: f64 },
+    /// Restore every site in a region to its baseline counts.
+    RestoreRegion { region: usize },
+    /// Scale one site to `frac` of its baseline node count (brownout).
+    ScaleSite { dc: usize, frac: f64 },
+    /// Restore one site to its baseline counts.
+    RestoreSite { dc: usize },
+    /// Replace one site's per-type node counts outright (node additions).
+    SetSite { dc: usize, nodes_per_type: Vec<usize> },
+}
+
+impl ClusterState {
+    pub fn from_config(cfg: &SystemConfig) -> ClusterState {
+        let baseline: Vec<Vec<usize>> = cfg
+            .datacenters
+            .iter()
+            .map(|d| d.nodes_per_type.clone())
+            .collect();
+        ClusterState {
+            nodes: baseline.clone(),
+            regions: cfg.datacenters.iter().map(|d| d.region).collect(),
+            baseline,
+        }
+    }
+
+    pub fn dcs(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Live per-type node counts of one site.
+    pub fn nodes(&self, dc: usize) -> &[usize] {
+        &self.nodes[dc]
+    }
+
+    pub fn total_nodes(&self, dc: usize) -> usize {
+        self.nodes[dc].iter().sum()
+    }
+
+    /// Live total node count per site (the Fig. 5 capacity series).
+    pub fn site_totals(&self) -> Vec<usize> {
+        (0..self.dcs()).map(|l| self.total_nodes(l)).collect()
+    }
+
+    /// True when every site still matches its config-derived baseline.
+    pub fn is_baseline(&self) -> bool {
+        self.nodes == self.baseline
+    }
+
+    fn scale_site(&mut self, dc: usize, frac: f64) {
+        let frac = frac.max(0.0);
+        self.nodes[dc] = self.baseline[dc]
+            .iter()
+            .map(|&n| (n as f64 * frac).round() as usize)
+            .collect();
+    }
+
+    pub fn apply(&mut self, action: &ClusterAction) {
+        match action {
+            ClusterAction::ScaleRegion { region, frac } => {
+                for dc in 0..self.dcs() {
+                    if self.regions[dc] == *region {
+                        self.scale_site(dc, *frac);
+                    }
+                }
+            }
+            ClusterAction::RestoreRegion { region } => {
+                for dc in 0..self.dcs() {
+                    if self.regions[dc] == *region {
+                        self.nodes[dc] = self.baseline[dc].clone();
+                    }
+                }
+            }
+            ClusterAction::ScaleSite { dc, frac } => self.scale_site(*dc, *frac),
+            ClusterAction::RestoreSite { dc } => {
+                self.nodes[*dc] = self.baseline[*dc].clone();
+            }
+            ClusterAction::SetSite { dc, nodes_per_type } => {
+                // normalise to the site's node-type arity: every consumer
+                // indexes by node-type, so a short vector is padded with
+                // zeros and extra entries are dropped rather than letting
+                // a malformed serve-time action panic the epoch clock
+                let mut nodes = nodes_per_type.clone();
+                nodes.resize(self.baseline[*dc].len(), 0);
+                self.nodes[*dc] = nodes;
+            }
+        }
+    }
+}
+
 /// Can this node type serve this model at all (parameters + some KV fit)?
 pub fn can_serve(nt: &NodeType, model_mem_gb: f64) -> bool {
     pooled_mem_gb(nt) >= model_mem_gb * 1.05
@@ -52,11 +161,11 @@ pub struct DcPanels {
     pub unused_pr: Vec<f64>,
 }
 
-/// Mean node throughput for a model at a site, weighted by node counts and
-/// restricted to types that can hold the model. tokens/s per node.
-pub fn mean_node_throughput(
+/// Mean node throughput for a model over an explicit per-type node-count
+/// vector, restricted to types that can hold the model. tokens/s per node.
+pub fn mean_node_throughput_n(
     cfg: &SystemConfig,
-    dc: &DatacenterSpec,
+    nodes_per_type: &[usize],
     model: usize,
 ) -> f64 {
     let mem = cfg.models[model].param_mem_gb;
@@ -64,8 +173,41 @@ pub fn mean_node_throughput(
     let mut den = 0.0;
     for (ti, nt) in cfg.node_types.iter().enumerate() {
         if can_serve(nt, mem) {
-            let n = dc.nodes_per_type[ti] as f64;
+            let n = nodes_per_type[ti] as f64;
             num += n * nt.thr_tokens_s[model];
+            den += n;
+        }
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Mean node throughput for a model at a site, weighted by node counts and
+/// restricted to types that can hold the model. tokens/s per node.
+pub fn mean_node_throughput(
+    cfg: &SystemConfig,
+    dc: &DatacenterSpec,
+    model: usize,
+) -> f64 {
+    mean_node_throughput_n(cfg, &dc.nodes_per_type, model)
+}
+
+/// Mean per-request decode rate over an explicit node-count vector.
+pub fn mean_decode_rate_n(
+    cfg: &SystemConfig,
+    nodes_per_type: &[usize],
+    model: usize,
+) -> f64 {
+    let mem = cfg.models[model].param_mem_gb;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (ti, nt) in cfg.node_types.iter().enumerate() {
+        if can_serve(nt, mem) {
+            let n = nodes_per_type[ti] as f64;
+            num += n * nt.decode_tokens_s[model];
             den += n;
         }
     }
@@ -82,29 +224,15 @@ pub fn mean_decode_rate(
     dc: &DatacenterSpec,
     model: usize,
 ) -> f64 {
-    let mem = cfg.models[model].param_mem_gb;
-    let mut num = 0.0;
-    let mut den = 0.0;
-    for (ti, nt) in cfg.node_types.iter().enumerate() {
-        if can_serve(nt, mem) {
-            let n = dc.nodes_per_type[ti] as f64;
-            num += n * nt.decode_tokens_s[model];
-            den += n;
-        }
-    }
-    if den > 0.0 {
-        num / den
-    } else {
-        0.0
-    }
+    mean_decode_rate_n(cfg, &dc.nodes_per_type, model)
 }
 
-/// Node-count-weighted mean TDP at a site, W.
-pub fn mean_node_tdp(cfg: &SystemConfig, dc: &DatacenterSpec) -> f64 {
+/// Node-count-weighted mean TDP over an explicit node-count vector, W.
+pub fn mean_node_tdp_n(cfg: &SystemConfig, nodes_per_type: &[usize]) -> f64 {
     let mut num = 0.0;
     let mut den = 0.0;
     for (ti, nt) in cfg.node_types.iter().enumerate() {
-        let n = dc.nodes_per_type[ti] as f64;
+        let n = nodes_per_type[ti] as f64;
         num += n * nt.tdp_w;
         den += n;
     }
@@ -115,13 +243,21 @@ pub fn mean_node_tdp(cfg: &SystemConfig, dc: &DatacenterSpec) -> f64 {
     }
 }
 
-/// Build the evaluator panels for one epoch.
+/// Node-count-weighted mean TDP at a site, W.
+pub fn mean_node_tdp(cfg: &SystemConfig, dc: &DatacenterSpec) -> f64 {
+    mean_node_tdp_n(cfg, &dc.nodes_per_type)
+}
+
+/// Build the evaluator panels for one epoch from the *live* cluster state
+/// (per-epoch node counts may differ from the config when
+/// [`ClusterAction`]s have fired).
 ///
 /// `unused_pr` is the framework's power policy for nodes not serving load
 /// this epoch: `pr_off` for schedulers that scale to zero (SLIT),
 /// `pr_idle` for always-warm baselines (Splitwise).
-pub fn build_panels(
+pub fn build_panels_dyn(
     cfg: &SystemConfig,
+    state: &ClusterState,
     signals: &GridSignals,
     epoch: usize,
     load: &EpochLoad,
@@ -146,9 +282,10 @@ pub fn build_panels(
         cp.n_req[k] = c.n_req;
         cp.tok_out[k] = c.tok_out;
         cp.mem[k] = cfg.models[model].param_mem_gb;
-        for (l, dc) in cfg.datacenters.iter().enumerate() {
-            let thr = mean_node_throughput(cfg, dc, model);
-            let dec = mean_decode_rate(cfg, dc, model);
+        for l in 0..l_n {
+            let nodes = state.nodes(l);
+            let thr = mean_node_throughput_n(cfg, nodes, model);
+            let dec = mean_decode_rate_n(cfg, nodes, model);
             cp.thr[k * l_n + l] = thr.max(1e-9);
             cp.proc[k * l_n + l] = if dec > 0.0 { 1.0 / dec } else { 1e3 };
             cp.hops[k * l_n + l] = cfg.hops(region, l);
@@ -158,15 +295,9 @@ pub fn build_panels(
     let (ci, wi, tou) = signals.at(epoch);
     let dp = DcPanels {
         dcs: l_n,
-        nodes: cfg
-            .datacenters
-            .iter()
-            .map(|d| d.total_nodes() as f64)
-            .collect(),
-        tdp: cfg
-            .datacenters
-            .iter()
-            .map(|d| mean_node_tdp(cfg, d))
+        nodes: (0..l_n).map(|l| state.total_nodes(l) as f64).collect(),
+        tdp: (0..l_n)
+            .map(|l| mean_node_tdp_n(cfg, state.nodes(l)))
             .collect(),
         cop: cfg.datacenters.iter().map(|d| d.cop).collect(),
         tou,
@@ -176,6 +307,26 @@ pub fn build_panels(
         unused_pr: vec![unused_pr; l_n],
     };
     (cp, dp)
+}
+
+/// Build the evaluator panels from the static config (the pre-`SimSession`
+/// API, kept for call sites that never mutate capacity mid-run). Identical
+/// to [`build_panels_dyn`] over `ClusterState::from_config(cfg)`.
+pub fn build_panels(
+    cfg: &SystemConfig,
+    signals: &GridSignals,
+    epoch: usize,
+    load: &EpochLoad,
+    unused_pr: f64,
+) -> (ClassPanels, DcPanels) {
+    build_panels_dyn(
+        cfg,
+        &ClusterState::from_config(cfg),
+        signals,
+        epoch,
+        load,
+        unused_pr,
+    )
 }
 
 /// Aggregate per-(site, node-type) capacity bookkeeping for the discrete
@@ -192,14 +343,18 @@ pub struct DcCapacity {
 
 impl DcCapacity {
     pub fn new(dc: &DatacenterSpec, epoch_s: f64) -> DcCapacity {
+        DcCapacity::from_nodes(&dc.nodes_per_type, epoch_s)
+    }
+
+    /// Capacity over an explicit node-count vector (live cluster state).
+    pub fn from_nodes(nodes_per_type: &[usize], epoch_s: f64) -> DcCapacity {
         DcCapacity {
-            budget_s: dc
-                .nodes_per_type
+            budget_s: nodes_per_type
                 .iter()
                 .map(|&n| n as f64 * epoch_s)
                 .collect(),
-            used_s: vec![0.0; dc.nodes_per_type.len()],
-            nodes: dc.nodes_per_type.clone(),
+            used_s: vec![0.0; nodes_per_type.len()],
+            nodes: nodes_per_type.to_vec(),
         }
     }
 
@@ -306,6 +461,94 @@ mod tests {
         let remote = cfg.datacenters.iter().position(|d| d.region == 3).unwrap();
         assert!(cp.hops[local] < cp.hops[remote]);
         let _ = l_n;
+    }
+
+    #[test]
+    fn cluster_state_actions_scale_and_restore() {
+        let cfg = SystemConfig::paper_default();
+        let mut st = ClusterState::from_config(&cfg);
+        assert!(st.is_baseline());
+        let before: Vec<usize> = st.site_totals();
+        st.apply(&ClusterAction::ScaleRegion { region: 2, frac: 0.0 });
+        assert!(!st.is_baseline());
+        for (l, d) in cfg.datacenters.iter().enumerate() {
+            if d.region == 2 {
+                assert_eq!(st.total_nodes(l), 0, "{}", d.name);
+            } else {
+                assert_eq!(st.total_nodes(l), before[l]);
+            }
+        }
+        st.apply(&ClusterAction::RestoreRegion { region: 2 });
+        assert!(st.is_baseline());
+        // site-level brownout + explicit set
+        st.apply(&ClusterAction::ScaleSite { dc: 0, frac: 0.5 });
+        assert!(st.total_nodes(0) < before[0]);
+        st.apply(&ClusterAction::SetSite {
+            dc: 0,
+            nodes_per_type: vec![1, 1, 1, 1, 1, 1],
+        });
+        assert_eq!(st.total_nodes(0), 6);
+        // malformed arity is normalised, not propagated: short vectors
+        // pad with zeros, long ones truncate
+        st.apply(&ClusterAction::SetSite {
+            dc: 0,
+            nodes_per_type: vec![5],
+        });
+        assert_eq!(st.nodes(0).len(), cfg.node_types.len());
+        assert_eq!(st.total_nodes(0), 5);
+        st.apply(&ClusterAction::SetSite {
+            dc: 0,
+            nodes_per_type: vec![1; 99],
+        });
+        assert_eq!(st.nodes(0).len(), cfg.node_types.len());
+        st.apply(&ClusterAction::RestoreSite { dc: 0 });
+        assert!(st.is_baseline());
+    }
+
+    #[test]
+    fn dyn_panels_match_static_on_baseline_state() {
+        let cfg = SystemConfig::paper_default();
+        let signals = GridSignals::generate(&cfg, 4, 1);
+        let trace = Trace::generate(&cfg, 4, 1);
+        let st = ClusterState::from_config(&cfg);
+        let (cp_a, dp_a) =
+            build_panels(&cfg, &signals, 2, &trace.epochs[2], 0.05);
+        let (cp_b, dp_b) = build_panels_dyn(
+            &cfg,
+            &st,
+            &signals,
+            2,
+            &trace.epochs[2],
+            0.05,
+        );
+        assert_eq!(cp_a.thr, cp_b.thr);
+        assert_eq!(cp_a.proc, cp_b.proc);
+        assert_eq!(dp_a.nodes, dp_b.nodes);
+        assert_eq!(dp_a.tdp, dp_b.tdp);
+    }
+
+    #[test]
+    fn dyn_panels_track_outage_state() {
+        let cfg = SystemConfig::paper_default();
+        let signals = GridSignals::generate(&cfg, 4, 1);
+        let trace = Trace::generate(&cfg, 4, 1);
+        let mut st = ClusterState::from_config(&cfg);
+        st.apply(&ClusterAction::ScaleRegion { region: 2, frac: 0.0 });
+        let (_, dp) = build_panels_dyn(
+            &cfg,
+            &st,
+            &signals,
+            2,
+            &trace.epochs[2],
+            0.05,
+        );
+        for (l, d) in cfg.datacenters.iter().enumerate() {
+            if d.region == 2 {
+                assert_eq!(dp.nodes[l], 0.0, "{}", d.name);
+            } else {
+                assert!(dp.nodes[l] > 0.0);
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub use server::{serve_forever, ServeHandle};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::cluster::build_panels;
+use crate::cluster::{build_panels_dyn, ClusterAction, ClusterState};
 use crate::config::{SystemConfig, MODELS};
 use crate::eval::{AnalyticEvaluator, EvalConsts};
 use crate::models::EpochLedger;
@@ -85,6 +85,9 @@ pub struct Coordinator {
     predictor: Mutex<WorkloadPredictor>,
     /// Arrivals observed during the current epoch (per class).
     observed: Mutex<Vec<f64>>,
+    /// Live cluster topology the epoch clock plans and accounts against
+    /// (mutable at serve time via [`Coordinator::apply_cluster_action`]).
+    state: RwLock<ClusterState>,
     pub metrics: Mutex<Metrics>,
     engine: Option<Arc<Engine>>,
     rng: Mutex<Rng>,
@@ -111,6 +114,7 @@ impl Coordinator {
             signals,
             predictor: Mutex::new(WorkloadPredictor::new(&cfg)),
             observed: Mutex::new(vec![0.0; classes]),
+            state: RwLock::new(ClusterState::from_config(&cfg)),
             metrics: Mutex::new(Metrics::default()),
             engine,
             rng: Mutex::new(Rng::new(cfg.seed ^ 0xC0)),
@@ -118,6 +122,18 @@ impl Coordinator {
             cfg,
             ccfg,
         })
+    }
+
+    /// Mutate the live cluster topology at serve time (outage drills, node
+    /// additions). Takes effect at the next epoch tick: the re-plan and
+    /// per-site capacity resets both derive from this state.
+    pub fn apply_cluster_action(&self, action: &ClusterAction) {
+        self.state.write().expect("cluster state").apply(action);
+    }
+
+    /// Snapshot of the live cluster topology.
+    pub fn cluster_snapshot(&self) -> ClusterState {
+        self.state.read().expect("cluster state").clone()
     }
 
     pub fn current_epoch(&self) -> usize {
@@ -297,9 +313,12 @@ impl Coordinator {
     }
 
     /// Advance the epoch clock by one epoch: account energy for the epoch
-    /// that just ended, feed the predictor, re-plan, reset capacity.
+    /// that just ended, feed the predictor, re-plan, reset capacity — all
+    /// against the live [`ClusterState`] rather than the frozen config, so
+    /// serve-time topology changes take effect at the next tick.
     pub fn tick_epoch(&self) {
         let epoch = self.epoch.fetch_add(1, Ordering::SeqCst);
+        let state = self.cluster_snapshot();
 
         // --- account the epoch that just finished -------------------------
         let (ci, wi, tou) = self.signals.at(epoch);
@@ -307,13 +326,16 @@ impl Coordinator {
             let mut m = self.metrics.lock().expect("metrics");
             for (l, spec) in self.cfg.datacenters.iter().enumerate() {
                 let ls = self.locals[l].lock().expect("local");
+                let live = state.nodes(l);
                 let mut e_it = 0.0;
                 for (ti, nt) in self.cfg.node_types.iter().enumerate() {
                     let on =
                         ls.capacity.on_nodes(ti, self.cfg.physics.epoch_s);
-                    let nodes = spec.nodes_per_type[ti] as f64;
+                    let nodes = live[ti] as f64;
+                    // an action may have shrunk the site mid-epoch; never
+                    // account negative idle capacity
                     e_it += (on * self.cfg.physics.pr_on
-                        + (nodes - on) * self.cfg.physics.pr_off)
+                        + (nodes - on).max(0.0) * self.cfg.physics.pr_off)
                         * nt.tdp_w
                         * self.cfg.physics.epoch_s;
                 }
@@ -357,10 +379,11 @@ impl Coordinator {
             p.predict_next()
         };
 
-        // --- re-plan against the forecast ----------------------------------
+        // --- re-plan against the forecast + live topology ------------------
         let next_epoch = epoch + 1;
-        let (cp, dp) = build_panels(
+        let (cp, dp) = build_panels_dyn(
             &self.cfg,
+            &state,
             &self.signals,
             next_epoch.min(self.signals.epochs() - 1),
             &predicted,
@@ -407,10 +430,10 @@ impl Coordinator {
             m.plan_refreshes += 1;
         }
 
-        // --- new epoch: reset per-epoch capacity ---------------------------
+        // --- new epoch: reset per-epoch capacity from the live state ------
         for l in 0..self.cfg.datacenters.len() {
             let mut ls = self.locals[l].lock().expect("local");
-            ls.new_epoch(&self.cfg);
+            ls.new_epoch_with(&self.cfg, state.nodes(l));
         }
     }
 
@@ -503,6 +526,53 @@ mod tests {
         assert!(!c.stopped());
         c.stop();
         assert!(c.stopped());
+    }
+
+    #[test]
+    fn cluster_action_takes_effect_at_next_tick() {
+        let c = coordinator();
+        let full: usize = (0..c.cfg.datacenters.len())
+            .map(|l| c.cluster_snapshot().total_nodes(l))
+            .sum();
+        // darken north-america, tick: plan + capacity now derive from the
+        // degraded topology
+        c.apply_cluster_action(&ClusterAction::ScaleRegion {
+            region: 2,
+            frac: 0.0,
+        });
+        c.tick_epoch();
+        let snap = c.cluster_snapshot();
+        let after: usize =
+            (0..c.cfg.datacenters.len()).map(|l| snap.total_nodes(l)).sum();
+        assert!(after < full);
+        assert!(c.current_plan().is_valid());
+        // dark sites accept nothing, yet requests still get served via the
+        // saturation failover to healthy regions
+        let mut served = 0;
+        for i in 0..80 {
+            if c.handle(2, i % 2, 64, 100).is_some() {
+                served += 1;
+            }
+        }
+        assert!(served > 0, "no failover to healthy regions");
+        for (l, d) in c.cfg.datacenters.iter().enumerate() {
+            if d.region == 2 {
+                let ls = c.locals[l].lock().expect("local");
+                assert_eq!(
+                    ls.capacity.used_s.iter().sum::<f64>(),
+                    0.0,
+                    "dark site {} took load",
+                    d.name
+                );
+            }
+        }
+        // restore + tick: the fleet is whole again
+        c.apply_cluster_action(&ClusterAction::RestoreRegion { region: 2 });
+        c.tick_epoch();
+        let snap = c.cluster_snapshot();
+        let restored: usize =
+            (0..c.cfg.datacenters.len()).map(|l| snap.total_nodes(l)).sum();
+        assert_eq!(restored, full);
     }
 }
 

@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::{ClassPanels, DcPanels};
-use crate::config::N_OBJ;
+use crate::config::{DC_SLOTS, N_OBJ};
 use crate::models::{total_energy_factor, J_PER_KWH};
 use crate::plan::Plan;
 use crate::util::threadpool;
@@ -267,10 +267,15 @@ impl AnalyticEvaluator {
         let k_n = self.cp.classes;
         let l_n = self.dp.dcs;
         let c = &self.consts;
+        // dcs <= DC_SLOTS is a config invariant (SystemConfig::validate),
+        // so the per-plan accumulators live on the stack — this is the
+        // hottest loop in the optimizer and used to pay two heap
+        // allocations per plan
+        assert!(l_n <= DC_SLOTS, "dcs {l_n} exceeds DC_SLOTS {DC_SLOTS}");
 
         // contraction over classes
-        let mut node_s = vec![0.0f64; l_n];
-        let mut reqs_l = vec![0.0f64; l_n];
+        let mut node_s = [0.0f64; DC_SLOTS];
+        let mut reqs_l = [0.0f64; DC_SLOTS];
         let mut t_base = 0.0f64;
         let a = plan.as_slice();
         for k in 0..k_n {

@@ -24,9 +24,11 @@ pub mod pareto;
 pub mod plan;
 pub mod power;
 pub mod predictor;
+pub mod registry;
 pub mod runtime;
 pub mod scenario;
 pub mod sched;
+pub mod session;
 pub mod sim;
 pub mod trace;
 pub mod util;

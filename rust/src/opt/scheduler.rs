@@ -67,6 +67,11 @@ pub struct SlitStats {
     pub wall_s: f64,
 }
 
+/// Bounds on the prediction-error correction ratio the feedback variant
+/// applies (guards against a single wild epoch whipsawing the forecast).
+const FEEDBACK_RATIO_MIN: f64 = 0.5;
+const FEEDBACK_RATIO_MAX: f64 = 2.0;
+
 pub struct SlitScheduler {
     pub variant: SlitVariant,
     pub options: SlitOptions,
@@ -77,6 +82,11 @@ pub struct SlitScheduler {
     /// When set, plan search runs on the AOT/PJRT engine: each epoch an
     /// `HloPlanEvaluator` is bound to that epoch's panels.
     engine: Option<std::sync::Arc<crate::runtime::Engine>>,
+    /// Prediction-error feedback: scale this epoch's predicted demand by
+    /// last epoch's realised/predicted ratio (EpochContext::prev).
+    feedback: bool,
+    /// Total requests the previous epoch's plan was optimised against.
+    last_predicted_req: Option<f64>,
 }
 
 impl SlitScheduler {
@@ -89,6 +99,8 @@ impl SlitScheduler {
             epoch_counter: 0,
             stats: SlitStats::default(),
             engine: None,
+            feedback: false,
+            last_predicted_req: None,
         }
     }
 
@@ -105,11 +117,47 @@ impl SlitScheduler {
         self.engine = Some(engine);
         self
     }
+
+    /// Enable prediction-error feedback: the SimSession hands each epoch
+    /// the previous epoch's *actual* ledger; this variant compares it to
+    /// what it planned against and rescales the current forecast by the
+    /// (clamped) realised/predicted ratio before searching.
+    pub fn with_feedback(mut self) -> Self {
+        self.feedback = true;
+        self
+    }
+
+    /// The correction factor for this epoch, if feedback is on and a
+    /// previous epoch exists to learn from.
+    fn feedback_ratio(&self, ctx: &EpochContext) -> Option<f64> {
+        if !self.feedback {
+            return None;
+        }
+        let predicted = self.last_predicted_req?;
+        let prev = ctx.prev?;
+        let ratio = (prev.requests / predicted.max(1.0))
+            .clamp(FEEDBACK_RATIO_MIN, FEEDBACK_RATIO_MAX);
+        // skip the rebuild when the forecast was essentially right
+        if (ratio - 1.0).abs() < 0.02 {
+            None
+        } else {
+            Some(ratio)
+        }
+    }
 }
 
 impl Scheduler for SlitScheduler {
     fn name(&self) -> String {
-        self.variant.name().into()
+        if self.feedback {
+            // the registered `slit-adaptive` framework is the balanced
+            // variant; feedback on any other variant keeps its identity
+            match self.variant {
+                SlitVariant::Balance => "slit-adaptive".into(),
+                v => format!("{}-adaptive", v.name()),
+            }
+        } else {
+            self.variant.name().into()
+        }
     }
 
     fn unused_pr(&self, phys: &PhysicsConfig) -> f64 {
@@ -118,6 +166,22 @@ impl Scheduler for SlitScheduler {
 
     fn plan(&mut self, ctx: &EpochContext) -> Plan {
         self.epoch_counter += 1;
+        // prediction-error feedback: rebuild the epoch evaluator against
+        // a corrected demand level before searching
+        let corrected = self.feedback_ratio(ctx).map(|ratio| {
+            let mut cp = ctx.evaluator.cp.clone();
+            for n in &mut cp.n_req {
+                *n *= ratio;
+            }
+            crate::eval::AnalyticEvaluator::new(
+                cp,
+                ctx.evaluator.dp.clone(),
+                ctx.evaluator.consts,
+            )
+        });
+        let evaluator = corrected.as_ref().unwrap_or(ctx.evaluator);
+        self.last_predicted_req = Some(ctx.predicted.total_requests());
+
         let mut optimizer = SlitOptimizer::new(
             self.opt.clone(),
             ctx.cfg.num_classes(),
@@ -125,16 +189,16 @@ impl Scheduler for SlitScheduler {
             self.seed ^ self.epoch_counter.wrapping_mul(0x9E37_79B9),
         )
         .with_options(self.options);
-        let seeds = ctx.evaluator.greedy_seed_plans();
+        let seeds = evaluator.greedy_seed_plans();
         let outcome = match &self.engine {
             Some(engine) => {
                 let hlo = crate::runtime::HloPlanEvaluator::from_analytic(
                     engine.clone(),
-                    ctx.evaluator,
+                    evaluator,
                 );
                 optimizer.optimize_with_seeds(&hlo, &seeds)
             }
-            None => optimizer.optimize_with_seeds(ctx.evaluator, &seeds),
+            None => optimizer.optimize_with_seeds(evaluator, &seeds),
         };
         self.stats.epochs += 1;
         self.stats.evaluations += outcome.evaluations;
@@ -186,6 +250,41 @@ mod tests {
             carbon.total.carbon_kg,
             ttft.total.carbon_kg
         );
+    }
+
+    #[test]
+    fn adaptive_variant_runs_and_reports_its_name() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let trace = Trace::generate(&cfg, cfg.epochs, 2);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 2);
+        let mut s =
+            SlitScheduler::new(&cfg, SlitVariant::Balance).with_feedback();
+        let res = simulate(&cfg, &trace, &signals, &mut s, 2);
+        assert_eq!(res.name, "slit-adaptive");
+        assert!(res.total.requests > 0.0);
+        assert_eq!(res.per_epoch.len(), 3);
+        // feedback on a non-balanced variant keeps the variant identity
+        let carbon =
+            SlitScheduler::new(&cfg, SlitVariant::Carbon).with_feedback();
+        assert_eq!(carbon.name(), "slit-carbon-adaptive");
+    }
+
+    #[test]
+    fn feedback_is_deterministic_per_seed() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let trace = Trace::generate(&cfg, cfg.epochs, 4);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 4);
+        let run = || {
+            let mut s = SlitScheduler::new(&cfg, SlitVariant::Balance)
+                .with_feedback();
+            simulate(&cfg, &trace, &signals, &mut s, 4)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.total.carbon_kg, b.total.carbon_kg);
+        assert_eq!(a.total.ttft_sum_s, b.total.ttft_sum_s);
     }
 
     #[test]

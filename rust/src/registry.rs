@@ -1,0 +1,244 @@
+//! Framework registry: the single source of truth for every scheduling
+//! framework the repo can run.
+//!
+//! One static [`FrameworkSpec`] table replaces the string-matching that
+//! used to live in `cli.rs` — the CLI, benches, examples, and the
+//! scenario-matrix test all enumerate or resolve frameworks through this
+//! module, so adding a framework is one table row, not five call-site
+//! edits.
+
+use std::sync::Arc;
+
+use crate::baselines::{HelixScheduler, RoundRobinScheduler, SplitwiseScheduler};
+use crate::config::SystemConfig;
+use crate::opt::{SlitScheduler, SlitVariant};
+use crate::runtime::Engine;
+use crate::sim::Scheduler;
+
+/// One registered scheduling framework.
+pub struct FrameworkSpec {
+    /// Canonical name (`slit simulate --framework <name>`).
+    pub name: &'static str,
+    /// Accepted alternative spellings.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `slit frameworks`.
+    pub description: &'static str,
+    /// Whether the framework belongs to the paper's Fig. 4 comparison set.
+    pub in_paper_set: bool,
+    /// Instantiate a fresh scheduler for one simulation run.
+    pub build: fn(&SystemConfig) -> Box<dyn Scheduler>,
+    /// Optional AOT/PJRT-backed construction (SLIT variants search on the
+    /// HLO artifact when an engine is supplied).
+    pub build_hlo: Option<fn(&SystemConfig, Arc<Engine>) -> Box<dyn Scheduler>>,
+}
+
+fn build_helix(_cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(HelixScheduler)
+}
+
+fn build_splitwise(_cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(SplitwiseScheduler)
+}
+
+fn build_round_robin(_cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(RoundRobinScheduler)
+}
+
+macro_rules! slit_builders {
+    ($build:ident, $build_hlo:ident, $variant:expr) => {
+        fn $build(cfg: &SystemConfig) -> Box<dyn Scheduler> {
+            Box::new(SlitScheduler::new(cfg, $variant))
+        }
+        fn $build_hlo(
+            cfg: &SystemConfig,
+            engine: Arc<Engine>,
+        ) -> Box<dyn Scheduler> {
+            Box::new(SlitScheduler::new(cfg, $variant).with_engine(engine))
+        }
+    };
+}
+
+slit_builders!(build_slit_carbon, build_slit_carbon_hlo, SlitVariant::Carbon);
+slit_builders!(build_slit_ttft, build_slit_ttft_hlo, SlitVariant::Ttft);
+slit_builders!(build_slit_water, build_slit_water_hlo, SlitVariant::Water);
+slit_builders!(build_slit_cost, build_slit_cost_hlo, SlitVariant::Cost);
+slit_builders!(
+    build_slit_balance,
+    build_slit_balance_hlo,
+    SlitVariant::Balance
+);
+
+fn build_slit_adaptive(cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(SlitScheduler::new(cfg, SlitVariant::Balance).with_feedback())
+}
+
+fn build_slit_adaptive_hlo(
+    cfg: &SystemConfig,
+    engine: Arc<Engine>,
+) -> Box<dyn Scheduler> {
+    Box::new(
+        SlitScheduler::new(cfg, SlitVariant::Balance)
+            .with_engine(engine)
+            .with_feedback(),
+    )
+}
+
+/// The iterable framework table. Order is presentation order (baselines
+/// first, SLIT variants after, as in the paper's Fig. 4 rows).
+pub static FRAMEWORKS: &[FrameworkSpec] = &[
+    FrameworkSpec {
+        name: "helix",
+        aliases: &[],
+        description: "Helix [16]: min-cost max-flow, throughput-first, always-warm",
+        in_paper_set: true,
+        build: build_helix,
+        build_hlo: None,
+    },
+    FrameworkSpec {
+        name: "splitwise",
+        aliases: &[],
+        description: "Splitwise [17]: prefill/decode pools, latency-greedy, always-warm",
+        in_paper_set: true,
+        build: build_splitwise,
+        build_hlo: None,
+    },
+    FrameworkSpec {
+        name: "round-robin",
+        aliases: &["rr"],
+        description: "naive even split across sites (sanity floor, not in Fig. 4)",
+        in_paper_set: false,
+        build: build_round_robin,
+        build_hlo: None,
+    },
+    FrameworkSpec {
+        name: "slit-carbon",
+        aliases: &[],
+        description: "SLIT showcasing the min-carbon Pareto solution",
+        in_paper_set: true,
+        build: build_slit_carbon,
+        build_hlo: Some(build_slit_carbon_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-ttft",
+        aliases: &[],
+        description: "SLIT showcasing the min-TTFT Pareto solution",
+        in_paper_set: true,
+        build: build_slit_ttft,
+        build_hlo: Some(build_slit_ttft_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-water",
+        aliases: &[],
+        description: "SLIT showcasing the min-water Pareto solution",
+        in_paper_set: true,
+        build: build_slit_water,
+        build_hlo: Some(build_slit_water_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-cost",
+        aliases: &[],
+        description: "SLIT showcasing the min-cost Pareto solution",
+        in_paper_set: true,
+        build: build_slit_cost,
+        build_hlo: Some(build_slit_cost_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-balance",
+        aliases: &["slit"],
+        description: "SLIT showcasing the balanced (knee-point) solution",
+        in_paper_set: true,
+        build: build_slit_balance,
+        build_hlo: Some(build_slit_balance_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-adaptive",
+        aliases: &["slit-feedback"],
+        description: "balanced SLIT with prediction-error feedback from the previous epoch's actual ledger",
+        in_paper_set: false,
+        build: build_slit_adaptive,
+        build_hlo: Some(build_slit_adaptive_hlo),
+    },
+];
+
+/// Every registered framework.
+pub fn all() -> &'static [FrameworkSpec] {
+    FRAMEWORKS
+}
+
+/// Canonical names, in table order.
+pub fn names() -> Vec<&'static str> {
+    FRAMEWORKS.iter().map(|f| f.name).collect()
+}
+
+/// Resolve a name or alias to its spec.
+pub fn find(name: &str) -> Option<&'static FrameworkSpec> {
+    FRAMEWORKS
+        .iter()
+        .find(|f| f.name == name || f.aliases.iter().any(|a| *a == name))
+}
+
+/// Instantiate a scheduler by name/alias; the optional engine routes SLIT
+/// plan search through the AOT/PJRT artifact.
+pub fn build(
+    name: &str,
+    cfg: &SystemConfig,
+    engine: Option<Arc<Engine>>,
+) -> anyhow::Result<Box<dyn Scheduler>> {
+    let spec = find(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown framework '{name}' (try: {})",
+            names().join(", ")
+        )
+    })?;
+    Ok(match (engine, spec.build_hlo) {
+        (Some(engine), Some(build_hlo)) => build_hlo(cfg, engine),
+        _ => (spec.build)(cfg),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_consistent() {
+        let mut seen: Vec<&str> = Vec::new();
+        for spec in all() {
+            assert!(!spec.name.is_empty());
+            assert!(!spec.description.is_empty());
+            assert!(!seen.contains(&spec.name), "duplicate {}", spec.name);
+            seen.push(spec.name);
+            for &alias in spec.aliases {
+                assert!(!seen.contains(&alias), "alias clash {alias}");
+                seen.push(alias);
+            }
+        }
+        // the paper's Fig. 4 set: 2 baselines + 5 SLIT variants
+        assert_eq!(all().iter().filter(|f| f.in_paper_set).count(), 7);
+    }
+
+    #[test]
+    fn every_spec_builds_a_scheduler_with_its_name() {
+        let cfg = crate::config::SystemConfig::small_test();
+        for spec in all() {
+            let s = (spec.build)(&cfg);
+            assert_eq!(s.name(), spec.name, "builder/name mismatch");
+        }
+    }
+
+    #[test]
+    fn find_resolves_names_and_aliases() {
+        assert_eq!(find("helix").unwrap().name, "helix");
+        assert_eq!(find("rr").unwrap().name, "round-robin");
+        assert_eq!(find("slit").unwrap().name, "slit-balance");
+        assert_eq!(find("slit-feedback").unwrap().name, "slit-adaptive");
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn build_rejects_unknown_names() {
+        let cfg = crate::config::SystemConfig::small_test();
+        assert!(build("nope", &cfg, None).is_err());
+        assert!(build("splitwise", &cfg, None).is_ok());
+    }
+}

@@ -9,21 +9,31 @@
 //! seeded, so scenario runs are exactly reproducible and comparable across
 //! frameworks.
 //!
-//! The five named regimes (plus the untouched baseline):
+//! Regimes that need *time-varying capacity* additionally schedule
+//! [`ScenarioEvent`]s, which a [`SimSession`] applies to its mutable
+//! `ClusterState` mid-run — something the static config transform cannot
+//! express.
+//!
+//! The six named regimes (plus the untouched baseline):
 //!   * `diurnal` — sharpened day/night demand swing, no bursts: the
 //!     follow-the-sun routing case (cf. Fig. 1's diurnal trend).
 //!   * `bursty` — heavy-tailed demand spikes on top of frequent bursts:
 //!     the BurstGPT "intensity changes rapidly" trend, exaggerated.
 //!   * `outage` — a whole region's datacenters lose 90% of their nodes
 //!     while its users keep sending traffic: forced cross-region failover.
+//!   * `outage-rolling` — the same region goes *fully* dark partway
+//!     through the run and is restored N epochs later (event-driven).
 //!   * `carbon-spike` — the cleanest grids suffer a mid-window carbon
 //!     event (wind lull / coal backup): carbon-aware routing must re-plan
 //!     away from its favourite sites.
 //!   * `water-summer` — drought summer: grid water intensity triples and
 //!     cooling COP degrades everywhere, stressing the water objective.
 
+use crate::cluster::ClusterAction;
 use crate::config::{SystemConfig, OBJ_CARBON, OBJ_COST, OBJ_WATER};
 use crate::power::GridSignals;
+use crate::session::{ScenarioEvent, SimSession};
+use crate::sim::{Scheduler, SimResult};
 use crate::trace::Trace;
 use crate::util::rng::Rng;
 
@@ -44,38 +54,63 @@ pub enum Scenario {
     BurstyHeavyTail,
     /// One region's sites lose 90% of capacity; demand unchanged.
     RegionalOutage,
+    /// One region goes fully dark mid-run and comes back N epochs later
+    /// (time-varying capacity via `ScenarioEvent`s).
+    RollingOutage,
     /// Mid-window carbon-intensity spike on the cleanest grids.
     CarbonSpike,
     /// Drought summer: high water intensity, degraded cooling COP.
     WaterStressedSummer,
 }
 
-/// A generated experiment world: config + matching trace and grid signals.
+/// A generated experiment world: config + matching trace, grid signals,
+/// and the mid-run cluster mutations the regime schedules.
 pub struct ScenarioWorld {
     pub cfg: SystemConfig,
     pub trace: Trace,
     pub signals: GridSignals,
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl ScenarioWorld {
+    /// Open a streaming session over this world for one framework —
+    /// scheduled [`ScenarioEvent`]s attached, ready for observers.
+    pub fn session<'a>(
+        &'a self,
+        scheduler: &'a mut dyn Scheduler,
+        seed: u64,
+    ) -> SimSession<'a> {
+        SimSession::new(&self.cfg, &self.trace, &self.signals, scheduler, seed)
+            .with_events(self.events.clone())
+    }
+
+    /// Run one framework over this world end-to-end (events included).
+    pub fn run(&self, scheduler: &mut dyn Scheduler, seed: u64) -> SimResult {
+        self.session(scheduler, seed).run()
+    }
 }
 
 impl Scenario {
     /// Every scenario including the baseline.
-    pub fn all() -> [Scenario; 6] {
+    pub fn all() -> [Scenario; 7] {
         [
             Scenario::Baseline,
             Scenario::Diurnal,
             Scenario::BurstyHeavyTail,
             Scenario::RegionalOutage,
+            Scenario::RollingOutage,
             Scenario::CarbonSpike,
             Scenario::WaterStressedSummer,
         ]
     }
 
-    /// The five named non-baseline regimes (the scenario-matrix set).
-    pub fn named() -> [Scenario; 5] {
+    /// The named non-baseline regimes (the scenario-matrix set).
+    pub fn named() -> [Scenario; 6] {
         [
             Scenario::Diurnal,
             Scenario::BurstyHeavyTail,
             Scenario::RegionalOutage,
+            Scenario::RollingOutage,
             Scenario::CarbonSpike,
             Scenario::WaterStressedSummer,
         ]
@@ -87,6 +122,7 @@ impl Scenario {
             Scenario::Diurnal => "diurnal",
             Scenario::BurstyHeavyTail => "bursty",
             Scenario::RegionalOutage => "outage",
+            Scenario::RollingOutage => "outage-rolling",
             Scenario::CarbonSpike => "carbon-spike",
             Scenario::WaterStressedSummer => "water-summer",
         }
@@ -103,6 +139,9 @@ impl Scenario {
             }
             Scenario::RegionalOutage => {
                 "north-america sites lose 90% of nodes; demand unchanged"
+            }
+            Scenario::RollingOutage => {
+                "north-america goes dark mid-run, restored N epochs later"
             }
             Scenario::CarbonSpike => {
                 "cleanest grids suffer a mid-window 4x carbon event"
@@ -125,8 +164,43 @@ impl Scenario {
             Scenario::Diurnal => OBJ_CARBON,
             Scenario::BurstyHeavyTail => OBJ_COST,
             Scenario::RegionalOutage => OBJ_COST,
+            Scenario::RollingOutage => OBJ_COST,
             Scenario::CarbonSpike => OBJ_CARBON,
             Scenario::WaterStressedSummer => OBJ_WATER,
+        }
+    }
+
+    /// Mid-run cluster mutations this regime schedules (time-varying
+    /// capacity — the static transforms above cannot express these).
+    pub fn events(&self, epochs: usize) -> Vec<ScenarioEvent> {
+        match self {
+            Scenario::RollingOutage => {
+                // dark for the second quarter of the horizon: healthy
+                // epochs on both sides show the dip and the recovery.
+                // Clamped so even tiny horizons keep epoch 0 healthy
+                // (a 1-epoch run schedules nothing — there is no mid-run)
+                if epochs < 2 {
+                    return Vec::new();
+                }
+                let start = (epochs / 4).clamp(1, epochs - 1);
+                let span = (epochs / 4).max(1);
+                vec![
+                    ScenarioEvent::at(
+                        start,
+                        ClusterAction::ScaleRegion {
+                            region: OUTAGE_REGION,
+                            frac: 0.0,
+                        },
+                    ),
+                    ScenarioEvent::at(
+                        start + span,
+                        ClusterAction::RestoreRegion {
+                            region: OUTAGE_REGION,
+                        },
+                    ),
+                ]
+            }
+            _ => Vec::new(),
         }
     }
 
@@ -155,6 +229,8 @@ impl Scenario {
                     }
                 }
             }
+            // no static change: the outage arrives via ScenarioEvents
+            Scenario::RollingOutage => {}
             Scenario::CarbonSpike => {}
             Scenario::WaterStressedSummer => {
                 for d in &mut cfg.datacenters {
@@ -218,7 +294,8 @@ impl Scenario {
 
     /// Generate the full world for this regime: mutated config, then the
     /// trace/signal generators (trace.rs / power.rs), then the shaping
-    /// passes. Deterministic in (base config, epochs, seed).
+    /// passes, plus the regime's mid-run event schedule. Deterministic in
+    /// (base config, epochs, seed).
     pub fn build(
         &self,
         base: &SystemConfig,
@@ -233,6 +310,7 @@ impl Scenario {
         self.shape_trace(&cfg, &mut trace, seed);
         self.shape_signals(&cfg, &mut signals);
         ScenarioWorld {
+            events: self.events(epochs),
             cfg,
             trace,
             signals,
@@ -260,7 +338,7 @@ mod tests {
             assert!(s.target_objective() < crate::config::N_OBJ);
         }
         assert_eq!(Scenario::from_name("nope"), None);
-        assert_eq!(Scenario::named().len(), 5);
+        assert_eq!(Scenario::named().len(), 6);
     }
 
     #[test]
@@ -326,6 +404,79 @@ mod tests {
         let total: f64 =
             w.trace.epochs.iter().map(|e| e.total_requests()).sum();
         assert!(total > 0.0);
+    }
+
+    #[test]
+    fn rolling_outage_schedules_dark_and_restore_events() {
+        let w = Scenario::RollingOutage.build(&base(), 96, 1);
+        // no static capacity change: the config keeps full node counts
+        assert_eq!(w.cfg.datacenters, base().datacenters);
+        assert_eq!(w.events.len(), 2);
+        assert_eq!(w.events[0].epoch, 24);
+        assert_eq!(w.events[1].epoch, 48);
+        assert_eq!(
+            w.events[0].action,
+            crate::cluster::ClusterAction::ScaleRegion {
+                region: OUTAGE_REGION,
+                frac: 0.0
+            }
+        );
+        assert_eq!(
+            w.events[1].action,
+            crate::cluster::ClusterAction::RestoreRegion {
+                region: OUTAGE_REGION
+            }
+        );
+        // every other regime schedules no events
+        for sc in Scenario::all() {
+            if sc != Scenario::RollingOutage {
+                assert!(sc.build(&base(), 24, 1).events.is_empty());
+            }
+        }
+        // short horizons keep epoch 0 healthy; a 1-epoch run has no
+        // mid-run, so nothing is scheduled
+        let tiny = Scenario::RollingOutage.events(3);
+        assert_eq!(tiny.len(), 2);
+        assert_eq!(tiny[0].epoch, 1);
+        assert_eq!(tiny[1].epoch, 2);
+        assert!(Scenario::RollingOutage.events(1).is_empty());
+    }
+
+    #[test]
+    fn rolling_outage_world_dips_and_recovers_capacity() {
+        use crate::sim::{EpochContext, Scheduler};
+
+        struct Uniform;
+        impl Scheduler for Uniform {
+            fn name(&self) -> String {
+                "uniform".into()
+            }
+            fn plan(&mut self, ctx: &EpochContext) -> crate::plan::Plan {
+                crate::plan::Plan::uniform(
+                    ctx.cfg.num_classes(),
+                    ctx.cfg.datacenters.len(),
+                )
+            }
+        }
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 8;
+        let w = Scenario::RollingOutage.build(&cfg, cfg.epochs, 3);
+        let res = w.run(&mut Uniform, 3);
+        let nodes =
+            |e: usize| -> usize { res.per_epoch[e].site_nodes.iter().sum() };
+        // events at epochs 2 and 4 for an 8-epoch horizon
+        assert_eq!(nodes(0), nodes(7));
+        assert!(nodes(2) < nodes(0), "no dip: {} vs {}", nodes(2), nodes(0));
+        assert!(nodes(3) < nodes(0));
+        assert_eq!(nodes(4), nodes(0), "capacity not restored");
+        // request mass conserved through the capacity change
+        let expected: f64 = w.trace.epochs[..w.cfg.epochs]
+            .iter()
+            .map(|e| {
+                e.classes.iter().map(|c| c.n_req.round()).sum::<f64>()
+            })
+            .sum();
+        assert!((res.total.requests - expected).abs() < 1e-6);
     }
 
     #[test]

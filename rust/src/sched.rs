@@ -57,6 +57,29 @@ impl LocalScheduler {
             DcCapacity::new(&cfg.datacenters[self.dc], cfg.physics.epoch_s);
     }
 
+    /// Reset per-epoch capacity against *live* node counts (the
+    /// `SimSession` path). WRR weights are recomputed so topology changes
+    /// — outages, brownouts, node additions — take effect immediately;
+    /// the smooth-WRR current-weight state is preserved for fairness
+    /// continuity, and with unchanged counts this is bit-identical to
+    /// [`LocalScheduler::new_epoch`].
+    pub fn new_epoch_with(
+        &mut self,
+        cfg: &SystemConfig,
+        nodes_per_type: &[usize],
+    ) {
+        self.weights = cfg
+            .node_types
+            .iter()
+            .enumerate()
+            .map(|(ti, nt)| {
+                nodes_per_type[ti] as f64 * nt.thr_tokens_s[0]
+            })
+            .collect();
+        self.capacity =
+            DcCapacity::from_nodes(nodes_per_type, cfg.physics.epoch_s);
+    }
+
     /// Smooth-WRR pick over node types that can serve `model` and still
     /// have capacity for `node_s`; returns None when the site is full.
     fn pick_type(
@@ -231,6 +254,17 @@ mod tests {
             assert!(placed < 100, "never saturates");
         }
         assert!(placed >= 1);
+    }
+
+    #[test]
+    fn zero_node_epoch_places_nothing_and_recovers() {
+        let cfg = SystemConfig::small_test();
+        let mut ls = LocalScheduler::new(&cfg, 0);
+        ls.new_epoch_with(&cfg, &[0, 0, 0, 0, 0, 0]);
+        assert!(ls.place(&cfg, &req(0, 200), 2.0, true).is_none());
+        // restoring the baseline counts brings the site back
+        ls.new_epoch_with(&cfg, &cfg.datacenters[0].nodes_per_type);
+        assert!(ls.place(&cfg, &req(0, 200), 2.0, true).is_some());
     }
 
     #[test]

@@ -1,0 +1,650 @@
+//! `SimSession` — the streaming epoch loop the batch `sim::simulate()`
+//! wrapper is built on.
+//!
+//! A session owns a mutable [`ClusterState`] (live per-site node counts,
+//! derived from but no longer identical to the `SystemConfig`) and
+//! advances one epoch per [`SimSession::step`]. Three hooks open the loop
+//! up to the time-varying world the paper re-plans against every 15
+//! minutes:
+//!
+//! * [`ScenarioEvent`]s mutate the cluster mid-run (rolling outages,
+//!   brownouts, node additions) — they fire at the *start* of their epoch,
+//!   before the framework plans, so schedulers see the degraded world.
+//! * [`EpochObserver`] sinks receive every completed [`EpochRecord`]
+//!   (CSV/JSON time-series, progress reporting) without buffering the
+//!   whole run.
+//! * The [`sim::EpochContext`] handed to `Scheduler::plan` carries the
+//!   previous epoch's *actual* ledger, so schedulers can correct for
+//!   prediction error (the feedback-aware SLIT variant).
+//!
+//! Event ordering within one `step()` (see DESIGN.md §11):
+//!   events -> predict -> panels(state) -> plan -> route/place ->
+//!   account(state) -> observe(predictor) -> observers.
+//!
+//! With no events and no cluster mutations the session is bit-identical
+//! to the legacy batch path (rust/tests/session_equivalence.rs pins it).
+
+use crate::cluster::{build_panels_dyn, ClusterAction, ClusterState};
+use crate::config::SystemConfig;
+use crate::eval::{AnalyticEvaluator, EvalConsts};
+use crate::models::EpochLedger;
+use crate::plan::Plan;
+use crate::power::GridSignals;
+use crate::predictor::WorkloadPredictor;
+use crate::sched::LocalScheduler;
+use crate::sim::{EpochContext, EpochRecord, Scheduler, SimResult};
+use crate::trace::Trace;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A scheduled mutation of the live cluster topology: `action` fires at
+/// the start of `epoch`, before the framework plans that epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioEvent {
+    pub epoch: usize,
+    pub action: ClusterAction,
+}
+
+impl ScenarioEvent {
+    pub fn at(epoch: usize, action: ClusterAction) -> ScenarioEvent {
+        ScenarioEvent { epoch, action }
+    }
+}
+
+/// Telemetry sink notified after every completed epoch.
+pub trait EpochObserver {
+    /// Called once per completed epoch with the realised record and the
+    /// cluster state the epoch ran against.
+    fn on_epoch(&mut self, record: &EpochRecord, state: &ClusterState);
+    /// Called once when the session finishes (after the last epoch).
+    fn on_finish(&mut self, _result: &SimResult) {}
+}
+
+/// Streaming simulation session: one framework over one world, one epoch
+/// per `step()`. Construct with [`SimSession::new`], optionally attach
+/// events/observers, then either drive `step()` manually or call
+/// [`SimSession::run`].
+pub struct SimSession<'a> {
+    cfg: &'a SystemConfig,
+    trace: &'a Trace,
+    signals: &'a GridSignals,
+    scheduler: &'a mut dyn Scheduler,
+    epochs: usize,
+    epoch: usize,
+    rng: Rng,
+    predictor: WorkloadPredictor,
+    locals: Vec<LocalScheduler>,
+    state: ClusterState,
+    unused_pr: f64,
+    events: Vec<ScenarioEvent>,
+    observers: Vec<Box<dyn EpochObserver + 'a>>,
+    per_epoch: Vec<EpochRecord>,
+    total: EpochLedger,
+    prev_ledger: Option<EpochLedger>,
+}
+
+impl<'a> SimSession<'a> {
+    pub fn new(
+        cfg: &'a SystemConfig,
+        trace: &'a Trace,
+        signals: &'a GridSignals,
+        scheduler: &'a mut dyn Scheduler,
+        seed: u64,
+    ) -> SimSession<'a> {
+        let epochs = cfg.epochs.min(trace.epochs.len());
+        let unused_pr = scheduler.unused_pr(&cfg.physics);
+        SimSession {
+            epochs,
+            epoch: 0,
+            rng: Rng::new(seed ^ 0x53494D), // "SIM" — matches the legacy path
+            predictor: WorkloadPredictor::new(cfg),
+            locals: (0..cfg.datacenters.len())
+                .map(|l| LocalScheduler::new(cfg, l))
+                .collect(),
+            state: ClusterState::from_config(cfg),
+            unused_pr,
+            events: Vec::new(),
+            observers: Vec::new(),
+            per_epoch: Vec::with_capacity(epochs),
+            total: EpochLedger::default(),
+            prev_ledger: None,
+            cfg,
+            trace,
+            signals,
+            scheduler,
+        }
+    }
+
+    /// Attach a schedule of cluster mutations (builder style).
+    pub fn with_events(mut self, events: Vec<ScenarioEvent>) -> Self {
+        self.events.extend(events);
+        self
+    }
+
+    /// Attach a telemetry sink (builder style).
+    pub fn with_observer(
+        mut self,
+        observer: Box<dyn EpochObserver + 'a>,
+    ) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    pub fn add_observer(&mut self, observer: Box<dyn EpochObserver + 'a>) {
+        self.observers.push(observer);
+    }
+
+    /// The live cluster topology.
+    pub fn cluster(&self) -> &ClusterState {
+        &self.state
+    }
+
+    /// Mutate the cluster between steps (manual alternative to events).
+    pub fn apply(&mut self, action: &ClusterAction) {
+        self.state.apply(action);
+    }
+
+    /// Next epoch index to be simulated.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.epochs
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.epoch >= self.epochs
+    }
+
+    /// Completed epoch records so far.
+    pub fn records(&self) -> &[EpochRecord] {
+        &self.per_epoch
+    }
+
+    /// Advance one epoch; `None` once the horizon is exhausted.
+    pub fn step(&mut self) -> Option<&EpochRecord> {
+        if self.epoch >= self.epochs {
+            return None;
+        }
+        let epoch = self.epoch;
+
+        // 1. scheduled events for this epoch mutate the cluster first, so
+        //    the framework plans against the changed world
+        for ev in &self.events {
+            if ev.epoch == epoch {
+                self.state.apply(&ev.action);
+            }
+        }
+
+        // 2. forecast: first epoch is known at t=0 (bootstrap), then the
+        //    15-minute-lookahead predictor takes over
+        let actual = &self.trace.epochs[epoch];
+        let predicted = if epoch == 0 {
+            actual.clone()
+        } else {
+            self.predictor.predict_next()
+        };
+
+        // 3. panels + evaluator bound to the live cluster state
+        let (cp, dp) = build_panels_dyn(
+            self.cfg,
+            &self.state,
+            self.signals,
+            epoch,
+            &predicted,
+            self.unused_pr,
+        );
+        let evaluator = AnalyticEvaluator::new(
+            cp,
+            dp,
+            EvalConsts::from_physics(&self.cfg.physics),
+        );
+
+        // 4. the framework's decision, with last epoch's realised ledger
+        //    exposed for prediction-error feedback
+        let ctx = EpochContext {
+            cfg: self.cfg,
+            epoch,
+            predicted: &predicted,
+            evaluator: &evaluator,
+            cluster: &self.state,
+            prev: self.prev_ledger.as_ref(),
+        };
+        let t_decision = std::time::Instant::now();
+        let plan = self.scheduler.plan(&ctx);
+        let decision_s = t_decision.elapsed().as_secs_f64();
+        assert!(
+            plan.is_valid(),
+            "{} produced invalid plan",
+            self.scheduler.name()
+        );
+
+        // 5. discrete execution against the ACTUAL load ------------------
+        let mut ledger = EpochLedger::default();
+        for (l, ls) in self.locals.iter_mut().enumerate() {
+            ls.new_epoch_with(self.cfg, self.state.nodes(l));
+        }
+        let requests = self.trace.sample_requests(self.cfg, epoch, &mut self.rng);
+        let default_plan = Plan::uniform(plan.classes, plan.dcs);
+        // per-class realised count to detect prediction misses (Algorithm
+        // 1 lines 22-23: overflow rides the default plan)
+        let mut seen = vec![0.0f64; plan.classes];
+        let dcs = self.cfg.datacenters.len();
+
+        for req in &requests {
+            let k = req.class;
+            seen[k] += 1.0;
+            let missed = seen[k] > predicted.classes[k].n_req.ceil().max(1.0);
+            let row = if missed {
+                default_plan.row(k)
+            } else {
+                plan.row(k)
+            };
+            // route by plan weights; fall back to other sites on saturation
+            let first = self.rng.weighted(row);
+            let mut placed = false;
+            for attempt in 0..dcs {
+                let l = (first + attempt) % dcs;
+                if row[l] <= 0.0 && attempt == 0 && row[first] <= 0.0 {
+                    continue;
+                }
+                let hops = self.cfg.hops(req.region(), l);
+                // serverless container churn: a cold_frac share of requests
+                // land on a cold container and pay the Eq. 2 load latency
+                let is_warm = !self.rng.chance(self.cfg.physics.cold_frac);
+                if let Some(p) =
+                    self.locals[l].place(self.cfg, req, hops, is_warm)
+                {
+                    ledger.add_request(p.ttft_s);
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                ledger.dropped += 1.0;
+                // a dropped request is re-queued; charge the configured
+                // re-queue latency penalty
+                ledger.add_request(self.cfg.physics.drop_penalty_s);
+            }
+        }
+
+        // 6. energy/water/carbon accounting (Eqs. 5-18) against the live
+        //    node counts — an offline site burns nothing
+        let (ci, wi, tou) = self.signals.at(epoch);
+        for (l, ls) in self.locals.iter().enumerate() {
+            let spec = &self.cfg.datacenters[l];
+            let live = self.state.nodes(l);
+            let mut e_it = 0.0;
+            for (ti, nt) in self.cfg.node_types.iter().enumerate() {
+                let on = ls.capacity.on_nodes(ti, self.cfg.physics.epoch_s);
+                let nodes = live[ti] as f64;
+                e_it += (on * self.cfg.physics.pr_on
+                    + (nodes - on) * self.unused_pr)
+                    * nt.tdp_w
+                    * self.cfg.physics.epoch_s;
+            }
+            ledger.add_site(
+                e_it,
+                spec.cop,
+                tou[l],
+                self.cfg.physics.h_water,
+                self.cfg.physics.d_ratio,
+                wi[l],
+                self.cfg.physics.ei_pot,
+                self.cfg.physics.ei_waste,
+                ci[l],
+            );
+        }
+
+        // 7. close the loop: predictor, totals, feedback ledger, record
+        self.predictor.observe(actual);
+        self.total.merge(&ledger);
+        self.prev_ledger = Some(ledger.clone());
+        self.per_epoch.push(EpochRecord {
+            epoch,
+            ledger,
+            plan,
+            decision_s,
+            site_nodes: self.state.site_totals(),
+        });
+        self.epoch += 1;
+
+        // 8. telemetry sinks see the completed epoch
+        let record = self.per_epoch.last().expect("record just pushed");
+        for obs in &mut self.observers {
+            obs.on_epoch(record, &self.state);
+        }
+        Some(record)
+    }
+
+    /// Drive the session to the end of the horizon and collect the result.
+    pub fn run(mut self) -> SimResult {
+        while self.step().is_some() {}
+        self.finish()
+    }
+
+    /// Collect the result of the epochs simulated so far.
+    pub fn finish(mut self) -> SimResult {
+        let result = SimResult {
+            name: self.scheduler.name(),
+            per_epoch: self.per_epoch,
+            total: self.total,
+        };
+        for obs in &mut self.observers {
+            obs.on_finish(&result);
+        }
+        result
+    }
+}
+
+// --------------------------------------------------------------------------
+// Built-in observers
+// --------------------------------------------------------------------------
+
+/// Streams one CSV row per epoch — the Fig. 5 time series plus the live
+/// capacity column that makes rolling outages visible.
+pub struct CsvEpochObserver {
+    writer: Option<CsvWriter<std::io::BufWriter<std::fs::File>>>,
+}
+
+impl CsvEpochObserver {
+    pub const HEADER: [&'static str; 9] = [
+        "epoch",
+        "ttft_s",
+        "carbon_kg",
+        "water_l",
+        "cost_usd",
+        "requests",
+        "dropped",
+        "decision_s",
+        "nodes_total",
+    ];
+
+    pub fn create(path: &str) -> std::io::Result<CsvEpochObserver> {
+        Ok(CsvEpochObserver {
+            writer: Some(CsvWriter::create(path, &Self::HEADER)?),
+        })
+    }
+}
+
+impl EpochObserver for CsvEpochObserver {
+    fn on_epoch(&mut self, record: &EpochRecord, _state: &ClusterState) {
+        if let Some(w) = &mut self.writer {
+            let nodes: usize = record.site_nodes.iter().sum();
+            let _ = w.row_f64(&[
+                record.epoch as f64,
+                record.ledger.mean_ttft_s(),
+                record.ledger.carbon_kg,
+                record.ledger.water_l,
+                record.ledger.cost_usd,
+                record.ledger.requests,
+                record.ledger.dropped,
+                record.decision_s,
+                nodes as f64,
+            ]);
+        }
+    }
+
+    fn on_finish(&mut self, _result: &SimResult) {
+        if let Some(w) = self.writer.take() {
+            let _ = w.finish();
+        }
+    }
+}
+
+/// Buffers the per-epoch series and writes one JSON document on finish.
+pub struct JsonEpochObserver {
+    path: String,
+    rows: Vec<Json>,
+}
+
+impl JsonEpochObserver {
+    pub fn new(path: &str) -> JsonEpochObserver {
+        JsonEpochObserver {
+            path: path.into(),
+            rows: Vec::new(),
+        }
+    }
+}
+
+impl EpochObserver for JsonEpochObserver {
+    fn on_epoch(&mut self, record: &EpochRecord, _state: &ClusterState) {
+        let nodes: usize = record.site_nodes.iter().sum();
+        self.rows.push(Json::num_arr(&[
+            record.epoch as f64,
+            record.ledger.mean_ttft_s(),
+            record.ledger.carbon_kg,
+            record.ledger.water_l,
+            record.ledger.cost_usd,
+            record.ledger.requests,
+            record.ledger.dropped,
+            nodes as f64,
+        ]));
+    }
+
+    fn on_finish(&mut self, result: &SimResult) {
+        let mut root = Json::obj();
+        root.set("name", Json::Str(result.name.clone()));
+        root.set("objectives", Json::num_arr(&result.objectives()));
+        root.set("per_epoch", Json::Arr(std::mem::take(&mut self.rows)));
+        let _ = std::fs::write(&self.path, root.to_string_pretty());
+    }
+}
+
+/// Prints a one-line progress report every `every` epochs.
+pub struct ProgressObserver {
+    every: usize,
+}
+
+impl ProgressObserver {
+    pub fn new(every: usize) -> ProgressObserver {
+        ProgressObserver {
+            every: every.max(1),
+        }
+    }
+}
+
+impl EpochObserver for ProgressObserver {
+    fn on_epoch(&mut self, record: &EpochRecord, state: &ClusterState) {
+        if record.epoch % self.every == 0 {
+            let nodes: usize = state.site_totals().iter().sum();
+            eprintln!(
+                "  epoch {:>4}: ttft {:.3}s  carbon {:.2}kg  {} nodes live",
+                record.epoch,
+                record.ledger.mean_ttft_s(),
+                record.ledger.carbon_kg,
+                nodes
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterAction;
+    use crate::config::SystemConfig;
+    use crate::sim::simulate;
+
+    /// Trivial scheduler: always the uniform plan, always-warm.
+    struct Uniform;
+    impl Scheduler for Uniform {
+        fn name(&self) -> String {
+            "uniform".into()
+        }
+        fn plan(&mut self, ctx: &EpochContext) -> Plan {
+            Plan::uniform(ctx.cfg.num_classes(), ctx.cfg.datacenters.len())
+        }
+    }
+
+    fn world(cfg: &SystemConfig, seed: u64) -> (Trace, GridSignals) {
+        (
+            Trace::generate(cfg, cfg.epochs, seed),
+            GridSignals::generate(cfg, cfg.epochs, seed),
+        )
+    }
+
+    #[test]
+    fn step_by_step_matches_batch_wrapper() {
+        let cfg = SystemConfig::small_test();
+        let (trace, signals) = world(&cfg, 5);
+        let mut a = Uniform;
+        let batch = simulate(&cfg, &trace, &signals, &mut a, 5);
+
+        let mut b = Uniform;
+        let mut session = SimSession::new(&cfg, &trace, &signals, &mut b, 5);
+        let mut steps = 0;
+        while let Some(rec) = session.step() {
+            assert_eq!(rec.epoch, steps);
+            steps += 1;
+        }
+        assert!(session.is_done());
+        let streamed = session.finish();
+        assert_eq!(steps, cfg.epochs);
+        assert_eq!(batch.total.requests, streamed.total.requests);
+        assert_eq!(batch.total.carbon_kg, streamed.total.carbon_kg);
+        assert_eq!(batch.total.ttft_sum_s, streamed.total.ttft_sum_s);
+        assert_eq!(batch.total.dropped, streamed.total.dropped);
+        for (x, y) in batch.per_epoch.iter().zip(&streamed.per_epoch) {
+            assert_eq!(x.plan, y.plan);
+            assert_eq!(x.ledger.e_it_j, y.ledger.e_it_j);
+        }
+    }
+
+    #[test]
+    fn events_dip_and_restore_capacity() {
+        let cfg = SystemConfig::small_test();
+        let (trace, signals) = world(&cfg, 3);
+        let mut s = Uniform;
+        let events = vec![
+            ScenarioEvent::at(
+                2,
+                ClusterAction::ScaleRegion {
+                    region: 2,
+                    frac: 0.0,
+                },
+            ),
+            ScenarioEvent::at(4, ClusterAction::RestoreRegion { region: 2 }),
+        ];
+        let res = SimSession::new(&cfg, &trace, &signals, &mut s, 3)
+            .with_events(events)
+            .run();
+        let full: usize = res.per_epoch[0].site_nodes.iter().sum();
+        let dipped: usize = res.per_epoch[2].site_nodes.iter().sum();
+        let restored: usize = res.per_epoch[4].site_nodes.iter().sum();
+        assert!(dipped < full, "no capacity dip: {dipped} vs {full}");
+        assert_eq!(restored, full, "capacity not restored");
+        // request mass is conserved across the outage window
+        let expected: f64 = trace.epochs[..cfg.epochs]
+            .iter()
+            .map(|e| {
+                e.classes.iter().map(|c| c.n_req.round()).sum::<f64>()
+            })
+            .sum();
+        assert!((res.total.requests - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prev_ledger_reaches_the_scheduler() {
+        struct PrevProbe {
+            saw_none: usize,
+            saw_some: usize,
+        }
+        impl Scheduler for PrevProbe {
+            fn name(&self) -> String {
+                "prev-probe".into()
+            }
+            fn plan(&mut self, ctx: &EpochContext) -> Plan {
+                match ctx.prev {
+                    None => self.saw_none += 1,
+                    Some(prev) => {
+                        assert!(prev.requests >= 0.0);
+                        self.saw_some += 1;
+                    }
+                }
+                Plan::uniform(
+                    ctx.cfg.num_classes(),
+                    ctx.cfg.datacenters.len(),
+                )
+            }
+        }
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let (trace, signals) = world(&cfg, 1);
+        let mut probe = PrevProbe {
+            saw_none: 0,
+            saw_some: 0,
+        };
+        let _ =
+            SimSession::new(&cfg, &trace, &signals, &mut probe, 1).run();
+        assert_eq!(probe.saw_none, 1, "only epoch 0 lacks a prev ledger");
+        assert_eq!(probe.saw_some, 2);
+    }
+
+    #[test]
+    fn observers_see_every_epoch_and_the_finish() {
+        struct Counter {
+            epochs: usize,
+            finished: bool,
+        }
+        impl EpochObserver for Counter {
+            fn on_epoch(&mut self, rec: &EpochRecord, state: &ClusterState) {
+                assert_eq!(rec.site_nodes, state.site_totals());
+                self.epochs += 1;
+            }
+            fn on_finish(&mut self, result: &SimResult) {
+                assert_eq!(result.per_epoch.len(), self.epochs);
+                self.finished = true;
+            }
+        }
+        // observers are boxed into the session, so count via a shared cell
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Shared(Rc<RefCell<Counter>>);
+        impl EpochObserver for Shared {
+            fn on_epoch(&mut self, rec: &EpochRecord, state: &ClusterState) {
+                self.0.borrow_mut().on_epoch(rec, state);
+            }
+            fn on_finish(&mut self, result: &SimResult) {
+                self.0.borrow_mut().on_finish(result);
+            }
+        }
+        let counter = Rc::new(RefCell::new(Counter {
+            epochs: 0,
+            finished: false,
+        }));
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 4;
+        let (trace, signals) = world(&cfg, 2);
+        let mut s = Uniform;
+        let _ = SimSession::new(&cfg, &trace, &signals, &mut s, 2)
+            .with_observer(Box::new(Shared(Rc::clone(&counter))))
+            .run();
+        assert_eq!(counter.borrow().epochs, 4);
+        assert!(counter.borrow().finished);
+    }
+
+    #[test]
+    fn csv_observer_writes_the_time_series() {
+        let tmp = std::env::temp_dir().join("slit_session_epochs.csv");
+        let path = tmp.to_str().unwrap().to_string();
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let (trace, signals) = world(&cfg, 7);
+        let mut s = Uniform;
+        let obs = CsvEpochObserver::create(&path).unwrap();
+        let _ = SimSession::new(&cfg, &trace, &signals, &mut s, 7)
+            .with_observer(Box::new(obs))
+            .run();
+        let (header, rows) = crate::util::csv::read_file(&path).unwrap();
+        let want: Vec<String> = CsvEpochObserver::HEADER
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(header, want);
+        assert_eq!(rows.len(), 3);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

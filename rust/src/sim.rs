@@ -1,5 +1,11 @@
-//! Epoch-driven discrete simulator: the validation substrate (§6 "we
-//! developed and validated a Python-based simulator" — rebuilt in rust).
+//! Simulator-facing scheduler interface and the legacy batch entry point.
+//!
+//! The epoch loop itself lives in [`crate::session::SimSession`] — a
+//! streaming API over a mutable cluster (see DESIGN.md §11). This module
+//! keeps the stable surface: the [`Scheduler`] trait, the per-epoch
+//! context/record types, and a thin [`simulate`] wrapper that drives a
+//! session with no events — bit-identical to the pre-session batch
+//! simulator (rust/tests/session_equivalence.rs pins the equivalence).
 //!
 //! Per epoch: the framework under test produces a scheduling plan from the
 //! *predicted* load (workload predictor, §5.1); requests are then sampled
@@ -8,16 +14,14 @@
 //! paper's line 22-23 fallback applies: request mass beyond the predicted
 //! level is routed by the default (uniform) plan.
 
-use crate::cluster::build_panels;
+use crate::cluster::ClusterState;
 use crate::config::{PhysicsConfig, SystemConfig, N_OBJ};
-use crate::eval::{AnalyticEvaluator, EvalConsts};
+use crate::eval::AnalyticEvaluator;
 use crate::models::EpochLedger;
 use crate::plan::Plan;
 use crate::power::GridSignals;
-use crate::predictor::WorkloadPredictor;
-use crate::sched::LocalScheduler;
+use crate::session::SimSession;
 use crate::trace::{EpochLoad, Trace};
-use crate::util::rng::Rng;
 
 /// Context handed to a scheduler each epoch.
 pub struct EpochContext<'a> {
@@ -28,6 +32,12 @@ pub struct EpochContext<'a> {
     /// Analytic evaluator bound to this epoch + the scheduler's power
     /// policy. SLIT searches against it; baselines may ignore it.
     pub evaluator: &'a AnalyticEvaluator,
+    /// Live cluster topology this epoch runs against — may differ from
+    /// `cfg.datacenters` once scenario events have fired.
+    pub cluster: &'a ClusterState,
+    /// Previous epoch's *actual* ledger (`None` on the first epoch):
+    /// feedback for prediction-error-aware schedulers.
+    pub prev: Option<&'a EpochLedger>,
 }
 
 /// A geo-distributed scheduling framework under test.
@@ -50,6 +60,9 @@ pub struct EpochRecord {
     pub plan: Plan,
     /// Optimiser wall time spent making this decision, seconds.
     pub decision_s: f64,
+    /// Live total node count per site this epoch (shows capacity dips
+    /// and recoveries under rolling-outage events).
+    pub site_nodes: Vec<usize>,
 }
 
 /// Full simulation result for one framework.
@@ -68,6 +81,9 @@ impl SimResult {
 }
 
 /// Run one framework over the trace. Deterministic per seed.
+///
+/// Legacy batch entry point: a [`SimSession`] with no scenario events and
+/// no observers, driven to the end of the horizon.
 pub fn simulate(
     cfg: &SystemConfig,
     trace: &Trace,
@@ -75,130 +91,7 @@ pub fn simulate(
     scheduler: &mut dyn Scheduler,
     seed: u64,
 ) -> SimResult {
-    let epochs = cfg.epochs.min(trace.epochs.len());
-    let mut rng = Rng::new(seed ^ 0x53494D); // "SIM"
-    let mut predictor = WorkloadPredictor::new(cfg);
-    let mut locals: Vec<LocalScheduler> = (0..cfg.datacenters.len())
-        .map(|l| LocalScheduler::new(cfg, l))
-        .collect();
-
-    let mut per_epoch = Vec::with_capacity(epochs);
-    let mut total = EpochLedger::default();
-    let unused_pr = scheduler.unused_pr(&cfg.physics);
-
-    for epoch in 0..epochs {
-        let actual = &trace.epochs[epoch];
-        // before observing this epoch, predict it (15 min lookahead)
-        let predicted = if epoch == 0 {
-            actual.clone() // bootstrap: first epoch is known at t=0
-        } else {
-            predictor.predict_next()
-        };
-
-        let (cp, dp) = build_panels(cfg, signals, epoch, &predicted, unused_pr);
-        let evaluator = AnalyticEvaluator::new(
-            cp,
-            dp,
-            EvalConsts::from_physics(&cfg.physics),
-        );
-        let ctx = EpochContext {
-            cfg,
-            epoch,
-            predicted: &predicted,
-            evaluator: &evaluator,
-        };
-        let t_decision = std::time::Instant::now();
-        let plan = scheduler.plan(&ctx);
-        let decision_s = t_decision.elapsed().as_secs_f64();
-        assert!(plan.is_valid(), "{} produced invalid plan", scheduler.name());
-
-        // ---- discrete execution against the ACTUAL load ------------------
-        let mut ledger = EpochLedger::default();
-        for ls in &mut locals {
-            ls.new_epoch(cfg);
-        }
-        let requests = trace.sample_requests(cfg, epoch, &mut rng);
-        let default_plan = Plan::uniform(plan.classes, plan.dcs);
-        // per-class realised count to detect prediction misses (line 22-23)
-        let mut seen = vec![0.0f64; plan.classes];
-
-        for req in &requests {
-            let k = req.class;
-            seen[k] += 1.0;
-            let missed = seen[k] > predicted.classes[k].n_req.ceil().max(1.0);
-            let row = if missed {
-                default_plan.row(k)
-            } else {
-                plan.row(k)
-            };
-            // route by plan weights; fall back to other sites on saturation
-            let first = rng.weighted(row);
-            let mut placed = false;
-            for attempt in 0..cfg.datacenters.len() {
-                let l = (first + attempt) % cfg.datacenters.len();
-                if row[l] <= 0.0 && attempt == 0 && row[first] <= 0.0 {
-                    continue;
-                }
-                let hops = cfg.hops(req.region(), l);
-                // serverless container churn: a cold_frac share of requests
-                // land on a cold container and pay the Eq. 2 load latency
-                // (consistent with the analytic/AOT evaluator's cold term)
-                let is_warm = !rng.chance(cfg.physics.cold_frac);
-                if let Some(p) = locals[l].place(cfg, req, hops, is_warm) {
-                    ledger.add_request(p.ttft_s);
-                    placed = true;
-                    break;
-                }
-            }
-            if !placed {
-                ledger.dropped += 1.0;
-                // a dropped request is re-queued; charge the configured
-                // re-queue latency penalty
-                ledger.add_request(cfg.physics.drop_penalty_s);
-            }
-        }
-
-        // ---- energy/water/carbon accounting (Eqs. 5-18) -------------------
-        let (ci, wi, tou) = signals.at(epoch);
-        for (l, ls) in locals.iter().enumerate() {
-            let spec = &cfg.datacenters[l];
-            let mut e_it = 0.0;
-            for (ti, nt) in cfg.node_types.iter().enumerate() {
-                let on = ls.capacity.on_nodes(ti, cfg.physics.epoch_s);
-                let nodes = spec.nodes_per_type[ti] as f64;
-                e_it += (on * cfg.physics.pr_on
-                    + (nodes - on) * unused_pr)
-                    * nt.tdp_w
-                    * cfg.physics.epoch_s;
-            }
-            ledger.add_site(
-                e_it,
-                spec.cop,
-                tou[l],
-                cfg.physics.h_water,
-                cfg.physics.d_ratio,
-                wi[l],
-                cfg.physics.ei_pot,
-                cfg.physics.ei_waste,
-                ci[l],
-            );
-        }
-
-        predictor.observe(actual);
-        total.merge(&ledger);
-        per_epoch.push(EpochRecord {
-            epoch,
-            ledger,
-            plan,
-            decision_s,
-        });
-    }
-
-    SimResult {
-        name: scheduler.name(),
-        per_epoch,
-        total,
-    }
+    SimSession::new(cfg, trace, signals, scheduler, seed).run()
 }
 
 #[cfg(test)]
@@ -254,6 +147,14 @@ mod tests {
         for e in &res.per_epoch {
             assert!(e.ledger.e_tot_j >= e.ledger.e_it_j);
             assert!(e.ledger.requests >= 0.0);
+            // no events: the capacity series is flat at the config counts
+            let nodes: usize = e.site_nodes.iter().sum();
+            let want: usize = cfg
+                .datacenters
+                .iter()
+                .map(|d| d.total_nodes())
+                .sum();
+            assert_eq!(nodes, want);
         }
         // totals equal the per-epoch sum
         let sum_carbon: f64 =

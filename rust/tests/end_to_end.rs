@@ -7,6 +7,7 @@ use slit::config::{SystemConfig, N_OBJ, OBJ_CARBON, OBJ_COST, OBJ_TTFT, OBJ_WATE
 use slit::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
 use slit::opt::{SlitScheduler, SlitVariant};
 use slit::power::GridSignals;
+use slit::registry;
 use slit::sim::{simulate, Scheduler, SimResult};
 use slit::trace::Trace;
 use slit::util::json::Json;
@@ -90,12 +91,11 @@ fn all_frameworks_serve_all_requests_or_account_drops() {
             .map(|e| e.total_requests())
             .sum()
     };
-    let mut frameworks: Vec<Box<dyn Scheduler>> = vec![
-        Box::new(HelixScheduler),
-        Box::new(SplitwiseScheduler),
-        Box::new(RoundRobinScheduler),
-        Box::new(SlitScheduler::new(&cfg, SlitVariant::Balance)),
-    ];
+    // every framework in the registry, not a hand-maintained list
+    let mut frameworks: Vec<Box<dyn Scheduler>> = registry::all()
+        .iter()
+        .map(|spec| (spec.build)(&cfg))
+        .collect();
     for f in &mut frameworks {
         let r = run(&cfg, f.as_mut(), 7);
         assert!(

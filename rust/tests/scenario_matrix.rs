@@ -1,19 +1,21 @@
 //! Scenario-matrix integration: every named workload/grid regime ×
-//! (SLIT target variant, Helix, Splitwise) on the discrete simulator.
+//! (SLIT target variant, Helix, Splitwise) on the discrete simulator —
+//! including the event-driven `outage-rolling` regime, whose capacity
+//! varies *mid-run* through the SimSession event schedule.
 //!
 //! The paper's qualitative claim, generalised across regimes: on the
 //! objective a scenario stresses, the matching SLIT variant must stay
 //! non-dominated against both baselines — and on the sustainability axes
 //! its scale-to-zero + grid-aware routing must win by a wide margin.
 
-use slit::baselines::{HelixScheduler, SplitwiseScheduler};
 use slit::config::{
     SystemConfig, OBJ_CARBON, OBJ_NAMES, OBJ_TTFT, OBJ_WATER,
 };
-use slit::opt::{SlitScheduler, SlitVariant};
+use slit::opt::SlitVariant;
 use slit::pareto::dominates;
+use slit::registry;
 use slit::scenario::Scenario;
-use slit::sim::{simulate, Scheduler, SimResult};
+use slit::sim::SimResult;
 
 /// Test-scale config with enough pressure that schedulers differ. The
 /// generation count bounds the runtime; the wall-clock budget is kept far
@@ -43,14 +45,16 @@ fn slit_stays_nondominated_on_target_objective_in_every_scenario() {
     for sc in Scenario::named() {
         let world = sc.build(&base, base.epochs, 42);
         let target = sc.target_objective();
-        let run = |s: &mut dyn Scheduler| -> SimResult {
-            simulate(&world.cfg, &world.trace, &world.signals, s, 42)
+        // frameworks resolve through the registry; worlds run through the
+        // session API so scheduled events (outage-rolling) fire
+        let run = |name: &str| -> SimResult {
+            let mut sched =
+                registry::build(name, &world.cfg, None).expect("framework");
+            world.run(sched.as_mut(), 42)
         };
-        let helix = run(&mut HelixScheduler);
-        let splitwise = run(&mut SplitwiseScheduler);
-        let mut slit_sched =
-            SlitScheduler::new(&world.cfg, variant_for(target));
-        let slit = run(&mut slit_sched);
+        let helix = run("helix");
+        let splitwise = run("splitwise");
+        let slit = run(variant_for(target).name());
 
         let so = slit.objectives();
         let ho = helix.objectives();
@@ -91,6 +95,28 @@ fn slit_stays_nondominated_on_target_objective_in_every_scenario() {
 }
 
 #[test]
+fn rolling_outage_records_show_dip_and_recovery_for_every_framework() {
+    let base = pressured_config();
+    let world = Scenario::RollingOutage.build(&base, base.epochs, 42);
+    // 4-epoch horizon -> dark at epoch 1, restored at epoch 2
+    for name in ["helix", "splitwise", "slit-cost"] {
+        let mut sched =
+            registry::build(name, &world.cfg, None).expect("framework");
+        let res = world.run(sched.as_mut(), 42);
+        let nodes =
+            |e: usize| -> usize { res.per_epoch[e].site_nodes.iter().sum() };
+        assert!(
+            nodes(1) < nodes(0),
+            "{name}: no capacity dip ({} vs {})",
+            nodes(1),
+            nodes(0)
+        );
+        assert_eq!(nodes(2), nodes(0), "{name}: capacity not restored");
+        assert_eq!(nodes(3), nodes(0));
+    }
+}
+
+#[test]
 fn named_scenarios_actually_change_the_world() {
     let base = pressured_config();
     let b = Scenario::Baseline.build(&base, base.epochs, 7);
@@ -98,7 +124,8 @@ fn named_scenarios_actually_change_the_world() {
         let w = sc.build(&base, base.epochs, 7);
         let changed = w.cfg != b.cfg
             || w.trace.epochs != b.trace.epochs
-            || w.signals.ci != b.signals.ci;
+            || w.signals.ci != b.signals.ci
+            || w.events != b.events;
         assert!(changed, "{} did not alter the world", sc.name());
     }
 }
@@ -106,9 +133,13 @@ fn named_scenarios_actually_change_the_world() {
 #[test]
 fn scenario_worlds_account_all_frameworks_consistently() {
     // every framework must serve (or account as dropped) the same request
-    // mass within one scenario world
+    // mass within one scenario world — even while capacity varies mid-run
     let base = pressured_config();
-    for sc in [Scenario::RegionalOutage, Scenario::BurstyHeavyTail] {
+    for sc in [
+        Scenario::RegionalOutage,
+        Scenario::RollingOutage,
+        Scenario::BurstyHeavyTail,
+    ] {
         let world = sc.build(&base, base.epochs, 11);
         // the simulator samples round(n_req) requests per class
         let expected: f64 = world.trace.epochs[..world.cfg.epochs]
@@ -117,18 +148,10 @@ fn scenario_worlds_account_all_frameworks_consistently() {
                 e.classes.iter().map(|c| c.n_req.round()).sum::<f64>()
             })
             .sum();
-        let mut frameworks: Vec<Box<dyn Scheduler>> = vec![
-            Box::new(HelixScheduler),
-            Box::new(SplitwiseScheduler),
-        ];
-        for f in &mut frameworks {
-            let r = simulate(
-                &world.cfg,
-                &world.trace,
-                &world.signals,
-                f.as_mut(),
-                11,
-            );
+        for name in ["helix", "splitwise"] {
+            let mut sched =
+                registry::build(name, &world.cfg, None).expect("framework");
+            let r = world.run(sched.as_mut(), 11);
             assert!(
                 (r.total.requests - expected).abs() < 1e-6,
                 "{}/{}: {} vs {}",

@@ -1,0 +1,165 @@
+//! SimSession / legacy-simulate equivalence suite.
+//!
+//! The tentpole redesign keeps `sim::simulate()` as a thin wrapper over
+//! `session::SimSession`; these tests pin the contract:
+//!
+//! * every framework in the registry produces bit-identical `SimResult`s
+//!   through either entry point on the baseline scenario,
+//! * the wrapper is bit-identical to direct session use on all the
+//!   pre-existing (event-free) scenarios,
+//! * total request mass (served + dropped = `ledger.requests`) is
+//!   invariant under mid-run capacity changes.
+
+use slit::cluster::ClusterAction;
+use slit::config::SystemConfig;
+use slit::registry;
+use slit::scenario::Scenario;
+use slit::session::{ScenarioEvent, SimSession};
+use slit::sim::{simulate, SimResult};
+
+/// Small, fast, and immune to wall-clock truncation: the optimizer budget
+/// is effectively infinite so timing noise cannot leak into the numbers.
+fn quick_config() -> SystemConfig {
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 3;
+    cfg.opt.generations = 2;
+    cfg.opt.population = 8;
+    cfg.opt.budget_s = 1e9;
+    cfg
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(a.name, b.name, "{label}: name");
+    assert_eq!(a.total.requests, b.total.requests, "{label}: requests");
+    assert_eq!(a.total.dropped, b.total.dropped, "{label}: dropped");
+    assert_eq!(a.total.ttft_sum_s, b.total.ttft_sum_s, "{label}: ttft");
+    assert_eq!(a.total.carbon_kg, b.total.carbon_kg, "{label}: carbon");
+    assert_eq!(a.total.water_l, b.total.water_l, "{label}: water");
+    assert_eq!(a.total.cost_usd, b.total.cost_usd, "{label}: cost");
+    assert_eq!(a.total.e_it_j, b.total.e_it_j, "{label}: e_it");
+    assert_eq!(a.total.e_tot_j, b.total.e_tot_j, "{label}: e_tot");
+    assert_eq!(a.per_epoch.len(), b.per_epoch.len(), "{label}: epochs");
+    for (x, y) in a.per_epoch.iter().zip(&b.per_epoch) {
+        assert_eq!(x.plan, y.plan, "{label}: epoch {} plan", x.epoch);
+        assert_eq!(
+            x.site_nodes, y.site_nodes,
+            "{label}: epoch {} capacity",
+            x.epoch
+        );
+        assert_eq!(
+            x.ledger.ttft_sum_s, y.ledger.ttft_sum_s,
+            "{label}: epoch {} ledger",
+            x.epoch
+        );
+    }
+}
+
+#[test]
+fn every_registered_framework_round_trips_through_the_session() {
+    let cfg = quick_config();
+    let world = Scenario::Baseline.build(&cfg, cfg.epochs, 9);
+    for spec in registry::all() {
+        let mut legacy_sched = (spec.build)(&world.cfg);
+        let legacy = simulate(
+            &world.cfg,
+            &world.trace,
+            &world.signals,
+            legacy_sched.as_mut(),
+            9,
+        );
+        let mut session_sched = (spec.build)(&world.cfg);
+        let streamed = SimSession::new(
+            &world.cfg,
+            &world.trace,
+            &world.signals,
+            session_sched.as_mut(),
+            9,
+        )
+        .run();
+        assert_bit_identical(&legacy, &streamed, spec.name);
+    }
+}
+
+#[test]
+fn wrapper_is_bit_identical_on_every_preexisting_scenario() {
+    // the five pre-session regimes plus the baseline schedule no events,
+    // so the wrapper and a bare session must agree exactly
+    let cfg = quick_config();
+    for sc in [
+        Scenario::Baseline,
+        Scenario::Diurnal,
+        Scenario::BurstyHeavyTail,
+        Scenario::RegionalOutage,
+        Scenario::CarbonSpike,
+        Scenario::WaterStressedSummer,
+    ] {
+        let world = sc.build(&cfg, cfg.epochs, 17);
+        assert!(world.events.is_empty(), "{} schedules events", sc.name());
+        for name in ["splitwise", "slit-balance"] {
+            let mut a = registry::build(name, &world.cfg, None).unwrap();
+            let legacy = simulate(
+                &world.cfg,
+                &world.trace,
+                &world.signals,
+                a.as_mut(),
+                17,
+            );
+            let mut b = registry::build(name, &world.cfg, None).unwrap();
+            let streamed = world.run(b.as_mut(), 17);
+            assert_bit_identical(
+                &legacy,
+                &streamed,
+                &format!("{}/{}", sc.name(), name),
+            );
+        }
+    }
+}
+
+#[test]
+fn request_mass_is_conserved_across_mid_run_capacity_changes() {
+    // every sampled request is accounted exactly once (served or dropped:
+    // ledger.requests counts both), so the total request mass must not
+    // depend on capacity events firing mid-run
+    let cfg = quick_config();
+    let world = Scenario::Baseline.build(&cfg, cfg.epochs, 23);
+    let expected: f64 = world.trace.epochs[..world.cfg.epochs]
+        .iter()
+        .map(|e| e.classes.iter().map(|c| c.n_req.round()).sum::<f64>())
+        .sum();
+
+    let mut plain_sched = registry::build("splitwise", &world.cfg, None).unwrap();
+    let plain = world.run(plain_sched.as_mut(), 23);
+
+    let mut outage_sched = registry::build("splitwise", &world.cfg, None).unwrap();
+    let outage = SimSession::new(
+        &world.cfg,
+        &world.trace,
+        &world.signals,
+        outage_sched.as_mut(),
+        23,
+    )
+    .with_events(vec![
+        ScenarioEvent::at(
+            1,
+            ClusterAction::ScaleRegion {
+                region: 2,
+                frac: 0.0,
+            },
+        ),
+        ScenarioEvent::at(2, ClusterAction::RestoreRegion { region: 2 }),
+    ])
+    .run();
+
+    assert_eq!(plain.total.requests, expected);
+    assert_eq!(outage.total.requests, expected);
+    // served + dropped partitions the mass in both runs
+    assert!(plain.total.dropped <= plain.total.requests);
+    assert!(outage.total.dropped <= outage.total.requests);
+    // the outage really happened: epoch 1 ran with less capacity
+    let nodes = |r: &SimResult, e: usize| -> usize {
+        r.per_epoch[e].site_nodes.iter().sum()
+    };
+    assert!(nodes(&outage, 1) < nodes(&outage, 0));
+    assert_eq!(nodes(&outage, 2), nodes(&outage, 0));
+    assert_eq!(nodes(&plain, 1), nodes(&plain, 0));
+}
