@@ -18,7 +18,10 @@
 use std::collections::BTreeMap;
 
 use crate::config::{SystemConfig, N_OBJ, OBJ_NAMES};
-use crate::coordinator::{serve_forever, Coordinator, CoordinatorConfig};
+use crate::coordinator::{
+    run_drill, serve_forever, Coordinator, CoordinatorConfig, DrillClient,
+    DrillConfig,
+};
 use crate::opt::SlitVariant;
 use crate::power::GridSignals;
 use crate::registry;
@@ -493,6 +496,46 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `slit drill` — scripted outage drill against a running `slit serve`.
+///
+/// Connects to the coordinator's TCP front, darkens a region mid-serve
+/// (`cluster` op), forces epoch boundaries (`tick` op), keeps traffic
+/// flowing, restores, and verifies the three drill invariants: topology
+/// dip, exact recovery, and request-mass conservation.
+pub fn cmd_drill(args: &Args) -> anyhow::Result<()> {
+    let host = args.get("host").unwrap_or("127.0.0.1").to_string();
+    let port = args.usize("port", 7070) as u16;
+    let dcfg = DrillConfig {
+        region: args.usize("region", 2),
+        frac: args.f64("frac", 0.0),
+        requests_per_wave: args.usize("requests", 64),
+    };
+    let mut client = DrillClient::connect(&host, port)?;
+    eprintln!(
+        "drilling {host}:{port}: region {} scaled to {:.0}% mid-serve ...",
+        dcfg.region,
+        dcfg.frac * 100.0
+    );
+    let report = run_drill(&mut client, &dcfg)?;
+    println!("| phase | live nodes |");
+    println!("|---|---|");
+    println!("| baseline | {:.0} |", report.baseline_nodes);
+    println!("| outage | {:.0} |", report.dipped_nodes);
+    println!("| restored | {:.0} |", report.recovered_nodes);
+    println!(
+        "traffic: sent {} served {} rejected {} | epoch {:.0} | \
+         carbon {:.4} kg",
+        report.sent,
+        report.served,
+        report.rejected,
+        report.epoch,
+        report.carbon_kg
+    );
+    report.verify()?;
+    println!("drill OK: dip + recovery observed, request mass conserved");
+    Ok(())
+}
+
 /// `slit artifacts` — verify the AOT artifacts.
 pub fn cmd_artifacts(_args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
@@ -541,6 +584,9 @@ COMMANDS:
   pareto      dump one epoch's Pareto front     --epoch N --out front.json
   serve       start the online coordinator      --port N --variant NAME
               --epoch-seconds F --use-hlo
+  drill       scripted outage drill against a running `slit serve`:
+              darken a region, tick, verify dip/recovery + conservation
+              --host H --port N --region N --frac F --requests N
   artifacts   verify AOT artifacts load + shape-check
   config      write the resolved config         --out slit-config.json
 ";
@@ -555,6 +601,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "scenarios" => cmd_scenarios(&args),
         "pareto" => cmd_pareto(&args),
         "serve" => cmd_serve(&args),
+        "drill" => cmd_drill(&args),
         "artifacts" => cmd_artifacts(&args),
         "config" => cmd_config(&args),
         "help" | "--help" | "-h" => {
@@ -709,6 +756,27 @@ mod tests {
             assert_eq!(res.total.carbon_kg, seq.total.carbon_kg);
             assert_eq!(res.total.ttft_sum_s, seq.total.ttft_sum_s);
         }
+    }
+
+    #[test]
+    fn drill_command_runs_against_an_ephemeral_server() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        let ccfg = CoordinatorConfig {
+            plan_budget_s: 0.2,
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg, ccfg, None);
+        let handle =
+            serve_forever(std::sync::Arc::clone(&c), 0).unwrap();
+        let a = Args::parse(&argv(&format!(
+            "drill --port {} --requests 16",
+            handle.port
+        )))
+        .unwrap();
+        cmd_drill(&a).unwrap();
+        c.stop();
     }
 
     #[test]

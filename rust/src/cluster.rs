@@ -551,6 +551,167 @@ mod tests {
         }
     }
 
+    /// Random well-formed [`ClusterAction`] over the small-test topology.
+    fn gen_action(rng: &mut crate::util::rng::Rng, dcs: usize) -> ClusterAction {
+        match rng.below(5) {
+            0 => ClusterAction::ScaleRegion {
+                region: rng.below(crate::config::REGIONS),
+                frac: rng.range(0.0, 1.0),
+            },
+            1 => ClusterAction::RestoreRegion {
+                region: rng.below(crate::config::REGIONS),
+            },
+            2 => ClusterAction::ScaleSite {
+                dc: rng.below(dcs),
+                frac: rng.range(0.0, 1.0),
+            },
+            3 => ClusterAction::RestoreSite { dc: rng.below(dcs) },
+            _ => ClusterAction::SetSite {
+                dc: rng.below(dcs),
+                nodes_per_type: (0..6).map(|_| rng.below(11)).collect(),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_scale_then_restore_round_trips_to_baseline() {
+        let cfg = SystemConfig::small_test();
+        let dcs = cfg.datacenters.len();
+        crate::util::propkit::check(
+            "cluster-scale-restore-round-trip",
+            0xC1,
+            crate::util::propkit::DEFAULT_CASES,
+            |rng| {
+                (0..rng.below(12))
+                    .map(|_| gen_action(rng, dcs))
+                    .collect::<Vec<ClusterAction>>()
+            },
+            |actions| {
+                let mut st = ClusterState::from_config(&cfg);
+                for a in actions {
+                    st.apply(a);
+                }
+                // restoring every region must erase any action history
+                for region in 0..crate::config::REGIONS {
+                    st.apply(&ClusterAction::RestoreRegion { region });
+                }
+                if st.is_baseline() {
+                    Ok(())
+                } else {
+                    Err("restore-all did not reach baseline".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fractional_scaling_never_exceeds_baseline() {
+        let cfg = SystemConfig::small_test();
+        let dcs = cfg.datacenters.len();
+        let baseline = ClusterState::from_config(&cfg);
+        crate::util::propkit::check(
+            "cluster-counts-bounded",
+            0xC2,
+            crate::util::propkit::DEFAULT_CASES,
+            |rng| {
+                // only shrinking/restoring actions (frac in [0, 1], no
+                // SetSite growth): counts must stay within baseline
+                (0..1 + rng.below(10))
+                    .map(|_| match rng.below(4) {
+                        0 => ClusterAction::ScaleRegion {
+                            region: rng.below(crate::config::REGIONS),
+                            frac: rng.range(0.0, 1.0),
+                        },
+                        1 => ClusterAction::RestoreRegion {
+                            region: rng.below(crate::config::REGIONS),
+                        },
+                        2 => ClusterAction::ScaleSite {
+                            dc: rng.below(dcs),
+                            frac: rng.range(0.0, 1.0),
+                        },
+                        _ => ClusterAction::RestoreSite {
+                            dc: rng.below(dcs),
+                        },
+                    })
+                    .collect::<Vec<ClusterAction>>()
+            },
+            |actions| {
+                let mut st = ClusterState::from_config(&cfg);
+                for a in actions {
+                    st.apply(a);
+                }
+                for l in 0..dcs {
+                    for (ti, &n) in st.nodes(l).iter().enumerate() {
+                        // `frac.round()` may round 0.5 up: allow equality
+                        // with baseline but never growth
+                        if n > baseline.nodes(l)[ti] {
+                            return Err(format!(
+                                "site {l} type {ti}: {n} > baseline {}",
+                                baseline.nodes(l)[ti]
+                            ));
+                        }
+                    }
+                    if st.total_nodes(l) > baseline.total_nodes(l) {
+                        return Err(format!("site {l} grew"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_dyn_panels_always_match_live_counts() {
+        let cfg = SystemConfig::small_test();
+        let dcs = cfg.datacenters.len();
+        let signals = GridSignals::generate(&cfg, 4, 1);
+        let trace = Trace::generate(&cfg, 4, 1);
+        crate::util::propkit::check(
+            "panels-match-live-counts",
+            0xC3,
+            64, // each case builds full panels; keep the budget modest
+            |rng| {
+                (0..rng.below(8))
+                    .map(|_| gen_action(rng, dcs))
+                    .collect::<Vec<ClusterAction>>()
+            },
+            |actions| {
+                let mut st = ClusterState::from_config(&cfg);
+                for a in actions {
+                    st.apply(a);
+                }
+                let (cp, dp) = build_panels_dyn(
+                    &cfg,
+                    &st,
+                    &signals,
+                    2,
+                    &trace.epochs[2],
+                    0.05,
+                );
+                for l in 0..dcs {
+                    let want = st.total_nodes(l) as f64;
+                    if dp.nodes[l] != want {
+                        return Err(format!(
+                            "dp.nodes[{l}] = {} but live total is {want}",
+                            dp.nodes[l]
+                        ));
+                    }
+                }
+                // panel shapes and positivity survive arbitrary topology
+                if cp.thr.len() != cp.classes * cp.dcs {
+                    return Err("thr shape".into());
+                }
+                if !cp.thr.iter().all(|&t| t > 0.0) {
+                    return Err("non-positive throughput".into());
+                }
+                if !cp.proc.iter().all(|&p| p > 0.0) {
+                    return Err("non-positive proc time".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn capacity_commit_and_utilization() {
         let cfg = SystemConfig::small_test();

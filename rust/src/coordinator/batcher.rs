@@ -203,4 +203,75 @@ mod tests {
         assert_eq!(out.len(), 3);
         assert_eq!(b.pending_count(), 0);
     }
+
+    #[test]
+    fn flush_expired_skips_young_groups() {
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 100,
+                max_wait: Duration::from_secs(60),
+            },
+            2,
+            2,
+        );
+        b.push(0, req(0));
+        b.push(1, req(1));
+        // nothing is older than the wait cap yet
+        assert!(b.flush_expired().is_empty());
+        assert_eq!(b.pending_count(), 2);
+    }
+
+    #[test]
+    fn age_timer_resets_after_a_flush() {
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(50),
+            },
+            1,
+            1,
+        );
+        b.push(0, req(0));
+        let batch = b.push(0, req(0)).expect("size cap");
+        assert_eq!(batch.requests.len(), 2);
+        // a fresh push after the flush starts a new age window: the old
+        // timestamp must not leak into the new group
+        b.push(0, req(0));
+        assert!(b.flush_expired().is_empty(), "stale age timer leaked");
+        assert_eq!(b.pending_count(), 1);
+    }
+
+    #[test]
+    fn size_cap_of_one_flushes_every_push() {
+        let mut b = Batcher::new(
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_secs(60),
+            },
+            2,
+            2,
+        );
+        for i in 0..6 {
+            let batch = b.push(i % 2, req(i % 2)).expect("immediate flush");
+            assert_eq!(batch.requests.len(), 1);
+        }
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn flushed_batches_carry_their_site_and_model_key() {
+        let mut b = Batcher::new(BatcherConfig::default(), 3, 2);
+        b.push(2, req(1)); // class 1 -> model 1
+        b.push(1, req(2)); // class 2 -> model 0
+        let mut out = b.flush_all();
+        out.sort_by_key(|g| (g.dc, g.model));
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].dc, out[0].model), (1, 0));
+        assert_eq!((out[1].dc, out[1].model), (2, 1));
+        for g in &out {
+            for r in &g.requests {
+                assert_eq!(r.model(), g.model, "request in wrong group");
+            }
+        }
+    }
 }

@@ -1,0 +1,327 @@
+//! Scripted sustainability drills against a *live* coordinator.
+//!
+//! A drill is the serving-side counterpart of the offline `outage-rolling`
+//! scenario: instead of scheduling `ScenarioEvent`s inside a `SimSession`,
+//! it speaks the coordinator's JSON-lines TCP protocol (DESIGN.md §12) to
+//! darken a region mid-serve, watch the topology dip in `snapshot` replies,
+//! keep traffic flowing through the degraded fleet, and verify the
+//! restore — all against a running `slit serve` process.
+//!
+//! Script (one phase per epoch, epochs forced via `{"op": "tick"}` so the
+//! drill is deterministic regardless of the server's wall-clock epoch
+//! compression):
+//!
+//!   1. snapshot the healthy fleet, send one traffic wave
+//!   2. `cluster scale-region frac` -> tick -> snapshot (the dip)
+//!   3. send a second wave into the degraded fleet (failover exercises)
+//!   4. `cluster restore-region` -> tick -> snapshot (the recovery)
+//!   5. final ledger; request mass must be conserved (sent == served +
+//!      rejected, counted from the drill's own per-request replies, so a
+//!      drill against a coordinator with other live clients stays sound)
+//!
+//! `slit drill` wires this up as a CLI subcommand; the serve-loop test
+//! harness (rust/tests/serve_drill.rs) drives the same code over an
+//! ephemeral-port coordinator.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::config::{MODELS, REGIONS};
+use crate::util::json::Json;
+
+/// Parameters of one scripted outage drill.
+#[derive(Clone, Debug)]
+pub struct DrillConfig {
+    /// Region taken down mid-drill.
+    pub region: usize,
+    /// Fraction of baseline nodes the region keeps (0.0 = fully dark).
+    pub frac: f64,
+    /// Requests sent per traffic wave (healthy wave + degraded wave).
+    pub requests_per_wave: usize,
+}
+
+impl Default for DrillConfig {
+    fn default() -> Self {
+        DrillConfig {
+            region: 2, // north-america: the largest origin share
+            frac: 0.0,
+            requests_per_wave: 64,
+        }
+    }
+}
+
+/// What the drill observed; [`DrillReport::verify`] turns it into a
+/// pass/fail judgement.
+#[derive(Clone, Debug)]
+pub struct DrillReport {
+    pub baseline_nodes: f64,
+    pub dipped_nodes: f64,
+    pub recovered_nodes: f64,
+    /// Requests this drill sent over the wire.
+    pub sent: u64,
+    /// Outcomes of the drill's own requests, counted from the per-request
+    /// batch replies (independent of any concurrent client traffic).
+    pub served: u64,
+    pub rejected: u64,
+    /// Epoch counter after the final tick.
+    pub epoch: f64,
+    /// Cumulative carbon (kg) after the drill's ticks.
+    pub carbon_kg: f64,
+}
+
+impl DrillReport {
+    /// The three drill invariants: the topology dipped, it recovered to
+    /// baseline, and every request sent is accounted served or rejected.
+    pub fn verify(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dipped_nodes < self.baseline_nodes,
+            "no topology dip: {} nodes before, {} during the outage",
+            self.baseline_nodes,
+            self.dipped_nodes
+        );
+        anyhow::ensure!(
+            self.recovered_nodes == self.baseline_nodes,
+            "topology not restored: {} nodes after restore vs {} baseline",
+            self.recovered_nodes,
+            self.baseline_nodes
+        );
+        anyhow::ensure!(
+            self.served + self.rejected == self.sent,
+            "request mass not conserved: sent {} but served {} + rejected {}",
+            self.sent,
+            self.served,
+            self.rejected
+        );
+        Ok(())
+    }
+}
+
+/// Blocking JSON-lines client over the coordinator's TCP front.
+pub struct DrillClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl DrillClient {
+    pub fn connect(host: &str, port: u16) -> anyhow::Result<DrillClient> {
+        let stream = TcpStream::connect((host, port))?;
+        stream.set_nodelay(true).ok();
+        Ok(DrillClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Send one JSON line, read one JSON reply.
+    pub fn call(&mut self, msg: &Json) -> anyhow::Result<Json> {
+        writeln!(self.writer, "{msg}")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    /// `call` + require `"ok": true` in the reply.
+    pub fn call_ok(&mut self, msg: &Json) -> anyhow::Result<Json> {
+        let reply = self.call(msg)?;
+        if reply.get("ok").and_then(Json::as_bool) != Some(true) {
+            let err = reply
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown server error");
+            anyhow::bail!("server rejected {msg}: {err}");
+        }
+        Ok(reply)
+    }
+}
+
+fn op(name: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("op", Json::Str(name.into()));
+    j
+}
+
+fn cluster_op(action: &str, key: &str, index: usize, frac: Option<f64>) -> Json {
+    let mut j = op("cluster");
+    j.set("action", Json::Str(action.into()));
+    j.set(key, Json::Num(index as f64));
+    if let Some(f) = frac {
+        j.set("frac", Json::Num(f));
+    }
+    j
+}
+
+/// One traffic wave as a single `batch` op: requests cycle through every
+/// (region, model) class so each wave exercises the whole plan. Returns
+/// (served, rejected) counted from the wave's own per-request results —
+/// robust against other clients talking to the same coordinator, unlike
+/// global `stats` counter deltas.
+fn wave(client: &mut DrillClient, n: usize) -> anyhow::Result<(u64, u64)> {
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut q = Json::obj();
+        q.set("region", Json::Num((i % REGIONS) as f64));
+        q.set("model", Json::Num((i % MODELS) as f64));
+        q.set("tok_in", Json::Num(64.0));
+        q.set("tok_out", Json::Num(128.0));
+        reqs.push(q);
+    }
+    let mut msg = op("batch");
+    msg.set("requests", Json::Arr(reqs));
+    let reply = client.call_ok(&msg)?;
+    let results = reply
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("batch reply missing results"))?;
+    anyhow::ensure!(
+        results.len() == n,
+        "batch returned {} results for {n} requests",
+        results.len()
+    );
+    let served = results
+        .iter()
+        .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(true))
+        .count() as u64;
+    Ok((served, n as u64 - served))
+}
+
+fn total_nodes(client: &mut DrillClient) -> anyhow::Result<f64> {
+    let snap = client.call_ok(&op("snapshot"))?;
+    snap.get("total_nodes")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("snapshot missing total_nodes"))
+}
+
+/// Run the scripted outage drill over an open client connection. Does not
+/// shut the server down; the caller owns its lifecycle.
+pub fn run_drill(
+    client: &mut DrillClient,
+    dcfg: &DrillConfig,
+) -> anyhow::Result<DrillReport> {
+    anyhow::ensure!(dcfg.region < REGIONS, "drill region out of range");
+
+    // phase 1: healthy fleet, first traffic wave
+    let baseline_nodes = total_nodes(client)?;
+    let (served_a, rejected_a) = wave(client, dcfg.requests_per_wave)?;
+
+    // phase 2: darken the region; the re-plan lands at the next tick
+    client.call_ok(&cluster_op(
+        "scale-region",
+        "region",
+        dcfg.region,
+        Some(dcfg.frac),
+    ))?;
+    client.call_ok(&op("tick"))?;
+    let dipped_nodes = total_nodes(client)?;
+
+    // phase 3: traffic into the degraded fleet (failover exercises)
+    let (served_b, rejected_b) = wave(client, dcfg.requests_per_wave)?;
+
+    // phase 4: restore and re-plan
+    client.call_ok(&cluster_op("restore-region", "region", dcfg.region, None))?;
+    let tick_reply = client.call_ok(&op("tick"))?;
+    let epoch =
+        tick_reply.get("epoch").and_then(Json::as_f64).unwrap_or(-1.0);
+    let recovered_nodes = total_nodes(client)?;
+
+    // phase 5: the ledger after both ticks (cumulative sustainability)
+    let carbon = client
+        .call_ok(&op("ledger"))?
+        .get("carbon_kg")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+
+    Ok(DrillReport {
+        baseline_nodes,
+        dipped_nodes,
+        recovered_nodes,
+        sent: 2 * dcfg.requests_per_wave as u64,
+        served: served_a + served_b,
+        rejected: rejected_a + rejected_b,
+        epoch,
+        carbon_kg: carbon,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::coordinator::{
+        serve_forever, Coordinator, CoordinatorConfig,
+    };
+    use std::sync::Arc;
+
+    fn serving_coordinator() -> (Arc<Coordinator>, u16) {
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        let ccfg = CoordinatorConfig {
+            plan_budget_s: 0.2,
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg, ccfg, None);
+        let handle = serve_forever(Arc::clone(&c), 0).unwrap();
+        // dropping the JoinHandle detaches the acceptor; the tests stop
+        // the coordinator at the end, which winds the acceptor down
+        (c, handle.port)
+    }
+
+    #[test]
+    fn drill_end_to_end_over_tcp() {
+        let (c, port) = serving_coordinator();
+        let mut client = DrillClient::connect("127.0.0.1", port).unwrap();
+        let report = run_drill(
+            &mut client,
+            &DrillConfig {
+                requests_per_wave: 32,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        report.verify().unwrap();
+        assert_eq!(report.sent, 64);
+        assert!(report.carbon_kg > 0.0, "ticks accounted no energy");
+        assert_eq!(report.epoch, 2.0);
+        c.stop();
+    }
+
+    #[test]
+    fn drill_rejects_out_of_range_region() {
+        let (c, port) = serving_coordinator();
+        let mut client = DrillClient::connect("127.0.0.1", port).unwrap();
+        let err = run_drill(
+            &mut client,
+            &DrillConfig {
+                region: REGIONS + 1,
+                ..Default::default()
+            },
+        );
+        assert!(err.is_err());
+        c.stop();
+    }
+
+    #[test]
+    fn report_verify_catches_broken_invariants() {
+        let good = DrillReport {
+            baseline_nodes: 100.0,
+            dipped_nodes: 60.0,
+            recovered_nodes: 100.0,
+            sent: 10,
+            served: 8,
+            rejected: 2,
+            epoch: 2.0,
+            carbon_kg: 1.0,
+        };
+        good.verify().unwrap();
+        let mut no_dip = good.clone();
+        no_dip.dipped_nodes = 100.0;
+        assert!(no_dip.verify().is_err());
+        let mut no_recovery = good.clone();
+        no_recovery.recovered_nodes = 60.0;
+        assert!(no_recovery.verify().is_err());
+        let mut leaked = good.clone();
+        leaked.served = 7;
+        assert!(leaked.verify().is_err());
+    }
+}

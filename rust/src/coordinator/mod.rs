@@ -15,10 +15,12 @@
 //! drives it end-to-end and reports latency/throughput percentiles.
 
 mod batcher;
+mod drill;
 mod router;
 mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use drill::{run_drill, DrillClient, DrillConfig, DrillReport};
 pub use router::{RouteOutcome, Router};
 pub use server::{serve_forever, ServeHandle};
 
@@ -88,6 +90,9 @@ pub struct Coordinator {
     /// Live cluster topology the epoch clock plans and accounts against
     /// (mutable at serve time via [`Coordinator::apply_cluster_action`]).
     state: RwLock<ClusterState>,
+    /// Per-origin-region site order, nearest-first by Eq. 3 hops —
+    /// precomputed once so the per-request failover walk allocates nothing.
+    failover_by_region: Vec<Vec<usize>>,
     pub metrics: Mutex<Metrics>,
     engine: Option<Arc<Engine>>,
     rng: Mutex<Rng>,
@@ -107,9 +112,17 @@ impl Coordinator {
             .collect();
         let classes = cfg.num_classes();
         let dcs = cfg.datacenters.len();
+        let failover_by_region = (0..crate::config::REGIONS)
+            .map(|region| {
+                let hops: Vec<f64> =
+                    (0..dcs).map(|l| cfg.hops(region, l)).collect();
+                Router::hop_order(&hops)
+            })
+            .collect();
         Arc::new(Coordinator {
             plan: RwLock::new(Plan::uniform(classes, dcs)),
             locals,
+            failover_by_region,
             epoch: AtomicUsize::new(0),
             signals,
             predictor: Mutex::new(WorkloadPredictor::new(&cfg)),
@@ -185,15 +198,18 @@ impl Coordinator {
             tok_out,
         };
         let first = self.rng.lock().expect("rng").weighted(row);
-        let dcs = self.cfg.datacenters.len();
         // serverless container churn: a cold_frac share of requests pay the
         // Eq. 2 load latency (consistent with the analytic/AOT evaluator)
         let is_warm = {
             let mut rng = self.rng.lock().expect("rng");
             !rng.chance(self.cfg.physics.cold_frac)
         };
-        for attempt in 0..dcs {
-            let l = (first + attempt) % dcs;
+        // saturation failover walks the remaining sites nearest-first by
+        // Eq. 3 hops from the origin region (precomputed, allocation-free)
+        let order = &self.failover_by_region[region];
+        for l in std::iter::once(first)
+            .chain(order.iter().copied().filter(|&l| l != first))
+        {
             let hops = self.cfg.hops(region, l);
             let placed = {
                 let mut ls = self.locals[l].lock().expect("local");
@@ -260,8 +276,6 @@ impl Coordinator {
         }
         pending_groups.extend(batcher.flush_all());
 
-        let mut served = 0u64;
-        let mut rejected = 0u64;
         let mut batch_count = 0u64;
         let mut cursor: std::collections::HashMap<(usize, usize), usize> =
             std::collections::HashMap::new();
@@ -275,7 +289,8 @@ impl Coordinator {
                 let is_warm = !rng.chance(self.cfg.physics.cold_frac);
                 let placed = ls.place(&self.cfg, req, hops, is_warm);
                 // map back to the original position (requests are unique by
-                // (dc, model) arrival order)
+                // (dc, model) arrival order); a failed placement leaves the
+                // slot None for the failover pass below
                 let key = (group.dc, req.model());
                 let start = *cursor.get(&key).unwrap_or(&0);
                 for (i, &(rdc, rreq)) in routed.iter().enumerate().skip(start)
@@ -285,18 +300,47 @@ impl Coordinator {
                         && results[i].is_none()
                     {
                         cursor.insert(key, i + 1);
-                        match placed {
-                            Some(p) => {
-                                results[i] = Some((group.dc, p.ttft_s));
-                                served += 1;
-                            }
-                            None => rejected += 1,
+                        if let Some(p) = placed {
+                            results[i] = Some((group.dc, p.ttft_s));
                         }
                         break;
                     }
                 }
             }
         }
+        // hop-aware failover for requests whose batch destination was full
+        // or dark: retried one site at a time *after* every group critical
+        // section has been released (single-lock discipline — two
+        // concurrent handle_batch calls can never hold-and-wait on each
+        // other's site locks)
+        for i in 0..results.len() {
+            if results[i].is_some() {
+                continue;
+            }
+            let (routed_dc, req) = routed[i];
+            let region = req.region();
+            let is_warm = {
+                let mut rng = self.rng.lock().expect("rng");
+                !rng.chance(self.cfg.physics.cold_frac)
+            };
+            for &l in self.failover_by_region[region]
+                .iter()
+                .filter(|&&l| l != routed_dc)
+            {
+                let hops = self.cfg.hops(region, l);
+                let placed = {
+                    let mut ls = self.locals[l].lock().expect("local");
+                    ls.place(&self.cfg, &req, hops, is_warm)
+                };
+                if let Some(p) = placed {
+                    results[i] = Some((l, p.ttft_s));
+                    break;
+                }
+            }
+        }
+        let served =
+            results.iter().filter(|r| r.is_some()).count() as u64;
+        let rejected = results.len() as u64 - served;
         {
             let mut m = self.metrics.lock().expect("metrics");
             m.batches += batch_count;
@@ -601,6 +645,47 @@ mod batch_tests {
         assert!(m.batches > 0);
         assert!(m.batch_sizes.mean() >= 1.0);
         assert_eq!(m.ttft.count(), 100);
+    }
+
+    #[test]
+    fn batch_path_fails_over_from_dark_sites() {
+        let c = coordinator();
+        c.apply_cluster_action(&ClusterAction::ScaleRegion {
+            region: 2,
+            frac: 0.0,
+        });
+        c.tick_epoch();
+        // all traffic originates in the darkened region: whatever the
+        // re-plan left on dark sites must spill hop-aware to healthy ones
+        let reqs: Vec<(usize, usize, u32, u32)> =
+            (0..60).map(|i| (2, i % 2, 64, 128)).collect();
+        let out = c.handle_batch(&reqs);
+        assert_eq!(
+            out.iter().flatten().count(),
+            60,
+            "batch failover left requests unserved with healthy capacity"
+        );
+        for r in out.iter().flatten() {
+            assert_ne!(
+                c.cfg.datacenters[r.0].region,
+                2,
+                "dark site served batch load"
+            );
+        }
+        for (l, d) in c.cfg.datacenters.iter().enumerate() {
+            if d.region == 2 {
+                let ls = c.locals[l].lock().expect("local");
+                assert_eq!(
+                    ls.capacity.used_s.iter().sum::<f64>(),
+                    0.0,
+                    "dark site {} took load",
+                    d.name
+                );
+            }
+        }
+        let m = c.metrics_snapshot();
+        assert_eq!(m.served, 60);
+        assert_eq!(m.rejected, 0);
     }
 
     #[test]

@@ -36,6 +36,25 @@ impl Router {
     ) -> impl Iterator<Item = usize> {
         (0..outcome.fanout).map(move |i| (outcome.primary + i) % outcome.fanout)
     }
+
+    /// All sites nearest-first by router hops (ties broken by site index,
+    /// so the order is deterministic). This is the single source of the
+    /// hop-aware failover rule: the coordinator precomputes one order per
+    /// origin region at boot and, per request, walks the plan-sampled
+    /// primary first and then this order with the primary filtered out —
+    /// a saturated primary spills onto the cheapest Eq. 3 migration path
+    /// instead of an arbitrary round-robin neighbour, with no per-request
+    /// allocation.
+    pub fn hop_order(hops: &[f64]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..hops.len()).collect();
+        order.sort_by(|&a, &b| {
+            hops[a]
+                .partial_cmp(&hops[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        order
+    }
 }
 
 #[cfg(test)]
@@ -70,5 +89,39 @@ mod tests {
         };
         let order: Vec<usize> = Router::failover_order(o).collect();
         assert_eq!(order, vec![2, 3, 4, 0, 1]);
+    }
+
+    #[test]
+    fn hop_order_walks_nearest_first_with_index_tie_break() {
+        let hops = [2.0, 0.0, 1.0, 5.0, 1.0];
+        let order = Router::hop_order(&hops);
+        assert_eq!(order, vec![1, 2, 4, 0, 3]);
+        // every site appears exactly once
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        // all-equal hops degenerate to site-index order; empty is empty
+        assert_eq!(Router::hop_order(&[1.0, 1.0, 1.0]), vec![0, 1, 2]);
+        assert_eq!(Router::hop_order(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn hop_order_matches_real_config_hops() {
+        // with the paper config, a request from region 0 that fails over
+        // must try same-region sites before any cross-region site
+        let cfg = crate::config::SystemConfig::paper_default();
+        let dcs = cfg.datacenters.len();
+        let hops: Vec<f64> = (0..dcs).map(|l| cfg.hops(0, l)).collect();
+        let order = Router::hop_order(&hops);
+        assert_eq!(order.len(), dcs);
+        // the hop sequence is non-decreasing along the order
+        for w in order.windows(2) {
+            assert!(hops[w[0]] <= hops[w[1]], "order not nearest-first");
+        }
+        // same-region sites (the smallest, intra-region hop count) lead
+        let local = cfg.datacenters.iter().filter(|d| d.region == 0).count();
+        assert!(order[..local]
+            .iter()
+            .all(|&l| cfg.datacenters[l].region == 0));
     }
 }

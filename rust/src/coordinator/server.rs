@@ -1,14 +1,25 @@
 //! JSON-lines TCP front for the coordinator.
 //!
-//! Protocol (one JSON object per line, both directions):
+//! Protocol (one JSON object per line, both directions; DESIGN.md §12 has
+//! the full op table and epoch-boundary semantics):
 //!   -> {"region": 0-3, "model": 0-1, "tok_in": N, "tok_out": N}
 //!   <- {"ok": true, "dc": "oregon", "dc_index": 7, "ttft_ms": 12.5,
 //!       "epoch": 3}
 //!   <- {"ok": false, "error": "..."}
 //! Special ops:
-//!   -> {"op": "stats"}   <- serving metrics snapshot
-//!   -> {"op": "plan"}    <- current routing plan (per-class rows)
+//!   -> {"op": "stats"}    <- serving metrics snapshot
+//!   -> {"op": "plan"}     <- current routing plan (per-class rows)
+//!   -> {"op": "batch"}    <- route/place a request group as one batch
+//!   -> {"op": "snapshot"} <- live cluster topology (per-site node counts)
+//!   -> {"op": "ledger"}   <- cumulative sustainability ledger
+//!   -> {"op": "cluster"}  <- apply a ClusterAction (outage drills);
+//!                            takes effect at the next epoch tick
+//!   -> {"op": "tick"}     <- force an epoch tick now (drill/test clock)
 //!   -> {"op": "shutdown"}
+//!
+//! Every malformed input — bad JSON, a non-string/unknown `op`, even a
+//! non-UTF-8 line — gets a structured {"ok": false, "error": ...} reply;
+//! the connection is never silently dropped on client error.
 //!
 //! std::net + a thread per connection (bounded by the acceptor): the
 //! offline image has no tokio, and the router critical section is
@@ -18,6 +29,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
+use crate::cluster::ClusterAction;
 use crate::util::json::Json;
 
 use super::Coordinator;
@@ -85,13 +97,24 @@ fn handle_conn(c: Arc<Coordinator>, stream: TcpStream) {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) | Err(_) => break, // EOF or socket error/timeout
+            Ok(_) => {}
+        }
+        // raw bytes, not `lines()`: a non-UTF-8 line must produce a
+        // structured parse-error reply, not a silent disconnect (the
+        // lossy conversion feeds the JSON parser, which rejects the
+        // replacement characters with a reportable error)
+        let line = String::from_utf8_lossy(&buf);
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
-        let reply = respond(&c, &line);
+        let reply = respond(&c, line);
         let stop = matches!(reply.get("stopping").and_then(Json::as_bool), Some(true));
         if writeln!(writer, "{reply}").is_err() {
             break;
@@ -102,20 +125,49 @@ fn handle_conn(c: Arc<Coordinator>, stream: TcpStream) {
     }
 }
 
-/// Pure request -> reply mapping (unit-testable without sockets).
+/// Structured error reply: `{"ok": false, "error": msg}`.
+fn error_reply(msg: &str) -> Json {
+    let mut r = Json::obj();
+    r.set("ok", Json::Bool(false));
+    r.set("error", Json::Str(msg.into()));
+    r
+}
+
+/// Strict non-negative integer field. `Json::as_usize` is a saturating
+/// float cast (-1 -> 0), which would silently redirect a malformed index
+/// at site/region 0 — here anything missing, negative, or fractional is
+/// `None` so the caller's range check rejects it.
+fn index_field(msg: &Json, key: &str) -> Option<usize> {
+    let v = msg.get(key)?.as_f64()?;
+    if v.is_finite() && v >= 0.0 && v.fract() == 0.0 {
+        Some(v as usize)
+    } else {
+        None
+    }
+}
+
+/// Pure request -> reply mapping (unit-testable without sockets). Every
+/// input, however malformed, maps to exactly one reply object.
 pub fn respond(c: &Coordinator, line: &str) -> Json {
     let parsed = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => {
-            let mut r = Json::obj();
-            r.set("ok", Json::Bool(false));
-            r.set("error", Json::Str(format!("bad json: {e}")));
-            return r;
-        }
+        Err(e) => return error_reply(&format!("bad json: {e}")),
     };
+    match parsed.get("op") {
+        // a present-but-non-string op must not fall through to the plain
+        // request path (it would earn a misleading range error there)
+        Some(op) => match op.as_str() {
+            Some(op) => respond_op(c, op, &parsed),
+            None => error_reply("'op' must be a string"),
+        },
+        None => respond_request(c, &parsed),
+    }
+}
 
-    match parsed.get("op").and_then(Json::as_str) {
-        Some("stats") => {
+/// Dispatch a special `{"op": ...}` message.
+fn respond_op(c: &Coordinator, op: &str, parsed: &Json) -> Json {
+    match op {
+        "stats" => {
             let m = c.metrics_snapshot();
             let mut r = Json::obj();
             r.set("ok", Json::Bool(true));
@@ -131,7 +183,7 @@ pub fn respond(c: &Coordinator, line: &str) -> Json {
             r.set("backend", Json::Str(c.backend().into()));
             return r;
         }
-        Some("plan") => {
+        "plan" => {
             let plan = c.current_plan();
             let mut rows = Vec::new();
             for k in 0..plan.classes {
@@ -142,29 +194,56 @@ pub fn respond(c: &Coordinator, line: &str) -> Json {
             r.set("plan", Json::Arr(rows));
             return r;
         }
-        Some("batch") => {
+        "snapshot" => return snapshot_reply(c),
+        "ledger" => return ledger_reply(c),
+        "tick" => {
+            // force an epoch boundary now: drills and tests drive the
+            // epoch clock deterministically instead of waiting wall time
+            c.tick_epoch();
+            let mut r = Json::obj();
+            r.set("ok", Json::Bool(true));
+            r.set("epoch", Json::Num(c.current_epoch() as f64));
+            return r;
+        }
+        "cluster" => {
+            return match parse_cluster_action(c, parsed) {
+                Ok(action) => {
+                    c.apply_cluster_action(&action);
+                    let mut r = Json::obj();
+                    r.set("ok", Json::Bool(true));
+                    r.set(
+                        "applied",
+                        parsed
+                            .get("action")
+                            .and_then(Json::as_str)
+                            .map(|a| Json::Str(a.into()))
+                            .unwrap_or(Json::Null),
+                    );
+                    // actions land on the live state immediately but the
+                    // plan/capacity only rebuild at the next tick
+                    r.set(
+                        "effective_epoch",
+                        Json::Num((c.current_epoch() + 1) as f64),
+                    );
+                    r
+                }
+                Err(msg) => error_reply(&msg),
+            };
+        }
+        "batch" => {
             // {"op":"batch","requests":[{"region":..,"model":..,...},..]}
             let Some(reqs) = parsed.get("requests").and_then(Json::as_arr)
             else {
-                let mut r = Json::obj();
-                r.set("ok", Json::Bool(false));
-                r.set("error", Json::Str("batch needs 'requests'".into()));
-                return r;
+                return error_reply("batch needs 'requests'");
             };
             let mut batch = Vec::with_capacity(reqs.len());
             for q in reqs {
-                let region = q.usize_or("region", usize::MAX);
-                let model = q.usize_or("model", usize::MAX);
+                let region = index_field(q, "region").unwrap_or(usize::MAX);
+                let model = index_field(q, "model").unwrap_or(usize::MAX);
                 if region >= crate::config::REGIONS
                     || model >= crate::config::MODELS
                 {
-                    let mut r = Json::obj();
-                    r.set("ok", Json::Bool(false));
-                    r.set(
-                        "error",
-                        Json::Str("region/model out of range".into()),
-                    );
-                    return r;
+                    return error_reply("region/model out of range");
                 }
                 batch.push((
                     region,
@@ -197,29 +276,134 @@ pub fn respond(c: &Coordinator, line: &str) -> Json {
             r.set("results", Json::Arr(arr));
             return r;
         }
-        Some("shutdown") => {
+        "shutdown" => {
             c.stop();
             let mut r = Json::obj();
             r.set("ok", Json::Bool(true));
             r.set("stopping", Json::Bool(true));
             return r;
         }
-        Some(other) => {
-            let mut r = Json::obj();
-            r.set("ok", Json::Bool(false));
-            r.set("error", Json::Str(format!("unknown op '{other}'")));
-            return r;
-        }
-        None => {}
+        other => error_reply(&format!("unknown op '{other}'")),
     }
+}
 
-    let region = parsed.usize_or("region", usize::MAX);
-    let model = parsed.usize_or("model", usize::MAX);
+/// `{"op": "snapshot"}` — the live cluster topology, per site.
+fn snapshot_reply(c: &Coordinator) -> Json {
+    let snap = c.cluster_snapshot();
+    let mut sites = Vec::with_capacity(c.cfg.datacenters.len());
+    let mut total = 0usize;
+    for (l, spec) in c.cfg.datacenters.iter().enumerate() {
+        total += snap.total_nodes(l);
+        let counts: Vec<f64> =
+            snap.nodes(l).iter().map(|&n| n as f64).collect();
+        let mut s = Json::obj();
+        s.set("dc", Json::Num(l as f64));
+        s.set("name", Json::Str(spec.name.clone()));
+        s.set("region", Json::Num(spec.region as f64));
+        s.set("nodes", Json::num_arr(&counts));
+        s.set("total", Json::Num(snap.total_nodes(l) as f64));
+        sites.push(s);
+    }
+    let mut r = Json::obj();
+    r.set("ok", Json::Bool(true));
+    r.set("epoch", Json::Num(c.current_epoch() as f64));
+    r.set("baseline", Json::Bool(snap.is_baseline()));
+    r.set("total_nodes", Json::Num(total as f64));
+    r.set("sites", Json::Arr(sites));
+    r
+}
+
+/// `{"op": "ledger"}` — the cumulative sustainability/performance ledger
+/// (everything accounted since the coordinator started).
+fn ledger_reply(c: &Coordinator) -> Json {
+    let m = c.metrics_snapshot();
+    let mut r = Json::obj();
+    r.set("ok", Json::Bool(true));
+    r.set("epoch", Json::Num(c.current_epoch() as f64));
+    r.set("e_it_j", Json::Num(m.ledger.e_it_j));
+    r.set("e_tot_j", Json::Num(m.ledger.e_tot_j));
+    r.set("carbon_kg", Json::Num(m.ledger.carbon_kg));
+    r.set("water_l", Json::Num(m.ledger.water_l));
+    r.set("cost_usd", Json::Num(m.ledger.cost_usd));
+    r.set("served", Json::Num(m.served as f64));
+    r.set("rejected", Json::Num(m.rejected as f64));
+    r.set("batches", Json::Num(m.batches as f64));
+    r.set("ttft_mean_ms", Json::Num(m.ttft.mean() * 1e3));
+    r
+}
+
+/// Validate and decode a `{"op": "cluster", "action": ...}` message.
+fn parse_cluster_action(
+    c: &Coordinator,
+    msg: &Json,
+) -> Result<ClusterAction, String> {
+    let Some(action) = msg.get("action").and_then(Json::as_str) else {
+        return Err("cluster needs an 'action' string (one of: \
+                    scale-region, restore-region, scale-site, \
+                    restore-site, set-site)"
+            .into());
+    };
+    let region = || -> Result<usize, String> {
+        match index_field(msg, "region") {
+            Some(r) if r < crate::config::REGIONS => Ok(r),
+            _ => Err(format!(
+                "'region' must be an integer in 0..{}",
+                crate::config::REGIONS
+            )),
+        }
+    };
+    let dc = || -> Result<usize, String> {
+        match index_field(msg, "dc") {
+            Some(d) if d < c.cfg.datacenters.len() => Ok(d),
+            _ => Err(format!(
+                "'dc' must be an integer in 0..{}",
+                c.cfg.datacenters.len()
+            )),
+        }
+    };
+    let frac = || -> Result<f64, String> {
+        let f = msg.f64_or("frac", f64::NAN);
+        if f.is_finite() && f >= 0.0 {
+            Ok(f)
+        } else {
+            Err("'frac' must be a finite number >= 0".into())
+        }
+    };
+    match action {
+        "scale-region" => Ok(ClusterAction::ScaleRegion {
+            region: region()?,
+            frac: frac()?,
+        }),
+        "restore-region" => {
+            Ok(ClusterAction::RestoreRegion { region: region()? })
+        }
+        "scale-site" => Ok(ClusterAction::ScaleSite {
+            dc: dc()?,
+            frac: frac()?,
+        }),
+        "restore-site" => Ok(ClusterAction::RestoreSite { dc: dc()? }),
+        "set-site" => {
+            let nodes = msg
+                .f64_vec("nodes")
+                .ok_or("set-site needs a 'nodes' array of numbers")?;
+            if nodes.iter().any(|&n| !n.is_finite() || n < 0.0) {
+                return Err("'nodes' entries must be finite and >= 0".into());
+            }
+            Ok(ClusterAction::SetSite {
+                dc: dc()?,
+                nodes_per_type: nodes.iter().map(|&n| n as usize).collect(),
+            })
+        }
+        other => Err(format!("unknown cluster action '{other}'")),
+    }
+}
+
+/// Handle a plain (op-less) single-request message.
+fn respond_request(c: &Coordinator, parsed: &Json) -> Json {
+    let region = index_field(parsed, "region").unwrap_or(usize::MAX);
+    let model = index_field(parsed, "model").unwrap_or(usize::MAX);
     if region >= crate::config::REGIONS || model >= crate::config::MODELS {
-        let mut r = Json::obj();
-        r.set("ok", Json::Bool(false));
-        r.set("error", Json::Str("region/model out of range".into()));
-        return r;
+        return error_reply("region/model out of range");
     }
     let tok_in = parsed.f64_or("tok_in", 128.0) as u32;
     let tok_out = parsed.f64_or("tok_out", 256.0) as u32;
@@ -283,6 +467,13 @@ mod tests {
                 .and_then(Json::as_bool),
             Some(false)
         );
+        // a negative region must not saturate to region 0 and serve
+        assert_eq!(
+            respond(&c, r#"{"region": -1, "model": 0}"#)
+                .get("ok")
+                .and_then(Json::as_bool),
+            Some(false)
+        );
         assert_eq!(
             respond(&c, r#"{"op": "nope"}"#)
                 .get("ok")
@@ -337,8 +528,150 @@ mod tests {
             r#"{"op":"batch","requests":[{"region":9,"model":0}]}"#,
         );
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        let neg = respond(
+            &c,
+            r#"{"op":"batch","requests":[{"region":-1,"model":0}]}"#,
+        );
+        assert_eq!(neg.get("ok").and_then(Json::as_bool), Some(false));
         let r2 = respond(&c, r#"{"op":"batch"}"#);
         assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn respond_rejects_non_string_op() {
+        let c = coordinator();
+        let r = respond(&c, r#"{"op": 5}"#);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(r
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("'op' must be a string"));
+    }
+
+    #[test]
+    fn respond_snapshot_reports_live_topology() {
+        let c = coordinator();
+        let s = respond(&c, r#"{"op": "snapshot"}"#);
+        assert_eq!(s.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(s.get("baseline").and_then(Json::as_bool), Some(true));
+        let sites = s.get("sites").and_then(Json::as_arr).unwrap();
+        assert_eq!(sites.len(), c.cfg.datacenters.len());
+        let total: f64 = sites
+            .iter()
+            .map(|s| s.get("total").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert_eq!(
+            s.get("total_nodes").and_then(Json::as_f64),
+            Some(total)
+        );
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn respond_cluster_op_dips_and_restores_topology() {
+        let c = coordinator();
+        let total = |j: &Json| -> f64 {
+            j.get("total_nodes").and_then(Json::as_f64).unwrap()
+        };
+        let full = total(&respond(&c, r#"{"op": "snapshot"}"#));
+
+        let r = respond(
+            &c,
+            r#"{"op": "cluster", "action": "scale-region", "region": 2, "frac": 0}"#,
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            r.get("applied").and_then(Json::as_str),
+            Some("scale-region")
+        );
+        assert_eq!(r.get("effective_epoch").and_then(Json::as_f64), Some(1.0));
+        // the live state mutates immediately; the snapshot shows the dip
+        let dipped = respond(&c, r#"{"op": "snapshot"}"#);
+        assert!(total(&dipped) < full);
+        assert_eq!(
+            dipped.get("baseline").and_then(Json::as_bool),
+            Some(false)
+        );
+        // tick, then restore + tick: whole again
+        let t = respond(&c, r#"{"op": "tick"}"#);
+        assert_eq!(t.get("epoch").and_then(Json::as_f64), Some(1.0));
+        let r = respond(
+            &c,
+            r#"{"op": "cluster", "action": "restore-region", "region": 2}"#,
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        respond(&c, r#"{"op": "tick"}"#);
+        let restored = respond(&c, r#"{"op": "snapshot"}"#);
+        assert_eq!(total(&restored), full);
+        assert_eq!(
+            restored.get("baseline").and_then(Json::as_bool),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn respond_cluster_op_validates_input() {
+        let c = coordinator();
+        for bad in [
+            r#"{"op": "cluster"}"#,
+            r#"{"op": "cluster", "action": "warp-drive"}"#,
+            r#"{"op": "cluster", "action": "scale-region", "region": 99, "frac": 0.5}"#,
+            r#"{"op": "cluster", "action": "scale-region", "region": 1}"#,
+            // negative/fractional indices must NOT saturate to site 0
+            r#"{"op": "cluster", "action": "scale-region", "region": -1, "frac": 0}"#,
+            r#"{"op": "cluster", "action": "scale-site", "dc": -2, "frac": 0.5}"#,
+            r#"{"op": "cluster", "action": "scale-site", "dc": 1.5, "frac": 0.5}"#,
+            r#"{"op": "cluster", "action": "scale-site", "dc": 9999, "frac": 0.5}"#,
+            r#"{"op": "cluster", "action": "scale-site", "dc": 0, "frac": -1}"#,
+            r#"{"op": "cluster", "action": "set-site", "dc": 0}"#,
+            r#"{"op": "cluster", "action": "set-site", "dc": 0, "nodes": [-1]}"#,
+        ] {
+            let r = respond(&c, bad);
+            assert_eq!(
+                r.get("ok").and_then(Json::as_bool),
+                Some(false),
+                "accepted: {bad}"
+            );
+            assert!(r.get("error").and_then(Json::as_str).is_some());
+        }
+        // a rejected action must not have mutated the topology
+        let s = respond(&c, r#"{"op": "snapshot"}"#);
+        assert_eq!(s.get("baseline").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn respond_set_site_replaces_counts() {
+        let c = coordinator();
+        let r = respond(
+            &c,
+            r#"{"op": "cluster", "action": "set-site", "dc": 0, "nodes": [1, 1, 1, 1, 1, 1]}"#,
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        let s = respond(&c, r#"{"op": "snapshot"}"#);
+        let site0 = s.get("sites").and_then(Json::as_arr).unwrap()[0]
+            .get("total")
+            .and_then(Json::as_f64);
+        assert_eq!(site0, Some(6.0));
+    }
+
+    #[test]
+    fn respond_ledger_accumulates_after_tick() {
+        let c = coordinator();
+        for i in 0..20 {
+            respond(
+                &c,
+                &format!(r#"{{"region": {}, "model": 0}}"#, i % 4),
+            );
+        }
+        let before = respond(&c, r#"{"op": "ledger"}"#);
+        assert_eq!(before.get("served").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(before.get("carbon_kg").and_then(Json::as_f64), Some(0.0));
+        respond(&c, r#"{"op": "tick"}"#);
+        let after = respond(&c, r#"{"op": "ledger"}"#);
+        assert!(after.get("carbon_kg").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(after.get("e_tot_j").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(after.get("epoch").and_then(Json::as_f64), Some(1.0));
     }
 
     #[test]
@@ -359,5 +692,83 @@ mod tests {
         reader.read_line(&mut line2).unwrap();
         handle.thread.join().unwrap();
         assert!(c.stopped());
+    }
+
+    #[test]
+    fn tcp_malformed_lines_get_structured_errors_and_keep_the_connection() {
+        use std::io::{BufRead, BufReader, Write};
+        let c = coordinator();
+        let handle = serve_forever(Arc::clone(&c), 0).unwrap();
+        let mut stream =
+            std::net::TcpStream::connect(("127.0.0.1", handle.port)).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut expect_error = |stream: &mut std::net::TcpStream,
+                                payload: &[u8]| {
+            stream.write_all(payload).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "connection dropped on {payload:?}");
+            let r = Json::parse(line.trim()).unwrap();
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+            assert!(r.get("error").and_then(Json::as_str).is_some());
+        };
+        // malformed JSON, unknown op, non-string op, and a non-UTF-8 line:
+        // each earns a structured error on the SAME connection
+        expect_error(&mut stream, b"this is not json");
+        expect_error(&mut stream, br#"{"op": "frobnicate"}"#);
+        expect_error(&mut stream, br#"{"op": 42}"#);
+        expect_error(&mut stream, &[0xff, 0xfe, 0x80, b'{']);
+        // ...which must still be alive and serving
+        writeln!(stream, r#"{{"region": 0, "model": 0}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let r = Json::parse(line.trim()).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        writeln!(stream, r#"{{"op": "shutdown"}}"#).unwrap();
+        let mut last = String::new();
+        reader.read_line(&mut last).unwrap();
+        handle.thread.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_drill_ops_round_trip() {
+        use std::io::{BufRead, BufReader, Write};
+        let c = coordinator();
+        let handle = serve_forever(Arc::clone(&c), 0).unwrap();
+        let mut stream =
+            std::net::TcpStream::connect(("127.0.0.1", handle.port)).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut call = |stream: &mut std::net::TcpStream,
+                        payload: &str|
+         -> Json {
+            writeln!(stream, "{payload}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+        let snap = call(&mut stream, r#"{"op": "snapshot"}"#);
+        let full = snap.get("total_nodes").and_then(Json::as_f64).unwrap();
+        let r = call(
+            &mut stream,
+            r#"{"op": "cluster", "action": "scale-region", "region": 2, "frac": 0}"#,
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        let dipped = call(&mut stream, r#"{"op": "snapshot"}"#);
+        assert!(
+            dipped.get("total_nodes").and_then(Json::as_f64).unwrap() < full
+        );
+        let r = call(
+            &mut stream,
+            r#"{"op": "cluster", "action": "restore-region", "region": 2}"#,
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        let restored = call(&mut stream, r#"{"op": "snapshot"}"#);
+        assert_eq!(
+            restored.get("total_nodes").and_then(Json::as_f64),
+            Some(full)
+        );
+        call(&mut stream, r#"{"op": "shutdown"}"#);
+        handle.thread.join().unwrap();
     }
 }

@@ -174,6 +174,11 @@ pub struct EpochLedger {
     pub requests: f64,
     /// Requests that could not be served this epoch.
     pub dropped: f64,
+    /// Realised demand per request class (served + dropped), indexed by
+    /// class id. Empty when the producer does not track classes (e.g. the
+    /// serving coordinator's aggregate ledger); the per-class feedback
+    /// scheduler falls back to the level-only correction in that case.
+    pub class_requests: Vec<f64>,
 }
 
 impl EpochLedger {
@@ -220,6 +225,13 @@ impl EpochLedger {
         self.ttft_sum_s += other.ttft_sum_s;
         self.requests += other.requests;
         self.dropped += other.dropped;
+        if self.class_requests.len() < other.class_requests.len() {
+            self.class_requests.resize(other.class_requests.len(), 0.0);
+        }
+        for (a, b) in self.class_requests.iter_mut().zip(&other.class_requests)
+        {
+            *a += b;
+        }
     }
 
     /// Objective vector [ttft, carbon, water, cost] (paper's four axes).
@@ -323,6 +335,23 @@ mod tests {
         assert_eq!(b.requests, 3.0);
         assert!((b.mean_ttft_s() - 5.0 / 3.0).abs() < 1e-12);
         assert_eq!(b.carbon_kg, a.carbon_kg);
+    }
+
+    #[test]
+    fn ledger_merges_class_requests_with_mixed_arity() {
+        let mut a = EpochLedger {
+            class_requests: vec![1.0, 2.0],
+            ..Default::default()
+        };
+        let b = EpochLedger {
+            class_requests: vec![10.0, 20.0, 30.0],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.class_requests, vec![11.0, 22.0, 30.0]);
+        // merging a class-less ledger leaves the counts untouched
+        a.merge(&EpochLedger::default());
+        assert_eq!(a.class_requests, vec![11.0, 22.0, 30.0]);
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod scheduler;
 pub mod slit;
 
 pub use gbdt::{Gbdt, GbdtConfig};
-pub use scheduler::{SlitScheduler, SlitStats, SlitVariant};
+pub use scheduler::{FeedbackMode, SlitScheduler, SlitStats, SlitVariant};
 pub use slit::{select_population, SlitOptimizer, SlitOptions, SlitOutcome};

@@ -67,10 +67,29 @@ pub struct SlitStats {
     pub wall_s: f64,
 }
 
-/// Bounds on the prediction-error correction ratio the feedback variant
-/// applies (guards against a single wild epoch whipsawing the forecast).
+/// Bounds on the prediction-error correction ratio the feedback variants
+/// apply (guards against a single wild epoch whipsawing the forecast).
+/// Each per-class ratio is clamped independently to the same band.
 const FEEDBACK_RATIO_MIN: f64 = 0.5;
 const FEEDBACK_RATIO_MAX: f64 = 2.0;
+
+/// Relative deadband: corrections closer to 1.0 than this skip the
+/// evaluator rebuild entirely (the forecast was essentially right).
+const FEEDBACK_DEADBAND: f64 = 0.02;
+
+/// How the scheduler corrects its demand forecast from the previous
+/// epoch's realised ledger (`EpochContext::prev`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeedbackMode {
+    /// No correction: plan against the predictor's forecast as-is.
+    Off,
+    /// One global ratio: realised/predicted *total* request mass, clamped.
+    Level,
+    /// One ratio per request class (region x model), each clamped
+    /// independently — a regional burst or outage backlog only rescales
+    /// the classes that actually missed.
+    PerClass,
+}
 
 pub struct SlitScheduler {
     pub variant: SlitVariant,
@@ -82,11 +101,10 @@ pub struct SlitScheduler {
     /// When set, plan search runs on the AOT/PJRT engine: each epoch an
     /// `HloPlanEvaluator` is bound to that epoch's panels.
     engine: Option<std::sync::Arc<crate::runtime::Engine>>,
-    /// Prediction-error feedback: scale this epoch's predicted demand by
-    /// last epoch's realised/predicted ratio (EpochContext::prev).
-    feedback: bool,
-    /// Total requests the previous epoch's plan was optimised against.
-    last_predicted_req: Option<f64>,
+    /// Prediction-error feedback policy (EpochContext::prev).
+    feedback: FeedbackMode,
+    /// Per-class requests the previous epoch's plan was optimised against.
+    last_predicted: Option<Vec<f64>>,
 }
 
 impl SlitScheduler {
@@ -99,8 +117,8 @@ impl SlitScheduler {
             epoch_counter: 0,
             stats: SlitStats::default(),
             engine: None,
-            feedback: false,
-            last_predicted_req: None,
+            feedback: FeedbackMode::Off,
+            last_predicted: None,
         }
     }
 
@@ -118,45 +136,95 @@ impl SlitScheduler {
         self
     }
 
-    /// Enable prediction-error feedback: the SimSession hands each epoch
-    /// the previous epoch's *actual* ledger; this variant compares it to
-    /// what it planned against and rescales the current forecast by the
-    /// (clamped) realised/predicted ratio before searching.
+    /// Enable per-class prediction-error feedback: the SimSession hands
+    /// each epoch the previous epoch's *actual* ledger (including realised
+    /// per-class demand); this variant compares it class-by-class to what
+    /// it planned against and rescales each class of the current forecast
+    /// by its own (independently clamped) realised/predicted ratio before
+    /// searching. Falls back to the level-only correction when the ledger
+    /// carries no per-class counts.
     pub fn with_feedback(mut self) -> Self {
-        self.feedback = true;
+        self.feedback = FeedbackMode::PerClass;
         self
     }
 
-    /// The correction factor for this epoch, if feedback is on and a
-    /// previous epoch exists to learn from.
-    fn feedback_ratio(&self, ctx: &EpochContext) -> Option<f64> {
-        if !self.feedback {
+    /// Enable the level-only feedback (the pre-per-class behaviour): one
+    /// global realised/predicted ratio over total request mass. Kept as an
+    /// ablation baseline for the per-class variant.
+    pub fn with_level_feedback(mut self) -> Self {
+        self.feedback = FeedbackMode::Level;
+        self
+    }
+
+    pub fn feedback_mode(&self) -> FeedbackMode {
+        self.feedback
+    }
+
+    /// Independently clamped realised/predicted ratio per request class.
+    /// Classes the realised ledger never saw get ratio = clamp(0), i.e.
+    /// the forecast is pulled down toward the floor, not zeroed.
+    fn per_class_ratios(predicted: &[f64], realised: &[f64]) -> Vec<f64> {
+        predicted
+            .iter()
+            .enumerate()
+            .map(|(k, &p)| {
+                let r = realised.get(k).copied().unwrap_or(0.0);
+                (r / p.max(1.0)).clamp(FEEDBACK_RATIO_MIN, FEEDBACK_RATIO_MAX)
+            })
+            .collect()
+    }
+
+    /// One clamped realised/predicted ratio over total request mass,
+    /// broadcast to every class.
+    fn level_ratios(predicted: &[f64], realised_total: f64) -> Vec<f64> {
+        let predicted_total: f64 = predicted.iter().sum();
+        let ratio = (realised_total / predicted_total.max(1.0))
+            .clamp(FEEDBACK_RATIO_MIN, FEEDBACK_RATIO_MAX);
+        vec![ratio; predicted.len()]
+    }
+
+    /// The per-class correction factors for this epoch, if feedback is on
+    /// and a previous epoch exists to learn from. `None` means "plan
+    /// against the forecast as-is" — either feedback is off, there is no
+    /// history yet, or every ratio sits inside the deadband.
+    fn feedback_ratios(&self, ctx: &EpochContext) -> Option<Vec<f64>> {
+        if self.feedback == FeedbackMode::Off {
             return None;
         }
-        let predicted = self.last_predicted_req?;
+        let predicted = self.last_predicted.as_ref()?;
         let prev = ctx.prev?;
-        let ratio = (prev.requests / predicted.max(1.0))
-            .clamp(FEEDBACK_RATIO_MIN, FEEDBACK_RATIO_MAX);
+        let ratios = match self.feedback {
+            FeedbackMode::PerClass if !prev.class_requests.is_empty() => {
+                Self::per_class_ratios(predicted, &prev.class_requests)
+            }
+            // Level mode, or a ledger without per-class counts
+            _ => Self::level_ratios(predicted, prev.requests),
+        };
         // skip the rebuild when the forecast was essentially right
-        if (ratio - 1.0).abs() < 0.02 {
+        if ratios.iter().all(|r| (r - 1.0).abs() < FEEDBACK_DEADBAND) {
             None
         } else {
-            Some(ratio)
+            Some(ratios)
         }
     }
 }
 
 impl Scheduler for SlitScheduler {
     fn name(&self) -> String {
-        if self.feedback {
-            // the registered `slit-adaptive` framework is the balanced
-            // variant; feedback on any other variant keeps its identity
-            match self.variant {
-                SlitVariant::Balance => "slit-adaptive".into(),
-                v => format!("{}-adaptive", v.name()),
+        // the registered `slit-adaptive` framework is the balanced
+        // variant; feedback on any other variant keeps its identity
+        match (self.feedback, self.variant) {
+            (FeedbackMode::Off, v) => v.name().into(),
+            (FeedbackMode::PerClass, SlitVariant::Balance) => {
+                "slit-adaptive".into()
             }
-        } else {
-            self.variant.name().into()
+            (FeedbackMode::PerClass, v) => format!("{}-adaptive", v.name()),
+            (FeedbackMode::Level, SlitVariant::Balance) => {
+                "slit-adaptive-level".into()
+            }
+            (FeedbackMode::Level, v) => {
+                format!("{}-adaptive-level", v.name())
+            }
         }
     }
 
@@ -167,11 +235,11 @@ impl Scheduler for SlitScheduler {
     fn plan(&mut self, ctx: &EpochContext) -> Plan {
         self.epoch_counter += 1;
         // prediction-error feedback: rebuild the epoch evaluator against
-        // a corrected demand level before searching
-        let corrected = self.feedback_ratio(ctx).map(|ratio| {
+        // the corrected per-class demand before searching
+        let corrected = self.feedback_ratios(ctx).map(|ratios| {
             let mut cp = ctx.evaluator.cp.clone();
-            for n in &mut cp.n_req {
-                *n *= ratio;
+            for (n, r) in cp.n_req.iter_mut().zip(&ratios) {
+                *n *= r;
             }
             crate::eval::AnalyticEvaluator::new(
                 cp,
@@ -180,7 +248,9 @@ impl Scheduler for SlitScheduler {
             )
         });
         let evaluator = corrected.as_ref().unwrap_or(ctx.evaluator);
-        self.last_predicted_req = Some(ctx.predicted.total_requests());
+        self.last_predicted = Some(
+            ctx.predicted.classes.iter().map(|c| c.n_req).collect(),
+        );
 
         let mut optimizer = SlitOptimizer::new(
             self.opt.clone(),
@@ -260,6 +330,7 @@ mod tests {
         let signals = GridSignals::generate(&cfg, cfg.epochs, 2);
         let mut s =
             SlitScheduler::new(&cfg, SlitVariant::Balance).with_feedback();
+        assert_eq!(s.feedback_mode(), FeedbackMode::PerClass);
         let res = simulate(&cfg, &trace, &signals, &mut s, 2);
         assert_eq!(res.name, "slit-adaptive");
         assert!(res.total.requests > 0.0);
@@ -268,6 +339,64 @@ mod tests {
         let carbon =
             SlitScheduler::new(&cfg, SlitVariant::Carbon).with_feedback();
         assert_eq!(carbon.name(), "slit-carbon-adaptive");
+    }
+
+    #[test]
+    fn level_feedback_variant_runs_and_reports_its_name() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let trace = Trace::generate(&cfg, cfg.epochs, 2);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 2);
+        let mut s = SlitScheduler::new(&cfg, SlitVariant::Balance)
+            .with_level_feedback();
+        assert_eq!(s.feedback_mode(), FeedbackMode::Level);
+        let res = simulate(&cfg, &trace, &signals, &mut s, 2);
+        assert_eq!(res.name, "slit-adaptive-level");
+        assert!(res.total.requests > 0.0);
+        let water =
+            SlitScheduler::new(&cfg, SlitVariant::Water).with_level_feedback();
+        assert_eq!(water.name(), "slit-water-adaptive-level");
+    }
+
+    #[test]
+    fn per_class_ratios_clamp_each_class_independently() {
+        // class 0: realised 3x predicted -> clamped to the 2.0 ceiling;
+        // class 1: spot on -> 1.0; class 2: vanished -> clamped to 0.5;
+        // class 3: absent from the realised ledger -> treated as 0 -> 0.5
+        let predicted = [100.0, 50.0, 80.0, 40.0];
+        let realised = [300.0, 50.0, 0.0];
+        let r = SlitScheduler::per_class_ratios(&predicted, &realised);
+        assert_eq!(r, vec![2.0, 1.0, 0.5, 0.5]);
+        // tiny predictions are floored at 1 request, not divided by ~0
+        let r2 = SlitScheduler::per_class_ratios(&[0.001], &[1.5]);
+        assert_eq!(r2, vec![1.5]);
+    }
+
+    #[test]
+    fn level_ratios_broadcast_one_clamped_ratio() {
+        let r = SlitScheduler::level_ratios(&[100.0, 100.0], 260.0);
+        assert_eq!(r, vec![1.3, 1.3]);
+        let hi = SlitScheduler::level_ratios(&[10.0, 10.0], 1000.0);
+        assert_eq!(hi, vec![2.0, 2.0]);
+        let lo = SlitScheduler::level_ratios(&[100.0, 100.0], 1.0);
+        assert_eq!(lo, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn per_class_feedback_is_deterministic_per_seed() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 3;
+        let trace = Trace::generate(&cfg, cfg.epochs, 6);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 6);
+        let run = || {
+            let mut s = SlitScheduler::new(&cfg, SlitVariant::Balance)
+                .with_feedback();
+            simulate(&cfg, &trace, &signals, &mut s, 6)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.total.carbon_kg, b.total.carbon_kg);
+        assert_eq!(a.total.ttft_sum_s, b.total.ttft_sum_s);
     }
 
     #[test]

@@ -83,6 +83,23 @@ fn build_slit_adaptive_hlo(
     )
 }
 
+fn build_slit_adaptive_level(cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(
+        SlitScheduler::new(cfg, SlitVariant::Balance).with_level_feedback(),
+    )
+}
+
+fn build_slit_adaptive_level_hlo(
+    cfg: &SystemConfig,
+    engine: Arc<Engine>,
+) -> Box<dyn Scheduler> {
+    Box::new(
+        SlitScheduler::new(cfg, SlitVariant::Balance)
+            .with_engine(engine)
+            .with_level_feedback(),
+    )
+}
+
 /// The iterable framework table. Order is presentation order (baselines
 /// first, SLIT variants after, as in the paper's Fig. 4 rows).
 pub static FRAMEWORKS: &[FrameworkSpec] = &[
@@ -153,10 +170,18 @@ pub static FRAMEWORKS: &[FrameworkSpec] = &[
     FrameworkSpec {
         name: "slit-adaptive",
         aliases: &["slit-feedback"],
-        description: "balanced SLIT with prediction-error feedback from the previous epoch's actual ledger",
+        description: "balanced SLIT with per-class prediction-error feedback from the previous epoch's actual ledger",
         in_paper_set: false,
         build: build_slit_adaptive,
         build_hlo: Some(build_slit_adaptive_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-adaptive-level",
+        aliases: &["slit-feedback-level"],
+        description: "balanced SLIT with the level-only (single-ratio) feedback — ablation baseline for slit-adaptive",
+        in_paper_set: false,
+        build: build_slit_adaptive_level,
+        build_hlo: Some(build_slit_adaptive_level_hlo),
     },
 ];
 
@@ -232,6 +257,10 @@ mod tests {
         assert_eq!(find("rr").unwrap().name, "round-robin");
         assert_eq!(find("slit").unwrap().name, "slit-balance");
         assert_eq!(find("slit-feedback").unwrap().name, "slit-adaptive");
+        assert_eq!(
+            find("slit-feedback-level").unwrap().name,
+            "slit-adaptive-level"
+        );
         assert!(find("nope").is_none());
     }
 

@@ -269,6 +269,9 @@ impl<'a> SimSession<'a> {
                 ledger.add_request(self.cfg.physics.drop_penalty_s);
             }
         }
+        // realised per-class demand (served + dropped): the signal the
+        // per-class feedback scheduler corrects its forecast with
+        ledger.class_requests = seen;
 
         // 6. energy/water/carbon accounting (Eqs. 5-18) against the live
         //    node counts — an offline site burns nothing
@@ -561,6 +564,18 @@ mod tests {
                     None => self.saw_none += 1,
                     Some(prev) => {
                         assert!(prev.requests >= 0.0);
+                        // per-class realised demand rides along for the
+                        // per-class feedback scheduler
+                        assert_eq!(
+                            prev.class_requests.len(),
+                            ctx.cfg.num_classes()
+                        );
+                        assert!(
+                            (prev.class_requests.iter().sum::<f64>()
+                                - prev.requests)
+                                .abs()
+                                < 1e-9
+                        );
                         self.saw_some += 1;
                     }
                 }

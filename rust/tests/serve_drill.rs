@@ -1,0 +1,244 @@
+//! Serve-loop harness: boots a real coordinator on an ephemeral TCP port,
+//! drives a scripted outage drill over the wire, and pins the serve-time
+//! contract the offline tests cannot see:
+//!
+//!   * serve-time `cluster` ops dip the topology and `restore` recovers it
+//!     exactly, visible through `snapshot` replies across forced `tick`s;
+//!   * request mass is conserved across the drill (every request sent is
+//!     accounted served or rejected — nothing vanishes in the outage);
+//!   * malformed input never kills a connection (structured error replies);
+//!   * on the drilled (outage-rolling) regime, per-class adaptive SLIT is
+//!     non-dominated vs the level-only adaptive it replaced (plain-SLIT
+//!     comparisons live in scenario_matrix.rs).
+//!
+//! Epochs are forced via `{"op": "tick"}` rather than the wall-clock epoch
+//! thread, so the harness is deterministic and fast on any CI box.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use slit::config::SystemConfig;
+use slit::coordinator::{
+    run_drill, serve_forever, Coordinator, CoordinatorConfig, DrillClient,
+    DrillConfig,
+};
+use slit::opt::{SlitScheduler, SlitVariant};
+use slit::pareto::dominates;
+use slit::scenario::Scenario;
+use slit::util::json::Json;
+
+/// A coordinator sized for CI: tiny optimizer budget, no epoch thread
+/// (ticks are driven over TCP).
+fn boot() -> (Arc<Coordinator>, u16) {
+    let mut cfg = SystemConfig::small_test();
+    cfg.opt.generations = 2;
+    cfg.opt.population = 8;
+    let ccfg = CoordinatorConfig {
+        plan_budget_s: 0.2,
+        ..Default::default()
+    };
+    let c = Coordinator::new(cfg, ccfg, None);
+    let handle = serve_forever(Arc::clone(&c), 0).expect("bind ephemeral");
+    (c, handle.port)
+}
+
+#[test]
+fn tcp_drill_dips_recovers_and_conserves_request_mass() {
+    let (c, port) = boot();
+    let mut client =
+        DrillClient::connect("127.0.0.1", port).expect("connect");
+    let report = run_drill(
+        &mut client,
+        &DrillConfig {
+            region: 2,
+            frac: 0.0,
+            requests_per_wave: 48,
+        },
+    )
+    .expect("drill");
+
+    // the three invariants, individually (not just report.verify()):
+    assert!(
+        report.dipped_nodes < report.baseline_nodes,
+        "no dip: {} -> {}",
+        report.baseline_nodes,
+        report.dipped_nodes
+    );
+    assert_eq!(
+        report.recovered_nodes, report.baseline_nodes,
+        "restore did not return to baseline"
+    );
+    assert_eq!(
+        report.served + report.rejected,
+        report.sent,
+        "request mass leaked: {} + {} != {}",
+        report.served,
+        report.rejected,
+        report.sent
+    );
+    // two forced ticks accounted real energy on the live topology
+    assert!(report.carbon_kg > 0.0);
+    assert_eq!(report.epoch, 2.0);
+    report.verify().expect("report verify");
+    c.stop();
+}
+
+#[test]
+fn tcp_drill_partial_brownout_keeps_serving() {
+    let (c, port) = boot();
+    let mut client =
+        DrillClient::connect("127.0.0.1", port).expect("connect");
+    // 50% brownout instead of a full outage
+    let report = run_drill(
+        &mut client,
+        &DrillConfig {
+            region: 2,
+            frac: 0.5,
+            requests_per_wave: 32,
+        },
+    )
+    .expect("drill");
+    report.verify().expect("report verify");
+    assert!(report.dipped_nodes > 0.0, "brownout went fully dark");
+    // the small-test fleet has ample headroom: a 50% regional brownout
+    // must not reject everything
+    assert!(report.served > 0, "nothing served through the brownout");
+    c.stop();
+}
+
+#[test]
+fn tcp_snapshots_show_per_site_dip_only_in_the_drilled_region() {
+    let (c, port) = boot();
+    let mut client =
+        DrillClient::connect("127.0.0.1", port).expect("connect");
+    let op = |name: &str| -> Json {
+        let mut j = Json::obj();
+        j.set("op", Json::Str(name.into()));
+        j
+    };
+    let before = client.call_ok(&op("snapshot")).expect("snapshot");
+    let mut darken = op("cluster");
+    darken.set("action", Json::Str("scale-region".into()));
+    darken.set("region", Json::Num(2.0));
+    darken.set("frac", Json::Num(0.0));
+    client.call_ok(&darken).expect("cluster op");
+    client.call_ok(&op("tick")).expect("tick");
+    let during = client.call_ok(&op("snapshot")).expect("snapshot");
+
+    let sites = |j: &Json| -> Vec<(f64, f64)> {
+        j.get("sites")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|s| {
+                (
+                    s.get("region").and_then(Json::as_f64).unwrap(),
+                    s.get("total").and_then(Json::as_f64).unwrap(),
+                )
+            })
+            .collect()
+    };
+    for ((region, full), (_, dipped)) in
+        sites(&before).into_iter().zip(sites(&during))
+    {
+        if region == 2.0 {
+            assert_eq!(dipped, 0.0, "drilled site not dark");
+            assert!(full > 0.0);
+        } else {
+            assert_eq!(dipped, full, "healthy site lost nodes");
+        }
+    }
+    c.stop();
+}
+
+#[test]
+fn tcp_malformed_traffic_mid_drill_gets_structured_errors() {
+    let (c, port) = boot();
+    // raw socket (not DrillClient): send garbage interleaved with a drill
+    let stream =
+        TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    fn call(
+        writer: &mut TcpStream,
+        reader: &mut BufReader<TcpStream>,
+        payload: &[u8],
+    ) -> Json {
+        writer.write_all(payload).expect("write");
+        writer.write_all(b"\n").expect("write nl");
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read");
+        assert!(!line.is_empty(), "connection dropped");
+        Json::parse(line.trim()).expect("parse reply")
+    }
+    let ok = |j: &Json| j.get("ok").and_then(Json::as_bool);
+
+    let r = call(
+        &mut writer,
+        &mut reader,
+        br#"{"op": "cluster", "action": "scale-region", "region": 2, "frac": 0}"#,
+    );
+    assert_eq!(ok(&r), Some(true));
+    // garbage between drill steps must not sever the session
+    assert_eq!(
+        ok(&call(&mut writer, &mut reader, b"%% not json %%")),
+        Some(false)
+    );
+    assert_eq!(
+        ok(&call(&mut writer, &mut reader, br#"{"op": []}"#)),
+        Some(false)
+    );
+    assert_eq!(
+        ok(&call(
+            &mut writer,
+            &mut reader,
+            br#"{"op": "cluster", "action": "scale-region"}"#
+        )),
+        Some(false)
+    );
+    let r = call(&mut writer, &mut reader, br#"{"op": "tick"}"#);
+    assert_eq!(ok(&r), Some(true));
+    let r = call(&mut writer, &mut reader, br#"{"op": "snapshot"}"#);
+    assert_eq!(ok(&r), Some(true));
+    assert_eq!(r.get("baseline").and_then(Json::as_bool), Some(false));
+    c.stop();
+}
+
+/// The feedback-evaluation half of the harness: on the drilled regime
+/// (the event-driven rolling outage), the per-class adaptive scheduler
+/// must be non-dominated against the level-only correction it replaced —
+/// upgrading from one global ratio to per-class ratios must not make
+/// SLIT strictly worse on every axis at once. (The adaptive-vs-*plain*
+/// comparison, on both bursty and outage-rolling, lives in
+/// rust/tests/scenario_matrix.rs::adaptive_vs_plain_on_bursty_and_rolling_outage.)
+#[test]
+fn per_class_adaptive_is_nondominated_vs_level_only_on_the_drilled_regime() {
+    let mut base = SystemConfig::small_test();
+    base.epochs = 6;
+    base.opt.budget_s = 60.0;
+    base.opt.generations = 4;
+    base.workload.base_requests_per_epoch = 1000.0;
+    let world = Scenario::RollingOutage.build(&base, base.epochs, 42);
+
+    let mut level = SlitScheduler::new(&world.cfg, SlitVariant::Balance)
+        .with_level_feedback();
+    let level_res = world.run(&mut level, 42);
+    let mut per_class =
+        SlitScheduler::new(&world.cfg, SlitVariant::Balance).with_feedback();
+    let per_class_res = world.run(&mut per_class, 42);
+
+    assert_eq!(level_res.name, "slit-adaptive-level");
+    assert_eq!(per_class_res.name, "slit-adaptive");
+
+    // same world, same sampled request mass for both schedulers
+    assert_eq!(level_res.total.requests, per_class_res.total.requests);
+    assert!(per_class_res.total.requests > 0.0);
+
+    let lo = level_res.objectives();
+    let ao = per_class_res.objectives();
+    assert!(
+        !dominates(&lo, &ao),
+        "level-only adaptive dominates per-class ({lo:?} vs {ao:?})"
+    );
+}
