@@ -17,6 +17,7 @@ use slit::util::rng::Rng;
 use slit::util::threadpool;
 
 fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
     let mut bench = Bench::new("hot_path");
     let cfg = SystemConfig::paper_default();
     let signals = GridSignals::generate(&cfg, 8, 3);
@@ -109,6 +110,158 @@ fn main() {
         );
     }
 
+    // headline number for the delta-evaluation PR: scoring one-row
+    // neighbours against cached epoch aggregates (O(L)) vs the full O(K*L)
+    // contraction — this is what the SLIT local search now does for every
+    // surviving candidate
+    {
+        let base = &plans[0];
+        let agg = ev.aggregate(base.as_slice());
+        let mut r = Rng::new(11);
+        let cands: Vec<(usize, Plan)> = (0..256)
+            .map(|_| {
+                let k = r.below(cfg.num_classes());
+                let to = r.below(ev.dcs());
+                (k, base.shifted_toward(k, to, r.range(0.2, 0.8)))
+            })
+            .collect();
+        let reps = if quick { 20 } else { 200 };
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            for (_, c) in &cands {
+                core::hint::black_box(ev.evaluate(c));
+            }
+        }
+        let full_s = t.elapsed().as_secs_f64() / reps as f64;
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            for (k, c) in &cands {
+                core::hint::black_box(ev.evaluate_delta(
+                    &agg,
+                    *k,
+                    base.row(*k),
+                    c.row(*k),
+                ));
+            }
+        }
+        let delta_s = t.elapsed().as_secs_f64() / reps as f64;
+        bench.record_value(
+            "neighbor scoring 256: full contraction",
+            full_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "neighbor scoring 256: delta (O(L))",
+            delta_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "neighbor scoring: delta speedup (target >= 4x)",
+            full_s / delta_s.max(1e-12),
+            "x",
+        );
+    }
+
+    // candidate batch build: SoA arena generation vs per-candidate Plan
+    // clones (the pre-arena code path)
+    {
+        let currents: Vec<&Plan> = plans.iter().take(24).collect();
+        let neighbors = 8;
+        let step = 0.25;
+        let reps = if quick { 40 } else { 400 };
+        let mut arena =
+            slit::plan::PlanBatch::new(cfg.num_classes(), ev.dcs());
+        arena.reserve(currents.len() * neighbors);
+        let t = std::time::Instant::now();
+        for rep in 0..reps {
+            let mut r = Rng::new(5000 + rep as u64);
+            arena.clear();
+            for cur in &currents {
+                arena.push_neighbors_of(
+                    cur.as_slice(),
+                    neighbors,
+                    step,
+                    &mut r,
+                );
+            }
+            core::hint::black_box(arena.len());
+        }
+        let arena_s = t.elapsed().as_secs_f64() / reps as f64;
+        let t = std::time::Instant::now();
+        for rep in 0..reps {
+            let mut r = Rng::new(5000 + rep as u64);
+            let mut cands: Vec<Plan> = Vec::new();
+            for cur in &currents {
+                cands.extend(slit::util::benchkit::clone_path_neighbors(
+                    cur, neighbors, step, &mut r,
+                ));
+            }
+            core::hint::black_box(&cands);
+        }
+        let clone_s = t.elapsed().as_secs_f64() / reps as f64;
+        bench.record_value(
+            "candidate build 24x8: plan clones",
+            clone_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "candidate build 24x8: SoA arena",
+            arena_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "candidate build: arena speedup",
+            clone_s / arena_s.max(1e-12),
+            "x",
+        );
+    }
+
+    // memo cache under contention: concurrent warm-hit sweeps against one
+    // global lock vs 16 fingerprint shards
+    {
+        let mut r = Rng::new(13);
+        let streams: Vec<Vec<Plan>> = (0..64)
+            .map(|_| {
+                (0..16)
+                    .map(|_| {
+                        Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut r)
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |shards: usize| -> f64 {
+            let memo = MemoizedEvaluator::with_shards(&ev, shards);
+            for s in &streams {
+                memo.eval_batch(s);
+            }
+            let reps = if quick { 5 } else { 50 };
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                core::hint::black_box(threadpool::par_map(&streams, |s| {
+                    memo.eval_batch(s)
+                }));
+            }
+            t.elapsed().as_secs_f64() / reps as f64
+        };
+        let global_s = run(1);
+        let sharded_s = run(16);
+        bench.record_value(
+            "memo warm sweep 64x16: global lock",
+            global_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "memo warm sweep 64x16: 16 shards",
+            sharded_s * 1e6,
+            "us",
+        );
+        bench.record_value(
+            "memo contention: shard speedup",
+            global_s / sharded_s.max(1e-12),
+            "x",
+        );
+    }
+
     // --- AOT / PJRT ----------------------------------------------------------
     if slit::runtime::pjrt_enabled() && artifacts_present() {
         let engine = Engine::load(&artifacts_dir()).expect("engine");
@@ -147,6 +300,25 @@ fn main() {
     bench.bench_throughput("gbdt: predict", 1.0, "plan", || {
         core::hint::black_box(model.predict(plans[0].as_slice()));
     });
+    {
+        // flat-tree batch ranking over one arena-shaped matrix (how the
+        // surrogate scores a step's merged candidate batch)
+        let stride = cfg.num_classes() * ev.dcs();
+        let flat: Vec<f64> = plans
+            .iter()
+            .flat_map(|p| p.as_slice().iter().copied())
+            .collect();
+        let mut preds: Vec<f64> = Vec::new();
+        bench.bench_throughput(
+            "gbdt: predict_batch 128 (flat trees)",
+            EVAL_POPULATION as f64,
+            "plan",
+            || {
+                model.predict_batch_into(&flat, stride, &mut preds);
+                core::hint::black_box(preds.len());
+            },
+        );
+    }
 
     // --- optimizer -----------------------------------------------------------
     let mut opt_cfg = cfg.opt.clone();

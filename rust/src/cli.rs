@@ -448,12 +448,14 @@ pub fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     }
     root.set("showcase", showcased);
     root.set("evaluations", Json::Num(outcome.evaluations as f64));
+    root.set("delta_evals", Json::Num(outcome.delta_evals as f64));
     let out = args.get("out").unwrap_or("front.json");
     std::fs::write(out, root.to_string_pretty())?;
     println!(
-        "wrote {out}: {} front points, {} evaluations, {:.2}s",
+        "wrote {out}: {} front points, {} evaluations ({} delta), {:.2}s",
         outcome.archive.len(),
         outcome.evaluations,
+        outcome.delta_evals,
         outcome.wall_s
     );
     Ok(())

@@ -75,6 +75,20 @@ impl EvalConsts {
 /// `runtime::PlanEvalEngine` (AOT HLO via PJRT).
 pub trait BatchEvaluator: Sync {
     fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]>;
+    /// Evaluate plans given by reference — what [`MemoizedEvaluator`]
+    /// forwards for its cache misses. The default clones into a contiguous
+    /// owned batch for backends that need one; the analytic evaluator
+    /// overrides it with a direct parallel map (zero clones).
+    fn eval_refs(&self, plans: &[&Plan]) -> Vec<[f64; N_OBJ]> {
+        let owned: Vec<Plan> = plans.iter().map(|&p| p.clone()).collect();
+        self.eval_batch(&owned)
+    }
+    /// The incremental one-row rescoring interface, when this backend
+    /// supports it (`None` = the SLIT neighbour search falls back to full
+    /// batch evaluation through the memo cache).
+    fn delta_scorer(&self) -> Option<&dyn DeltaScorer> {
+        None
+    }
     /// Human-readable backend name (for logs/benches).
     fn backend(&self) -> &'static str {
         "analytic"
@@ -84,6 +98,69 @@ pub trait BatchEvaluator: Sync {
 impl BatchEvaluator for AnalyticEvaluator {
     fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
         self.evaluate_batch(plans)
+    }
+
+    fn eval_refs(&self, plans: &[&Plan]) -> Vec<[f64; N_OBJ]> {
+        threadpool::par_map(plans, |p| self.evaluate(p))
+    }
+
+    fn delta_scorer(&self) -> Option<&dyn DeltaScorer> {
+        Some(self)
+    }
+}
+
+/// Cached per-plan epoch aggregates: exactly the terms of the Eq. 1-18
+/// chain that are **linear** contractions over class rows (see DESIGN.md
+/// §13). A one-row move `a[k][*] -> a'[k][*]` shifts each of these by a
+/// row-local amount, so a neighbour can be rescored in O(L) via
+/// [`AnalyticEvaluator::evaluate_delta`] instead of the O(K*L) full
+/// contraction; the nonlinear per-DC physics (energy mix, queueing) is
+/// recomputed from the adjusted aggregates by `finish`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanAgg {
+    /// Node-seconds demanded at each DC (Eq. 1/5 contraction).
+    pub node_s: [f64; DC_SLOTS],
+    /// Requests routed to each DC (drives the Eq. 4 queue term).
+    pub reqs_l: [f64; DC_SLOTS],
+    /// Request-weighted queue-free TTFT sum (Eqs. 2-3 + proc).
+    pub t_base: f64,
+}
+
+/// Object-safe access to the delta-scoring core, threaded through
+/// [`BatchEvaluator::delta_scorer`] so `opt::slit` can use it behind a
+/// `&dyn BatchEvaluator` without knowing the backend type.
+pub trait DeltaScorer: Sync {
+    /// Full O(K*L) contraction of a flattened plan into its aggregates.
+    fn aggregate(&self, flat: &[f64]) -> PlanAgg;
+    /// Shift `agg` by the contribution change of row `k`: O(L).
+    fn apply_row_delta(
+        &self,
+        agg: &mut PlanAgg,
+        k: usize,
+        old_row: &[f64],
+        new_row: &[f64],
+    );
+    /// Per-DC physics + TTFT aggregation from the aggregates: O(L).
+    fn finish(&self, agg: &PlanAgg) -> [f64; N_OBJ];
+}
+
+impl DeltaScorer for AnalyticEvaluator {
+    fn aggregate(&self, flat: &[f64]) -> PlanAgg {
+        AnalyticEvaluator::aggregate(self, flat)
+    }
+
+    fn apply_row_delta(
+        &self,
+        agg: &mut PlanAgg,
+        k: usize,
+        old_row: &[f64],
+        new_row: &[f64],
+    ) {
+        AnalyticEvaluator::apply_row_delta(self, agg, k, old_row, new_row)
+    }
+
+    fn finish(&self, agg: &PlanAgg) -> [f64; N_OBJ] {
+        AnalyticEvaluator::finish(self, agg)
     }
 }
 
@@ -105,28 +182,58 @@ pub fn plan_fingerprint(plan: &Plan) -> (u64, u64) {
     (h1, h2)
 }
 
+/// Default shard count for [`MemoizedEvaluator`] (power of two; indexed by
+/// the low bits of the fingerprint's second half).
+const MEMO_SHARDS: usize = 16;
+
 /// Memoizing wrapper around any [`BatchEvaluator`]: repeated plans (the
 /// SLIT local search revisits neighbours constantly, and snap-to-vertex
 /// moves regenerate identical one-hot plans) are answered from a
 /// fingerprint cache instead of paying for a true evaluation. Misses are
-/// forwarded to the inner evaluator as one batch, so they still fan out
-/// over the thread pool. Order-preserving and — because the inner
-/// evaluator is pure — bit-deterministic regardless of hit pattern.
+/// forwarded to the inner evaluator **by reference** as one batch
+/// ([`BatchEvaluator::eval_refs`] — no per-plan clone), so they still fan
+/// out over the thread pool. The cache is fingerprint-sharded across
+/// [`MEMO_SHARDS`] independent mutexes so concurrent callers (e.g.
+/// `cli::simulate_frameworks` workers sharing an evaluator) don't
+/// serialise on one lock. Order-preserving and — because the inner
+/// evaluator is pure — bit-deterministic regardless of hit pattern,
+/// shard count, or interleaving.
 pub struct MemoizedEvaluator<'a> {
     inner: &'a dyn BatchEvaluator,
-    cache: Mutex<HashMap<(u64, u64), [f64; N_OBJ]>>,
+    shards: Vec<Mutex<HashMap<(u64, u64), [f64; N_OBJ]>>>,
+    shard_mask: u64,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
 
 impl<'a> MemoizedEvaluator<'a> {
     pub fn new(inner: &'a dyn BatchEvaluator) -> Self {
+        Self::with_shards(inner, MEMO_SHARDS)
+    }
+
+    /// Build with an explicit shard count (rounded up to a power of two;
+    /// `1` reproduces the old single-lock cache — the shard-invariant test
+    /// pins that accounting is identical for any count).
+    pub fn with_shards(inner: &'a dyn BatchEvaluator, shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
         MemoizedEvaluator {
             inner,
-            cache: Mutex::new(HashMap::new()),
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_mask: (n - 1) as u64,
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
         }
+    }
+
+    #[inline]
+    fn shard(&self, key: (u64, u64)) -> &Mutex<HashMap<(u64, u64), [f64; N_OBJ]>> {
+        // the second fingerprint half gets the extra avalanche mix, so its
+        // low bits are the best-distributed shard selector
+        &self.shards[(key.1 & self.shard_mask) as usize]
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     /// Cached answers served so far.
@@ -141,7 +248,10 @@ impl<'a> MemoizedEvaluator<'a> {
 
     /// Distinct plans cached.
     pub fn len(&self) -> usize {
-        self.cache.lock().expect("memo cache").len()
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("memo shard").len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -154,18 +264,22 @@ impl BatchEvaluator for MemoizedEvaluator<'_> {
         self.inner.backend()
     }
 
+    fn delta_scorer(&self) -> Option<&dyn DeltaScorer> {
+        // delta rescoring is cheaper than a fingerprint probe (O(L) vs the
+        // O(K*L) hash of the whole matrix), so it bypasses the cache
+        self.inner.delta_scorer()
+    }
+
     fn eval_batch(&self, plans: &[Plan]) -> Vec<[f64; N_OBJ]> {
         let keys: Vec<(u64, u64)> =
             plans.iter().map(plan_fingerprint).collect();
         let mut out: Vec<Option<[f64; N_OBJ]>> = vec![None; plans.len()];
         let mut miss_idx: Vec<usize> = Vec::new();
-        {
-            let cache = self.cache.lock().expect("memo cache");
-            for (i, key) in keys.iter().enumerate() {
-                match cache.get(key) {
-                    Some(obj) => out[i] = Some(*obj),
-                    None => miss_idx.push(i),
-                }
+        for (i, key) in keys.iter().enumerate() {
+            let shard = self.shard(*key).lock().expect("memo shard");
+            match shard.get(key) {
+                Some(obj) => out[i] = Some(*obj),
+                None => miss_idx.push(i),
             }
         }
         if !miss_idx.is_empty() {
@@ -180,19 +294,24 @@ impl BatchEvaluator for MemoizedEvaluator<'_> {
                     }
                 }
             }
-            let miss_plans: Vec<Plan> =
-                fresh.iter().map(|&i| plans[i].clone()).collect();
-            let objs = self.inner.eval_batch(&miss_plans);
-            let mut cache = self.cache.lock().expect("memo cache");
+            let miss_refs: Vec<&Plan> =
+                fresh.iter().map(|&i| &plans[i]).collect();
+            let objs = self.inner.eval_refs(&miss_refs);
             for (&i, obj) in fresh.iter().zip(&objs) {
-                cache.insert(keys[i], *obj);
+                self.shard(keys[i])
+                    .lock()
+                    .expect("memo shard")
+                    .insert(keys[i], *obj);
                 out[i] = Some(*obj);
             }
             // only in-batch duplicates of a fresh plan still need a lookup
             for &i in &miss_idx {
                 if out[i].is_none() {
                     out[i] = Some(
-                        *cache
+                        *self
+                            .shard(keys[i])
+                            .lock()
+                            .expect("memo shard")
                             .get(&keys[i])
                             .expect("missed plan just cached"),
                     );
@@ -261,23 +380,30 @@ impl AnalyticEvaluator {
     }
 
     /// Evaluate one plan -> [ttft_s, carbon_kg, water_l, cost_usd].
+    /// The O(K*L) [`AnalyticEvaluator::aggregate`] contraction followed by
+    /// the O(L) [`AnalyticEvaluator::finish`] physics pass; allocation-free
+    /// (pinned by rust/tests/alloc_hotpath.rs).
     pub fn evaluate(&self, plan: &Plan) -> [f64; N_OBJ] {
         debug_assert_eq!(plan.classes, self.cp.classes);
         debug_assert_eq!(plan.dcs, self.dp.dcs);
+        self.finish(&self.aggregate(plan.as_slice()))
+    }
+
+    /// The O(K*L) contraction over classes: fold every row's contribution
+    /// into the row-separable epoch aggregates (see [`PlanAgg`]).
+    pub fn aggregate(&self, a: &[f64]) -> PlanAgg {
         let k_n = self.cp.classes;
         let l_n = self.dp.dcs;
-        let c = &self.consts;
+        debug_assert_eq!(a.len(), k_n * l_n);
         // dcs <= DC_SLOTS is a config invariant (SystemConfig::validate),
         // so the per-plan accumulators live on the stack — this is the
         // hottest loop in the optimizer and used to pay two heap
         // allocations per plan
         assert!(l_n <= DC_SLOTS, "dcs {l_n} exceeds DC_SLOTS {DC_SLOTS}");
 
-        // contraction over classes
         let mut node_s = [0.0f64; DC_SLOTS];
         let mut reqs_l = [0.0f64; DC_SLOTS];
         let mut t_base = 0.0f64;
-        let a = plan.as_slice();
         for k in 0..k_n {
             let n_req = self.cp.n_req[k];
             let row = &a[k * l_n..(k + 1) * l_n];
@@ -289,15 +415,53 @@ impl AnalyticEvaluator {
                 t_base += row[l] * wtt[l];
             }
         }
+        PlanAgg {
+            node_s,
+            reqs_l,
+            t_base,
+        }
+    }
 
-        // per-DC physics
+    /// Shift cached aggregates by the contribution change of row `k`
+    /// (`old_row` -> `new_row`): O(L). The aggregates are linear in every
+    /// row, so adding the signed difference is exact up to FP rounding —
+    /// the delta-vs-full parity property test pins the drift at <= 1e-9
+    /// relative over whole move sequences.
+    pub fn apply_row_delta(
+        &self,
+        agg: &mut PlanAgg,
+        k: usize,
+        old_row: &[f64],
+        new_row: &[f64],
+    ) {
+        let l_n = self.dp.dcs;
+        debug_assert!(k < self.cp.classes);
+        debug_assert_eq!(old_row.len(), l_n);
+        debug_assert_eq!(new_row.len(), l_n);
+        let n_req = self.cp.n_req[k];
+        let wns = &self.wk_node_s[k * l_n..(k + 1) * l_n];
+        let wtt = &self.wk_ttft[k * l_n..(k + 1) * l_n];
+        for l in 0..l_n {
+            let d = new_row[l] - old_row[l];
+            agg.node_s[l] += d * wns[l];
+            agg.reqs_l[l] += d * n_req;
+            agg.t_base += d * wtt[l];
+        }
+    }
+
+    /// Per-DC physics + TTFT aggregation from precomputed aggregates:
+    /// O(L), allocation-free. `evaluate` == `finish(aggregate(plan))`
+    /// bit-for-bit.
+    pub fn finish(&self, agg: &PlanAgg) -> [f64; N_OBJ] {
+        let l_n = self.dp.dcs;
+        let c = &self.consts;
         let mut cost = 0.0;
         let mut water = 0.0;
         let mut carbon = 0.0;
         let mut t_queue = 0.0;
         for l in 0..l_n {
             let nodes = self.dp.nodes[l];
-            let on = (node_s[l] / c.epoch_s).min(nodes);
+            let on = (agg.node_s[l] / c.epoch_s).min(nodes);
             let util = on / nodes.max(1.0);
             let e_it = (on * c.pr_on + (nodes - on) * self.dp.unused_pr[l])
                 * self.dp.tdp[l]
@@ -313,10 +477,26 @@ impl AnalyticEvaluator {
                 + ((w_e + w_b) * c.ei_pot + w_grid * c.ei_waste)
                     * self.dp.ci[l];
             let queue = c.q_coef * util / (1.0 - util.min(c.u_max));
-            t_queue += reqs_l[l] * queue;
+            t_queue += agg.reqs_l[l] * queue;
         }
-        let ttft = (t_base + t_queue) / self.total_req;
+        let ttft = (agg.t_base + t_queue) / self.total_req;
         [ttft, carbon, water, cost]
+    }
+
+    /// Score a one-row move against cached base aggregates in O(L): copy
+    /// the (stack-sized) aggregates, apply the row delta, run the physics
+    /// pass. The base plan's full contraction is paid once; every
+    /// neighbour after that costs O(L) instead of O(K*L).
+    pub fn evaluate_delta(
+        &self,
+        agg: &PlanAgg,
+        k: usize,
+        old_row: &[f64],
+        new_row: &[f64],
+    ) -> [f64; N_OBJ] {
+        let mut moved = *agg;
+        self.apply_row_delta(&mut moved, k, old_row, new_row);
+        self.finish(&moved)
     }
 
     /// Evaluate a batch of plans (parallel over plans).
@@ -620,6 +800,135 @@ mod tests {
         assert_eq!(out[1], out[3]);
         assert_eq!(memo.misses(), 2, "duplicates must not pay twice");
         assert_eq!(memo.hits(), 3);
+    }
+
+    /// Relative error across all four objectives.
+    fn rel_err(a: &[f64; N_OBJ], b: &[f64; N_OBJ]) -> f64 {
+        (0..N_OBJ)
+            .map(|i| (a[i] - b[i]).abs() / b[i].abs().max(1e-12))
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn delta_matches_full_eval_for_single_row_moves() {
+        let (cfg, ev) = make_eval(0.05);
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let base = Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng);
+            let agg = ev.aggregate(base.as_slice());
+            // finish(aggregate) must be bit-identical to evaluate
+            assert_eq!(ev.finish(&agg), ev.evaluate(&base));
+            let k = rng.below(cfg.num_classes());
+            let to = rng.below(ev.dcs());
+            let cand = base.shifted_toward(k, to, rng.range(0.1, 1.0));
+            let fast =
+                ev.evaluate_delta(&agg, k, base.row(k), cand.row(k));
+            let full = ev.evaluate(&cand);
+            assert!(
+                rel_err(&fast, &full) <= 1e-9,
+                "delta {fast:?} vs full {full:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn delta_parity_over_random_move_sequences_property() {
+        // the tentpole invariant: maintaining aggregates incrementally
+        // across whole move sequences (all four neighbour kinds) stays
+        // within 1e-9 relative of a from-scratch evaluation, on every
+        // objective, at every step
+        let (cfg, ev) = make_eval(0.05);
+        let k_n = cfg.num_classes();
+        propkit::check(
+            "delta-vs-full-parity",
+            0xDE17A,
+            40,
+            |r| (Plan::random(k_n, ev.dcs(), 0.5, r), r.fork(3)),
+            |(start, rng)| {
+                let mut rng = rng.clone();
+                let mut plan = start.clone();
+                let mut agg = ev.aggregate(plan.as_slice());
+                for mv in 0..12 {
+                    let (next, mask) = match mv % 4 {
+                        2 => {
+                            let k = rng.below(k_n);
+                            let to = rng.below(ev.dcs());
+                            let frac = rng.range(0.2, 0.8);
+                            (plan.shifted_toward(k, to, frac), 1u64 << k)
+                        }
+                        3 => {
+                            let k = rng.below(k_n);
+                            (plan.shifted_toward(k, 0, 1.0), 1u64 << k)
+                        }
+                        _ => plan.perturbed_tracked(0.4, &mut rng),
+                    };
+                    for k in 0..k_n {
+                        if (mask >> k) & 1 == 1 {
+                            ev.apply_row_delta(
+                                &mut agg,
+                                k,
+                                plan.row(k),
+                                next.row(k),
+                            );
+                        }
+                    }
+                    plan = next;
+                    let fast = ev.finish(&agg);
+                    let full = ev.evaluate(&plan);
+                    let err = rel_err(&fast, &full);
+                    if err > 1e-9 {
+                        return Err(format!(
+                            "move {mv}: rel err {err:.3e} ({fast:?} vs {full:?})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sharded_memo_accounting_matches_single_lock_cache() {
+        // hits+misses accounting and every returned objective must be
+        // identical whether the cache is one lock or 16 shards
+        let (cfg, ev) = make_eval(0.05);
+        let mut rng = Rng::new(23);
+        let fresh: Vec<Plan> = (0..60)
+            .map(|_| Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng))
+            .collect();
+        // batches with in-batch duplicates and cross-batch repeats
+        let batches: Vec<Vec<Plan>> = vec![
+            fresh[..40].to_vec(),
+            fresh[20..].iter().chain(&fresh[..10]).cloned().collect(),
+            vec![fresh[0].clone(), fresh[0].clone(), fresh[59].clone()],
+        ];
+        let single = MemoizedEvaluator::with_shards(&ev, 1);
+        let sharded = MemoizedEvaluator::with_shards(&ev, 16);
+        assert_eq!(single.shard_count(), 1);
+        assert_eq!(sharded.shard_count(), 16);
+        for batch in &batches {
+            let a = single.eval_batch(batch);
+            let b = sharded.eval_batch(batch);
+            assert_eq!(a, b);
+            assert_eq!(single.hits(), sharded.hits());
+            assert_eq!(single.misses(), sharded.misses());
+            assert_eq!(single.len(), sharded.len());
+        }
+        assert_eq!(single.misses(), 60, "one true eval per distinct plan");
+    }
+
+    #[test]
+    fn eval_refs_matches_eval_batch() {
+        let (cfg, ev) = make_eval(0.05);
+        let mut rng = Rng::new(29);
+        let plans: Vec<Plan> = (0..24)
+            .map(|_| Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng))
+            .collect();
+        let refs: Vec<&Plan> = plans.iter().collect();
+        assert_eq!(ev.eval_refs(&refs), ev.eval_batch(&plans));
+        // the memoized wrapper exposes the inner delta scorer
+        let memo = MemoizedEvaluator::new(&ev);
+        assert!(memo.delta_scorer().is_some());
     }
 
     #[test]

@@ -29,6 +29,9 @@ impl Default for GbdtConfig {
     }
 }
 
+/// Pointer-shaped tree node, used only while *growing* a tree (the greedy
+/// splitter recurses naturally over it). Fitted trees are immediately
+/// flattened into the contiguous node arrays the predict path walks.
 #[derive(Clone, Debug)]
 enum Node {
     Leaf(f64),
@@ -64,12 +67,27 @@ impl Tree {
     }
 }
 
-/// A trained gradient-boosting model.
+/// Leaf marker in the flattened node arrays.
+const LEAF: u32 = u32::MAX;
+
+/// A trained gradient-boosting model. All trees live flattened in three
+/// contiguous struct-of-arrays buffers (`feat`/`thresh`/`kids`), so a
+/// prediction walks cache-dense arrays with no enum matching or pointer
+/// chasing — `predict_batch_into` scores a whole candidate arena slice
+/// per call, which is how the SLIT surrogate ranks each step's merged
+/// neighbour batch.
 #[derive(Clone, Debug)]
 pub struct Gbdt {
     base: f64,
     lr: f64,
-    trees: Vec<Tree>,
+    /// Split feature per node; [`LEAF`] marks a leaf.
+    feat: Vec<u32>,
+    /// Split threshold per node — or the leaf value for leaves.
+    thresh: Vec<f64>,
+    /// [left, right] child node indices (absolute; unused for leaves).
+    kids: Vec<[u32; 2]>,
+    /// Root node index of each tree.
+    roots: Vec<u32>,
     pub n_features: usize,
 }
 
@@ -86,9 +104,17 @@ impl Gbdt {
         let d = xs[0].len();
         let base = ys.iter().sum::<f64>() / ys.len() as f64;
         let mut residuals: Vec<f64> = ys.iter().map(|y| y - base).collect();
-        let mut trees = Vec::with_capacity(cfg.trees);
         let idx: Vec<usize> = (0..xs.len()).collect();
 
+        let mut model = Gbdt {
+            base,
+            lr: cfg.learning_rate,
+            feat: Vec::new(),
+            thresh: Vec::new(),
+            kids: Vec::new(),
+            roots: Vec::with_capacity(cfg.trees),
+            n_features: d,
+        };
         for _ in 0..cfg.trees {
             let mut nodes = Vec::new();
             build_node(
@@ -105,24 +131,92 @@ impl Gbdt {
             for (i, x) in xs.iter().enumerate() {
                 residuals[i] -= cfg.learning_rate * tree.predict(x);
             }
-            trees.push(tree);
+            model.flatten_tree(&tree);
         }
-        Gbdt {
-            base,
-            lr: cfg.learning_rate,
-            trees,
-            n_features: d,
+        model
+    }
+
+    /// Append one grown tree to the flat node arrays (root first:
+    /// `build_node` always places the subtree root at local index 0).
+    fn flatten_tree(&mut self, tree: &Tree) {
+        let offset = self.feat.len() as u32;
+        self.roots.push(offset);
+        for node in &tree.nodes {
+            match node {
+                Node::Leaf(v) => {
+                    self.feat.push(LEAF);
+                    self.thresh.push(*v);
+                    self.kids.push([0, 0]);
+                }
+                Node::Split {
+                    feat,
+                    thresh,
+                    left,
+                    right,
+                } => {
+                    self.feat.push(*feat as u32);
+                    self.thresh.push(*thresh);
+                    self.kids
+                        .push([offset + *left as u32, offset + *right as u32]);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn walk_tree(&self, root: u32, x: &[f64]) -> f64 {
+        let mut i = root as usize;
+        loop {
+            let f = self.feat[i];
+            if f == LEAF {
+                return self.thresh[i];
+            }
+            let right = (x[f as usize] > self.thresh[i]) as usize;
+            i = self.kids[i][right] as usize;
         }
     }
 
     pub fn predict(&self, x: &[f64]) -> f64 {
         debug_assert_eq!(x.len(), self.n_features);
-        let sum: f64 = self.trees.iter().map(|t| t.predict(x)).sum();
+        let mut sum = 0.0;
+        for &root in &self.roots {
+            sum += self.walk_tree(root, x);
+        }
         self.base + self.lr * sum
     }
 
+    /// Score every row of a row-major matrix (`stride` features per row —
+    /// e.g. a `PlanBatch` arena slice) into `out`, which is cleared first.
+    /// Bit-identical to per-row [`Gbdt::predict`]; reusing `out` keeps the
+    /// per-step surrogate ranking allocation-free once warm.
+    pub fn predict_batch_into(
+        &self,
+        xs: &[f64],
+        stride: usize,
+        out: &mut Vec<f64>,
+    ) {
+        assert_eq!(stride, self.n_features, "feature-width mismatch");
+        assert_eq!(xs.len() % stride.max(1), 0, "ragged batch");
+        out.clear();
+        out.reserve(xs.len() / stride.max(1));
+        for row in xs.chunks_exact(stride) {
+            let mut sum = 0.0;
+            for &root in &self.roots {
+                sum += self.walk_tree(root, row);
+            }
+            out.push(self.base + self.lr * sum);
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Gbdt::predict_batch_into`].
+    pub fn predict_batch(&self, xs: &[f64], stride: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.predict_batch_into(xs, stride, &mut out);
+        out
+    }
+
     pub fn num_trees(&self) -> usize {
-        self.trees.len()
+        self.roots.len()
     }
 }
 
@@ -300,6 +394,32 @@ mod tests {
         let mean = 4.5;
         assert!((model.predict(&[0.0]) - mean).abs() < 1e-9);
         assert!((model.predict(&[9.0]) - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predict_batch_matches_per_row_predict_bitwise() {
+        let mut rng = Rng::new(6);
+        let d = 12;
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..d).map(|_| rng.f64()).collect())
+            .collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| x[0] * 2.0 - x[5] + x[7] * x[2]).collect();
+        let model = Gbdt::fit(&xs, &ys, &GbdtConfig::default(), &mut rng);
+        // row-major flatten, the arena layout
+        let flat: Vec<f64> = xs.iter().flatten().copied().collect();
+        let batch = model.predict_batch(&flat, d);
+        assert_eq!(batch.len(), xs.len());
+        for (x, b) in xs.iter().zip(&batch) {
+            assert_eq!(model.predict(x), *b, "flat walk diverged");
+        }
+        // _into reuses the output buffer
+        let mut out = vec![0.0; 3];
+        model.predict_batch_into(&flat, d, &mut out);
+        assert_eq!(out, batch);
+        // empty batch is fine
+        model.predict_batch_into(&[], d, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

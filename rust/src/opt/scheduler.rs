@@ -62,6 +62,9 @@ pub struct SlitStats {
     pub evaluations: usize,
     /// Evaluations answered by the plan-fingerprint memo cache.
     pub cache_hits: usize,
+    /// Neighbour candidates scored via O(L) delta rescoring (subset of
+    /// `evaluations`).
+    pub delta_evals: usize,
     pub generations: usize,
     pub surrogate_trainings: usize,
     pub wall_s: f64,
@@ -273,6 +276,7 @@ impl Scheduler for SlitScheduler {
         self.stats.epochs += 1;
         self.stats.evaluations += outcome.evaluations;
         self.stats.cache_hits += outcome.cache_hits;
+        self.stats.delta_evals += outcome.delta_evals;
         self.stats.generations += outcome.generations_run;
         self.stats.surrogate_trainings += outcome.surrogate_trainings;
         self.stats.wall_s += outcome.wall_s;

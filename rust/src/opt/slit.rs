@@ -17,14 +17,93 @@
 use std::time::Instant;
 
 use crate::config::{OptConfig, N_OBJ};
-use crate::eval::{BatchEvaluator, MemoizedEvaluator};
+use crate::eval::{BatchEvaluator, MemoizedEvaluator, PlanAgg};
 use crate::opt::gbdt::{Gbdt, GbdtConfig};
-use crate::pareto::{crowding_distances, dominates, ParetoArchive, Solution};
-use crate::plan::Plan;
+use crate::pareto::{
+    crowding_distances, dominates, fast_nondominated_sort, ParetoArchive,
+    Solution,
+};
+use crate::plan::{Plan, PlanBatch};
 use crate::util::rng::Rng;
 
 /// Cap on the surrogate training-set size (most recent trajectories win).
 const MAX_TRAIN_SAMPLES: usize = 768;
+
+/// The per-slot candidate loop checks the wall-clock budget only every
+/// this many population slots: `Instant::elapsed` is a clock syscall, and
+/// paying one per slot per step dominated the (now O(L)) candidate
+/// scoring. Overrun is still detected within 8 slots, and the truncated
+/// batch keeps ranges and candidates aligned exactly as before.
+const BUDGET_CHECK_STRIDE: usize = 8;
+
+/// Bounded ring of surrogate training trajectories: (plan features,
+/// scalarised score). Replaces the unbounded `Vec<(Vec<f64>, f64)>` that
+/// grew one feature-vector clone per candidate between trainings — the
+/// ring holds the most recent [`MAX_TRAIN_SAMPLES`] samples (exactly the
+/// tail the old code passed to `Gbdt::fit`), and overwritten slots reuse
+/// their feature `Vec` allocation instead of reallocating per push.
+struct TrainRing {
+    feats: Vec<Vec<f64>>,
+    scores: Vec<f64>,
+    cap: usize,
+    /// Next slot to (over)write.
+    next: usize,
+    /// Live samples (<= cap).
+    len: usize,
+}
+
+impl TrainRing {
+    fn new(cap: usize) -> TrainRing {
+        TrainRing {
+            feats: Vec::new(),
+            scores: Vec::new(),
+            cap: cap.max(1),
+            next: 0,
+            len: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Record one trajectory, copying `feat` into a reused slot buffer.
+    fn push(&mut self, feat: &[f64], score: f64) {
+        if self.next == self.feats.len() && self.feats.len() < self.cap {
+            self.feats.push(feat.to_vec());
+            self.scores.push(score);
+        } else {
+            let slot = &mut self.feats[self.next];
+            slot.clear();
+            slot.extend_from_slice(feat);
+            self.scores[self.next] = score;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// Forget all samples (paper: Y_train = empty after training), keeping
+    /// the slot allocations for reuse.
+    fn clear(&mut self) {
+        self.next = 0;
+        self.len = 0;
+    }
+
+    /// Copy out (features, scores) oldest-first — the order the old
+    /// unbounded tail presented to `Gbdt::fit`. One clone per *training
+    /// event* (rare) instead of one per candidate.
+    fn training_view(&self) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let start = if self.len < self.cap { 0 } else { self.next };
+        let mut xs = Vec::with_capacity(self.len);
+        let mut ys = Vec::with_capacity(self.len);
+        for i in 0..self.len {
+            let j = (start + i) % self.cap;
+            xs.push(self.feats[j].clone());
+            ys.push(self.scores[j]);
+        }
+        (xs, ys)
+    }
+}
 
 /// Ablation / instrumentation switches.
 #[derive(Clone, Copy, Debug)]
@@ -48,10 +127,14 @@ impl Default for SlitOptions {
 #[derive(Debug)]
 pub struct SlitOutcome {
     pub archive: ParetoArchive,
-    /// True-evaluator calls spent (memoization cache misses).
+    /// True evaluations spent: full-contraction batch evals (memoization
+    /// cache misses) plus O(L) delta rescorings.
     pub evaluations: usize,
     /// Evaluations answered from the plan-fingerprint cache for free.
     pub cache_hits: usize,
+    /// Neighbour candidates scored incrementally (subset of
+    /// `evaluations`); 0 when the backend has no delta scorer.
+    pub delta_evals: usize,
     pub generations_run: usize,
     pub surrogate_trainings: usize,
     pub wall_s: f64,
@@ -92,12 +175,19 @@ impl SlitOptimizer {
     /// Run Algorithm 1 with extra seed plans injected into the initial
     /// population (e.g. `AnalyticEvaluator::greedy_seed_plans`).
     ///
-    /// Every true evaluation goes through a [`MemoizedEvaluator`] wrapped
-    /// around `eval`, and the ML-guided search advances all population
-    /// slots in lockstep so each step's surviving candidates form **one**
-    /// batch — that batch is what fans out over the thread pool
-    /// (`util::threadpool::par_map` inside the evaluator), instead of the
-    /// per-slot trickle of tiny batches the per-plan loop used to emit.
+    /// The ML-guided search advances all population slots in lockstep;
+    /// each step's candidates are generated **directly into a
+    /// [`PlanBatch`] arena** (no per-candidate `Plan` clone), surrogate
+    /// ranking reads arena slices, and — when the backend exposes a
+    /// [`crate::eval::DeltaScorer`] (the analytic evaluator does) — every
+    /// surviving neighbour is rescored incrementally against its slot's
+    /// cached epoch aggregates in O(|touched rows| * L) instead of the
+    /// O(K*L) full contraction. Backends without delta support (AOT HLO)
+    /// fall back to the batched [`MemoizedEvaluator`] path, which the
+    /// initial population and EA children always use. Candidate
+    /// generation and delta scoring stay sequential on the main thread
+    /// (they own the RNG), so runs remain seed- and
+    /// thread-count-deterministic.
     pub fn optimize_with_seeds(
         &mut self,
         eval: &dyn BatchEvaluator,
@@ -107,14 +197,21 @@ impl SlitOptimizer {
         let budget = self.opt.budget_s;
         let x = self.opt.population;
         let memo = MemoizedEvaluator::new(eval);
+        let delta = eval.delta_scorer();
+        let mut delta_evals = 0usize;
         let mut archive = ParetoArchive::new(self.opt.archive_cap);
         let mut surrogate: Option<Gbdt> = None;
         let mut surrogate_trainings = 0usize;
-        // Y_train: (plan features, scalarised score)
-        let mut y_train: Vec<(Vec<f64>, f64)> = Vec::new();
+        // Y_train: (plan features, scalarised score), bounded ring
+        let mut y_train = TrainRing::new(MAX_TRAIN_SAMPLES);
         // running objective bounds for scalarisation
         let mut lo = [f64::INFINITY; N_OBJ];
         let mut hi = [f64::NEG_INFINITY; N_OBJ];
+        // reused per-step buffers (allocation-free once warm)
+        let mut arena = PlanBatch::new(self.classes, self.dcs);
+        arena.reserve(x * self.opt.neighbors.max(1));
+        let mut scores: Vec<f64> = Vec::new();
+        let mut order: Vec<usize> = Vec::new();
 
         // --- initial population: two extremes + seeds + random
         //     (Algorithm 1 init, memetically strengthened)
@@ -158,128 +255,164 @@ impl SlitOptimizer {
             // so the archive's extreme points get real search pressure —
             // that's where SLIT-Carbon/-TTFT/-Water/-Cost come from.
             //
-            // All slots move in lockstep: per step, neighbour generation and
-            // surrogate ranking stay sequential on the main thread (they own
-            // the RNG, keeping runs seed-deterministic), while the one merged
-            // candidate batch pays for true evaluations in parallel.
+            // All slots move in lockstep: per step, the merged candidate
+            // batch is generated straight into the SoA arena on the main
+            // thread (it owns the RNG, keeping runs seed-deterministic),
+            // then scored — incrementally against cached per-slot epoch
+            // aggregates when the backend supports delta rescoring, as one
+            // memoized parallel batch otherwise.
             let mut current: Vec<Solution> = population.clone();
+            let mut aggs: Vec<PlanAgg> = match delta {
+                Some(d) => current
+                    .iter()
+                    .map(|s| d.aggregate(s.plan.as_slice()))
+                    .collect(),
+                None => Vec::new(),
+            };
             let mut out_of_budget = false;
             for _ in 0..self.opt.search_steps {
                 if start.elapsed().as_secs_f64() > budget {
                     break;
                 }
-                // 1) propose + surrogate-filter candidates for every slot.
-                //    The budget is re-checked per slot (the old per-plan
-                //    granularity): on overrun the remaining slots are
-                //    skipped, the truncated batch still gets evaluated —
-                //    ranges and candidates stay aligned — and the search
-                //    ends after this step.
-                let mut chosen_all: Vec<Plan> = Vec::with_capacity(
-                    current.len() * (self.opt.neighbors / 2).max(1),
-                );
+                // 1) propose candidates for every slot, arena-resident.
+                //    The budget is re-checked every BUDGET_CHECK_STRIDE
+                //    slots: on overrun the remaining slots are skipped, the
+                //    truncated batch still gets scored — ranges and
+                //    candidates stay aligned — and the search ends after
+                //    this step.
+                arena.clear();
                 let mut ranges: Vec<(usize, usize)> =
                     Vec::with_capacity(current.len());
-                for cur in &current {
-                    if start.elapsed().as_secs_f64() > budget {
+                for (si, cur) in current.iter().enumerate() {
+                    if si % BUDGET_CHECK_STRIDE == 0
+                        && start.elapsed().as_secs_f64() > budget
+                    {
                         out_of_budget = true;
                         break;
                     }
-                    let mut cands: Vec<Plan> =
-                        Vec::with_capacity(self.opt.neighbors);
-                    for c in 0..self.opt.neighbors {
-                        let p = match c % 4 {
-                            // directed move toward a random DC
-                            2 => {
-                                let k = self.rng.below(self.classes);
-                                let to = self.rng.below(self.dcs);
-                                cur.plan.shifted_toward(
-                                    k,
-                                    to,
-                                    self.rng.range(0.2, 0.8),
-                                )
-                            }
-                            // snap-to-vertex: collapse one row onto its
-                            // argmax, erasing residual routing mass (the
-                            // single-objective optima live on vertices)
-                            3 => {
-                                let k = self.rng.below(self.classes);
-                                let row = cur.plan.row(k);
-                                let best = row
-                                    .iter()
-                                    .enumerate()
-                                    .max_by(|a, b| {
-                                        a.1.partial_cmp(b.1).unwrap()
-                                    })
-                                    .map(|(l, _)| l)
-                                    .unwrap_or(0);
-                                cur.plan.shifted_toward(k, best, 1.0)
-                            }
-                            _ => cur
-                                .plan
-                                .perturbed(self.opt.step, &mut self.rng),
-                        };
-                        cands.push(p);
-                    }
-                    // surrogate pre-ranking: keep the most promising half
-                    let chosen: Vec<Plan> = match (&surrogate,
-                        self.options.use_surrogate)
-                    {
-                        (Some(model), true) => {
-                            let mut scored: Vec<(f64, Plan)> = cands
-                                .into_iter()
-                                .map(|p| {
-                                    (model.predict(p.as_slice()), p)
-                                })
-                                .collect();
-                            scored.sort_by(|a, b| {
-                                a.0.partial_cmp(&b.0).unwrap()
-                            });
-                            scored
-                                .into_iter()
-                                .take((self.opt.neighbors / 2).max(1))
-                                .map(|(_, p)| p)
-                                .collect()
-                        }
-                        _ => cands
-                            .into_iter()
-                            .take((self.opt.neighbors / 2).max(1))
-                            .collect(),
-                    };
-                    let lo_i = chosen_all.len();
-                    chosen_all.extend(chosen);
-                    ranges.push((lo_i, chosen_all.len()));
+                    let lo_i = arena.len();
+                    arena.push_neighbors_of(
+                        cur.plan.as_slice(),
+                        self.opt.neighbors,
+                        self.opt.step,
+                        &mut self.rng,
+                    );
+                    ranges.push((lo_i, arena.len()));
                 }
-                // 2) one true-evaluation batch for the whole population
-                //    (parallel inside, memoized across steps/generations)
-                let objs = memo.eval_batch(&chosen_all);
-                // 3) trajectory capture + archive update + move selection;
-                //    ranges are consecutive, so the batch is consumed in
-                //    order by value (no per-candidate plan clone)
-                let mut candidates = chosen_all.into_iter().zip(objs);
-                for (si, &(s_i, e_i)) in ranges.iter().enumerate() {
+                // 2) surrogate pre-ranking over arena slices: keep the most
+                //    promising half of each slot's candidates
+                let keep = (self.opt.neighbors / 2).max(1);
+                let mut chosen: Vec<usize> =
+                    Vec::with_capacity(ranges.len() * keep);
+                let mut chosen_ranges: Vec<(usize, usize)> =
+                    Vec::with_capacity(ranges.len());
+                for &(lo_i, hi_i) in &ranges {
+                    let c_lo = chosen.len();
+                    match (&surrogate, self.options.use_surrogate) {
+                        (Some(model), true) => {
+                            model.predict_batch_into(
+                                arena.range_flat(lo_i, hi_i),
+                                arena.stride(),
+                                &mut scores,
+                            );
+                            order.clear();
+                            order.extend(0..hi_i - lo_i);
+                            order.sort_by(|&a, &b| {
+                                scores[a].partial_cmp(&scores[b]).unwrap()
+                            });
+                            chosen.extend(
+                                order.iter().take(keep).map(|&o| lo_i + o),
+                            );
+                        }
+                        _ => chosen.extend(lo_i..(lo_i + keep).min(hi_i)),
+                    }
+                    chosen_ranges.push((c_lo, chosen.len()));
+                }
+                // 3) true-evaluate the survivors: O(touched * L) delta
+                //    rescoring against the slot aggregates when available,
+                //    else one memoized batch (parallel inside)
+                let objs: Vec<[f64; N_OBJ]> = match delta {
+                    Some(d) => {
+                        let mut objs = Vec::with_capacity(chosen.len());
+                        for (si, &(c_lo, c_hi)) in
+                            chosen_ranges.iter().enumerate()
+                        {
+                            let base = current[si].plan.as_slice();
+                            for &ci in &chosen[c_lo..c_hi] {
+                                let mut agg = aggs[si];
+                                let mask = arena.touched(ci);
+                                for k in 0..self.classes {
+                                    if (mask >> k) & 1 == 1 {
+                                        d.apply_row_delta(
+                                            &mut agg,
+                                            k,
+                                            &base[k * self.dcs
+                                                ..(k + 1) * self.dcs],
+                                            arena.row(ci, k),
+                                        );
+                                    }
+                                }
+                                objs.push(d.finish(&agg));
+                            }
+                        }
+                        delta_evals += objs.len();
+                        objs
+                    }
+                    None => {
+                        let plans: Vec<Plan> = chosen
+                            .iter()
+                            .map(|&ci| arena.to_plan(ci))
+                            .collect();
+                        memo.eval_batch(&plans)
+                    }
+                };
+                // 4) trajectory capture + archive update + move selection;
+                //    a Plan is materialised only for archive entrants and
+                //    accepted moves
+                for (si, &(c_lo, c_hi)) in chosen_ranges.iter().enumerate()
+                {
                     let weights = slot_weights(si);
-                    let mut best: Option<Solution> = None;
-                    for _ in s_i..e_i {
-                        let (plan, obj) = candidates
-                            .next()
-                            .expect("candidate count matches ranges");
+                    let mut best: Option<(usize, [f64; N_OBJ])> = None;
+                    for w in c_lo..c_hi {
+                        let ci = chosen[w];
+                        let obj = objs[w];
                         update_bounds(&mut lo, &mut hi, &obj);
                         let score = scalarize(&obj, &lo, &hi);
-                        y_train.push((plan.as_slice().to_vec(), score));
-                        let sol = Solution { plan, obj };
-                        archive.insert(sol.clone());
+                        y_train.push(arena.candidate(ci), score);
+                        if archive.would_accept(&obj) {
+                            let plan = arena.to_plan(ci);
+                            // delta scores carry per-base-aggregate FP
+                            // jitter, but archive dedup compares objectives
+                            // exactly — rescore entrants canonically
+                            // (finish(aggregate(..)) == evaluate bit-for-
+                            // bit) so identical plans stay deduplicated;
+                            // insert re-checks acceptance on the exact
+                            // objective. The gate itself sees the jittered
+                            // score, so a candidate within ~1e-9 of the
+                            // dominance boundary can be dropped that an
+                            // exact gate would admit — accepted tradeoff:
+                            // exact gating would cost the O(K*L) rescore
+                            // for every candidate, not just entrants.
+                            let store = match delta {
+                                Some(d) => {
+                                    d.finish(&d.aggregate(plan.as_slice()))
+                                }
+                                None => obj,
+                            };
+                            archive.insert(Solution { plan, obj: store });
+                        }
                         let better = match &best {
                             None => true,
-                            Some(b) => {
+                            Some((_, b_obj)) => {
                                 scalarize_w(&obj, &weights, &lo, &hi)
-                                    < scalarize_w(&b.obj, &weights, &lo, &hi)
+                                    < scalarize_w(b_obj, &weights, &lo, &hi)
                             }
                         };
                         if better {
-                            best = Some(sol);
+                            best = Some((ci, obj));
                         }
                     }
-                    if let Some(cand) = best {
+                    if let Some((ci, obj)) = best {
                         let cur_score = scalarize_w(
                             &current[si].obj,
                             &weights,
@@ -287,11 +420,23 @@ impl SlitOptimizer {
                             &hi,
                         );
                         let cand_score =
-                            scalarize_w(&cand.obj, &weights, &lo, &hi);
-                        if dominates(&cand.obj, &current[si].obj)
+                            scalarize_w(&obj, &weights, &lo, &hi);
+                        if dominates(&obj, &current[si].obj)
                             || cand_score < cur_score
                         {
-                            current[si] = cand;
+                            current[si] = Solution {
+                                plan: arena.to_plan(ci),
+                                obj,
+                            };
+                            if let Some(d) = delta {
+                                // re-contract from scratch so FP drift
+                                // cannot accumulate across accepted moves,
+                                // and pin the slot's objective to the
+                                // canonical (full-contraction) score
+                                aggs[si] =
+                                    d.aggregate(current[si].plan.as_slice());
+                                current[si].obj = d.finish(&aggs[si]);
+                            }
                         }
                     }
                 }
@@ -310,13 +455,10 @@ impl SlitOptimizer {
                 && y_train.len() >= 32
                 && start.elapsed().as_secs_f64() <= budget
             {
-                // keep training bounded: most recent trajectories + column
-                // subsampling keep one fit well inside the epoch budget
-                let take = y_train.len().min(MAX_TRAIN_SAMPLES);
-                let tail = &y_train[y_train.len() - take..];
-                let xs: Vec<Vec<f64>> =
-                    tail.iter().map(|(f, _)| f.clone()).collect();
-                let ys: Vec<f64> = tail.iter().map(|(_, s)| *s).collect();
+                // training is bounded by construction: the ring holds only
+                // the most recent MAX_TRAIN_SAMPLES trajectories, and
+                // column subsampling keeps one fit inside the epoch budget
+                let (xs, ys) = y_train.training_view();
                 let d = xs[0].len();
                 let cfg = GbdtConfig {
                     trees: self.opt.gbdt_trees,
@@ -346,10 +488,7 @@ impl SlitOptimizer {
                 let mut child_solutions = Vec::with_capacity(children.len());
                 for (plan, obj) in children.into_iter().zip(objs) {
                     update_bounds(&mut lo, &mut hi, &obj);
-                    y_train.push((
-                        plan.as_slice().to_vec(),
-                        scalarize(&obj, &lo, &hi),
-                    ));
+                    y_train.push(plan.as_slice(), scalarize(&obj, &lo, &hi));
                     let sol = Solution { plan, obj };
                     archive.insert(sol.clone());
                     child_solutions.push(sol);
@@ -363,8 +502,9 @@ impl SlitOptimizer {
 
         SlitOutcome {
             archive,
-            evaluations: memo.misses(),
+            evaluations: memo.misses() + delta_evals,
             cache_hits: memo.hits(),
+            delta_evals,
             generations_run,
             surrogate_trainings,
             wall_s: start.elapsed().as_secs_f64(),
@@ -415,43 +555,41 @@ fn slot_weights(slot: usize) -> [f64; N_OBJ] {
 }
 
 /// Keep `cap` solutions: non-dominated first, then crowding-sorted fill
-/// (a light NSGA-II environmental selection).
-pub fn select_population(mut pool: Vec<Solution>, cap: usize) -> Vec<Solution> {
+/// (NSGA-II environmental selection). Backed by
+/// [`fast_nondominated_sort`], which computes every pairwise domination
+/// exactly once — the old loop re-scanned the whole remaining pool per
+/// extracted front, an O(n^2)-per-front cost that dominated selection on
+/// large merged pools.
+pub fn select_population(pool: Vec<Solution>, cap: usize) -> Vec<Solution> {
     if pool.len() <= cap {
         return pool;
     }
+    let objs: Vec<[f64; N_OBJ]> = pool.iter().map(|s| s.obj).collect();
+    let fronts = fast_nondominated_sort(&objs);
+    let mut slots: Vec<Option<Solution>> =
+        pool.into_iter().map(Some).collect();
     let mut out: Vec<Solution> = Vec::with_capacity(cap);
-    while out.len() < cap && !pool.is_empty() {
-        // current non-dominated front of the pool
-        let mut front_idx: Vec<usize> = Vec::new();
-        for i in 0..pool.len() {
-            let dominated = pool
-                .iter()
-                .enumerate()
-                .any(|(j, s)| j != i && dominates(&s.obj, &pool[i].obj));
-            if !dominated {
-                front_idx.push(i);
-            }
-        }
-        if front_idx.is_empty() {
-            // all mutually dominated cycles shouldn't happen; guard anyway
-            front_idx = (0..pool.len()).collect();
-        }
-        let mut front: Vec<Solution> = Vec::with_capacity(front_idx.len());
-        for &i in front_idx.iter().rev() {
-            front.push(pool.swap_remove(i));
+    for front in fronts {
+        if out.len() == cap {
+            break;
         }
         if out.len() + front.len() <= cap {
-            out.extend(front);
+            out.extend(
+                front.iter().map(|&i| slots[i].take().expect("front member")),
+            );
         } else {
-            let crowd = crowding_distances(&front);
-            let mut order: Vec<usize> = (0..front.len()).collect();
-            order.sort_by(|&a, &b| {
-                crowd[b].partial_cmp(&crowd[a]).unwrap()
-            });
+            // split front: crowding-sorted fill of the remaining slots
+            let front_sols: Vec<Solution> = front
+                .iter()
+                .map(|&i| slots[i].take().expect("front member"))
+                .collect();
+            let crowd = crowding_distances(&front_sols);
+            let mut order: Vec<usize> = (0..front_sols.len()).collect();
+            order.sort_by(|&a, &b| crowd[b].partial_cmp(&crowd[a]).unwrap());
             for &i in order.iter().take(cap - out.len()) {
-                out.push(front[i].clone());
+                out.push(front_sols[i].clone());
             }
+            break;
         }
     }
     out
@@ -547,8 +685,8 @@ mod tests {
 
     #[test]
     fn memoized_evaluation_accounting_is_consistent() {
-        // evaluations = cache misses; hits are free repeats — together they
-        // cover every eval_batch slot the search requested
+        // evaluations = cache misses + delta rescorings; hits are free
+        // repeats — together they cover every score the search requested
         let (_, out) = run_opt(SlitOptions::default(), 12);
         assert!(out.evaluations > 50, "unique evals {}", out.evaluations);
         // repeated runs under the same seed spend the same true-eval budget
@@ -576,6 +714,39 @@ mod tests {
         );
         assert!(!no_ea.archive.is_empty());
         assert!(no_ea.evaluations < no_sur.evaluations);
+    }
+
+    #[test]
+    fn delta_path_scores_every_neighbor_incrementally() {
+        // against the analytic evaluator, all neighbour scoring goes
+        // through the O(L) delta core: generations * steps * population *
+        // kept-half candidates, with the huge budget never truncating
+        let (_, out) = run_opt(SlitOptions::default(), 31);
+        assert_eq!(out.delta_evals, 5 * 3 * 12 * 3);
+        // the memo still sees the initial population and EA children
+        let memo_misses = out.evaluations - out.delta_evals;
+        assert!(memo_misses >= 12, "init population pays full evals");
+    }
+
+    #[test]
+    fn train_ring_keeps_most_recent_tail_and_reuses_slots() {
+        let mut ring = TrainRing::new(4);
+        assert_eq!(ring.len(), 0);
+        for i in 0..10 {
+            ring.push(&[i as f64], i as f64);
+        }
+        assert_eq!(ring.len(), 4, "bounded at capacity");
+        let (xs, ys) = ring.training_view();
+        assert_eq!(ys, vec![6.0, 7.0, 8.0, 9.0], "oldest-first tail");
+        assert_eq!(xs[0], vec![6.0]);
+        ring.clear();
+        assert_eq!(ring.len(), 0);
+        // slots (and their allocations) are reused after clear, including
+        // for wider feature vectors
+        ring.push(&[1.0, 2.0], 0.5);
+        let (xs, ys) = ring.training_view();
+        assert_eq!(xs, vec![vec![1.0, 2.0]]);
+        assert_eq!(ys, vec![0.5]);
     }
 
     #[test]

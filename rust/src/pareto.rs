@@ -53,14 +53,21 @@ impl ParetoArchive {
         self.solutions.is_empty()
     }
 
+    /// True iff an objective vector would enter the archive (not dominated
+    /// by and not equal to any member). Lets the optimizer test a
+    /// candidate's objectives *before* materialising an owned plan for it:
+    /// the hot path only pays the allocation for accepted candidates.
+    pub fn would_accept(&self, obj: &[f64; N_OBJ]) -> bool {
+        !self
+            .solutions
+            .iter()
+            .any(|s| dominates(&s.obj, obj) || s.obj == *obj)
+    }
+
     /// Try to insert; returns true if the solution enters the archive
     /// (i.e. it is not dominated by any member).
     pub fn insert(&mut self, sol: Solution) -> bool {
-        if self
-            .solutions
-            .iter()
-            .any(|s| dominates(&s.obj, &sol.obj) || s.obj == sol.obj)
-        {
+        if !self.would_accept(&sol.obj) {
             return false;
         }
         self.solutions.retain(|s| !dominates(&sol.obj, &s.obj));
@@ -195,6 +202,56 @@ pub fn crowding_distances(sols: &[Solution]) -> Vec<f64> {
         }
     }
     d
+}
+
+/// Deb's fast non-dominated sort (NSGA-II): partition `objs` into
+/// successive non-dominated fronts, returning index lists front by front.
+/// Every pairwise domination is computed exactly once and cached as
+/// domination counts + dominated-sets; peeling a front is then O(edges)
+/// instead of re-scanning the whole remaining pool per front the way the
+/// old `select_population` loop did (O(n^2) *per front*). Exact duplicates
+/// never dominate each other, so they land in the same front. Order within
+/// each front is ascending input index (deterministic).
+pub fn fast_nondominated_sort(objs: &[[f64; N_OBJ]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // S_i (who i dominates) and n_i (how many dominate i), computed once
+    let mut dominated: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut count = vec![0u32; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominated[i].push(j as u32);
+                count[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominated[j].push(i as u32);
+                count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut front: Vec<usize> =
+        (0..n).filter(|&i| count[i] == 0).collect();
+    while !front.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &front {
+            for &j in &dominated[i] {
+                let j = j as usize;
+                count[j] -= 1;
+                if count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        // members are discovered in their dominators' order; keep fronts
+        // index-sorted so the output is independent of edge layout
+        next.sort_unstable();
+        fronts.push(std::mem::take(&mut front));
+        front = next;
+    }
+    fronts
 }
 
 /// Monte-Carlo hypervolume: the fraction of the `[0, reference]` box
@@ -500,6 +557,94 @@ mod tests {
         assert!(d[0].is_infinite());
         assert!(d[4].is_infinite());
         assert!(d[1].is_finite() && d[2].is_finite());
+    }
+
+    /// Brute-force front peeling: repeatedly extract the non-dominated
+    /// subset of what remains (the old `select_population` strategy).
+    fn peel_fronts(objs: &[[f64; N_OBJ]]) -> Vec<Vec<usize>> {
+        let mut remaining: Vec<usize> = (0..objs.len()).collect();
+        let mut fronts = Vec::new();
+        while !remaining.is_empty() {
+            let front: Vec<usize> = remaining
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    !remaining
+                        .iter()
+                        .any(|&j| j != i && dominates(&objs[j], &objs[i]))
+                })
+                .collect();
+            remaining.retain(|i| !front.contains(i));
+            fronts.push(front);
+        }
+        fronts
+    }
+
+    #[test]
+    fn fast_sort_matches_bruteforce_peeling_property() {
+        propkit::check(
+            "fast-nondominated-sort",
+            0xFA57,
+            80,
+            |r| {
+                let n = 5 + r.below(40);
+                (0..n)
+                    .map(|_| {
+                        // integer-ish coords force duplicates + dominance ties
+                        [
+                            r.below(4) as f64,
+                            r.below(4) as f64,
+                            r.below(4) as f64,
+                            r.below(4) as f64,
+                        ]
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |objs| {
+                let fast = fast_nondominated_sort(objs);
+                let brute = peel_fronts(objs);
+                if fast != brute {
+                    return Err(format!(
+                        "fronts diverge: fast {fast:?} vs brute {brute:?}"
+                    ));
+                }
+                let total: usize = fast.iter().map(|f| f.len()).sum();
+                if total != objs.len() {
+                    return Err("sort dropped or duplicated members".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fast_sort_trivial_cases() {
+        assert!(fast_nondominated_sort(&[]).is_empty());
+        let one = fast_nondominated_sort(&[[1.0, 2.0, 3.0, 4.0]]);
+        assert_eq!(one, vec![vec![0]]);
+        // a strict chain: one front per point
+        let chain: Vec<[f64; N_OBJ]> = (0..5)
+            .map(|i| [i as f64 + 1.0; N_OBJ])
+            .collect();
+        let fronts = fast_nondominated_sort(&chain);
+        assert_eq!(fronts.len(), 5);
+        assert_eq!(fronts[0], vec![0]);
+        // exact duplicates share a front
+        let dup = fast_nondominated_sort(&[
+            [1.0, 1.0, 1.0, 1.0],
+            [1.0, 1.0, 1.0, 1.0],
+        ]);
+        assert_eq!(dup, vec![vec![0, 1]]);
+    }
+
+    #[test]
+    fn would_accept_agrees_with_insert() {
+        let mut ar = ParetoArchive::new(16);
+        ar.insert(sol([2.0, 2.0, 2.0, 2.0]));
+        assert!(!ar.would_accept(&[3.0, 3.0, 3.0, 3.0])); // dominated
+        assert!(!ar.would_accept(&[2.0, 2.0, 2.0, 2.0])); // duplicate
+        assert!(ar.would_accept(&[1.0, 3.0, 2.0, 2.0])); // tradeoff
+        assert!(ar.insert(sol([1.0, 3.0, 2.0, 2.0])));
     }
 
     #[test]

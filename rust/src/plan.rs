@@ -9,6 +9,82 @@
 
 use crate::util::rng::Rng;
 
+/// Renormalise one row slice to sum to 1 (clamping negatives to 0).
+/// Shared by [`Plan`] and [`PlanBatch`] so the arena-generated candidates
+/// are bit-identical to the equivalent `Plan`-method moves.
+pub fn normalize_row_in_place(row: &mut [f64]) {
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+        sum += *v;
+    }
+    if sum <= 1e-15 {
+        let u = 1.0 / row.len() as f64;
+        row.iter_mut().for_each(|v| *v = u);
+    } else {
+        row.iter_mut().for_each(|v| *v /= sum);
+    }
+}
+
+/// Directed move on one row slice: shift `frac` of every other cell's mass
+/// toward `to`, then renormalise the row.
+pub fn shift_row_toward(row: &mut [f64], to: usize, frac: f64) {
+    for l in 0..row.len() {
+        if l != to {
+            let take = row[l] * frac;
+            row[l] -= take;
+            row[to] += take;
+        }
+    }
+    normalize_row_in_place(row);
+}
+
+/// Local-search perturbation applied in place to a flattened matrix:
+/// shift up to `step` of mass in a few random rows from one DC to another,
+/// renormalising only the rows actually modified. Returns the touched-row
+/// bitmask (bit k set = row k changed), which is what lets the delta
+/// evaluator rescore the move in O(|touched| * L) instead of O(K * L).
+///
+/// The RNG call sequence matches the historical `Plan::perturbed` exactly;
+/// the only behavioural difference is that untouched rows keep their exact
+/// bit pattern instead of paying a no-op renormalisation.
+pub fn perturb_in_place(
+    a: &mut [f64],
+    classes: usize,
+    dcs: usize,
+    step: f64,
+    rng: &mut Rng,
+) -> u64 {
+    debug_assert_eq!(a.len(), classes * dcs);
+    assert!(
+        classes <= 64,
+        "touched-row bitmask supports at most 64 classes, got {classes}"
+    );
+    let touched = 1 + rng.below(classes.max(1));
+    let mut mask = 0u64;
+    for _ in 0..touched {
+        let k = rng.below(classes);
+        let from = rng.below(dcs);
+        let to = rng.below(dcs);
+        if from == to {
+            continue;
+        }
+        let row = &mut a[k * dcs..(k + 1) * dcs];
+        let amount = (row[from] * rng.range(0.0, step)).min(row[from]);
+        row[from] -= amount;
+        row[to] += amount;
+        mask |= 1 << k;
+    }
+    for k in 0..classes {
+        if (mask >> k) & 1 == 1 {
+            normalize_row_in_place(&mut a[k * dcs..(k + 1) * dcs]);
+        }
+    }
+    mask
+}
+
 /// Row-stochastic assignment matrix, flattened `[k * dcs + l]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
@@ -84,20 +160,7 @@ impl Plan {
 
     /// Renormalise a single row (others untouched).
     pub fn normalize_row(&mut self, k: usize) {
-        let row = &mut self.a[k * self.dcs..(k + 1) * self.dcs];
-        let mut sum = 0.0;
-        for v in row.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-            sum += *v;
-        }
-        if sum <= 1e-15 {
-            let u = 1.0 / row.len() as f64;
-            row.iter_mut().for_each(|v| *v = u);
-        } else {
-            row.iter_mut().for_each(|v| *v /= sum);
-        }
+        normalize_row_in_place(&mut self.a[k * self.dcs..(k + 1) * self.dcs]);
     }
 
     /// True when every row sums to 1 within tolerance and is non-negative.
@@ -110,37 +173,25 @@ impl Plan {
     }
 
     /// Local-search neighbour: shift `step` of mass in a few random rows
-    /// from one DC to another, renormalise.
+    /// from one DC to another, renormalising the touched rows.
     pub fn perturbed(&self, step: f64, rng: &mut Rng) -> Plan {
+        self.perturbed_tracked(step, rng).0
+    }
+
+    /// [`Plan::perturbed`] plus the touched-row bitmask the delta evaluator
+    /// needs to rescore the move in O(|touched| * L).
+    pub fn perturbed_tracked(&self, step: f64, rng: &mut Rng) -> (Plan, u64) {
         let mut p = self.clone();
-        let touched = 1 + rng.below(self.classes.max(1));
-        for _ in 0..touched {
-            let k = rng.below(self.classes);
-            let from = rng.below(self.dcs);
-            let to = rng.below(self.dcs);
-            if from == to {
-                continue;
-            }
-            let amount = (p.get(k, from) * rng.range(0.0, step)).min(p.get(k, from));
-            p.set(k, from, p.get(k, from) - amount);
-            p.set(k, to, p.get(k, to) + amount);
-        }
-        p.normalize();
-        p
+        let mask =
+            perturb_in_place(&mut p.a, self.classes, self.dcs, step, rng);
+        (p, mask)
     }
 
     /// Directed neighbour: move mass in row `k` toward DC `to`. Other rows
     /// are untouched (mass within row `k` is conserved by construction).
     pub fn shifted_toward(&self, k: usize, to: usize, frac: f64) -> Plan {
         let mut p = self.clone();
-        for l in 0..self.dcs {
-            if l != to {
-                let take = p.get(k, l) * frac;
-                p.set(k, l, p.get(k, l) - take);
-                p.set(k, to, p.get(k, to) + take);
-            }
-        }
-        p.normalize_row(k);
+        shift_row_toward(&mut p.a[k * self.dcs..(k + 1) * self.dcs], to, frac);
         p
     }
 
@@ -194,6 +245,175 @@ impl Plan {
             }
             for _ in self.dcs..slots {
                 out.push(0.0);
+            }
+        }
+    }
+}
+
+/// Struct-of-arrays candidate arena for the SLIT local search: the merged
+/// per-step neighbour batch lives in **one** contiguous `f64` buffer
+/// (`[candidate][k * dcs + l]`) with a parallel touched-row bitmask per
+/// candidate. Surrogate ranking, delta scoring, and trajectory capture all
+/// read slices straight out of the arena; a `Plan` is materialised only
+/// for the few candidates that actually survive (move acceptance, archive
+/// entry). After [`PlanBatch::reserve`], generating a step's candidates
+/// performs zero heap allocations (pinned by rust/tests/alloc_hotpath.rs).
+#[derive(Debug)]
+pub struct PlanBatch {
+    classes: usize,
+    dcs: usize,
+    data: Vec<f64>,
+    touched: Vec<u64>,
+}
+
+impl PlanBatch {
+    pub fn new(classes: usize, dcs: usize) -> PlanBatch {
+        assert!(
+            classes <= 64,
+            "touched-row bitmask supports at most 64 classes, got {classes}"
+        );
+        PlanBatch {
+            classes,
+            dcs,
+            data: Vec::new(),
+            touched: Vec::new(),
+        }
+    }
+
+    /// Cells per candidate.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.classes * self.dcs
+    }
+
+    /// Candidates currently in the arena.
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    /// Drop all candidates, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.touched.clear();
+    }
+
+    /// Pre-size for `candidates` entries so subsequent pushes stay
+    /// allocation-free.
+    pub fn reserve(&mut self, candidates: usize) {
+        let cells = candidates.saturating_mul(self.stride());
+        if self.data.capacity() < cells {
+            self.data.reserve(cells - self.data.len());
+        }
+        if self.touched.capacity() < candidates {
+            self.touched.reserve(candidates - self.touched.len());
+        }
+    }
+
+    /// Flattened matrix of candidate `i`.
+    #[inline]
+    pub fn candidate(&self, i: usize) -> &[f64] {
+        let s = self.stride();
+        &self.data[i * s..(i + 1) * s]
+    }
+
+    /// Row `k` of candidate `i`.
+    #[inline]
+    pub fn row(&self, i: usize, k: usize) -> &[f64] {
+        let s = self.stride();
+        &self.data[i * s + k * self.dcs..i * s + (k + 1) * self.dcs]
+    }
+
+    /// Touched-row bitmask of candidate `i` (relative to the base plan it
+    /// was generated from).
+    #[inline]
+    pub fn touched(&self, i: usize) -> u64 {
+        self.touched[i]
+    }
+
+    /// One contiguous row-major view over candidates `lo..hi` (what
+    /// `Gbdt::predict_batch_into` consumes).
+    pub fn range_flat(&self, lo: usize, hi: usize) -> &[f64] {
+        let s = self.stride();
+        &self.data[lo * s..hi * s]
+    }
+
+    /// Materialise candidate `i` as an owned [`Plan`] (the only place a
+    /// candidate pays for a heap allocation).
+    pub fn to_plan(&self, i: usize) -> Plan {
+        Plan {
+            classes: self.classes,
+            dcs: self.dcs,
+            a: self.candidate(i).to_vec(),
+        }
+    }
+
+    /// Copy `base` in as a new untouched candidate; returns its index.
+    pub fn push_base(&mut self, base: &[f64]) -> usize {
+        debug_assert_eq!(base.len(), self.stride());
+        self.data.extend_from_slice(base);
+        self.touched.push(0);
+        self.touched.len() - 1
+    }
+
+    #[inline]
+    fn row_mut(&mut self, i: usize, k: usize) -> &mut [f64] {
+        let s = self.stride();
+        let dcs = self.dcs;
+        &mut self.data[i * s + k * dcs..i * s + (k + 1) * dcs]
+    }
+
+    /// Generate the SLIT move set for one population slot directly into
+    /// the arena: `n` candidates cycling over the four neighbour kinds
+    /// (two Dirichlet-ish perturbations, a directed shift toward a random
+    /// DC, and a snap-to-vertex collapse onto the row argmax). Each
+    /// candidate records the rows it touched, so the delta evaluator can
+    /// rescore it against `cur`'s cached epoch aggregates in O(L) per
+    /// touched row. The RNG call sequence per candidate matches the
+    /// historical `Plan`-clone generation path.
+    pub fn push_neighbors_of(
+        &mut self,
+        cur: &[f64],
+        n: usize,
+        step: f64,
+        rng: &mut Rng,
+    ) {
+        for c in 0..n {
+            let i = self.push_base(cur);
+            match c % 4 {
+                // directed move toward a random DC
+                2 => {
+                    let k = rng.below(self.classes);
+                    let to = rng.below(self.dcs);
+                    let frac = rng.range(0.2, 0.8);
+                    shift_row_toward(self.row_mut(i, k), to, frac);
+                    self.touched[i] = 1 << k;
+                }
+                // snap-to-vertex: collapse one row onto its argmax,
+                // erasing residual routing mass (the single-objective
+                // optima live on vertices)
+                3 => {
+                    let k = rng.below(self.classes);
+                    let best = self
+                        .row(i, k)
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(l, _)| l)
+                        .unwrap_or(0);
+                    shift_row_toward(self.row_mut(i, k), best, 1.0);
+                    self.touched[i] = 1 << k;
+                }
+                _ => {
+                    let (classes, dcs) = (self.classes, self.dcs);
+                    let s = self.stride();
+                    let cand = &mut self.data[i * s..(i + 1) * s];
+                    self.touched[i] =
+                        perturb_in_place(cand, classes, dcs, step, rng);
+                }
             }
         }
     }
@@ -295,7 +515,9 @@ mod tests {
         let mut rng = Rng::new(4);
         let a = Plan::random(8, 12, 0.5, &mut rng);
         assert_eq!(a.distance(&a), 0.0);
-        let b = a.perturbed(0.5, &mut rng);
+        // a guaranteed-effective move: perturbed may legitimately draw a
+        // no-op (from == to), and untouched rows now keep their exact bits
+        let b = a.shifted_toward(2, 5, 0.9);
         assert!(a.distance(&b) > 0.0);
     }
 
@@ -320,5 +542,114 @@ mod tests {
         assert_eq!(out[3], 0.0); // padded
         assert_eq!(out[4], 0.0);
         assert_eq!(out[5 + 1], 1.0);
+    }
+
+    #[test]
+    fn perturbed_tracked_mask_covers_exactly_the_changed_rows() {
+        propkit::check(
+            "perturb-mask-exact",
+            0x7AC5,
+            200,
+            |r| {
+                let p = Plan::random(8, 12, 0.5, r);
+                let mut r2 = r.fork(9);
+                let (q, mask) = p.perturbed_tracked(0.4, &mut r2);
+                (p, q, mask)
+            },
+            |(p, q, mask)| {
+                for k in 0..p.classes {
+                    let changed = p.row(k) != q.row(k);
+                    let marked = (mask >> k) & 1 == 1;
+                    // untouched rows must keep their exact bit pattern;
+                    // a marked row may still be value-identical (the move
+                    // can shift zero mass), never the other way round
+                    if changed && !marked {
+                        return Err(format!("row {k} changed but unmarked"));
+                    }
+                }
+                if !q.is_valid() {
+                    return Err("perturbed plan not row-stochastic".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shift_row_toward_matches_plan_method_bitwise() {
+        let mut rng = Rng::new(11);
+        let p = Plan::random(6, 9, 0.5, &mut rng);
+        for k in 0..6 {
+            let via_plan = p.shifted_toward(k, 4, 0.37);
+            let mut row = p.row(k).to_vec();
+            shift_row_toward(&mut row, 4, 0.37);
+            assert_eq!(via_plan.row(k), &row[..]);
+        }
+    }
+
+    #[test]
+    fn plan_batch_neighbors_match_plan_clone_generation() {
+        // the arena path and the historical Plan-clone path must produce
+        // bit-identical candidates given the same RNG stream
+        let mut rng = Rng::new(21);
+        let cur = Plan::random(8, 12, 0.5, &mut rng);
+        let n = 8;
+        let step = 0.25;
+
+        let mut arena = PlanBatch::new(8, 12);
+        arena.reserve(n);
+        let mut r1 = rng.fork(1);
+        // fork() advances the parent, so clone the child for the replays
+        let mut r2 = r1.clone();
+        let mut r3 = r1.clone();
+        arena.push_neighbors_of(cur.as_slice(), n, step, &mut r1);
+        for c in 0..n {
+            let (want, want_mask): (Plan, u64) = match c % 4 {
+                2 => {
+                    let k = r2.below(8);
+                    let to = r2.below(12);
+                    let frac = r2.range(0.2, 0.8);
+                    (cur.shifted_toward(k, to, frac), 1 << k)
+                }
+                3 => {
+                    let k = r2.below(8);
+                    let best = cur
+                        .row(k)
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(l, _)| l)
+                        .unwrap();
+                    (cur.shifted_toward(k, best, 1.0), 1 << k)
+                }
+                _ => cur.perturbed_tracked(step, &mut r2),
+            };
+            assert_eq!(arena.candidate(c), want.as_slice(), "candidate {c}");
+            assert_eq!(arena.touched(c), want_mask, "mask {c}");
+            assert_eq!(arena.to_plan(c), want);
+        }
+        assert_eq!(arena.len(), n);
+        assert_eq!(arena.range_flat(0, n).len(), n * 8 * 12);
+        // the shared reference generator the benches compare against
+        // (util::benchkit::clone_path_neighbors) must agree with both
+        let shared =
+            crate::util::benchkit::clone_path_neighbors(&cur, n, step, &mut r3);
+        for (c, w) in shared.iter().enumerate() {
+            assert_eq!(arena.candidate(c), w.as_slice(), "shared ref {c}");
+        }
+    }
+
+    #[test]
+    fn plan_batch_clear_keeps_capacity() {
+        let mut arena = PlanBatch::new(4, 6);
+        arena.reserve(16);
+        let mut rng = Rng::new(5);
+        let cur = Plan::uniform(4, 6);
+        arena.push_neighbors_of(cur.as_slice(), 16, 0.3, &mut rng);
+        assert_eq!(arena.len(), 16);
+        let cap = arena.data.capacity();
+        arena.clear();
+        assert!(arena.is_empty());
+        assert_eq!(arena.data.capacity(), cap);
     }
 }

@@ -7,6 +7,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::plan::Plan;
+use crate::util::rng::Rng;
 use crate::util::stats;
 
 /// One measured benchmark result.
@@ -178,6 +180,113 @@ impl Bench {
     }
 }
 
+// --- shared reference paths --------------------------------------------------
+
+/// The pre-arena SLIT neighbour generator: one owned `Plan` clone per
+/// candidate, cycling the same four move kinds with the same RNG call
+/// sequence as `plan::PlanBatch::push_neighbors_of`. This is the single
+/// shared reference path for the arena parity assertions
+/// (rust/src/plan.rs unit test, rust/tests/bench_rows.rs) and the
+/// arena-vs-clone bench row (benches/hot_path.rs) — one copy, so the
+/// reference and the benchmarks cannot drift apart when the move set
+/// changes.
+pub fn clone_path_neighbors(
+    cur: &Plan,
+    n: usize,
+    step: f64,
+    rng: &mut Rng,
+) -> Vec<Plan> {
+    let mut out = Vec::with_capacity(n);
+    for c in 0..n {
+        out.push(match c % 4 {
+            // directed move toward a random DC
+            2 => {
+                let k = rng.below(cur.classes);
+                let to = rng.below(cur.dcs);
+                cur.shifted_toward(k, to, rng.range(0.2, 0.8))
+            }
+            // snap-to-vertex: collapse one row onto its argmax
+            3 => {
+                let k = rng.below(cur.classes);
+                let best = cur
+                    .row(k)
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(l, _)| l)
+                    .unwrap_or(0);
+                cur.shifted_toward(k, best, 1.0)
+            }
+            _ => cur.perturbed(step, rng),
+        });
+    }
+    out
+}
+
+// --- allocation-count harness -----------------------------------------------
+
+/// Counting wrapper around the system allocator. Register it in a test or
+/// bench binary with
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
+/// and measure a closure with [`count_allocs`] — that is how
+/// rust/tests/alloc_hotpath.rs pins `AnalyticEvaluator::evaluate`, the
+/// delta-scoring core, and the `PlanBatch` candidate build at **zero**
+/// heap operations. The counter is thread-local, so pool workers and
+/// concurrently running `#[test]` threads never pollute a measurement.
+pub struct CountingAlloc;
+
+thread_local! {
+    static ALLOC_OPS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+#[inline]
+fn bump_alloc_ops() {
+    // Cell<u64> has no destructor, so this TLS access never allocates —
+    // safe to run inside the allocator itself.
+    ALLOC_OPS.with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        bump_alloc_ops();
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: std::alloc::Layout) -> *mut u8 {
+        bump_alloc_ops();
+        std::alloc::System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        bump_alloc_ops();
+        std::alloc::System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+}
+
+/// Heap operations (alloc/alloc_zeroed/realloc; frees don't count)
+/// performed by this thread so far. Always available; only meaningful
+/// when [`CountingAlloc`] is the registered global allocator.
+pub fn thread_alloc_ops() -> u64 {
+    ALLOC_OPS.with(|c| c.get())
+}
+
+/// Run `f` and return how many heap operations this thread performed
+/// inside it, alongside `f`'s result.
+pub fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = thread_alloc_ops();
+    let out = f();
+    (thread_alloc_ops() - before, out)
+}
+
 /// Human-readable time formatting.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -215,6 +324,16 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" us"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn count_allocs_passes_result_through() {
+        // the lib test binary does not register CountingAlloc, so the
+        // counter never moves here — the real zero-alloc pins live in
+        // rust/tests/alloc_hotpath.rs, which does register it
+        let (n, v) = count_allocs(|| vec![1, 2, 3].len());
+        assert_eq!(v, 3);
+        assert_eq!(n, 0);
     }
 
     #[test]

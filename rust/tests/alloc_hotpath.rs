@@ -1,0 +1,105 @@
+//! Zero-allocation pins for the evaluation hot path. This binary
+//! registers `util::benchkit::CountingAlloc` as its global allocator (the
+//! counter is thread-local, so the libtest harness running other `#[test]`
+//! threads concurrently cannot pollute a measurement) and asserts that:
+//!
+//!   * `AnalyticEvaluator::evaluate` — the full O(K*L) scoring of one
+//!     plan — performs zero heap operations;
+//!   * the delta core (`aggregate` copy + `apply_row_delta` + `finish` /
+//!     `evaluate_delta`) performs zero heap operations;
+//!   * the per-step candidate build (`PlanBatch::push_neighbors_of` into
+//!     a reserved arena) performs zero heap operations.
+//!
+//! These are the invariants the SoA-arena + delta-scoring redesign exists
+//! to provide; a regression here silently reintroduces per-candidate
+//! allocation churn long before it is visible in a benchmark.
+
+use slit::cluster::build_panels;
+use slit::config::SystemConfig;
+use slit::eval::{AnalyticEvaluator, EvalConsts};
+use slit::plan::{Plan, PlanBatch};
+use slit::power::GridSignals;
+use slit::trace::Trace;
+use slit::util::benchkit::{count_allocs, CountingAlloc};
+use slit::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn make_eval() -> (SystemConfig, AnalyticEvaluator) {
+    let cfg = SystemConfig::paper_default();
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+    let consts = EvalConsts::from_physics(&cfg.physics);
+    (cfg, AnalyticEvaluator::new(cp, dp, consts))
+}
+
+#[test]
+fn evaluate_performs_zero_heap_operations() {
+    let (cfg, ev) = make_eval();
+    let mut rng = Rng::new(1);
+    let plan = Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng);
+    // warm up (touches TLS, lazy statics, code paths)
+    core::hint::black_box(ev.evaluate(&plan));
+    let (ops, _) = count_allocs(|| {
+        for _ in 0..64 {
+            core::hint::black_box(ev.evaluate(&plan));
+        }
+    });
+    assert_eq!(ops, 0, "evaluate() must not touch the heap");
+}
+
+#[test]
+fn delta_scoring_performs_zero_heap_operations() {
+    let (cfg, ev) = make_eval();
+    let mut rng = Rng::new(2);
+    let base = Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng);
+    let cand = base.shifted_toward(2, 1, 0.5);
+    let agg = ev.aggregate(base.as_slice());
+    core::hint::black_box(ev.evaluate_delta(&agg, 2, base.row(2), cand.row(2)));
+    let (ops, _) = count_allocs(|| {
+        for _ in 0..64 {
+            // the whole delta chain: copy stack aggregates, shift one
+            // row's contribution, run the O(L) physics pass
+            let mut moved = agg;
+            ev.apply_row_delta(&mut moved, 2, base.row(2), cand.row(2));
+            core::hint::black_box(ev.finish(&moved));
+            core::hint::black_box(ev.evaluate_delta(
+                &agg,
+                2,
+                base.row(2),
+                cand.row(2),
+            ));
+        }
+    });
+    assert_eq!(ops, 0, "delta scoring must not touch the heap");
+}
+
+#[test]
+fn candidate_build_performs_zero_heap_operations_after_reserve() {
+    let (cfg, ev) = make_eval();
+    let (classes, dcs) = (cfg.num_classes(), ev.dcs());
+    let mut rng = Rng::new(3);
+    let cur = Plan::random(classes, dcs, 0.5, &mut rng);
+    let neighbors = 8;
+    let slots = 24;
+    let mut arena = PlanBatch::new(classes, dcs);
+    arena.reserve(slots * neighbors);
+    // warm once at full size: the reserve must already be sufficient
+    for _ in 0..slots {
+        arena.push_neighbors_of(cur.as_slice(), neighbors, 0.25, &mut rng);
+    }
+    arena.clear();
+    let (ops, _) = count_allocs(|| {
+        // one full optimizer step's worth of candidate generation
+        for _ in 0..slots {
+            arena.push_neighbors_of(cur.as_slice(), neighbors, 0.25, &mut rng);
+        }
+    });
+    assert_eq!(
+        ops, 0,
+        "arena candidate build must not touch the heap once reserved"
+    );
+    assert_eq!(arena.len(), slots * neighbors);
+}

@@ -1,0 +1,191 @@
+//! CI-sized versions of the three new hot_path bench rows, runnable inside
+//! the blocking `BENCH_QUICK=1 cargo test --all-targets` job:
+//!
+//!   * delta-vs-full neighbour scoring (the tentpole O(L) vs O(K*L) path),
+//!   * arena-vs-clone candidate batch build,
+//!   * sharded-vs-global memo cache under thread contention.
+//!
+//! Each test asserts bit/tolerance *parity* between the fast and reference
+//! paths (the correctness half of the bench) and prints the measured
+//! speedup row with `--nocapture` for eyeballing; hard speedup thresholds
+//! live only in `benches/hot_path.rs` output, not as assertions, so a
+//! noisy shared CI runner cannot flake the blocking job.
+
+use std::time::Instant;
+
+use slit::cluster::build_panels;
+use slit::config::{SystemConfig, N_OBJ};
+use slit::eval::{AnalyticEvaluator, BatchEvaluator, EvalConsts, MemoizedEvaluator};
+use slit::plan::{Plan, PlanBatch};
+use slit::power::GridSignals;
+use slit::trace::Trace;
+use slit::util::benchkit;
+use slit::util::rng::Rng;
+use slit::util::threadpool;
+
+fn make_eval() -> (SystemConfig, AnalyticEvaluator) {
+    let cfg = SystemConfig::paper_default();
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+    let consts = EvalConsts::from_physics(&cfg.physics);
+    (cfg, AnalyticEvaluator::new(cp, dp, consts))
+}
+
+#[test]
+fn row_delta_vs_full_neighbor_scoring() {
+    let (cfg, ev) = make_eval();
+    let k_n = cfg.num_classes();
+    let mut rng = Rng::new(41);
+    let base = Plan::random(k_n, ev.dcs(), 0.5, &mut rng);
+    let agg = ev.aggregate(base.as_slice());
+    // one-row neighbours, the shape the SLIT search scores all day
+    let cands: Vec<(usize, Plan)> = (0..256)
+        .map(|_| {
+            let k = rng.below(k_n);
+            let to = rng.below(ev.dcs());
+            (k, base.shifted_toward(k, to, rng.range(0.2, 0.8)))
+        })
+        .collect();
+
+    let reps = 50;
+    let t = Instant::now();
+    let mut full_sum = 0.0;
+    for _ in 0..reps {
+        for (_, c) in &cands {
+            full_sum += core::hint::black_box(ev.evaluate(c))[0];
+        }
+    }
+    let full_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let mut delta_sum = 0.0;
+    for _ in 0..reps {
+        for (k, c) in &cands {
+            delta_sum += core::hint::black_box(ev.evaluate_delta(
+                &agg,
+                *k,
+                base.row(*k),
+                c.row(*k),
+            ))[0];
+        }
+    }
+    let delta_s = t.elapsed().as_secs_f64();
+
+    // parity: every candidate's delta score within 1e-9 relative
+    for (k, c) in &cands {
+        let fast = ev.evaluate_delta(&agg, *k, base.row(*k), c.row(*k));
+        let full = ev.evaluate(c);
+        for i in 0..N_OBJ {
+            let err = (fast[i] - full[i]).abs() / full[i].abs().max(1e-12);
+            assert!(err <= 1e-9, "obj {i}: {} vs {}", fast[i], full[i]);
+        }
+    }
+    assert!(full_sum.is_finite() && delta_sum.is_finite());
+    println!(
+        "| neighbor scoring: delta vs full | {:.2}x | ({:.1} us vs {:.1} us per 256) |",
+        full_s / delta_s.max(1e-12),
+        delta_s / reps as f64 * 1e6,
+        full_s / reps as f64 * 1e6,
+    );
+}
+
+#[test]
+fn row_arena_vs_clone_candidate_build() {
+    let (cfg, ev) = make_eval();
+    let k_n = cfg.num_classes();
+    let l_n = ev.dcs();
+    let mut seed_rng = Rng::new(43);
+    let currents: Vec<Plan> = (0..24)
+        .map(|_| Plan::random(k_n, l_n, 0.5, &mut seed_rng))
+        .collect();
+    let neighbors = 8;
+    let step = 0.25;
+    let reps = 50;
+
+    // arena path: one contiguous buffer, no per-candidate Plan
+    let mut arena = PlanBatch::new(k_n, l_n);
+    arena.reserve(currents.len() * neighbors);
+    let t = Instant::now();
+    for r in 0..reps {
+        let mut rng = Rng::new(1000 + r as u64);
+        arena.clear();
+        for cur in &currents {
+            arena.push_neighbors_of(cur.as_slice(), neighbors, step, &mut rng);
+        }
+        core::hint::black_box(arena.len());
+    }
+    let arena_s = t.elapsed().as_secs_f64();
+
+    // clone path: the historical per-candidate Plan generation (the
+    // shared reference generator the arena is parity-pinned against)
+    let t = Instant::now();
+    let mut last = 0usize;
+    for r in 0..reps {
+        let mut rng = Rng::new(1000 + r as u64);
+        let mut cands: Vec<Plan> = Vec::new();
+        for cur in &currents {
+            cands.extend(benchkit::clone_path_neighbors(
+                cur, neighbors, step, &mut rng,
+            ));
+        }
+        last = cands.len();
+        core::hint::black_box(&cands);
+        // parity on the final rep: arena contents == clone contents bitwise
+        if r == reps - 1 {
+            for (i, p) in cands.iter().enumerate() {
+                assert_eq!(arena.candidate(i), p.as_slice(), "candidate {i}");
+            }
+        }
+    }
+    let clone_s = t.elapsed().as_secs_f64();
+    assert_eq!(last, arena.len());
+    println!(
+        "| candidate build: arena vs clone | {:.2}x | ({:.1} us vs {:.1} us per step) |",
+        clone_s / arena_s.max(1e-12),
+        arena_s / reps as f64 * 1e6,
+        clone_s / reps as f64 * 1e6,
+    );
+}
+
+#[test]
+fn row_sharded_vs_global_memo_under_contention() {
+    let (cfg, ev) = make_eval();
+    let k_n = cfg.num_classes();
+    let mut rng = Rng::new(47);
+    // enough concurrent eval streams that par_map actually fans out over
+    // the pool (its serial fallback engages below 2 * MIN_CHUNK items),
+    // each stream with its own plan working set
+    let streams: Vec<Vec<Plan>> = (0..64)
+        .map(|_| {
+            (0..16)
+                .map(|_| Plan::random(k_n, ev.dcs(), 0.5, &mut rng))
+                .collect()
+        })
+        .collect();
+
+    let run = |shards: usize| -> (f64, Vec<Vec<[f64; N_OBJ]>>) {
+        let memo = MemoizedEvaluator::with_shards(&ev, shards);
+        // warm: all plans cached, so the timed loop measures pure
+        // lock+lookup contention across pool workers
+        for s in &streams {
+            memo.eval_batch(s);
+        }
+        let t = Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            out = threadpool::par_map(&streams, |s| memo.eval_batch(s));
+        }
+        (t.elapsed().as_secs_f64(), out)
+    };
+
+    let (global_s, global_out) = run(1);
+    let (sharded_s, sharded_out) = run(16);
+    assert_eq!(global_out, sharded_out, "shard count must not change bits");
+    println!(
+        "| memo cache: 16 shards vs global lock | {:.2}x | ({:.1} us vs {:.1} us per warm sweep) |",
+        global_s / sharded_s.max(1e-12),
+        sharded_s / 20.0 * 1e6,
+        global_s / 20.0 * 1e6,
+    );
+}
