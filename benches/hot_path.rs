@@ -162,6 +162,62 @@ fn main() {
         );
     }
 
+    // tiled-DC scaling: the same delta rescore (scratch copy_from +
+    // apply_row_delta + finish, exactly the SLIT search loop) on an
+    // inline-tile fleet (L=16) vs a spilled planet-scale fleet (L=48).
+    // The claim the DcVec refactor makes: per-DC cost scales <= linearly
+    // in L — the spill adds no super-linear overhead.
+    {
+        use slit::eval::PlanAgg;
+        use slit::scenario::global_fleet_datacenters;
+
+        let fleet48 = global_fleet_datacenters(6);
+        let time_at = |dcs: usize, reps: usize| -> f64 {
+            let mut c = SystemConfig::paper_default();
+            c.datacenters = fleet48[..dcs].to_vec();
+            let signals = GridSignals::generate(&c, 8, 3);
+            let trace = Trace::generate(&c, 8, 3);
+            let (cp, dp) = build_panels(&c, &signals, 4, &trace.epochs[4], 0.0);
+            let e =
+                AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&c.physics));
+            let mut r = Rng::new(17);
+            let base = Plan::random(c.num_classes(), dcs, 0.5, &mut r);
+            let agg = e.aggregate(base.as_slice());
+            let cands: Vec<(usize, Plan)> = (0..256)
+                .map(|_| {
+                    let k = r.below(c.num_classes());
+                    let to = r.below(dcs);
+                    (k, base.shifted_toward(k, to, r.range(0.2, 0.8)))
+                })
+                .collect();
+            let mut scratch = PlanAgg::zeros(dcs);
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                for (k, cand) in &cands {
+                    scratch.copy_from(&agg);
+                    e.apply_row_delta(
+                        &mut scratch,
+                        *k,
+                        base.row(*k),
+                        cand.row(*k),
+                    );
+                    core::hint::black_box(e.finish(&scratch));
+                }
+            }
+            t.elapsed().as_secs_f64() / (reps * cands.len()) as f64
+        };
+        let reps = if quick { 20 } else { 200 };
+        let t16 = time_at(16, reps);
+        let t48 = time_at(48, reps);
+        bench.record_value("delta rescore: L=16 (inline tile)", t16 * 1e9, "ns");
+        bench.record_value("delta rescore: L=48 (spilled tile)", t48 * 1e9, "ns");
+        bench.record_value(
+            "delta rescore: per-DC cost L=48/L=16 (target <= ~1x, linear)",
+            (t48 / 48.0) / (t16 / 16.0).max(1e-12),
+            "x",
+        );
+    }
+
     // candidate batch build: SoA arena generation vs per-candidate Plan
     // clones (the pre-arena code path)
     {

@@ -240,6 +240,11 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     };
 
     let world = scenario.build(&cfg, cfg.epochs, cfg.seed);
+    // the scenario transform can grow the fleet past the AOT artifact's
+    // padded DC slots (global-fleet does): such worlds are analytic-only
+    if engine.is_some() {
+        world.cfg.validate_aot()?;
+    }
     // --serial: run frameworks one at a time. With a *tight* --budget the
     // SLIT variants' wall-clock-bounded searches are sensitive to core
     // contention from concurrent runs; sequential execution reproduces the
@@ -280,15 +285,22 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `slit scenarios` — list the named workload/grid regimes.
-pub fn cmd_scenarios(_args: &Args) -> anyhow::Result<()> {
-    println!("| scenario | stressed objective | description |");
-    println!("|---|---|---|");
+/// `slit scenarios` — list the named workload/grid regimes, each with its
+/// stressed objective and the fleet it runs on (site/region counts after
+/// the regime's config transform), so rows like `global-fleet` are
+/// self-describing.
+pub fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
+    let base = load_config(args)?;
+    println!("| scenario | stressed objective | sites | regions | description |");
+    println!("|---|---|---|---|---|");
     for s in Scenario::all() {
+        let (sites, regions) = s.fleet(&base);
         println!(
-            "| {} | {} | {} |",
+            "| {} | {} | {} | {} | {} |",
             s.name(),
             OBJ_NAMES[s.target_objective()],
+            sites,
+            regions,
             s.description()
         );
     }
@@ -421,6 +433,7 @@ pub fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
         cfg.seed,
     );
     let engine = if args.bool("use-hlo") {
+        cfg.validate_aot()?; // oversized fleets are analytic-only
         Some(Engine::load(&artifacts_dir())?)
     } else {
         None
@@ -465,6 +478,7 @@ pub fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
 pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let engine = if args.bool("use-hlo") {
+        cfg.validate_aot()?; // oversized fleets are analytic-only
         Some(Engine::load(&artifacts_dir())?)
     } else {
         None
@@ -720,6 +734,25 @@ mod tests {
         cmd_simulate(&a).unwrap();
         let text = std::fs::read_to_string(&tmp).unwrap();
         assert!(Json::parse(&text).unwrap().get("round-robin").is_some());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn simulate_global_fleet_runs_end_to_end_at_l48() {
+        // the planet-scale scenario through the real CLI path: 48 sites,
+        // spilled DcVec evaluator, SLIT searching the full fleet
+        let tmp = std::env::temp_dir().join("slit_cli_global_fleet.json");
+        let a = Args::parse(&argv(&format!(
+            "simulate --scale small --epochs 2 --framework slit-carbon \
+             --scenario global-fleet --out {}",
+            tmp.display()
+        )))
+        .unwrap();
+        cmd_simulate(&a).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let r = j.get("slit-carbon").expect("slit-carbon results");
+        assert!(r.f64_or("requests", 0.0) > 0.0);
         std::fs::remove_file(&tmp).ok();
     }
 

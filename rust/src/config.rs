@@ -647,13 +647,15 @@ impl SystemConfig {
     }
 
     /// Sanity-check invariants the rest of the system relies on.
+    ///
+    /// Deliberately **L-generic**: the analytic evaluator, the planner,
+    /// and the simulator handle any fleet size (per-DC state lives in
+    /// `util::dcvec::DcVec` tiles), so the old `datacenters.len() <=
+    /// DC_SLOTS` hard cap no longer lives here. That bound is an
+    /// AOT-artifact constraint only — callers selecting the AOT/PJRT
+    /// backend must additionally pass [`SystemConfig::validate_aot`].
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.datacenters.is_empty(), "no datacenters");
-        anyhow::ensure!(
-            self.datacenters.len() <= DC_SLOTS,
-            "more datacenters ({}) than AOT slots ({DC_SLOTS})",
-            self.datacenters.len()
-        );
         anyhow::ensure!(
             self.models.len() == MODELS,
             "exactly {MODELS} models expected (AOT class layout)"
@@ -682,6 +684,24 @@ impl SystemConfig {
             "region_mix must sum to 1 (got {mix_sum})"
         );
         anyhow::ensure!(self.opt.population >= 4, "population too small");
+        Ok(())
+    }
+
+    /// The AOT/PJRT-backend-only constraint: the compiled plan-eval
+    /// artifact is lowered for exactly [`DC_SLOTS`] padded DC columns
+    /// (python/compile/shapes.py), so fleets past that must run on the
+    /// L-generic analytic backend. Checked wherever the AOT backend is
+    /// actually selected (`registry::build` with an engine, `--use-hlo`
+    /// paths), never as a global invariant.
+    pub fn validate_aot(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.datacenters.len() <= DC_SLOTS,
+            "fleet has {} datacenters but the AOT plan-eval artifact is \
+             compiled for {DC_SLOTS} padded DC slots — this fleet is \
+             analytic-only (drop --use-hlo / the engine), or re-lower the \
+             artifact with more slots",
+            self.datacenters.len()
+        );
         Ok(())
     }
 }
@@ -787,13 +807,40 @@ mod tests {
     }
 
     #[test]
-    fn validate_rejects_too_many_dcs() {
+    fn oversized_fleet_validates_but_fails_the_aot_gate() {
+        // regression for the old hard cap: a fleet past DC_SLOTS is a
+        // perfectly valid analytic-backend config now; only the AOT gate
+        // rejects it, with a structured error naming the constraint
         let mut c = SystemConfig::paper_default();
         while c.datacenters.len() <= DC_SLOTS {
             let d = c.datacenters[0].clone();
             c.datacenters.push(d);
         }
-        assert!(c.validate().is_err());
+        c.validate().expect("oversized fleets are analytic-valid");
+        let err = c.validate_aot().unwrap_err().to_string();
+        assert!(err.contains("analytic-only"), "unhelpful error: {err}");
+        assert!(err.contains(&format!("{DC_SLOTS}")));
+    }
+
+    #[test]
+    fn forty_eight_dc_config_validates_cleanly() {
+        // the planet-scale regression from ISSUE 5: 48 sites must pass
+        // validate() (and round-trip through JSON) without tripping any
+        // AOT-slot assertion
+        let mut c = SystemConfig::paper_default();
+        let twelve = c.datacenters.clone();
+        for rep in 0..3 {
+            for d in &twelve {
+                let mut d = d.clone();
+                d.name = format!("{}-{rep}", d.name);
+                c.datacenters.push(d);
+            }
+        }
+        assert_eq!(c.datacenters.len(), 48);
+        c.validate().expect("48-DC fleet must validate");
+        let c2 = SystemConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        assert!(c.validate_aot().is_err(), "48 > DC_SLOTS stays AOT-gated");
     }
 
     #[test]

@@ -447,13 +447,27 @@ impl Coordinator {
             self.cfg.seed ^ (next_epoch as u64),
         );
         let seeds = analytic.greedy_seed_plans();
+        // fleets past the artifact's DC_SLOTS padding plan analytic-only
+        // (cmd_serve rejects the combination at startup; this guard keeps
+        // a hand-built coordinator from panicking in panel padding —
+        // announced once, on the first epoch tick, so the degrade is
+        // observable)
+        if self.engine.is_some()
+            && self.cfg.validate_aot().is_err()
+            && next_epoch <= 1
+        {
+            eprintln!(
+                "coordinator: fleet exceeds AOT DC slots — engine ignored, \
+                 planning on the analytic backend"
+            );
+        }
         let outcome = match &self.engine {
-            Some(engine) => {
+            Some(engine) if self.cfg.validate_aot().is_ok() => {
                 let hlo =
                     HloPlanEvaluator::from_analytic(engine.clone(), &analytic);
                 optimizer.optimize_with_seeds(&hlo, &seeds)
             }
-            None => optimizer.optimize_with_seeds(&analytic, &seeds),
+            _ => optimizer.optimize_with_seeds(&analytic, &seeds),
         };
         let new_plan = match self.ccfg.variant {
             SlitVariant::Balance => outcome.archive.balanced().cloned(),

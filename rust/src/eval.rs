@@ -15,9 +15,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::{ClassPanels, DcPanels};
-use crate::config::{DC_SLOTS, N_OBJ};
+use crate::config::N_OBJ;
 use crate::models::{total_energy_factor, J_PER_KWH};
 use crate::plan::Plan;
+use crate::util::dcvec::DcVec;
 use crate::util::threadpool;
 
 /// Physics constants in the kernel's consts layout.
@@ -116,14 +117,47 @@ impl BatchEvaluator for AnalyticEvaluator {
 /// [`AnalyticEvaluator::evaluate_delta`] instead of the O(K*L) full
 /// contraction; the nonlinear per-DC physics (energy mix, queueing) is
 /// recomputed from the adjusted aggregates by `finish`.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// Storage is [`DcVec`] tiles (DESIGN.md §14): fleets up to `DC_SLOTS`
+/// sites keep the aggregates inline on the stack — constructing and
+/// cloning them performs zero heap operations, pinned by
+/// rust/tests/alloc_hotpath.rs — while larger fleets spill to heap
+/// buffers sized once from the fleet and reused via
+/// [`PlanAgg::copy_from`] in the search loop.
+#[derive(Clone, Debug, PartialEq)]
 pub struct PlanAgg {
     /// Node-seconds demanded at each DC (Eq. 1/5 contraction).
-    pub node_s: [f64; DC_SLOTS],
+    pub node_s: DcVec,
     /// Requests routed to each DC (drives the Eq. 4 queue term).
-    pub reqs_l: [f64; DC_SLOTS],
+    pub reqs_l: DcVec,
     /// Request-weighted queue-free TTFT sum (Eqs. 2-3 + proc).
     pub t_base: f64,
+}
+
+impl PlanAgg {
+    /// Zeroed aggregates for an `dcs`-site fleet (the scratch shape the
+    /// SLIT search reuses per candidate via [`PlanAgg::copy_from`]).
+    pub fn zeros(dcs: usize) -> PlanAgg {
+        PlanAgg {
+            node_s: DcVec::zeros(dcs),
+            reqs_l: DcVec::zeros(dcs),
+            t_base: 0.0,
+        }
+    }
+
+    /// Sites this aggregate spans.
+    pub fn dcs(&self) -> usize {
+        self.node_s.len()
+    }
+
+    /// Overwrite with `other`'s contents, reusing any spill allocations —
+    /// allocation-free for same-fleet shapes at any L (the per-candidate
+    /// copy the delta rescoring loop performs).
+    pub fn copy_from(&mut self, other: &PlanAgg) {
+        self.node_s.copy_from(&other.node_s);
+        self.reqs_l.copy_from(&other.reqs_l);
+        self.t_base = other.t_base;
+    }
 }
 
 /// Object-safe access to the delta-scoring core, threaded through
@@ -382,7 +416,8 @@ impl AnalyticEvaluator {
     /// Evaluate one plan -> [ttft_s, carbon_kg, water_l, cost_usd].
     /// The O(K*L) [`AnalyticEvaluator::aggregate`] contraction followed by
     /// the O(L) [`AnalyticEvaluator::finish`] physics pass; allocation-free
-    /// (pinned by rust/tests/alloc_hotpath.rs).
+    /// on fleets that fit the inline `DcVec` tile (pinned by
+    /// rust/tests/alloc_hotpath.rs), two sized allocations past it.
     pub fn evaluate(&self, plan: &Plan) -> [f64; N_OBJ] {
         debug_assert_eq!(plan.classes, self.cp.classes);
         debug_assert_eq!(plan.dcs, self.dp.dcs);
@@ -395,15 +430,17 @@ impl AnalyticEvaluator {
         let k_n = self.cp.classes;
         let l_n = self.dp.dcs;
         debug_assert_eq!(a.len(), k_n * l_n);
-        // dcs <= DC_SLOTS is a config invariant (SystemConfig::validate),
-        // so the per-plan accumulators live on the stack — this is the
-        // hottest loop in the optimizer and used to pay two heap
-        // allocations per plan
-        assert!(l_n <= DC_SLOTS, "dcs {l_n} exceeds DC_SLOTS {DC_SLOTS}");
-
-        let mut node_s = [0.0f64; DC_SLOTS];
-        let mut reqs_l = [0.0f64; DC_SLOTS];
-        let mut t_base = 0.0f64;
+        // the accumulators are DcVec tiles: fleets <= DC_SLOTS stay on the
+        // stack (this is the hottest loop in the optimizer, and it used to
+        // pay two heap allocations per plan), larger fleets spill once
+        let mut agg = PlanAgg::zeros(l_n);
+        let PlanAgg {
+            node_s,
+            reqs_l,
+            t_base,
+        } = &mut agg;
+        let node_s = node_s.as_mut_slice();
+        let reqs_l = reqs_l.as_mut_slice();
         for k in 0..k_n {
             let n_req = self.cp.n_req[k];
             let row = &a[k * l_n..(k + 1) * l_n];
@@ -412,14 +449,10 @@ impl AnalyticEvaluator {
             for l in 0..l_n {
                 node_s[l] += row[l] * wns[l];
                 reqs_l[l] += row[l] * n_req;
-                t_base += row[l] * wtt[l];
+                *t_base += row[l] * wtt[l];
             }
         }
-        PlanAgg {
-            node_s,
-            reqs_l,
-            t_base,
-        }
+        agg
     }
 
     /// Shift cached aggregates by the contribution change of row `k`
@@ -438,14 +471,22 @@ impl AnalyticEvaluator {
         debug_assert!(k < self.cp.classes);
         debug_assert_eq!(old_row.len(), l_n);
         debug_assert_eq!(new_row.len(), l_n);
+        debug_assert_eq!(agg.dcs(), l_n);
         let n_req = self.cp.n_req[k];
         let wns = &self.wk_node_s[k * l_n..(k + 1) * l_n];
         let wtt = &self.wk_ttft[k * l_n..(k + 1) * l_n];
+        let PlanAgg {
+            node_s,
+            reqs_l,
+            t_base,
+        } = agg;
+        let node_s = node_s.as_mut_slice();
+        let reqs_l = reqs_l.as_mut_slice();
         for l in 0..l_n {
             let d = new_row[l] - old_row[l];
-            agg.node_s[l] += d * wns[l];
-            agg.reqs_l[l] += d * n_req;
-            agg.t_base += d * wtt[l];
+            node_s[l] += d * wns[l];
+            reqs_l[l] += d * n_req;
+            *t_base += d * wtt[l];
         }
     }
 
@@ -454,14 +495,17 @@ impl AnalyticEvaluator {
     /// bit-for-bit.
     pub fn finish(&self, agg: &PlanAgg) -> [f64; N_OBJ] {
         let l_n = self.dp.dcs;
+        debug_assert_eq!(agg.dcs(), l_n);
         let c = &self.consts;
+        let node_s = agg.node_s.as_slice();
+        let reqs_l = agg.reqs_l.as_slice();
         let mut cost = 0.0;
         let mut water = 0.0;
         let mut carbon = 0.0;
         let mut t_queue = 0.0;
         for l in 0..l_n {
             let nodes = self.dp.nodes[l];
-            let on = (agg.node_s[l] / c.epoch_s).min(nodes);
+            let on = (node_s[l] / c.epoch_s).min(nodes);
             let util = on / nodes.max(1.0);
             let e_it = (on * c.pr_on + (nodes - on) * self.dp.unused_pr[l])
                 * self.dp.tdp[l]
@@ -477,16 +521,19 @@ impl AnalyticEvaluator {
                 + ((w_e + w_b) * c.ei_pot + w_grid * c.ei_waste)
                     * self.dp.ci[l];
             let queue = c.q_coef * util / (1.0 - util.min(c.u_max));
-            t_queue += agg.reqs_l[l] * queue;
+            t_queue += reqs_l[l] * queue;
         }
         let ttft = (agg.t_base + t_queue) / self.total_req;
         [ttft, carbon, water, cost]
     }
 
     /// Score a one-row move against cached base aggregates in O(L): copy
-    /// the (stack-sized) aggregates, apply the row delta, run the physics
-    /// pass. The base plan's full contraction is paid once; every
-    /// neighbour after that costs O(L) instead of O(K*L).
+    /// the aggregates, apply the row delta, run the physics pass. The base
+    /// plan's full contraction is paid once; every neighbour after that
+    /// costs O(L) instead of O(K*L). The clone is allocation-free for
+    /// fleets that fit the inline `DcVec` tile; hot loops over larger
+    /// fleets should reuse a scratch [`PlanAgg::copy_from`] instead (as
+    /// `opt::slit` does), which is heap-silent at any L.
     pub fn evaluate_delta(
         &self,
         agg: &PlanAgg,
@@ -494,7 +541,7 @@ impl AnalyticEvaluator {
         old_row: &[f64],
         new_row: &[f64],
     ) -> [f64; N_OBJ] {
-        let mut moved = *agg;
+        let mut moved = agg.clone();
         self.apply_row_delta(&mut moved, k, old_row, new_row);
         self.finish(&moved)
     }
@@ -563,7 +610,12 @@ impl AnalyticEvaluator {
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
         let k_n = self.cp.classes;
         let l_n = self.dp.dcs;
-        assert!(slots >= l_n);
+        assert!(
+            slots >= l_n,
+            "fleet has {l_n} datacenters but the AOT artifact pads only \
+             {slots} DC slots — AOT-gated callers must check \
+             SystemConfig::validate_aot first (analytic backend is L-generic)"
+        );
         let mut cls = Vec::with_capacity(k_n * 3);
         for k in 0..k_n {
             cls.push(self.cp.n_req[k] as f32);

@@ -263,15 +263,28 @@ impl Scheduler for SlitScheduler {
         )
         .with_options(self.options);
         let seeds = evaluator.greedy_seed_plans();
+        // the AOT artifact pads exactly DC_SLOTS columns; fleets past it
+        // run analytic-only (registry::build rejects the combination up
+        // front — this guard covers hand-built schedulers). The degrade
+        // is announced once so backend-comparison runs can't be silently
+        // mislabeled.
+        let aot_ok = ctx.cfg.validate_aot().is_ok();
+        if self.engine.is_some() && !aot_ok && self.epoch_counter == 1 {
+            eprintln!(
+                "{}: fleet exceeds AOT DC slots — engine ignored, \
+                 planning on the analytic backend",
+                self.name()
+            );
+        }
         let outcome = match &self.engine {
-            Some(engine) => {
+            Some(engine) if aot_ok => {
                 let hlo = crate::runtime::HloPlanEvaluator::from_analytic(
                     engine.clone(),
                     evaluator,
                 );
                 optimizer.optimize_with_seeds(&hlo, &seeds)
             }
-            None => optimizer.optimize_with_seeds(evaluator, &seeds),
+            _ => optimizer.optimize_with_seeds(evaluator, &seeds),
         };
         self.stats.epochs += 1;
         self.stats.evaluations += outcome.evaluations;

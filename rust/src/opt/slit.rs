@@ -207,9 +207,13 @@ impl SlitOptimizer {
         // running objective bounds for scalarisation
         let mut lo = [f64::INFINITY; N_OBJ];
         let mut hi = [f64::NEG_INFINITY; N_OBJ];
-        // reused per-step buffers (allocation-free once warm)
+        // reused per-step buffers (allocation-free once warm); `scratch`
+        // is the per-candidate PlanAgg copy target — copy_from reuses its
+        // DcVec spill storage, so delta rescoring stays heap-silent even
+        // for fleets past the inline tile (L > DC_SLOTS)
         let mut arena = PlanBatch::new(self.classes, self.dcs);
         arena.reserve(x * self.opt.neighbors.max(1));
+        let mut scratch = PlanAgg::zeros(self.dcs);
         let mut scores: Vec<f64> = Vec::new();
         let mut order: Vec<usize> = Vec::new();
 
@@ -339,12 +343,12 @@ impl SlitOptimizer {
                         {
                             let base = current[si].plan.as_slice();
                             for &ci in &chosen[c_lo..c_hi] {
-                                let mut agg = aggs[si];
+                                scratch.copy_from(&aggs[si]);
                                 let mask = arena.touched(ci);
                                 for k in 0..self.classes {
                                     if (mask >> k) & 1 == 1 {
                                         d.apply_row_delta(
-                                            &mut agg,
+                                            &mut scratch,
                                             k,
                                             &base[k * self.dcs
                                                 ..(k + 1) * self.dcs],
@@ -352,7 +356,7 @@ impl SlitOptimizer {
                                         );
                                     }
                                 }
-                                objs.push(d.finish(&agg));
+                                objs.push(d.finish(&scratch));
                             }
                         }
                         delta_evals += objs.len();

@@ -640,6 +640,37 @@ mod tests {
     }
 
     #[test]
+    fn plan_and_arena_are_fleet_size_generic() {
+        // the stride is classes * dcs with no tile assumption: a 48-DC
+        // plan (the global-fleet shape, past the evaluator's inline
+        // DcVec tile) round-trips through every move primitive and the
+        // arena exactly like a paper-sized one
+        let (classes, dcs) = (8, 48);
+        let mut rng = Rng::new(31);
+        let cur = Plan::random(classes, dcs, 0.5, &mut rng);
+        assert!(cur.is_valid());
+        assert!(cur.shifted_toward(3, 47, 0.6).is_valid());
+        let (p, mask) = cur.perturbed_tracked(0.4, &mut rng);
+        assert!(p.is_valid());
+        assert!(mask < 1 << classes);
+
+        let mut arena = PlanBatch::new(classes, dcs);
+        arena.reserve(8);
+        let mut r1 = rng.fork(2);
+        let mut r2 = r1.clone();
+        arena.push_neighbors_of(cur.as_slice(), 8, 0.25, &mut r1);
+        assert_eq!(arena.len(), 8);
+        assert_eq!(arena.stride(), classes * dcs);
+        let want = crate::util::benchkit::clone_path_neighbors(
+            &cur, 8, 0.25, &mut r2,
+        );
+        for (c, w) in want.iter().enumerate() {
+            assert_eq!(arena.candidate(c), w.as_slice(), "candidate {c}");
+            assert!(arena.to_plan(c).is_valid());
+        }
+    }
+
+    #[test]
     fn plan_batch_clear_keeps_capacity() {
         let mut arena = PlanBatch::new(4, 6);
         arena.reserve(16);

@@ -203,7 +203,10 @@ pub fn find(name: &str) -> Option<&'static FrameworkSpec> {
 }
 
 /// Instantiate a scheduler by name/alias; the optional engine routes SLIT
-/// plan search through the AOT/PJRT artifact.
+/// plan search through the AOT/PJRT artifact. Fleets larger than the
+/// artifact's padded `DC_SLOTS` are analytic-only: selecting the AOT
+/// backend for one returns the structured `validate_aot` error instead of
+/// panicking deep in the panel-padding code.
 pub fn build(
     name: &str,
     cfg: &SystemConfig,
@@ -216,7 +219,10 @@ pub fn build(
         )
     })?;
     Ok(match (engine, spec.build_hlo) {
-        (Some(engine), Some(build_hlo)) => build_hlo(cfg, engine),
+        (Some(engine), Some(build_hlo)) => {
+            cfg.validate_aot()?;
+            build_hlo(cfg, engine)
+        }
         _ => (spec.build)(cfg),
     })
 }
@@ -269,5 +275,20 @@ mod tests {
         let cfg = crate::config::SystemConfig::small_test();
         assert!(build("nope", &cfg, None).is_err());
         assert!(build("splitwise", &cfg, None).is_ok());
+    }
+
+    #[test]
+    fn analytic_build_accepts_oversized_fleets() {
+        // past DC_SLOTS the analytic backend is the only one; every
+        // framework must still build (the AOT gate fires only when an
+        // engine is actually supplied alongside a build_hlo row)
+        let mut cfg = crate::config::SystemConfig::small_test();
+        cfg.datacenters = crate::scenario::global_fleet_datacenters(6);
+        cfg.validate().unwrap();
+        assert!(cfg.validate_aot().is_err());
+        for spec in all() {
+            let s = build(spec.name, &cfg, None).unwrap();
+            assert_eq!(s.name(), spec.name);
+        }
     }
 }

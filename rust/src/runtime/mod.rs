@@ -11,6 +11,12 @@
 //!
 //! Interchange is HLO *text* (see python/compile/aot.py and
 //! /opt/xla-example/README.md for why serialized protos are rejected).
+//!
+//! The artifact is lowered for exactly `DC_SLOTS` padded DC columns, so
+//! the AOT backend only serves fleets that fit the inline tile; larger
+//! fleets are analytic-only and every AOT-selecting call site gates on
+//! `SystemConfig::validate_aot` (DESIGN.md §14). [`Manifest::validate`]
+//! keeps rejecting shape-mismatched artifacts regardless.
 
 #[cfg(feature = "pjrt")]
 mod engine;

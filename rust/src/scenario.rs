@@ -14,7 +14,7 @@
 //! `ClusterState` mid-run — something the static config transform cannot
 //! express.
 //!
-//! The six named regimes (plus the untouched baseline):
+//! The seven named regimes (plus the untouched baseline):
 //!   * `diurnal` — sharpened day/night demand swing, no bursts: the
 //!     follow-the-sun routing case (cf. Fig. 1's diurnal trend).
 //!   * `bursty` — heavy-tailed demand spikes on top of frequent bursts:
@@ -28,9 +28,17 @@
 //!     away from its favourite sites.
 //!   * `water-summer` — drought summer: grid water intensity triples and
 //!     cooling COP degrades everywhere, stressing the water objective.
+//!   * `global-fleet` — the planet-scale case past the old 16-site
+//!     ceiling: 48 sites generated from 8 per-zone grid templates (two
+//!     geographic zones per routing region), with diverse CI/WUE/TOU
+//!     profiles. Exercises the L-generic `DcVec` evaluator path end to
+//!     end (DESIGN.md §14); analytic-only — the fleet exceeds the AOT
+//!     artifact's `DC_SLOTS` padding.
 
 use crate::cluster::ClusterAction;
-use crate::config::{SystemConfig, OBJ_CARBON, OBJ_COST, OBJ_WATER};
+use crate::config::{
+    DatacenterSpec, SystemConfig, OBJ_CARBON, OBJ_COST, OBJ_WATER,
+};
 use crate::power::GridSignals;
 use crate::session::{ScenarioEvent, SimSession};
 use crate::sim::{Scheduler, SimResult};
@@ -61,6 +69,9 @@ pub enum Scenario {
     CarbonSpike,
     /// Drought summer: high water intensity, degraded cooling COP.
     WaterStressedSummer,
+    /// Planet-scale fleet: 48 sites from 8 per-zone grid templates — the
+    /// regime that breaks the 16-datacenter ceiling.
+    GlobalFleet,
 }
 
 /// A generated experiment world: config + matching trace, grid signals,
@@ -92,7 +103,7 @@ impl ScenarioWorld {
 
 impl Scenario {
     /// Every scenario including the baseline.
-    pub fn all() -> [Scenario; 7] {
+    pub fn all() -> [Scenario; 8] {
         [
             Scenario::Baseline,
             Scenario::Diurnal,
@@ -101,11 +112,12 @@ impl Scenario {
             Scenario::RollingOutage,
             Scenario::CarbonSpike,
             Scenario::WaterStressedSummer,
+            Scenario::GlobalFleet,
         ]
     }
 
     /// The named non-baseline regimes (the scenario-matrix set).
-    pub fn named() -> [Scenario; 6] {
+    pub fn named() -> [Scenario; 7] {
         [
             Scenario::Diurnal,
             Scenario::BurstyHeavyTail,
@@ -113,6 +125,7 @@ impl Scenario {
             Scenario::RollingOutage,
             Scenario::CarbonSpike,
             Scenario::WaterStressedSummer,
+            Scenario::GlobalFleet,
         ]
     }
 
@@ -125,6 +138,7 @@ impl Scenario {
             Scenario::RollingOutage => "outage-rolling",
             Scenario::CarbonSpike => "carbon-spike",
             Scenario::WaterStressedSummer => "water-summer",
+            Scenario::GlobalFleet => "global-fleet",
         }
     }
 
@@ -149,6 +163,10 @@ impl Scenario {
             Scenario::WaterStressedSummer => {
                 "drought summer: 3x grid water intensity, degraded COP"
             }
+            Scenario::GlobalFleet => {
+                "planet-scale fleet: 48 sites from 8 per-zone grid \
+                 templates (analytic-only; exceeds AOT DC slots)"
+            }
         }
     }
 
@@ -167,7 +185,23 @@ impl Scenario {
             Scenario::RollingOutage => OBJ_COST,
             Scenario::CarbonSpike => OBJ_CARBON,
             Scenario::WaterStressedSummer => OBJ_WATER,
+            // the fleet's CI spread (coal-heavy Asia vs Nordic wind) is
+            // the signal a planet-scale scheduler must exploit
+            Scenario::GlobalFleet => OBJ_CARBON,
         }
+    }
+
+    /// Fleet shape after this regime's config transform: (site count,
+    /// distinct routing regions). What `slit scenarios` prints so every
+    /// row is self-describing.
+    pub fn fleet(&self, base: &SystemConfig) -> (usize, usize) {
+        let mut cfg = base.clone();
+        self.apply_config(&mut cfg);
+        let mut regions: Vec<usize> =
+            cfg.datacenters.iter().map(|d| d.region).collect();
+        regions.sort_unstable();
+        regions.dedup();
+        (cfg.datacenters.len(), regions.len())
     }
 
     /// Mid-run cluster mutations this regime schedules (time-varying
@@ -237,6 +271,9 @@ impl Scenario {
                     d.wi_base *= 3.0;
                     d.cop = (d.cop * 0.75).max(1.0);
                 }
+            }
+            Scenario::GlobalFleet => {
+                cfg.datacenters = global_fleet_datacenters(SITES_PER_ZONE);
             }
         }
     }
@@ -318,6 +355,112 @@ impl Scenario {
     }
 }
 
+// --- the planet-scale fleet --------------------------------------------------
+
+/// Sites per geographic zone in the `global-fleet` regime
+/// (8 zones x 6 = 48 sites).
+pub const SITES_PER_ZONE: usize = 6;
+
+/// One geographic zone template: a grid/climate profile that stamps out
+/// `sites_per_zone` sites with deterministic per-site variation. Two zones
+/// per routing region — the paper's 4-region router (and the AOT class
+/// layout pinned to it) is untouched; zones only diversify generation.
+struct ZoneTemplate {
+    name: &'static str,
+    region: usize,
+    tz_offset_h: f64,
+    ci: (f64, f64),
+    wi: (f64, f64),
+    tou: (f64, f64),
+    cop: f64,
+    bw_gbs: f64,
+}
+
+/// Shorthand constructor keeping the zone table readable (and rustfmt-
+/// stable) — field order mirrors [`ZoneTemplate`].
+#[allow(clippy::too_many_arguments)]
+const fn zone(
+    name: &'static str,
+    region: usize,
+    tz_offset_h: f64,
+    ci: (f64, f64),
+    wi: (f64, f64),
+    tou: (f64, f64),
+    cop: f64,
+    bw_gbs: f64,
+) -> ZoneTemplate {
+    ZoneTemplate {
+        name,
+        region,
+        tz_offset_h,
+        ci,
+        wi,
+        tou,
+        cop,
+        bw_gbs,
+    }
+}
+
+/// The 8 zone templates: per routing region a carbon-heavy and a clean
+/// (or hydro-heavy, water-expensive) zone, straddling the cited grid
+/// extremes exactly as the 12-site paper testbed does.
+const ZONES: [ZoneTemplate; 8] = [
+    // east-asia: coal-heavy north vs tropical south (low COP, dear water)
+    zone("ea-north", 0, 9.0, (0.46, 0.22), (1.7, 0.2), (0.18, 0.5), 4.2, 12.0),
+    zone("ea-south", 0, 8.0, (0.52, 0.12), (2.4, 0.15), (0.16, 0.35), 3.1, 10.0),
+    // oceania: solar-swing Australia vs hydro New Zealand
+    zone("oc-au", 1, 10.0, (0.58, 0.45), (1.4, 0.25), (0.20, 0.5), 4.9, 9.0),
+    zone("oc-nz", 1, 12.0, (0.10, 0.30), (22.0, 0.3), (0.15, 0.3), 5.4, 7.0),
+    // north-america: mixed east vs hydro-heavy pacific northwest
+    zone("na-east", 2, -5.0, (0.34, 0.30), (2.0, 0.2), (0.09, 0.55), 4.3, 18.0),
+    zone("na-west", 2, -8.0, (0.10, 0.35), (28.0, 0.35), (0.07, 0.45), 6.0, 16.0),
+    // western-europe: Nordic wind/hydro vs continental mixed grids
+    zone("eu-north", 3, 1.0, (0.05, 0.30), (7.0, 0.3), (0.07, 0.35), 7.2, 11.0),
+    zone("eu-west", 3, 0.0, (0.30, 0.45), (1.0, 0.3), (0.21, 0.5), 5.6, 15.0),
+];
+
+/// Generate the planet-scale fleet: `sites_per_zone` sites stamped from
+/// each of the 8 [`ZONES`], with deterministic per-site spread (no RNG —
+/// the fleet is a pure function of its arguments) and the paper's three
+/// node-mix shapes rotated across sites. 48 sites at the default
+/// [`SITES_PER_ZONE`], well past the AOT artifact's `DC_SLOTS` padding —
+/// this is the workload the L-generic `DcVec` evaluator path exists for.
+pub fn global_fleet_datacenters(sites_per_zone: usize) -> Vec<DatacenterSpec> {
+    // A100-heavy / balanced / H100-heavy, ~360 nodes per site
+    const MIXES: [[usize; 6]; 3] = [
+        [90, 72, 54, 72, 54, 18],
+        [60, 60, 60, 60, 60, 60],
+        [18, 54, 72, 54, 72, 90],
+    ];
+    let mut fleet = Vec::with_capacity(ZONES.len() * sites_per_zone);
+    for z in &ZONES {
+        for i in 0..sites_per_zone {
+            // symmetric spread in [-1, 1] across the zone's sites: real
+            // zones are not uniform — neighbouring grids differ a little
+            let spread = if sites_per_zone > 1 {
+                2.0 * i as f64 / (sites_per_zone - 1) as f64 - 1.0
+            } else {
+                0.0
+            };
+            fleet.push(DatacenterSpec {
+                name: format!("{}-{}", z.name, i + 1),
+                region: z.region,
+                nodes_per_type: MIXES[fleet.len() % MIXES.len()].to_vec(),
+                cop: (z.cop + 0.3 * spread).max(1.0),
+                bw_gbs: (z.bw_gbs + 2.0 * spread).max(1.0),
+                tz_offset_h: z.tz_offset_h,
+                ci_base: z.ci.0 * (1.0 + 0.10 * spread),
+                ci_amp: z.ci.1,
+                wi_base: z.wi.0 * (1.0 + 0.15 * spread),
+                wi_amp: z.wi.1,
+                tou_base: z.tou.0 * (1.0 + 0.08 * spread),
+                tou_amp: z.tou.1,
+            });
+        }
+    }
+    fleet
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,7 +481,7 @@ mod tests {
             assert!(s.target_objective() < crate::config::N_OBJ);
         }
         assert_eq!(Scenario::from_name("nope"), None);
-        assert_eq!(Scenario::named().len(), 6);
+        assert_eq!(Scenario::named().len(), 7);
     }
 
     #[test]
@@ -504,6 +647,81 @@ mod tests {
         let before_base = b.signals.mean_ci(clean, 0..96 / 3);
         let before_spike = s.signals.mean_ci(clean, 0..96 / 3);
         assert!((before_base - before_spike).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_fleet_builds_48_diverse_sites_past_the_aot_ceiling() {
+        let w = Scenario::GlobalFleet.build(&base(), 8, 3);
+        w.cfg.validate().expect("planet-scale fleet must validate");
+        assert_eq!(w.cfg.datacenters.len(), 48);
+        assert!(
+            w.cfg.datacenters.len() > crate::config::DC_SLOTS,
+            "the regime exists to exceed the inline tile"
+        );
+        assert!(w.cfg.validate_aot().is_err(), "analytic-only fleet");
+        assert!(w.events.is_empty());
+
+        // every routing region is covered, 12 sites each (2 zones x 6)
+        for r in 0..crate::config::REGIONS {
+            let n = w.cfg.datacenters.iter().filter(|d| d.region == r).count();
+            assert_eq!(n, 2 * SITES_PER_ZONE, "region {r}");
+        }
+        // names are unique
+        let mut names: Vec<&str> =
+            w.cfg.datacenters.iter().map(|d| d.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 48, "duplicate site names");
+
+        // grid diversity straddles the cited extremes: coal-heavy vs
+        // near-zero-carbon grids, wind-dry vs hydro-wet water intensity
+        let ci: Vec<f64> = w.cfg.datacenters.iter().map(|d| d.ci_base).collect();
+        let wi: Vec<f64> = w.cfg.datacenters.iter().map(|d| d.wi_base).collect();
+        let (ci_lo, ci_hi) = crate::util::stats::min_max(&ci);
+        let (wi_lo, wi_hi) = crate::util::stats::min_max(&wi);
+        assert!(ci_lo < 0.1 && ci_hi > 0.5, "CI spread too flat: {ci_lo}..{ci_hi}");
+        assert!(wi_lo < 1.5 && wi_hi > 20.0, "WI spread too flat: {wi_lo}..{wi_hi}");
+        // deterministic per-site variation inside one zone
+        assert_ne!(w.cfg.datacenters[0].ci_base, w.cfg.datacenters[1].ci_base);
+        assert_eq!(
+            global_fleet_datacenters(SITES_PER_ZONE),
+            global_fleet_datacenters(SITES_PER_ZONE),
+        );
+
+        // the fleet summary `slit scenarios` prints
+        assert_eq!(Scenario::GlobalFleet.fleet(&base()), (48, 4));
+        assert_eq!(Scenario::Baseline.fleet(&base()), (12, 4));
+    }
+
+    #[test]
+    fn global_fleet_simulates_end_to_end_on_the_session_path() {
+        use crate::sim::{EpochContext, Scheduler};
+
+        struct Uniform;
+        impl Scheduler for Uniform {
+            fn name(&self) -> String {
+                "uniform".into()
+            }
+            fn plan(&mut self, ctx: &EpochContext) -> crate::plan::Plan {
+                crate::plan::Plan::uniform(
+                    ctx.cfg.num_classes(),
+                    ctx.cfg.datacenters.len(),
+                )
+            }
+        }
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 2;
+        let w = Scenario::GlobalFleet.build(&cfg, cfg.epochs, 5);
+        let res = w.run(&mut Uniform, 5);
+        assert_eq!(res.per_epoch.len(), 2);
+        assert_eq!(res.per_epoch[0].site_nodes.len(), 48);
+        // request mass conserved across the 48-site fleet
+        let expected: f64 = w.trace.epochs[..w.cfg.epochs]
+            .iter()
+            .map(|e| e.classes.iter().map(|c| c.n_req.round()).sum::<f64>())
+            .sum();
+        assert!((res.total.requests - expected).abs() < 1e-6);
+        assert!(res.total.e_tot_j > 0.0);
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! `DcVec`: tiled per-datacenter `f64` storage — the abstraction that
+//! breaks the 16-site ceiling without giving up the zero-allocation hot
+//! path (DESIGN.md §14).
+//!
+//! Fleets up to [`DC_TILE`] sites (the AOT artifact's padded `DC_SLOTS`)
+//! live entirely in an inline `[f64; DC_TILE]` tile: constructing,
+//! cloning, and copying a `DcVec` then performs **zero heap operations**
+//! (an empty `Vec` clone does not allocate), so `eval::PlanAgg` stays as
+//! cheap as the fixed stack buffers it replaces — pinned by
+//! rust/tests/alloc_hotpath.rs. Larger fleets transparently spill to a
+//! heap-backed buffer sized once from the fleet; steady-state reuse via
+//! [`DcVec::copy_from`] keeps the spill path allocation-free too, which
+//! is what the SLIT delta-rescoring loop relies on at L = 48.
+//!
+//! The arithmetic is storage-agnostic: every consumer reads/writes through
+//! [`DcVec::as_slice`] / [`DcVec::as_mut_slice`], so objective math is
+//! bit-identical between the inline and spill representations (pinned by
+//! rust/tests/dcvec_parity.rs against a raw stack-array oracle).
+
+use crate::config::DC_SLOTS;
+
+/// Inline tile width. Equal to the AOT artifact's padded `DC_SLOTS`, so
+/// "fits the tile" and "runnable on the AOT backend" are the same bound.
+pub const DC_TILE: usize = DC_SLOTS;
+
+/// Per-datacenter `f64` vector with inline storage for small fleets and
+/// heap spill for large ones. The length is fixed at construction (sized
+/// once from the `SystemConfig`'s fleet).
+#[derive(Clone, Debug)]
+pub struct DcVec {
+    /// Inline tile, authoritative when `len <= DC_TILE`.
+    inline: [f64; DC_TILE],
+    /// Spill buffer, authoritative when `len > DC_TILE` (empty otherwise,
+    /// so deriving `Clone` stays allocation-free on the inline path).
+    spill: Vec<f64>,
+    len: usize,
+}
+
+impl DcVec {
+    /// An all-zeros vector of `len` lanes. Allocation-free for
+    /// `len <= DC_TILE`; one sized allocation otherwise.
+    pub fn zeros(len: usize) -> DcVec {
+        DcVec {
+            inline: [0.0; DC_TILE],
+            spill: if len <= DC_TILE {
+                Vec::new()
+            } else {
+                vec![0.0; len]
+            },
+            len,
+        }
+    }
+
+    /// Copy an existing slice into fresh tiled storage.
+    pub fn from_slice(v: &[f64]) -> DcVec {
+        let mut d = DcVec::zeros(v.len());
+        d.as_mut_slice().copy_from_slice(v);
+        d
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when the vector fits the inline tile (no heap involvement).
+    #[inline]
+    pub fn is_inline(&self) -> bool {
+        self.len <= DC_TILE
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        if self.len <= DC_TILE {
+            &self.inline[..self.len]
+        } else {
+            &self.spill
+        }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        if self.len <= DC_TILE {
+            &mut self.inline[..self.len]
+        } else {
+            &mut self.spill
+        }
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        self.as_mut_slice().fill(v);
+    }
+
+    /// Overwrite with `other`'s contents, reusing this vector's spill
+    /// allocation. Allocation-free whenever the shapes match (inline ->
+    /// inline is a tile copy; spill -> spill reuses capacity), which is
+    /// what keeps the per-candidate delta rescore heap-silent at any L.
+    pub fn copy_from(&mut self, other: &DcVec) {
+        if other.len <= DC_TILE {
+            self.inline = other.inline;
+            self.spill.clear();
+        } else {
+            self.spill.clear();
+            self.spill.extend_from_slice(&other.spill);
+        }
+        self.len = other.len;
+    }
+}
+
+impl std::ops::Index<usize> for DcVec {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, i: usize) -> &f64 {
+        &self.as_slice()[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for DcVec {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.as_mut_slice()[i]
+    }
+}
+
+/// Equality is value equality over the live lanes; the unused inline tile
+/// tail of a spilled vector never participates.
+impl PartialEq for DcVec {
+    fn eq(&self, other: &DcVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_and_spill_boundary() {
+        for len in [0, 1, DC_TILE - 1, DC_TILE, DC_TILE + 1, 48] {
+            let d = DcVec::zeros(len);
+            assert_eq!(d.len(), len);
+            assert_eq!(d.as_slice().len(), len);
+            assert_eq!(d.is_inline(), len <= DC_TILE);
+            assert!(d.as_slice().iter().all(|&v| v == 0.0));
+        }
+        assert!(DcVec::zeros(0).is_empty());
+    }
+
+    #[test]
+    fn from_slice_round_trips_both_representations() {
+        for len in [3, DC_TILE, 48] {
+            let src: Vec<f64> = (0..len).map(|i| i as f64 * 1.5 - 2.0).collect();
+            let d = DcVec::from_slice(&src);
+            assert_eq!(d.as_slice(), &src[..]);
+            assert_eq!(d[len - 1], src[len - 1]);
+            let mut e = d.clone();
+            assert_eq!(d, e);
+            e[0] += 1.0;
+            assert_ne!(d, e);
+        }
+    }
+
+    #[test]
+    fn copy_from_transfers_across_shapes() {
+        let small = DcVec::from_slice(&[1.0, 2.0, 3.0]);
+        let big = DcVec::from_slice(&(0..48).map(|i| i as f64).collect::<Vec<_>>());
+        let mut d = DcVec::zeros(48);
+        d.copy_from(&small);
+        assert_eq!(d, small);
+        assert!(d.is_inline());
+        d.copy_from(&big);
+        assert_eq!(d, big);
+        assert!(!d.is_inline());
+        // same-shape overwrite reuses the spill capacity
+        let big2 = DcVec::from_slice(&(0..48).map(|i| -(i as f64)).collect::<Vec<_>>());
+        d.copy_from(&big2);
+        assert_eq!(d, big2);
+    }
+
+    #[test]
+    fn index_mut_and_fill() {
+        let mut d = DcVec::zeros(48);
+        d[47] = 9.0;
+        assert_eq!(d.as_slice()[47], 9.0);
+        d.fill(2.5);
+        assert!(d.as_slice().iter().all(|&v| v == 2.5));
+        let mut i = DcVec::zeros(4);
+        i[3] = 1.0;
+        assert_eq!(i.as_slice(), &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn equality_ignores_stale_inline_lanes_of_a_spilled_vector() {
+        // a spilled vector can carry stale inline garbage (here: lanes
+        // left behind by an earlier inline copy_from); PartialEq must
+        // compare only the live spill lanes
+        let wide: Vec<f64> = (0..48).map(|i| i as f64).collect();
+        let mut a = DcVec::zeros(48);
+        a.copy_from(&DcVec::from_slice(&[7.0; 5])); // dirties the inline tile
+        a.copy_from(&DcVec::from_slice(&wide)); // back to spilled
+        assert!(!a.is_inline());
+        assert_eq!(a, DcVec::from_slice(&wide), "stale inline lanes leaked");
+        // and differing lengths never compare equal
+        assert_ne!(DcVec::from_slice(&[1.0; 5]), DcVec::from_slice(&[1.0; 6]));
+    }
+}

@@ -1,9 +1,11 @@
 //! Foundation substrates built from scratch for the offline environment:
 //! deterministic RNG, JSON, statistics, CSV, scoped parallelism, a
-//! property-testing helper and a criterion-like bench harness.
+//! property-testing helper, a criterion-like bench harness, and the
+//! tiled per-datacenter storage behind the L-generic evaluator.
 
 pub mod benchkit;
 pub mod csv;
+pub mod dcvec;
 pub mod json;
 pub mod propkit;
 pub mod rng;

@@ -4,15 +4,21 @@
 //! threads concurrently cannot pollute a measurement) and asserts that:
 //!
 //!   * `AnalyticEvaluator::evaluate` — the full O(K*L) scoring of one
-//!     plan — performs zero heap operations;
-//!   * the delta core (`aggregate` copy + `apply_row_delta` + `finish` /
-//!     `evaluate_delta`) performs zero heap operations;
+//!     plan — performs zero heap operations on fleets that fit the inline
+//!     `DcVec` tile (<= `DC_SLOTS` sites);
+//!   * the delta core (`PlanAgg` clone + `apply_row_delta` + `finish` /
+//!     `evaluate_delta`) performs zero heap operations on inline-tile
+//!     fleets;
 //!   * the per-step candidate build (`PlanBatch::push_neighbors_of` into
-//!     a reserved arena) performs zero heap operations.
+//!     a reserved arena) performs zero heap operations at any fleet size;
+//!   * past the tile (L = 48), the search-loop delta rescore (scratch
+//!     `copy_from` + row delta + `finish`) is heap-silent once the spill
+//!     capacity is warm.
 //!
-//! These are the invariants the SoA-arena + delta-scoring redesign exists
-//! to provide; a regression here silently reintroduces per-candidate
-//! allocation churn long before it is visible in a benchmark.
+//! These are the invariants the SoA-arena + delta-scoring + tiled-DC
+//! redesigns exist to provide; a regression here silently reintroduces
+//! per-candidate allocation churn long before it is visible in a
+//! benchmark.
 
 use slit::cluster::build_panels;
 use slit::config::SystemConfig;
@@ -60,9 +66,10 @@ fn delta_scoring_performs_zero_heap_operations() {
     core::hint::black_box(ev.evaluate_delta(&agg, 2, base.row(2), cand.row(2)));
     let (ops, _) = count_allocs(|| {
         for _ in 0..64 {
-            // the whole delta chain: copy stack aggregates, shift one
+            // the whole delta chain: clone the inline-tile aggregates
+            // (an empty spill Vec clones without allocating), shift one
             // row's contribution, run the O(L) physics pass
-            let mut moved = agg;
+            let mut moved = agg.clone();
             ev.apply_row_delta(&mut moved, 2, base.row(2), cand.row(2));
             core::hint::black_box(ev.finish(&moved));
             core::hint::black_box(ev.evaluate_delta(
@@ -74,6 +81,43 @@ fn delta_scoring_performs_zero_heap_operations() {
         }
     });
     assert_eq!(ops, 0, "delta scoring must not touch the heap");
+}
+
+#[test]
+fn spilled_delta_scoring_is_alloc_free_once_warm() {
+    // L = 48 (three tiles' worth of sites): the aggregates spill to the
+    // heap, but the SLIT search-loop shape — scratch copy_from + masked
+    // row delta + finish — must stay heap-silent after the scratch's
+    // spill capacity is established
+    let mut cfg = SystemConfig::paper_default();
+    cfg.datacenters = slit::scenario::global_fleet_datacenters(6);
+    cfg.validate().expect("48-site fleet validates");
+    let dcs = cfg.datacenters.len();
+    assert_eq!(dcs, 48);
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+    let ev =
+        AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&cfg.physics));
+
+    let mut rng = Rng::new(7);
+    let base = Plan::random(cfg.num_classes(), dcs, 0.5, &mut rng);
+    let cand = base.shifted_toward(3, 40, 0.5);
+    let agg = ev.aggregate(base.as_slice());
+    let mut scratch = slit::eval::PlanAgg::zeros(dcs);
+    scratch.copy_from(&agg); // warm: spill capacity allocated once here
+    core::hint::black_box(ev.finish(&scratch));
+    let (ops, _) = count_allocs(|| {
+        for _ in 0..64 {
+            scratch.copy_from(&agg);
+            ev.apply_row_delta(&mut scratch, 3, base.row(3), cand.row(3));
+            core::hint::black_box(ev.finish(&scratch));
+        }
+    });
+    assert_eq!(
+        ops, 0,
+        "spilled delta rescoring must reuse the scratch allocation"
+    );
 }
 
 #[test]

@@ -1,9 +1,11 @@
-//! CI-sized versions of the three new hot_path bench rows, runnable inside
-//! the blocking `BENCH_QUICK=1 cargo test --all-targets` job:
+//! CI-sized versions of the hot_path bench rows, runnable inside the
+//! blocking `BENCH_QUICK=1 cargo test --all-targets` job:
 //!
-//!   * delta-vs-full neighbour scoring (the tentpole O(L) vs O(K*L) path),
+//!   * delta-vs-full neighbour scoring (the PR 4 O(L) vs O(K*L) path),
 //!   * arena-vs-clone candidate batch build,
-//!   * sharded-vs-global memo cache under thread contention.
+//!   * sharded-vs-global memo cache under thread contention,
+//!   * L=48 tiled-DC smoke: the spilled `DcVec` path at planet scale —
+//!     delta-vs-full parity and the per-DC L=16 vs L=48 scaling row.
 //!
 //! Each test asserts bit/tolerance *parity* between the fast and reference
 //! paths (the correctness half of the bench) and prints the measured
@@ -145,6 +147,79 @@ fn row_arena_vs_clone_candidate_build() {
         clone_s / arena_s.max(1e-12),
         arena_s / reps as f64 * 1e6,
         clone_s / reps as f64 * 1e6,
+    );
+}
+
+/// Evaluator over the first `dcs` sites of the planet-scale fleet.
+fn make_fleet_eval(dcs: usize) -> (SystemConfig, AnalyticEvaluator) {
+    let mut cfg = SystemConfig::paper_default();
+    cfg.datacenters =
+        slit::scenario::global_fleet_datacenters(6)[..dcs].to_vec();
+    cfg.validate().expect("fleet slice must validate");
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+    let consts = EvalConsts::from_physics(&cfg.physics);
+    (cfg, AnalyticEvaluator::new(cp, dp, consts))
+}
+
+#[test]
+fn row_l48_tiled_dc_smoke() {
+    use slit::eval::PlanAgg;
+
+    // per-candidate delta rescore (the SLIT search loop shape: scratch
+    // copy_from + masked row deltas + finish) at both tile regimes
+    let time_and_check = |dcs: usize| -> f64 {
+        let (cfg, ev) = make_fleet_eval(dcs);
+        let k_n = cfg.num_classes();
+        let mut rng = Rng::new(53);
+        let base = Plan::random(k_n, dcs, 0.5, &mut rng);
+        let agg = ev.aggregate(base.as_slice());
+        // parity first: finish(aggregate) == evaluate, and every one-row
+        // delta within 1e-9 relative of the full evaluation
+        assert_eq!(ev.finish(&agg), ev.evaluate(&base), "L={dcs}");
+        let cands: Vec<(usize, Plan)> = (0..128)
+            .map(|_| {
+                let k = rng.below(k_n);
+                let to = rng.below(dcs);
+                (k, base.shifted_toward(k, to, rng.range(0.2, 0.8)))
+            })
+            .collect();
+        let mut scratch = PlanAgg::zeros(dcs);
+        for (k, c) in &cands {
+            scratch.copy_from(&agg);
+            ev.apply_row_delta(&mut scratch, *k, base.row(*k), c.row(*k));
+            let fast = ev.finish(&scratch);
+            let full = ev.evaluate(c);
+            for i in 0..N_OBJ {
+                let err = (fast[i] - full[i]).abs() / full[i].abs().max(1e-12);
+                assert!(
+                    err <= 1e-9,
+                    "L={dcs} obj {i}: {} vs {}",
+                    fast[i],
+                    full[i]
+                );
+            }
+        }
+        let reps = 20;
+        let t = Instant::now();
+        for _ in 0..reps {
+            for (k, c) in &cands {
+                scratch.copy_from(&agg);
+                ev.apply_row_delta(&mut scratch, *k, base.row(*k), c.row(*k));
+                core::hint::black_box(ev.finish(&scratch));
+            }
+        }
+        t.elapsed().as_secs_f64() / (reps * cands.len()) as f64
+    };
+
+    let t16 = time_and_check(16);
+    let t48 = time_and_check(48);
+    println!(
+        "| delta rescore per-DC cost: L=48 vs L=16 | {:.2}x | ({:.0} ns vs {:.0} ns per candidate) |",
+        (t48 / 48.0) / (t16 / 16.0).max(1e-12),
+        t48 * 1e9,
+        t16 * 1e9,
     );
 }
 

@@ -1,0 +1,212 @@
+//! Golden parity for the tiled-DC (`DcVec`) refactor (DESIGN.md §14).
+//!
+//! The refactor swapped `eval::PlanAgg`'s fixed `[f64; DC_SLOTS]` stack
+//! buffers for `DcVec` tiles so fleets can grow past 16 sites. Nothing
+//! about the arithmetic was allowed to change:
+//!
+//!   * for every existing <= 16-DC scenario, the contraction aggregates
+//!     (and therefore the objectives — `finish` is a pure function of
+//!     them) are **bit-identical** to an inline stack-array oracle that
+//!     reproduces the pre-refactor code path, over seeded random plans;
+//!   * every framework in the registry still simulates bit-deterministic
+//!     through the DcVec evaluator path;
+//!   * past the tile, a propkit property pins delta-vs-full rescoring
+//!     parity <= 1e-9 relative at L = 48 over random move sequences.
+
+use slit::cluster::build_panels;
+use slit::config::{SystemConfig, DC_SLOTS, N_OBJ};
+use slit::eval::{AnalyticEvaluator, EvalConsts, PlanAgg};
+use slit::plan::Plan;
+use slit::power::GridSignals;
+use slit::registry;
+use slit::scenario::{global_fleet_datacenters, Scenario, ScenarioWorld};
+use slit::trace::Trace;
+use slit::util::propkit;
+use slit::util::rng::Rng;
+
+/// The pre-refactor aggregation path: contraction into fixed
+/// `[f64; DC_SLOTS]` stack arrays, weights rebuilt with the exact
+/// expression order `AnalyticEvaluator::new` uses — so bitwise equality
+/// is the expectation, not a tolerance.
+fn inline_array_oracle(
+    ev: &AnalyticEvaluator,
+    a: &[f64],
+) -> ([f64; DC_SLOTS], [f64; DC_SLOTS], f64) {
+    let k_n = ev.classes();
+    let l_n = ev.dcs();
+    assert!(l_n <= DC_SLOTS, "oracle is the inline path only");
+    let c = &ev.consts;
+    let mut node_s = [0.0f64; DC_SLOTS];
+    let mut reqs_l = [0.0f64; DC_SLOTS];
+    let mut t_base = 0.0f64;
+    for k in 0..k_n {
+        let n_req = ev.cp.n_req[k];
+        let w = ev.cp.n_req[k] * ev.cp.tok_out[k];
+        for l in 0..l_n {
+            let i = k * l_n + l;
+            let wns = w / ev.cp.thr[i];
+            let base = c.cold_frac * ev.cp.mem[k] / ev.dp.bw[l]
+                + 2.0 * ev.cp.hops[i] * c.k_media
+                + ev.cp.proc[i];
+            let wtt = ev.cp.n_req[k] * base;
+            node_s[l] += a[i] * wns;
+            reqs_l[l] += a[i] * n_req;
+            t_base += a[i] * wtt;
+        }
+    }
+    (node_s, reqs_l, t_base)
+}
+
+fn world_evaluator(world: &ScenarioWorld, epoch: usize) -> AnalyticEvaluator {
+    let (cp, dp) = build_panels(
+        &world.cfg,
+        &world.signals,
+        epoch,
+        &world.trace.epochs[epoch],
+        world.cfg.physics.pr_off,
+    );
+    AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&world.cfg.physics))
+}
+
+#[test]
+fn every_small_fleet_scenario_matches_the_inline_array_oracle_bitwise() {
+    let base = SystemConfig::paper_default();
+    for sc in Scenario::all() {
+        let world = sc.build(&base, 6, 11);
+        if world.cfg.datacenters.len() > DC_SLOTS {
+            continue; // global-fleet: spilled path, covered below
+        }
+        let ev = world_evaluator(&world, 3);
+        let l_n = ev.dcs();
+        let mut rng = Rng::new(0xD0C5);
+        for trial in 0..12 {
+            let plan =
+                Plan::random(world.cfg.num_classes(), l_n, 0.5, &mut rng);
+            let agg = ev.aggregate(plan.as_slice());
+            let (node_s, reqs_l, t_base) =
+                inline_array_oracle(&ev, plan.as_slice());
+            assert_eq!(
+                agg.node_s.as_slice(),
+                &node_s[..l_n],
+                "{} trial {trial}: node_s bits moved",
+                sc.name()
+            );
+            assert_eq!(
+                agg.reqs_l.as_slice(),
+                &reqs_l[..l_n],
+                "{} trial {trial}: reqs_l bits moved",
+                sc.name()
+            );
+            assert_eq!(
+                agg.t_base.to_bits(),
+                t_base.to_bits(),
+                "{} trial {trial}: t_base bits moved",
+                sc.name()
+            );
+            // finish is a pure function of the aggregates, so objective
+            // bits follow; pin the composition anyway
+            assert_eq!(ev.finish(&agg), ev.evaluate(&plan), "{}", sc.name());
+        }
+    }
+}
+
+#[test]
+fn every_registry_framework_is_bit_deterministic_through_the_dcvec_path() {
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 2;
+    cfg.opt.generations = 2;
+    let world = Scenario::Baseline.build(&cfg, cfg.epochs, 21);
+    for spec in registry::all() {
+        let run = || {
+            let mut sched = registry::build(spec.name, &world.cfg, None)
+                .expect("framework builds");
+            world.run(sched.as_mut(), 21)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.name, spec.name);
+        assert!(a.total.requests > 0.0, "{}: no traffic", spec.name);
+        // bitwise: totals and the full per-epoch objective series
+        assert_eq!(a.total.requests, b.total.requests, "{}", spec.name);
+        assert_eq!(a.total.carbon_kg, b.total.carbon_kg, "{}", spec.name);
+        assert_eq!(a.total.water_l, b.total.water_l, "{}", spec.name);
+        assert_eq!(a.total.cost_usd, b.total.cost_usd, "{}", spec.name);
+        assert_eq!(a.total.ttft_sum_s, b.total.ttft_sum_s, "{}", spec.name);
+    }
+}
+
+#[test]
+fn delta_vs_full_parity_holds_at_l48_property() {
+    // the satellite's propkit row: maintaining spilled DcVec aggregates
+    // incrementally across whole move sequences stays within 1e-9
+    // relative of a from-scratch evaluation at planet scale
+    let mut cfg = SystemConfig::paper_default();
+    cfg.datacenters = global_fleet_datacenters(6);
+    cfg.validate().expect("48-site fleet validates");
+    let dcs = cfg.datacenters.len();
+    assert_eq!(dcs, 48);
+    let signals = GridSignals::generate(&cfg, 6, 13);
+    let trace = Trace::generate(&cfg, 6, 13);
+    let (cp, dp) = build_panels(&cfg, &signals, 3, &trace.epochs[3], 0.05);
+    let ev =
+        AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&cfg.physics));
+    let k_n = cfg.num_classes();
+
+    let rel_err = |a: &[f64; N_OBJ], b: &[f64; N_OBJ]| -> f64 {
+        (0..N_OBJ)
+            .map(|i| (a[i] - b[i]).abs() / b[i].abs().max(1e-12))
+            .fold(0.0, f64::max)
+    };
+
+    propkit::check(
+        "dcvec-l48-delta-parity",
+        0x48DC,
+        24,
+        |r| (Plan::random(k_n, dcs, 0.5, r), r.fork(5)),
+        |(start, rng)| {
+            let mut rng = rng.clone();
+            let mut plan = start.clone();
+            let mut agg = ev.aggregate(plan.as_slice());
+            let mut scratch = PlanAgg::zeros(dcs);
+            for mv in 0..10 {
+                let (next, mask) = match mv % 4 {
+                    2 => {
+                        let k = rng.below(k_n);
+                        let to = rng.below(dcs);
+                        let frac = rng.range(0.2, 0.8);
+                        (plan.shifted_toward(k, to, frac), 1u64 << k)
+                    }
+                    3 => {
+                        let k = rng.below(k_n);
+                        (plan.shifted_toward(k, 0, 1.0), 1u64 << k)
+                    }
+                    _ => plan.perturbed_tracked(0.4, &mut rng),
+                };
+                // the search-loop shape: copy into the reused scratch,
+                // apply the touched rows, finish
+                scratch.copy_from(&agg);
+                for k in 0..k_n {
+                    if (mask >> k) & 1 == 1 {
+                        ev.apply_row_delta(
+                            &mut scratch,
+                            k,
+                            plan.row(k),
+                            next.row(k),
+                        );
+                    }
+                }
+                let fast = ev.finish(&scratch);
+                agg.copy_from(&scratch);
+                plan = next;
+                let full = ev.evaluate(&plan);
+                let err = rel_err(&fast, &full);
+                if err > 1e-9 {
+                    return Err(format!(
+                        "move {mv}: rel err {err:.3e} ({fast:?} vs {full:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,7 +1,9 @@
 //! Scenario-matrix integration: every named workload/grid regime ×
 //! (SLIT target variant, Helix, Splitwise) on the discrete simulator —
 //! including the event-driven `outage-rolling` regime, whose capacity
-//! varies *mid-run* through the SimSession event schedule.
+//! varies *mid-run* through the SimSession event schedule, and the
+//! planet-scale `global-fleet` regime (48 sites, past the AOT tile),
+//! which runs the whole matrix on the spilled `DcVec` evaluator path.
 //!
 //! The paper's qualitative claim, generalised across regimes: on the
 //! objective a scenario stresses, the matching SLIT variant must stay
@@ -92,6 +94,22 @@ fn slit_stays_nondominated_on_target_objective_in_every_scenario() {
             po[target]
         );
     }
+}
+
+#[test]
+fn global_fleet_matrix_really_runs_at_l48() {
+    // the non-domination sweep above covers global-fleet like any named
+    // regime; this pins that the world it ran actually is the 48-site
+    // spilled-tile fleet, not a silently truncated one
+    let base = pressured_config();
+    let world = Scenario::GlobalFleet.build(&base, base.epochs, 42);
+    assert_eq!(world.cfg.datacenters.len(), 48);
+    assert!(world.cfg.validate_aot().is_err(), "analytic-only fleet");
+    let mut sched =
+        registry::build("slit-carbon", &world.cfg, None).expect("framework");
+    let res = world.run(sched.as_mut(), 42);
+    assert_eq!(res.per_epoch[0].site_nodes.len(), 48);
+    assert!(res.total.requests > 0.0);
 }
 
 #[test]

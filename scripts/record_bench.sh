@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Run the hot_path bench suite and append its dated result rows to
+# EXPERIMENTS.md — the one command that fills the measured-row stubs the
+# toolchain-less PR containers keep leaving behind.
+#
+#   scripts/record_bench.sh            # full-size run (recommended)
+#   BENCH_QUICK=1 scripts/record_bench.sh   # CI-sized run, labelled quick
+#
+# Appends a "### hot_path bench run — <date>" section containing the
+# suite's markdown table verbatim, so the headline speedup rows
+# ("delta speedup (target >= 4x)", "arena speedup", "shard speedup",
+# "per-DC cost L=48/L=16") are greppable straight from EXPERIMENTS.md.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="$(mktemp)"
+section="$(mktemp)"
+trap 'rm -f "$out" "$section"' EXIT
+
+echo "running cargo bench --bench hot_path ..." >&2
+cargo bench --bench hot_path 2>&1 | tee "$out"
+
+# the benchkit markdown table (header + rows) printed by finish();
+# extracted first so a malformed run cannot leave a dangling section
+# header in EXPERIMENTS.md
+rows="$(sed -n '/^## bench suite: hot_path$/,$p' "$out" | grep -E '^\|' || true)"
+if [ -z "$rows" ]; then
+    echo "error: no hot_path result table found in bench output" >&2
+    exit 1
+fi
+
+label=""
+if [ -n "${BENCH_QUICK:-}" ]; then
+    label=" (BENCH_QUICK)"
+fi
+cores="$(nproc 2>/dev/null || sysctl -n hw.ncpu 2>/dev/null || echo '?')"
+
+{
+    echo ""
+    echo "### hot_path bench run — $(date +%F)${label} ($(uname -ms), ${cores} cores)"
+    echo ""
+    printf '%s\n' "$rows"
+} > "$section"
+cat "$section" >> EXPERIMENTS.md
+
+echo "appended dated hot_path rows to EXPERIMENTS.md" >&2
