@@ -318,6 +318,98 @@ fn main() {
         );
     }
 
+    // --- serve loop ----------------------------------------------------------
+    // the sharded-worker TCP front under open-loop (Poisson) load: achieved
+    // req/s and TTFT/RTT p99 at a fixed transport-error budget. "saturated"
+    // is a correct structured reply (the fleet is finite), so the error
+    // budget covers transport/validation failures and dropped replies only.
+    {
+        use slit::coordinator::{
+            run_loadgen, serve_forever, ArrivalMode, Coordinator,
+            CoordinatorConfig, DispatchPolicy, LoadgenConfig,
+        };
+
+        let boot = |policy: DispatchPolicy| {
+            let mut c = SystemConfig::small_test();
+            c.opt.generations = 2;
+            c.opt.population = 8;
+            let mut ccfg = CoordinatorConfig {
+                plan_budget_s: 0.2,
+                ..Default::default()
+            };
+            ccfg.batcher.policy = policy;
+            Coordinator::new(c, ccfg, None)
+        };
+
+        let c = boot(DispatchPolicy::Llf);
+        let handle = serve_forever(std::sync::Arc::clone(&c), 0)
+            .expect("bind ephemeral");
+        let lcfg = LoadgenConfig {
+            port: handle.port,
+            mode: ArrivalMode::Open,
+            conns: if quick { 4 } else { 8 },
+            rate_rps: if quick { 4_000.0 } else { 24_000.0 },
+            duration_s: if quick { 0.5 } else { 3.0 },
+            batch: 8,
+            ..Default::default()
+        };
+        let r = run_loadgen(&lcfg).expect("loadgen");
+        let transport_err_rate = (r.errors + r.dropped_replies) as f64
+            / (r.sent as f64).max(1.0);
+        bench.record_value(
+            "serve: open-loop achieved (target >= 10k)",
+            r.achieved_rps(),
+            "req/s",
+        );
+        bench.record_value("serve: rtt p99", r.rtt.p99() * 1e3, "ms");
+        bench.record_value("serve: ttft p99", r.ttft.p99() * 1e3, "ms");
+        bench.record_value(
+            "serve: transport error rate (budget 0.01)",
+            transport_err_rate,
+            "frac",
+        );
+        bench.record_value(
+            "serve: sender behind-schedule events",
+            r.behind as f64,
+            "count",
+        );
+        c.stop();
+        handle.thread.join().expect("server thread");
+
+        // LLF-vs-FCFS dispatch under a saturating batch stream (in-process,
+        // deterministic — no socket noise): the worst class's p99 TTFT
+        // divided by its model's TTFT SLO, per policy
+        let waves = if quick { 16 } else { 64 };
+        let slack = |policy: DispatchPolicy| -> f64 {
+            use slit::config::{MODELS, REGIONS};
+            let c = boot(policy);
+            for wave in 0..waves {
+                let reqs: Vec<(usize, usize, u32, u32)> = (0..64)
+                    .map(|i| ((i + wave) % REGIONS, i % MODELS, 128, 256))
+                    .collect();
+                core::hint::black_box(c.handle_batch(&reqs));
+            }
+            let m = c.metrics_snapshot();
+            m.class_ttft
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| h.count() > 0)
+                .map(|(k, h)| {
+                    h.p99() / c.cfg.models[k % MODELS].ttft_slo_s
+                })
+                .fold(0.0f64, f64::max)
+        };
+        let llf = slack(DispatchPolicy::Llf);
+        let fcfs = slack(DispatchPolicy::Fcfs);
+        bench.record_value("dispatch: LLF worst p99/SLO", llf, "frac");
+        bench.record_value("dispatch: FCFS worst p99/SLO", fcfs, "frac");
+        bench.record_value(
+            "dispatch: FCFS/LLF worst-slack ratio (>= 1 means LLF wins)",
+            fcfs / llf.max(1e-12),
+            "x",
+        );
+    }
+
     // --- AOT / PJRT ----------------------------------------------------------
     if slit::runtime::pjrt_enabled() && artifacts_present() {
         let engine = Engine::load(&artifacts_dir()).expect("engine");

@@ -19,8 +19,9 @@ use std::collections::BTreeMap;
 
 use crate::config::{SystemConfig, N_OBJ, OBJ_NAMES};
 use crate::coordinator::{
-    run_drill, serve_forever, Coordinator, CoordinatorConfig, DrillClient,
-    DrillConfig,
+    format_report, run_drill, run_loadgen, serve_forever, ArrivalMode,
+    Coordinator, CoordinatorConfig, DispatchPolicy, DrillClient, DrillConfig,
+    LoadgenConfig,
 };
 use crate::opt::SlitVariant;
 use crate::power::GridSignals;
@@ -488,12 +489,13 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .into_iter()
         .find(|v| v.name() == variant_name)
         .ok_or_else(|| anyhow::anyhow!("unknown variant '{variant_name}'"))?;
-    let ccfg = CoordinatorConfig {
+    let mut ccfg = CoordinatorConfig {
         variant,
         epoch_wall_s: args.f64("epoch-seconds", 15.0),
         plan_budget_s: args.f64("budget", 5.0),
         ..Default::default()
     };
+    ccfg.batcher.policy = dispatch_policy(args)?;
     let coordinator = Coordinator::new(cfg, ccfg, engine);
     let clock = coordinator.spawn_epoch_clock();
     let handle = serve_forever(
@@ -552,6 +554,76 @@ pub fn cmd_drill(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--policy llf|fcfs` -> batch dispatch policy (LLF is the default).
+fn dispatch_policy(args: &Args) -> anyhow::Result<DispatchPolicy> {
+    match args.get("policy").unwrap_or("llf") {
+        "llf" => Ok(DispatchPolicy::Llf),
+        "fcfs" => Ok(DispatchPolicy::Fcfs),
+        other => anyhow::bail!("unknown dispatch policy '{other}'"),
+    }
+}
+
+/// `slit loadgen` — closed-/open-loop load against a coordinator's TCP
+/// front; reports achieved req/s and RTT/TTFT percentiles. With `--serve`,
+/// boots an in-process coordinator on an ephemeral port first (one
+/// command = a full self-contained serve-path benchmark).
+pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    let mode = match args.get("mode").unwrap_or("closed") {
+        "closed" => ArrivalMode::Closed,
+        "open" => ArrivalMode::Open,
+        other => anyhow::bail!("unknown arrival mode '{other}'"),
+    };
+    let mut lcfg = LoadgenConfig {
+        host: args.get("host").unwrap_or("127.0.0.1").to_string(),
+        port: args.usize("port", 7070) as u16,
+        mode,
+        conns: args.usize("conns", 8),
+        requests: args.usize("requests", 2_000),
+        rate_rps: args.f64("rate", 2_000.0),
+        duration_s: args.f64("secs", 2.0),
+        batch: args.usize("batch", 1),
+        tok_in: args.usize("tok-in", 128) as u32,
+        tok_out: args.usize("tok-out", 256) as u32,
+        seed: args.usize("seed", 7) as u64,
+    };
+    let server = if args.bool("serve") {
+        let mut cfg = load_config(args)?;
+        cfg.opt.generations = cfg.opt.generations.min(4);
+        let mut ccfg = CoordinatorConfig {
+            plan_budget_s: args.f64("budget", 0.5),
+            ..Default::default()
+        };
+        ccfg.batcher.policy = dispatch_policy(args)?;
+        let c = Coordinator::new(cfg, ccfg, None);
+        let handle = serve_forever(std::sync::Arc::clone(&c), 0)?;
+        lcfg.host = "127.0.0.1".into();
+        lcfg.port = handle.port;
+        Some((c, handle))
+    } else {
+        None
+    };
+    let report = run_loadgen(&lcfg)?;
+    print!("{}", format_report(&lcfg, &report));
+    if let Some((c, handle)) = server {
+        c.stop();
+        handle.thread.join().ok();
+    }
+    // non-zero exit when the run violates the error budget: lost replies
+    // are always fatal; non-ok replies must stay under --error-budget
+    anyhow::ensure!(
+        report.dropped_replies == 0,
+        "{} replies never arrived",
+        report.dropped_replies
+    );
+    let budget = args.f64("error-budget", 0.01);
+    anyhow::ensure!(
+        report.error_rate() <= budget,
+        "error rate {:.4} exceeds budget {budget}",
+        report.error_rate()
+    );
+    Ok(())
+}
+
 /// `slit artifacts` — verify the AOT artifacts.
 pub fn cmd_artifacts(_args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
@@ -599,10 +671,15 @@ COMMANDS:
   scenarios   list the named workload/grid regimes
   pareto      dump one epoch's Pareto front     --epoch N --out front.json
   serve       start the online coordinator      --port N --variant NAME
-              --epoch-seconds F --use-hlo
+              --epoch-seconds F --use-hlo --policy llf|fcfs
   drill       scripted outage drill against a running `slit serve`:
               darken a region, tick, verify dip/recovery + conservation
               --host H --port N --region N --frac F --requests N
+  loadgen     socket load against a coordinator  --host H --port N
+              --mode closed|open --conns N --requests N (closed)
+              --rate RPS --secs F (open) --batch N --policy llf|fcfs
+              --serve (boot an in-process server on an ephemeral port)
+              --error-budget F (non-ok share that still exits 0)
   artifacts   verify AOT artifacts load + shape-check
   config      write the resolved config         --out slit-config.json
 ";
@@ -618,6 +695,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "pareto" => cmd_pareto(&args),
         "serve" => cmd_serve(&args),
         "drill" => cmd_drill(&args),
+        "loadgen" => cmd_loadgen(&args),
         "artifacts" => cmd_artifacts(&args),
         "config" => cmd_config(&args),
         "help" | "--help" | "-h" => {
@@ -881,5 +959,24 @@ mod tests {
         assert_eq!(nodes[2], nodes[0], "no recovery in csv: {nodes:?}");
         std::fs::remove_file(&tmp).ok();
         std::fs::remove_file(&csv).ok();
+    }
+
+    #[test]
+    fn loadgen_serve_closed_loop_end_to_end() {
+        // self-contained: boots an in-process coordinator on an ephemeral
+        // port, drives it closed-loop, and enforces the error budget
+        run(&argv(
+            "loadgen --serve --scale small --mode closed --conns 2 \
+             --requests 40 --batch 2 --budget 0.2",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn loadgen_rejects_unknown_policy_and_mode() {
+        assert!(run(&argv("loadgen --serve --scale small --policy bogus"))
+            .is_err());
+        assert!(run(&argv("loadgen --serve --scale small --mode sideways"))
+            .is_err());
     }
 }

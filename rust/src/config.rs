@@ -64,6 +64,12 @@ pub struct ModelSpec {
     pub mean_out_tokens: f64,
     /// Mean input tokens per request.
     pub mean_in_tokens: f64,
+    /// TTFT service-level objective, seconds — the deadline budget the
+    /// serving coordinator's Least-Laxity-First dispatch orders against
+    /// (laxity = SLO - queued age - predicted first-token service). Sized
+    /// off the Eq. 4 TTFT scale: warm requests land well inside it; cold
+    /// large-model loads may overshoot (negative laxity = most urgent).
+    pub ttft_slo_s: f64,
 }
 
 /// One of the six heterogeneous node types (§6).
@@ -213,6 +219,7 @@ impl SystemConfig {
                 kv_gb_per_token: 0.0005,
                 mean_out_tokens: 180.0,
                 mean_in_tokens: 380.0,
+                ttft_slo_s: 1.5,
             },
             ModelSpec {
                 name: MODEL_NAMES[1].into(),
@@ -220,6 +227,7 @@ impl SystemConfig {
                 kv_gb_per_token: 0.0025,
                 mean_out_tokens: 260.0,
                 mean_in_tokens: 520.0,
+                ttft_slo_s: 6.0,
             },
         ];
 
@@ -407,6 +415,7 @@ impl SystemConfig {
                             ("kv_gb_per_token", Json::Num(m.kv_gb_per_token)),
                             ("mean_out_tokens", Json::Num(m.mean_out_tokens)),
                             ("mean_in_tokens", Json::Num(m.mean_in_tokens)),
+                            ("ttft_slo_s", Json::Num(m.ttft_slo_s)),
                         ])
                     })
                     .collect(),
@@ -539,6 +548,8 @@ impl SystemConfig {
                     kv_gb_per_token: m.f64_or("kv_gb_per_token", 5e-4),
                     mean_out_tokens: m.f64_or("mean_out_tokens", 200.0),
                     mean_in_tokens: m.f64_or("mean_in_tokens", 400.0),
+                    // pre-SLO config files get a mid-range deadline
+                    ttft_slo_s: m.f64_or("ttft_slo_s", 3.0),
                 })
                 .collect();
         }
@@ -676,6 +687,13 @@ impl SystemConfig {
                 n.thr_tokens_s.iter().all(|&t| t > 0.0),
                 "node {} throughput must be > 0",
                 n.name
+            );
+        }
+        for m in &self.models {
+            anyhow::ensure!(
+                m.ttft_slo_s.is_finite() && m.ttft_slo_s > 0.0,
+                "model {} ttft_slo_s must be a positive finite deadline",
+                m.name
             );
         }
         let mix_sum: f64 = self.workload.region_mix.iter().sum();

@@ -1,14 +1,42 @@
-//! Dynamic batcher: groups requests per (site, model) before placement.
+//! Dynamic batcher: groups requests per (site, model) before placement,
+//! then orders the flushed groups for dispatch.
 //!
 //! Continuous batching at the node level is modelled inside the node
 //! throughput numbers; this batcher captures the *router-side* batching
 //! (one placement critical-section per group instead of per request),
 //! which is what keeps the coordinator's lock contention flat at high
 //! request rates. Flush policy: size cap or age cap, whichever first.
+//!
+//! Dispatch policy (FREESH-style): by default groups are released in
+//! **Least-Laxity-First** order, laxity = TTFT-SLO budget minus queued
+//! age minus predicted first-token service (`sched::predicted_first_token_s`).
+//! Tight-deadline small-model groups therefore commit site capacity before
+//! loose large-model groups and see lower utilisation (lower queue delay)
+//! — the head-of-line blocking FCFS suffers in the TTFT tail. Laxity
+//! shrinks linearly with age, so a loose-deadline group that has waited
+//! long enough always overtakes fresh tight ones: no starvation. Ties
+//! break on arrival order (first push sequence), keeping dispatch fully
+//! deterministic. FCFS remains available as the ablation baseline.
+//!
+//! Within one group every request shares (site, model) — identical SLO
+//! and predicted service — so LLF inside the group degenerates to
+//! oldest-first, which is exactly the arrival order items are stored in.
 
 use std::time::{Duration, Instant};
 
+use crate::config::SystemConfig;
+use crate::sched::predicted_first_token_s;
 use crate::trace::Request;
+
+/// Order in which flushed groups are released to placement.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// First-come-first-served on the group's first arrival.
+    Fcfs,
+    /// Least-Laxity-First (FREESH): most urgent group first.
+    #[default]
+    Llf,
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
@@ -16,6 +44,8 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Max time a request may wait in the batcher.
     pub max_wait: Duration,
+    /// Group dispatch order.
+    pub policy: DispatchPolicy,
 }
 
 impl Default for BatcherConfig {
@@ -23,49 +53,161 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 32,
             max_wait: Duration::from_millis(10),
+            policy: DispatchPolicy::Llf,
         }
     }
 }
 
-/// A flushed batch destined for one (site, model) pair.
+/// Precomputed laxity inputs: per-model SLO and per-(site, model)
+/// predicted first-token service, so scoring a group at flush time is two
+/// lookups and a subtraction.
+#[derive(Clone, Debug)]
+pub struct LaxityModel {
+    /// Predicted first-token service seconds, indexed `dc * models + model`.
+    svc_s: Vec<f64>,
+    /// TTFT SLO seconds per model.
+    slo_s: Vec<f64>,
+    models: usize,
+}
+
+impl LaxityModel {
+    pub fn from_config(cfg: &SystemConfig) -> LaxityModel {
+        let models = cfg.models.len();
+        let dcs = cfg.datacenters.len();
+        let mut svc_s = Vec::with_capacity(dcs * models);
+        for dc in 0..dcs {
+            for model in 0..models {
+                svc_s.push(predicted_first_token_s(cfg, dc, model));
+            }
+        }
+        LaxityModel {
+            svc_s,
+            slo_s: cfg.models.iter().map(|m| m.ttft_slo_s).collect(),
+            models,
+        }
+    }
+
+    /// Hand-built model for tests / synthetic scheduling studies.
+    pub fn from_parts(
+        svc_s: Vec<f64>,
+        slo_s: Vec<f64>,
+        models: usize,
+    ) -> LaxityModel {
+        assert_eq!(svc_s.len() % models, 0);
+        assert_eq!(slo_s.len(), models);
+        LaxityModel { svc_s, slo_s, models }
+    }
+
+    pub fn dcs(&self) -> usize {
+        self.svc_s.len() / self.models
+    }
+
+    pub fn models(&self) -> usize {
+        self.models
+    }
+
+    /// Laxity of a request aged `age_s` bound for (dc, model): how much
+    /// deadline slack remains after the predicted service. Negative means
+    /// already past budget — maximally urgent.
+    pub fn laxity_s(&self, dc: usize, model: usize, age_s: f64) -> f64 {
+        self.slo_s[model] - age_s - self.svc_s[dc * self.models + model]
+    }
+}
+
+/// One request inside a flushed batch, tagged with the caller's index so
+/// results map back to submission order no matter how dispatch reorders
+/// groups (the old same-key cursor scan this replaces could misattribute
+/// TTFTs once groups stopped flushing in arrival order).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchItem {
+    pub req: Request,
+    /// Caller-supplied index into its own result array.
+    pub tag: usize,
+    /// Global arrival sequence (deterministic tie-break).
+    pub seq: u64,
+}
+
+/// A flushed batch destined for one (site, model) pair. Items are in
+/// arrival order (= LLF order within the group; see module docs).
 #[derive(Clone, Debug)]
 pub struct Batch {
     pub dc: usize,
     pub model: usize,
-    pub requests: Vec<Request>,
+    pub items: Vec<BatchItem>,
+    /// Arrival sequence of the group's oldest item.
+    pub first_seq: u64,
+    /// Laxity of the group's most urgent (oldest) item at flush time.
+    pub min_laxity_s: f64,
+}
+
+/// Order flushed groups for dispatch in place: LLF sorts by
+/// (min laxity, first arrival), FCFS by first arrival alone. Both orders
+/// are total and deterministic for distinct arrival sequences.
+pub fn dispatch_order(groups: &mut [Batch], policy: DispatchPolicy) {
+    match policy {
+        DispatchPolicy::Fcfs => {
+            groups.sort_by_key(|g| g.first_seq);
+        }
+        DispatchPolicy::Llf => {
+            groups.sort_by(|a, b| {
+                a.min_laxity_s
+                    .partial_cmp(&b.min_laxity_s)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.first_seq.cmp(&b.first_seq))
+            });
+        }
+    }
 }
 
 /// Accumulates requests per (site, model); `push` returns a batch when the
 /// flush condition triggers.
 pub struct Batcher {
     cfg: BatcherConfig,
-    /// (requests, oldest-arrival) per (dc, model) key
-    pending: Vec<(Vec<Request>, Option<Instant>)>,
+    laxity: LaxityModel,
+    /// (items, oldest-arrival) per (dc, model) key
+    pending: Vec<(Vec<BatchItem>, Option<Instant>)>,
     models: usize,
+    next_seq: u64,
 }
 
 impl Batcher {
-    pub fn new(cfg: BatcherConfig, dcs: usize, models: usize) -> Batcher {
+    pub fn new(cfg: BatcherConfig, laxity: LaxityModel) -> Batcher {
+        let slots = laxity.dcs() * laxity.models();
+        let models = laxity.models();
         Batcher {
             cfg,
-            pending: (0..dcs * models).map(|_| (Vec::new(), None)).collect(),
+            laxity,
+            pending: (0..slots).map(|_| (Vec::new(), None)).collect(),
             models,
+            next_seq: 0,
         }
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.cfg.policy
     }
 
     fn key(&self, dc: usize, model: usize) -> usize {
         dc * self.models + model
     }
 
-    /// Add a routed request; returns a full batch if the size cap tripped.
-    pub fn push(&mut self, dc: usize, req: Request) -> Option<Batch> {
+    /// Add a routed request carrying the caller's result index; returns a
+    /// full batch if the size cap tripped.
+    pub fn push(
+        &mut self,
+        dc: usize,
+        req: Request,
+        tag: usize,
+    ) -> Option<Batch> {
         let model = req.model();
         let k = self.key(dc, model);
+        let seq = self.next_seq;
+        self.next_seq += 1;
         let slot = &mut self.pending[k];
         if slot.1.is_none() {
             slot.1 = Some(Instant::now());
         }
-        slot.0.push(req);
+        slot.0.push(BatchItem { req, tag, seq });
         if slot.0.len() >= self.cfg.max_batch {
             return self.take(dc, model);
         }
@@ -92,7 +234,7 @@ impl Batcher {
         out
     }
 
-    /// Drain everything (shutdown path).
+    /// Drain everything (shutdown / end-of-batch path).
     pub fn flush_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
         for k in 0..self.pending.len() {
@@ -109,15 +251,25 @@ impl Batcher {
 
     fn take(&mut self, dc: usize, model: usize) -> Option<Batch> {
         let k = self.key(dc, model);
+        let age_s = self.pending[k]
+            .1
+            .map(|t0| t0.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
         let slot = &mut self.pending[k];
         if slot.0.is_empty() {
             return None;
         }
         slot.1 = None;
+        let items = std::mem::take(&mut slot.0);
+        let first_seq = items[0].seq;
         Some(Batch {
             dc,
             model,
-            requests: std::mem::take(&mut slot.0),
+            // the oldest item's age is the group age: its laxity is the
+            // group minimum (same SLO/service across the group)
+            min_laxity_s: self.laxity.laxity_s(dc, model, age_s),
+            first_seq,
+            items,
         })
     }
 
@@ -139,20 +291,34 @@ mod tests {
         }
     }
 
+    /// 2-model laxity model over `dcs` sites: tiny uniform service, SLOs
+    /// 1 s (model 0) and 4 s (model 1).
+    fn toy_laxity(dcs: usize) -> LaxityModel {
+        LaxityModel::from_parts(
+            vec![0.05; dcs * 2],
+            vec![1.0, 4.0],
+            2,
+        )
+    }
+
+    fn batcher(max_batch: usize, max_wait: Duration, dcs: usize) -> Batcher {
+        Batcher::new(
+            BatcherConfig {
+                max_batch,
+                max_wait,
+                policy: DispatchPolicy::Llf,
+            },
+            toy_laxity(dcs),
+        )
+    }
+
     #[test]
     fn size_cap_flushes() {
-        let mut b = Batcher::new(
-            BatcherConfig {
-                max_batch: 3,
-                max_wait: Duration::from_secs(60),
-            },
-            2,
-            2,
-        );
-        assert!(b.push(0, req(0)).is_none());
-        assert!(b.push(0, req(0)).is_none());
-        let batch = b.push(0, req(0)).expect("size cap");
-        assert_eq!(batch.requests.len(), 3);
+        let mut b = batcher(3, Duration::from_secs(60), 2);
+        assert!(b.push(0, req(0), 0).is_none());
+        assert!(b.push(0, req(0), 1).is_none());
+        let batch = b.push(0, req(0), 2).expect("size cap");
+        assert_eq!(batch.items.len(), 3);
         assert_eq!(batch.dc, 0);
         assert_eq!(batch.model, 0);
         assert_eq!(b.pending_count(), 0);
@@ -160,45 +326,32 @@ mod tests {
 
     #[test]
     fn batches_keyed_by_site_and_model() {
-        let mut b = Batcher::new(
-            BatcherConfig {
-                max_batch: 2,
-                max_wait: Duration::from_secs(60),
-            },
-            2,
-            2,
-        );
-        assert!(b.push(0, req(0)).is_none()); // model 0
-        assert!(b.push(0, req(1)).is_none()); // model 1 -> other key
-        assert!(b.push(1, req(0)).is_none()); // other site
-        let batch = b.push(0, req(2)).expect("model-0 site-0 cap");
-        assert_eq!(batch.requests.len(), 2);
+        let mut b = batcher(2, Duration::from_secs(60), 2);
+        assert!(b.push(0, req(0), 0).is_none()); // model 0
+        assert!(b.push(0, req(1), 1).is_none()); // model 1 -> other key
+        assert!(b.push(1, req(0), 2).is_none()); // other site
+        let batch = b.push(0, req(2), 3).expect("model-0 site-0 cap");
+        assert_eq!(batch.items.len(), 2);
         assert_eq!(b.pending_count(), 2);
     }
 
     #[test]
     fn age_cap_flushes() {
-        let mut b = Batcher::new(
-            BatcherConfig {
-                max_batch: 100,
-                max_wait: Duration::from_millis(1),
-            },
-            1,
-            2,
-        );
-        b.push(0, req(0));
+        let mut b = batcher(100, Duration::from_millis(1), 1);
+        b.push(0, req(0), 0);
         std::thread::sleep(Duration::from_millis(3));
         let out = b.flush_expired();
         assert_eq!(out.len(), 1);
-        assert_eq!(out[0].requests.len(), 1);
+        assert_eq!(out[0].items.len(), 1);
     }
 
     #[test]
     fn flush_all_drains() {
-        let mut b = Batcher::new(BatcherConfig::default(), 3, 2);
-        b.push(0, req(0));
-        b.push(1, req(1));
-        b.push(2, req(0));
+        let mut b =
+            batcher(BatcherConfig::default().max_batch, Duration::from_millis(10), 3);
+        b.push(0, req(0), 0);
+        b.push(1, req(1), 1);
+        b.push(2, req(0), 2);
         let out = b.flush_all();
         assert_eq!(out.len(), 3);
         assert_eq!(b.pending_count(), 0);
@@ -206,16 +359,9 @@ mod tests {
 
     #[test]
     fn flush_expired_skips_young_groups() {
-        let mut b = Batcher::new(
-            BatcherConfig {
-                max_batch: 100,
-                max_wait: Duration::from_secs(60),
-            },
-            2,
-            2,
-        );
-        b.push(0, req(0));
-        b.push(1, req(1));
+        let mut b = batcher(100, Duration::from_secs(60), 2);
+        b.push(0, req(0), 0);
+        b.push(1, req(1), 1);
         // nothing is older than the wait cap yet
         assert!(b.flush_expired().is_empty());
         assert_eq!(b.pending_count(), 2);
@@ -223,54 +369,175 @@ mod tests {
 
     #[test]
     fn age_timer_resets_after_a_flush() {
-        let mut b = Batcher::new(
-            BatcherConfig {
-                max_batch: 2,
-                max_wait: Duration::from_millis(50),
-            },
-            1,
-            1,
-        );
-        b.push(0, req(0));
-        let batch = b.push(0, req(0)).expect("size cap");
-        assert_eq!(batch.requests.len(), 2);
+        let mut b = batcher(2, Duration::from_millis(50), 1);
+        b.push(0, req(0), 0);
+        let batch = b.push(0, req(0), 1).expect("size cap");
+        assert_eq!(batch.items.len(), 2);
         // a fresh push after the flush starts a new age window: the old
         // timestamp must not leak into the new group
-        b.push(0, req(0));
+        b.push(0, req(0), 2);
         assert!(b.flush_expired().is_empty(), "stale age timer leaked");
         assert_eq!(b.pending_count(), 1);
     }
 
     #[test]
     fn size_cap_of_one_flushes_every_push() {
-        let mut b = Batcher::new(
-            BatcherConfig {
-                max_batch: 1,
-                max_wait: Duration::from_secs(60),
-            },
-            2,
-            2,
-        );
+        let mut b = batcher(1, Duration::from_secs(60), 2);
         for i in 0..6 {
-            let batch = b.push(i % 2, req(i % 2)).expect("immediate flush");
-            assert_eq!(batch.requests.len(), 1);
+            let batch =
+                b.push(i % 2, req(i % 2), i).expect("immediate flush");
+            assert_eq!(batch.items.len(), 1);
+            assert_eq!(batch.items[0].tag, i);
         }
         assert_eq!(b.pending_count(), 0);
     }
 
     #[test]
     fn flushed_batches_carry_their_site_and_model_key() {
-        let mut b = Batcher::new(BatcherConfig::default(), 3, 2);
-        b.push(2, req(1)); // class 1 -> model 1
-        b.push(1, req(2)); // class 2 -> model 0
+        let mut b =
+            batcher(BatcherConfig::default().max_batch, Duration::from_millis(10), 3);
+        b.push(2, req(1), 0); // class 1 -> model 1
+        b.push(1, req(2), 1); // class 2 -> model 0
         let mut out = b.flush_all();
         out.sort_by_key(|g| (g.dc, g.model));
         assert_eq!(out.len(), 2);
         assert_eq!((out[0].dc, out[0].model), (1, 0));
         assert_eq!((out[1].dc, out[1].model), (2, 1));
         for g in &out {
-            for r in &g.requests {
-                assert_eq!(r.model(), g.model, "request in wrong group");
+            for item in &g.items {
+                assert_eq!(
+                    item.req.model(),
+                    g.model,
+                    "request in wrong group"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tags_survive_flush_in_arrival_order() {
+        let mut b = batcher(100, Duration::from_secs(60), 1);
+        for tag in [7usize, 3, 11, 5] {
+            b.push(0, req(0), tag);
+        }
+        let out = b.flush_all();
+        assert_eq!(out.len(), 1);
+        let tags: Vec<usize> =
+            out[0].items.iter().map(|it| it.tag).collect();
+        assert_eq!(tags, vec![7, 3, 11, 5], "arrival order scrambled");
+        // seq is strictly increasing in arrival order
+        let seqs: Vec<u64> = out[0].items.iter().map(|it| it.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    // ------------------------------------------------------------------
+    // LLF ordering invariants
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn llf_releases_tight_slo_groups_before_loose_ones() {
+        // same site, both models, same (fresh) age: the 1 s SLO group must
+        // dispatch before the 4 s SLO group; FCFS keeps arrival order
+        let mk_groups = |b: &mut Batcher| -> Vec<Batch> {
+            b.push(0, req(1), 0); // model 1 (loose) arrives FIRST
+            b.push(0, req(0), 1); // model 0 (tight) second
+            b.flush_all()
+        };
+        let mut b = batcher(100, Duration::from_secs(60), 1);
+        let mut groups = mk_groups(&mut b);
+        dispatch_order(&mut groups, DispatchPolicy::Llf);
+        assert_eq!(
+            (groups[0].model, groups[1].model),
+            (0, 1),
+            "LLF must release the tight-SLO group first"
+        );
+        let mut b = batcher(100, Duration::from_secs(60), 1);
+        let mut groups = mk_groups(&mut b);
+        dispatch_order(&mut groups, DispatchPolicy::Fcfs);
+        assert_eq!(
+            (groups[0].model, groups[1].model),
+            (1, 0),
+            "FCFS must keep arrival order"
+        );
+    }
+
+    #[test]
+    fn laxity_ties_break_deterministically_on_arrival() {
+        // two same-model groups on different sites with identical service
+        // predictions: laxities tie exactly, arrival sequence decides
+        let lax = toy_laxity(2);
+        let mk = |dc: usize, first_seq: u64| Batch {
+            dc,
+            model: 0,
+            items: vec![],
+            first_seq,
+            min_laxity_s: lax.laxity_s(dc, 0, 0.0),
+        };
+        assert_eq!(
+            lax.laxity_s(0, 0, 0.0),
+            lax.laxity_s(1, 0, 0.0),
+            "test premise: exact laxity tie"
+        );
+        for _ in 0..3 {
+            let mut groups = vec![mk(1, 5), mk(0, 2)];
+            dispatch_order(&mut groups, DispatchPolicy::Llf);
+            assert_eq!(
+                (groups[0].dc, groups[1].dc),
+                (0, 1),
+                "tie must break on first arrival, deterministically"
+            );
+        }
+    }
+
+    #[test]
+    fn aged_loose_groups_overtake_fresh_tight_ones() {
+        // no starvation: laxity falls linearly with age, so a loose-SLO
+        // group that has queued past (slo_loose - slo_tight) outranks a
+        // fresh tight-SLO group
+        let lax = toy_laxity(1);
+        let fresh_tight = lax.laxity_s(0, 0, 0.0); // 1.0 - 0 - 0.05
+        let aged_loose = lax.laxity_s(0, 1, 3.2); // 4.0 - 3.2 - 0.05
+        assert!(
+            aged_loose < fresh_tight,
+            "aged loose group must become the more urgent one \
+             ({aged_loose} vs {fresh_tight})"
+        );
+        let mut groups = vec![
+            Batch {
+                dc: 0,
+                model: 0,
+                items: vec![],
+                first_seq: 10,
+                min_laxity_s: fresh_tight,
+            },
+            Batch {
+                dc: 0,
+                model: 1,
+                items: vec![],
+                first_seq: 0,
+                min_laxity_s: aged_loose,
+            },
+        ];
+        dispatch_order(&mut groups, DispatchPolicy::Llf);
+        assert_eq!(groups[0].model, 1, "starved loose group not promoted");
+    }
+
+    #[test]
+    fn laxity_model_from_config_matches_sched_predictions() {
+        let cfg = crate::config::SystemConfig::small_test();
+        let lax = LaxityModel::from_config(&cfg);
+        assert_eq!(lax.dcs(), cfg.datacenters.len());
+        assert_eq!(lax.models(), cfg.models.len());
+        for dc in 0..lax.dcs() {
+            for model in 0..lax.models() {
+                let want = cfg.models[model].ttft_slo_s
+                    - crate::sched::predicted_first_token_s(&cfg, dc, model);
+                assert_eq!(lax.laxity_s(dc, model, 0.0), want);
+                // laxity is strictly decreasing in age
+                assert!(
+                    lax.laxity_s(dc, model, 1.0)
+                        < lax.laxity_s(dc, model, 0.0)
+                );
             }
         }
     }

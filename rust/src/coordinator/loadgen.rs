@@ -1,0 +1,594 @@
+//! `slit loadgen`: drive a live coordinator's TCP front with synthetic
+//! traffic and report achieved throughput + latency percentiles.
+//!
+//! Two arrival disciplines, both over real sockets:
+//!
+//! - **Closed loop** (`--mode closed`): `conns` connections, each sending
+//!   its next payload only after the previous reply lands. Measures the
+//!   server's sustainable round-trip capacity; the offered load adapts to
+//!   the server, so it never reveals queueing collapse.
+//! - **Open loop** (`--mode open`): each connection pairs a writer thread
+//!   pacing payloads on Poisson (exponential-interarrival) schedule at the
+//!   requested aggregate rate with a reader thread draining replies.
+//!   Offered load is independent of server speed — the honest way to
+//!   measure tail latency at a target req/s. Whenever the writer falls
+//!   behind its own schedule it sends immediately and counts `behind`
+//!   (coordinated-omission signal, reported, never hidden).
+//!
+//! Request classes cycle deterministically over region x model, so the
+//! client knows each in-flight request's class and can build *per-class*
+//! TTFT histograms from the replies alone — which is what lets the bench
+//! rows compare LLF vs FCFS on slack-normalized (TTFT / SLO) tails.
+//!
+//! Replies are JSON-lines and strictly ordered per connection, so RTT
+//! pairing is a FIFO queue of send timestamps; a reply that never arrives
+//! within the read timeout is counted `dropped_replies` (the acceptance
+//! bar for the serve path is zero).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::config::{MODELS, REGIONS};
+use crate::util::histogram::LatencyHistogram;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How requests are offered to the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalMode {
+    /// Next payload waits for the previous reply (per connection).
+    Closed,
+    /// Payloads paced by a Poisson clock, independent of replies.
+    Open,
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub host: String,
+    pub port: u16,
+    pub mode: ArrivalMode,
+    /// Concurrent connections.
+    pub conns: usize,
+    /// Total requests to send (closed loop).
+    pub requests: usize,
+    /// Aggregate offered rate, requests/s (open loop).
+    pub rate_rps: f64,
+    /// Sending window, seconds (open loop).
+    pub duration_s: f64,
+    /// Requests per line: 1 = plain single-request lines, >1 = `batch`
+    /// ops (one reply line per payload either way).
+    pub batch: usize,
+    pub tok_in: u32,
+    pub tok_out: u32,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            host: "127.0.0.1".into(),
+            port: 7070,
+            mode: ArrivalMode::Closed,
+            conns: 8,
+            requests: 2_000,
+            rate_rps: 2_000.0,
+            duration_s: 2.0,
+            batch: 1,
+            tok_in: 128,
+            tok_out: 256,
+            seed: 7,
+        }
+    }
+}
+
+/// Everything one run observed. Request accounting is exhaustive:
+/// `ok + saturated + errors + dropped_replies == sent`.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    /// Requests written to sockets.
+    pub sent: u64,
+    /// Requests answered `ok: true`.
+    pub ok: u64,
+    /// Requests answered "all sites saturated".
+    pub saturated: u64,
+    /// Connections shed by bounded admission (`overloaded` reply).
+    pub overloaded_conns: u64,
+    /// Requests answered with any other structured error.
+    pub errors: u64,
+    /// Requests whose reply never arrived (timeout / early EOF).
+    pub dropped_replies: u64,
+    /// Open loop: payloads sent late because the writer fell behind its
+    /// own Poisson schedule (coordinated-omission signal).
+    pub behind: u64,
+    /// Wall time from first payload to last reply, seconds.
+    pub elapsed_s: f64,
+    /// Client-side round-trip time per payload line.
+    pub rtt: LatencyHistogram,
+    /// Server-reported TTFT per served request.
+    pub ttft: LatencyHistogram,
+    /// Server-reported TTFT per request class.
+    pub class_ttft: Vec<LatencyHistogram>,
+}
+
+impl LoadgenReport {
+    pub fn achieved_rps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            (self.ok + self.saturated) as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Share of sent requests that did not come back `ok`.
+    pub fn error_rate(&self) -> f64 {
+        if self.sent == 0 {
+            return 0.0;
+        }
+        (self.sent - self.ok) as f64 / self.sent as f64
+    }
+
+    fn merge(&mut self, other: &LoadgenReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.saturated += other.saturated;
+        self.overloaded_conns += other.overloaded_conns;
+        self.errors += other.errors;
+        self.dropped_replies += other.dropped_replies;
+        self.behind += other.behind;
+        self.elapsed_s = self.elapsed_s.max(other.elapsed_s);
+        self.rtt.merge(&other.rtt);
+        self.ttft.merge(&other.ttft);
+        if self.class_ttft.len() < other.class_ttft.len() {
+            self.class_ttft
+                .resize_with(other.class_ttft.len(), LatencyHistogram::new);
+        }
+        for (a, b) in self.class_ttft.iter_mut().zip(&other.class_ttft) {
+            a.merge(b);
+        }
+    }
+}
+
+/// Class of the `i`-th request in the global cycle: the mix covers every
+/// (region, model) pair uniformly and deterministically.
+fn class_of(i: usize) -> usize {
+    i % (REGIONS * MODELS)
+}
+
+/// One payload line covering requests `start..start+n` of the global
+/// cycle: a plain request line for n == 1, a `batch` op otherwise.
+fn payload_line(cfg: &LoadgenConfig, start: usize, n: usize) -> String {
+    let one = |i: usize| {
+        let k = class_of(i);
+        format!(
+            r#"{{"region": {}, "model": {}, "tok_in": {}, "tok_out": {}}}"#,
+            k / MODELS,
+            k % MODELS,
+            cfg.tok_in,
+            cfg.tok_out
+        )
+    };
+    if n == 1 {
+        one(start)
+    } else {
+        let items: Vec<String> = (start..start + n).map(one).collect();
+        format!(
+            r#"{{"op": "batch", "requests": [{}]}}"#,
+            items.join(", ")
+        )
+    }
+}
+
+/// Fold one reply line into the report. `start..start+n` are the request
+/// indices the payload carried (their classes are known by construction).
+fn record_reply(
+    report: &mut LoadgenReport,
+    reply: &Json,
+    start: usize,
+    n: usize,
+) {
+    let record_item = |report: &mut LoadgenReport, item: &Json, i: usize| {
+        match item.get("ok").and_then(Json::as_bool) {
+            Some(true) => {
+                report.ok += 1;
+                if let Some(ms) = item.get("ttft_ms").and_then(Json::as_f64)
+                {
+                    let k = class_of(i);
+                    report.ttft.record(ms * 1e-3);
+                    if k >= report.class_ttft.len() {
+                        report
+                            .class_ttft
+                            .resize_with(k + 1, LatencyHistogram::new);
+                    }
+                    report.class_ttft[k].record(ms * 1e-3);
+                }
+            }
+            _ => {
+                if item.get("error").and_then(Json::as_str)
+                    == Some("all sites saturated")
+                {
+                    report.saturated += 1;
+                } else {
+                    report.errors += 1;
+                }
+            }
+        }
+    };
+    if n == 1 {
+        record_item(report, reply, start);
+        return;
+    }
+    match reply.get("results").and_then(Json::as_arr) {
+        Some(items) if items.len() == n => {
+            for (j, item) in items.iter().enumerate() {
+                record_item(report, item, start + j);
+            }
+        }
+        // whole-batch structured error (or malformed reply): every
+        // request in the payload failed
+        _ => report.errors += n as u64,
+    }
+}
+
+/// Closed loop on one connection: send, await reply, repeat.
+fn closed_worker(
+    cfg: &LoadgenConfig,
+    payloads: usize,
+    first_index: usize,
+) -> anyhow::Result<LoadgenReport> {
+    let mut report = LoadgenReport::default();
+    let stream = TcpStream::connect((cfg.host.as_str(), cfg.port))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let t0 = Instant::now();
+    let mut index = first_index;
+    for _ in 0..payloads {
+        let line = payload_line(cfg, index, cfg.batch);
+        let sent_at = Instant::now();
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        report.sent += cfg.batch as u64;
+        let mut reply = String::new();
+        match reader.read_line(&mut reply) {
+            Ok(n) if n > 0 => {}
+            _ => {
+                // timeout or EOF: this payload (and everything after on
+                // this connection) never got its reply
+                report.dropped_replies += cfg.batch as u64;
+                break;
+            }
+        }
+        report.rtt.record(sent_at.elapsed().as_secs_f64());
+        match Json::parse(reply.trim()) {
+            Ok(j) => {
+                if j.get("error").and_then(Json::as_str)
+                    == Some("overloaded")
+                {
+                    // admission shed the whole connection, not a request
+                    report.sent -= cfg.batch as u64;
+                    report.overloaded_conns += 1;
+                    break;
+                }
+                record_reply(&mut report, &j, index, cfg.batch);
+            }
+            Err(_) => report.errors += cfg.batch as u64,
+        }
+        index += cfg.batch;
+    }
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Open loop on one connection: a Poisson-paced writer plus an in-thread
+/// reply drain (replies are read opportunistically between sends, then
+/// fully drained after the sending window closes — payload order is
+/// preserved either way because the protocol is FIFO per connection).
+fn open_worker(
+    cfg: &LoadgenConfig,
+    conn_id: usize,
+    first_index: usize,
+) -> anyhow::Result<LoadgenReport> {
+    let mut report = LoadgenReport::default();
+    let stream = TcpStream::connect((cfg.host.as_str(), cfg.port))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader_stream = stream.try_clone()?;
+    reader_stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .ok();
+
+    // payload schedule for this connection's slice of the aggregate rate
+    let line_rate =
+        (cfg.rate_rps / cfg.conns as f64 / cfg.batch as f64).max(1e-9);
+    let mut rng = Rng::new(cfg.seed ^ 0x10AD).fork(conn_id as u64);
+
+    // reader thread: drain replies as they come, pair FIFO with send times
+    let batch = cfg.batch;
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Instant)>();
+    let reader_thread = std::thread::Builder::new()
+        .name(format!("loadgen-read-{conn_id}"))
+        .spawn(move || {
+            let mut r = LoadgenReport::default();
+            let mut reader = BufReader::new(reader_stream);
+            // one reply expected per queued send record
+            while let Ok((index, sent_at)) = rx.recv() {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(n) if n > 0 => {}
+                    _ => {
+                        r.dropped_replies += batch as u64;
+                        // connection is dead: everything still queued is
+                        // dropped too
+                        while rx.recv().is_ok() {
+                            r.dropped_replies += batch as u64;
+                        }
+                        return r;
+                    }
+                }
+                r.rtt.record(sent_at.elapsed().as_secs_f64());
+                match Json::parse(line.trim()) {
+                    Ok(j) => {
+                        if j.get("error").and_then(Json::as_str)
+                            == Some("overloaded")
+                        {
+                            r.overloaded_conns += 1;
+                            r.dropped_replies += batch as u64;
+                            while rx.recv().is_ok() {
+                                r.dropped_replies += batch as u64;
+                            }
+                            return r;
+                        }
+                        record_reply(&mut r, &j, index, batch);
+                    }
+                    Err(_) => r.errors += batch as u64,
+                }
+            }
+            r
+        })?;
+
+    // writer: pace lines on the exponential clock for the window
+    let t0 = Instant::now();
+    let window = Duration::from_secs_f64(cfg.duration_s);
+    let mut next_at = t0;
+    let mut index = first_index;
+    while t0.elapsed() < window {
+        let now = Instant::now();
+        if now < next_at {
+            std::thread::sleep(next_at - now);
+        } else if now.duration_since(next_at) > Duration::from_millis(1) {
+            // behind schedule: send immediately, count it
+            report.behind += 1;
+        }
+        let line = payload_line(cfg, index, cfg.batch);
+        let sent_at = Instant::now();
+        if writer.write_all(line.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+        report.sent += cfg.batch as u64;
+        let _ = tx.send((index, sent_at));
+        index += cfg.batch;
+        next_at += Duration::from_secs_f64(rng.exponential(line_rate));
+    }
+    drop(tx); // reader drains what's in flight, then returns
+    let _ = writer.flush();
+    let reader_report = reader_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("loadgen reader panicked"))?;
+    report.merge(&reader_report);
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Run the configured load against a live server and aggregate every
+/// connection's observations.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
+    anyhow::ensure!(cfg.conns > 0, "loadgen needs at least one connection");
+    anyhow::ensure!(cfg.batch > 0, "batch must be >= 1");
+    let conns = cfg.conns;
+    let handles: Vec<_> = (0..conns)
+        .map(|t| {
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("loadgen-{t}"))
+                .spawn(move || match cfg.mode {
+                    ArrivalMode::Closed => {
+                        // distribute payloads across connections; request
+                        // indices interleave so every connection carries
+                        // the full class mix
+                        let total = cfg.requests / cfg.batch.max(1);
+                        let payloads =
+                            total / conns + usize::from(t < total % conns);
+                        closed_worker(&cfg, payloads, t * cfg.batch)
+                    }
+                    ArrivalMode::Open => open_worker(&cfg, t, t * cfg.batch),
+                })
+                .expect("spawn loadgen worker")
+        })
+        .collect();
+    let mut report = LoadgenReport::default();
+    let mut failures = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(r)) => report.merge(&r),
+            Ok(Err(e)) => failures.push(e.to_string()),
+            Err(_) => failures.push("worker panicked".into()),
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "loadgen connections failed: {}",
+        failures.join("; ")
+    );
+    Ok(report)
+}
+
+/// Render the human-readable summary `slit loadgen` prints.
+pub fn format_report(cfg: &LoadgenConfig, r: &LoadgenReport) -> String {
+    let mut out = String::new();
+    let mode = match cfg.mode {
+        ArrivalMode::Closed => "closed",
+        ArrivalMode::Open => "open",
+    };
+    out.push_str(&format!(
+        "loadgen: mode={mode} conns={} batch={} sent={} elapsed={:.2}s\n",
+        cfg.conns, cfg.batch, r.sent, r.elapsed_s
+    ));
+    out.push_str(&format!(
+        "  achieved {:.0} req/s | ok {} | saturated {} | errors {} | \
+         dropped {} | shed-conns {} | behind {}\n",
+        r.achieved_rps(),
+        r.ok,
+        r.saturated,
+        r.errors,
+        r.dropped_replies,
+        r.overloaded_conns,
+        r.behind
+    ));
+    out.push_str(&format!(
+        "  rtt  p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms\n",
+        r.rtt.p50() * 1e3,
+        r.rtt.p95() * 1e3,
+        r.rtt.p99() * 1e3
+    ));
+    out.push_str(&format!(
+        "  ttft p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms\n",
+        r.ttft.p50() * 1e3,
+        r.ttft.p95() * 1e3,
+        r.ttft.p99() * 1e3
+    ));
+    for (k, h) in r.class_ttft.iter().enumerate() {
+        if h.count() == 0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  class {k} (region {}, model {}): n={} p50 {:.2} ms \
+             p99 {:.2} ms\n",
+            k / MODELS,
+            k % MODELS,
+            h.count(),
+            h.p50() * 1e3,
+            h.p99() * 1e3
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::coordinator::{
+        serve_forever, Coordinator, CoordinatorConfig,
+    };
+    use std::sync::Arc;
+
+    fn boot() -> (Arc<Coordinator>, u16, super::super::ServeHandle) {
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        let ccfg = CoordinatorConfig {
+            plan_budget_s: 0.2,
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg, ccfg, None);
+        let handle = serve_forever(Arc::clone(&c), 0).unwrap();
+        let port = handle.port;
+        (c, port, handle)
+    }
+
+    fn shutdown(port: u16, handle: super::super::ServeHandle) {
+        let mut cl =
+            crate::coordinator::DrillClient::connect("127.0.0.1", port)
+                .unwrap();
+        let mut msg = Json::obj();
+        msg.set("op", Json::Str("shutdown".into()));
+        let _ = cl.call(&msg);
+        handle.thread.join().unwrap();
+    }
+
+    #[test]
+    fn class_cycle_covers_the_full_mix() {
+        let classes: std::collections::BTreeSet<usize> =
+            (0..REGIONS * MODELS).map(class_of).collect();
+        assert_eq!(classes.len(), REGIONS * MODELS);
+        assert_eq!(class_of(REGIONS * MODELS), class_of(0));
+    }
+
+    #[test]
+    fn payload_lines_are_valid_protocol() {
+        let cfg = LoadgenConfig::default();
+        let single = Json::parse(&payload_line(&cfg, 3, 1)).unwrap();
+        assert!(single.get("region").is_some());
+        assert!(single.get("op").is_none());
+        let batch = Json::parse(&payload_line(&cfg, 0, 4)).unwrap();
+        assert_eq!(batch.get("op").and_then(Json::as_str), Some("batch"));
+        assert_eq!(
+            batch
+                .get("requests")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .len(),
+            4
+        );
+    }
+
+    #[test]
+    fn closed_loop_accounts_every_request() {
+        let (_c, port, handle) = boot();
+        let cfg = LoadgenConfig {
+            port,
+            conns: 3,
+            requests: 90,
+            batch: 3,
+            ..Default::default()
+        };
+        let r = run_loadgen(&cfg).unwrap();
+        assert_eq!(r.sent, 90);
+        assert_eq!(
+            r.ok + r.saturated + r.errors + r.dropped_replies,
+            r.sent,
+            "request mass not conserved"
+        );
+        assert_eq!(r.dropped_replies, 0);
+        assert_eq!(r.errors, 0);
+        assert!(r.ok > 0);
+        assert!(r.rtt.count() > 0);
+        assert!(r.ttft.p99() >= r.ttft.p50());
+        // the class mix reached every (region, model) pair
+        assert_eq!(
+            r.class_ttft.iter().filter(|h| h.count() > 0).count(),
+            REGIONS * MODELS
+        );
+        shutdown(port, handle);
+    }
+
+    #[test]
+    fn open_loop_reports_offered_vs_achieved() {
+        let (_c, port, handle) = boot();
+        let cfg = LoadgenConfig {
+            port,
+            mode: ArrivalMode::Open,
+            conns: 2,
+            rate_rps: 400.0,
+            duration_s: 0.5,
+            batch: 2,
+            ..Default::default()
+        };
+        let r = run_loadgen(&cfg).unwrap();
+        assert!(r.sent > 0, "open loop sent nothing");
+        assert_eq!(
+            r.ok + r.saturated + r.errors + r.dropped_replies,
+            r.sent
+        );
+        assert_eq!(r.dropped_replies, 0);
+        assert!(r.elapsed_s >= 0.5);
+        assert!(r.achieved_rps() > 0.0);
+        shutdown(port, handle);
+    }
+}

@@ -16,13 +16,20 @@
 
 mod batcher;
 mod drill;
+mod loadgen;
 mod router;
 mod server;
 
-pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use batcher::{
+    dispatch_order, Batch, BatchItem, Batcher, BatcherConfig, DispatchPolicy,
+    LaxityModel,
+};
 pub use drill::{run_drill, DrillClient, DrillConfig, DrillReport};
+pub use loadgen::{
+    format_report, run_loadgen, ArrivalMode, LoadgenConfig, LoadgenReport,
+};
 pub use router::{RouteOutcome, Router};
-pub use server::{serve_forever, ServeHandle};
+pub use server::{serve_forever, serve_with, ServeHandle, ServerConfig};
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -38,6 +45,7 @@ use crate::predictor::WorkloadPredictor;
 use crate::runtime::{Engine, HloPlanEvaluator};
 use crate::sched::LocalScheduler;
 use crate::trace::{ClassLoad, EpochLoad};
+use crate::util::histogram::LatencyHistogram;
 use crate::util::rng::Rng;
 use crate::util::stats::Welford;
 
@@ -68,12 +76,34 @@ impl Default for CoordinatorConfig {
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub ttft: Welford,
+    /// TTFT distribution (p50/p95/p99 in `stats`/`ledger` replies).
+    pub ttft_hist: LatencyHistogram,
+    /// Per-class TTFT distributions, k = region * MODELS + model
+    /// (grown on first record, so Default stays cheap).
+    pub class_ttft: Vec<LatencyHistogram>,
     pub served: u64,
     pub rejected: u64,
+    /// Connections turned away at the TCP front with a structured
+    /// `overloaded` reply (bounded admission, not silent drop).
+    pub overloaded: u64,
     pub batches: u64,
     pub batch_sizes: Welford,
     pub plan_refreshes: u64,
     pub ledger: EpochLedger,
+}
+
+impl Metrics {
+    /// Record one served TTFT into every aggregate (mean, overall
+    /// histogram, per-class histogram).
+    pub fn record_ttft(&mut self, class: usize, ttft_s: f64) {
+        self.ttft.push(ttft_s);
+        self.ttft_hist.record(ttft_s);
+        if class >= self.class_ttft.len() {
+            self.class_ttft
+                .resize_with(class + 1, LatencyHistogram::new);
+        }
+        self.class_ttft[class].record(ttft_s);
+    }
 }
 
 /// Shared state between the router, batcher flushers, and the epoch thread.
@@ -96,6 +126,13 @@ pub struct Coordinator {
     pub metrics: Mutex<Metrics>,
     engine: Option<Arc<Engine>>,
     rng: Mutex<Rng>,
+    /// Laxity inputs for LLF dispatch, precomputed once from the config.
+    laxity: LaxityModel,
+    /// Serializes whole epoch ticks. The epoch clock thread and the TCP
+    /// `tick` op both call [`Coordinator::tick_epoch`]; without this, two
+    /// interleaved ticks each read the same epoch-0 on-times before either
+    /// reset capacity, double-accounting that epoch's energy.
+    tick_lock: Mutex<()>,
     stop: AtomicBool,
 }
 
@@ -131,6 +168,8 @@ impl Coordinator {
             metrics: Mutex::new(Metrics::default()),
             engine,
             rng: Mutex::new(Rng::new(cfg.seed ^ 0xC0)),
+            laxity: LaxityModel::from_config(&cfg),
+            tick_lock: Mutex::new(()),
             stop: AtomicBool::new(false),
             cfg,
             ccfg,
@@ -217,7 +256,7 @@ impl Coordinator {
             };
             if let Some(p) = placed {
                 let mut m = self.metrics.lock().expect("metrics");
-                m.ttft.push(p.ttft_s);
+                m.record_ttft(class, p.ttft_s);
                 m.served += 1;
                 return Some((l, p.ttft_s));
             }
@@ -228,10 +267,12 @@ impl Coordinator {
     }
 
     /// Handle a group of requests as one dynamic batch: route each request,
-    /// group per (site, model) via [`Batcher`], then place every group under
-    /// a single local-scheduler critical section. This is the router-side
-    /// batching that keeps lock contention flat at high request rates; the
-    /// TCP front exposes it as `{"op": "batch", ...}`.
+    /// group per (site, model) via [`Batcher`], order the groups by the
+    /// configured [`DispatchPolicy`] (LLF by default — most urgent group
+    /// commits site capacity first), then place every group under a single
+    /// local-scheduler critical section. This is the router-side batching
+    /// that keeps lock contention flat at high request rates; the TCP front
+    /// exposes it as `{"op": "batch", ...}`.
     ///
     /// Returns one `Option<(site, ttft_s)>` per request, in input order.
     pub fn handle_batch(
@@ -239,11 +280,12 @@ impl Coordinator {
         requests: &[(usize, usize, u32, u32)], // (region, model, in, out)
     ) -> Vec<Option<(usize, f64)>> {
         let plan = self.current_plan();
-        let mut batcher = Batcher::new(
-            self.ccfg.batcher,
-            self.cfg.datacenters.len(),
-            MODELS,
-        );
+        // A fresh batcher per call means the age cap can never fire on this
+        // path — every group drains through size caps + flush_all below.
+        // The cap exists for long-lived streaming batchers; pinned by
+        // batch_age_cap_is_inert_in_handle_batch.
+        let mut batcher =
+            Batcher::new(self.ccfg.batcher, self.laxity.clone());
         // route + accumulate; remember each request's batch destination
         let mut routed: Vec<(usize, crate::trace::Request)> =
             Vec::with_capacity(requests.len());
@@ -267,44 +309,33 @@ impl Coordinator {
         }
         let mut results: Vec<Option<(usize, f64)>> =
             vec![None; requests.len()];
-        // push through the batcher; flush groups as they fill, then drain
-        let mut pending_groups: Vec<Batch> = Vec::new();
-        for &(dc, req) in &routed {
-            if let Some(b) = batcher.push(dc, req) {
-                pending_groups.push(b);
+        // push through the batcher tagged with the caller's index — each
+        // item carries its own result slot, so dispatch may reorder groups
+        // freely without any placed-to-submitted back-mapping
+        let mut groups: Vec<Batch> = Vec::new();
+        for (i, &(dc, req)) in routed.iter().enumerate() {
+            if let Some(b) = batcher.push(dc, req, i) {
+                groups.push(b);
             }
         }
-        pending_groups.extend(batcher.flush_all());
+        groups.extend(batcher.flush_all());
+        dispatch_order(&mut groups, batcher.policy());
 
         let mut batch_count = 0u64;
-        let mut cursor: std::collections::HashMap<(usize, usize), usize> =
-            std::collections::HashMap::new();
-        for group in &pending_groups {
+        for group in &groups {
             batch_count += 1;
             // one critical section per group
             let mut ls = self.locals[group.dc].lock().expect("local");
             let mut rng = self.rng.lock().expect("rng");
-            for req in &group.requests {
-                let hops = self.cfg.hops(req.region(), group.dc);
+            for item in &group.items {
+                let hops = self.cfg.hops(item.req.region(), group.dc);
                 let is_warm = !rng.chance(self.cfg.physics.cold_frac);
-                let placed = ls.place(&self.cfg, req, hops, is_warm);
-                // map back to the original position (requests are unique by
-                // (dc, model) arrival order); a failed placement leaves the
-                // slot None for the failover pass below
-                let key = (group.dc, req.model());
-                let start = *cursor.get(&key).unwrap_or(&0);
-                for (i, &(rdc, rreq)) in routed.iter().enumerate().skip(start)
+                if let Some(p) =
+                    ls.place(&self.cfg, &item.req, hops, is_warm)
                 {
-                    if rdc == group.dc
-                        && rreq.model() == req.model()
-                        && results[i].is_none()
-                    {
-                        cursor.insert(key, i + 1);
-                        if let Some(p) = placed {
-                            results[i] = Some((group.dc, p.ttft_s));
-                        }
-                        break;
-                    }
+                    // a failed placement leaves the slot None for the
+                    // failover pass below
+                    results[item.tag] = Some((group.dc, p.ttft_s));
                 }
             }
         }
@@ -344,13 +375,15 @@ impl Coordinator {
         {
             let mut m = self.metrics.lock().expect("metrics");
             m.batches += batch_count;
-            for group in &pending_groups {
-                m.batch_sizes.push(group.requests.len() as f64);
+            for group in &groups {
+                m.batch_sizes.push(group.items.len() as f64);
             }
             m.served += served;
             m.rejected += rejected;
-            for r in results.iter().flatten() {
-                m.ttft.push(r.1);
+            for (i, r) in results.iter().enumerate() {
+                if let Some((_, ttft_s)) = r {
+                    m.record_ttft(routed[i].1.class, *ttft_s);
+                }
             }
         }
         results
@@ -361,14 +394,23 @@ impl Coordinator {
     /// against the live [`ClusterState`] rather than the frozen config, so
     /// serve-time topology changes take effect at the next tick.
     pub fn tick_epoch(&self) {
+        // Whole-tick serialization: the epoch clock thread and the TCP
+        // `tick` op race here, and an interleaved pair used to read the
+        // same on-times twice before either reset capacity — the ledger
+        // double-counted that epoch's energy (pinned by
+        // racing_ticks_account_energy_exactly_once).
+        let _tick = self.tick_lock.lock().expect("tick lock");
         let epoch = self.epoch.fetch_add(1, Ordering::SeqCst);
         let state = self.cluster_snapshot();
 
         // --- account the epoch that just finished -------------------------
+        // Gather per-site energy first, one site lock at a time; the
+        // metrics lock is taken only afterwards. Request paths lock a site
+        // then metrics, so holding metrics while acquiring sites (as this
+        // loop previously did) inverts that order.
         let (ci, wi, tou) = self.signals.at(epoch);
-        {
-            let mut m = self.metrics.lock().expect("metrics");
-            for (l, spec) in self.cfg.datacenters.iter().enumerate() {
+        let site_e_it: Vec<f64> = (0..self.cfg.datacenters.len())
+            .map(|l| {
                 let ls = self.locals[l].lock().expect("local");
                 let live = state.nodes(l);
                 let mut e_it = 0.0;
@@ -383,8 +425,14 @@ impl Coordinator {
                         * nt.tdp_w
                         * self.cfg.physics.epoch_s;
                 }
+                e_it
+            })
+            .collect();
+        {
+            let mut m = self.metrics.lock().expect("metrics");
+            for (l, spec) in self.cfg.datacenters.iter().enumerate() {
                 m.ledger.add_site(
-                    e_it,
+                    site_e_it[l],
                     spec.cop,
                     tou[l],
                     self.cfg.physics.h_water,
@@ -543,6 +591,53 @@ mod tests {
         assert_eq!(m.served, served);
         assert!(m.ttft.count() == served as u64);
         assert!(m.ttft.mean() > 0.0);
+        // the histogram sees the same stream as the Welford mean
+        assert_eq!(m.ttft_hist.count(), served as u64);
+        assert!((m.ttft_hist.mean() - m.ttft.mean()).abs() < 1e-12);
+        assert!(m.ttft_hist.p50() <= m.ttft_hist.p99());
+        // every exercised class has its own histogram, and they partition
+        // the overall count
+        let class_total: u64 =
+            m.class_ttft.iter().map(|h| h.count()).sum();
+        assert_eq!(class_total, served as u64);
+        assert!(m.class_ttft.iter().filter(|h| h.count() > 0).count() > 1);
+    }
+
+    #[test]
+    fn racing_ticks_account_energy_exactly_once() {
+        // identical coordinators, identical load; `a` ticks twice
+        // sequentially, `b`'s two ticks race from two threads. Accounting
+        // is deterministic given the same served load (energy depends only
+        // on epoch-0 on-times and live nodes; epoch-1 is idle), so the
+        // ledgers must agree exactly. Before ticks were serialized, the
+        // interleaving read the same on-times twice and double-counted.
+        let a = coordinator();
+        let b = coordinator();
+        for i in 0..50 {
+            a.handle(i % 4, 0, 64, 100);
+            b.handle(i % 4, 0, 64, 100);
+        }
+        a.tick_epoch();
+        a.tick_epoch();
+        let t1 = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.tick_epoch())
+        };
+        let t2 = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || b.tick_epoch())
+        };
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(b.current_epoch(), 2);
+        let (ma, mb) = (a.metrics_snapshot(), b.metrics_snapshot());
+        assert_eq!(
+            ma.ledger.e_it_j, mb.ledger.e_it_j,
+            "racing ticks double-counted IT energy"
+        );
+        assert_eq!(ma.ledger.e_tot_j, mb.ledger.e_tot_j);
+        assert_eq!(ma.ledger.carbon_kg, mb.ledger.carbon_kg);
+        assert_eq!(ma.ledger.water_l, mb.ledger.water_l);
     }
 
     #[test]
@@ -719,5 +814,64 @@ mod batch_tests {
         // TTFTs should be in the same ballpark
         let ratio = m1.ttft.mean() / m2.ttft.mean();
         assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn batch_age_cap_is_inert_in_handle_batch() {
+        // handle_batch builds a fresh batcher per call, so max_wait can
+        // never expire on this path — flush_all is what drains the tail.
+        // Pin that: an absurd age cap must neither strand nor stall
+        // requests.
+        let mut cfg = SystemConfig::small_test();
+        cfg.opt.generations = 2;
+        cfg.opt.population = 8;
+        let ccfg = CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_wait: std::time::Duration::from_secs(3600),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let c = Coordinator::new(cfg, ccfg, None);
+        let reqs: Vec<(usize, usize, u32, u32)> =
+            (0..40).map(|i| (i % 4, i % 2, 64, 128)).collect();
+        let t0 = std::time::Instant::now();
+        let out = c.handle_batch(&reqs);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(60),
+            "handle_batch waited on the age cap"
+        );
+        assert_eq!(out.iter().flatten().count(), 40);
+    }
+
+    #[test]
+    fn fcfs_ablation_serves_the_same_mass_as_llf() {
+        let mk = |policy: DispatchPolicy| {
+            let mut cfg = SystemConfig::small_test();
+            cfg.opt.generations = 2;
+            cfg.opt.population = 8;
+            let ccfg = CoordinatorConfig {
+                batcher: BatcherConfig {
+                    policy,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            Coordinator::new(cfg, ccfg, None)
+        };
+        let reqs: Vec<(usize, usize, u32, u32)> =
+            (0..120).map(|i| (i % 4, i % 2, 64, 128)).collect();
+        let llf = mk(DispatchPolicy::Llf);
+        let fcfs = mk(DispatchPolicy::Fcfs);
+        let out_llf = llf.handle_batch(&reqs);
+        let out_fcfs = fcfs.handle_batch(&reqs);
+        // dispatch order changes who pays queue delay, never who is served
+        assert_eq!(
+            out_llf.iter().flatten().count(),
+            out_fcfs.iter().flatten().count()
+        );
+        let (m1, m2) = (llf.metrics_snapshot(), fcfs.metrics_snapshot());
+        assert_eq!(m1.served, m2.served);
+        assert_eq!(m1.ttft_hist.count(), m2.ttft_hist.count());
     }
 }

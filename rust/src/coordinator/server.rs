@@ -7,9 +7,12 @@
 //!       "epoch": 3}
 //!   <- {"ok": false, "error": "..."}
 //! Special ops:
-//!   -> {"op": "stats"}    <- serving metrics snapshot
+//!   -> {"op": "stats"}    <- serving metrics snapshot (incl. overall and
+//!                            per-class TTFT p50/p95/p99)
 //!   -> {"op": "plan"}     <- current routing plan (per-class rows)
-//!   -> {"op": "batch"}    <- route/place a request group as one batch
+//!   -> {"op": "batch"}    <- route/place a request group as one batch;
+//!                            each item uses the same reply object as a
+//!                            single request (dc, dc_index, ttft_ms, epoch)
 //!   -> {"op": "snapshot"} <- live cluster topology (per-site node counts)
 //!   -> {"op": "ledger"}   <- cumulative sustainability ledger
 //!   -> {"op": "cluster"}  <- apply a ClusterAction (outage drills);
@@ -21,18 +24,71 @@
 //! non-UTF-8 line — gets a structured {"ok": false, "error": ...} reply;
 //! the connection is never silently dropped on client error.
 //!
-//! std::net + a thread per connection (bounded by the acceptor): the
-//! offline image has no tokio, and the router critical section is
-//! microseconds, so blocking IO threads are a faithful stand-in.
+//! Architecture (std::net; the offline image has no tokio): one
+//! nonblocking acceptor feeds a bounded admission queue drained by N
+//! sharded worker threads, each multiplexing its adopted connections with
+//! nonblocking reads/writes. Admission is explicit: past `max_conns` live
+//! connections the acceptor answers
+//! {"ok": false, "error": "overloaded", "retry_ms": ..} and closes,
+//! instead of spawning an unbounded thread per connection — under a
+//! connection flood the coordinator sheds load with a structured reply
+//! rather than exhausting threads. Transient accept errors (aborted
+//! handshakes, fd pressure) retry with capped backoff; only genuinely
+//! fatal listener errors stop the acceptor.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::cluster::ClusterAction;
 use crate::util::json::Json;
 
 use super::Coordinator;
+
+/// A client line longer than this is a protocol violation, answered with a
+/// structured error before the connection closes.
+const MAX_LINE_BYTES: usize = 1 << 20;
+/// A reader this far behind on replies is dead weight; drop it.
+const MAX_WBUF_BYTES: usize = 4 << 20;
+const READ_CHUNK: usize = 16 * 1024;
+
+/// TCP front tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Worker threads draining the admission queue. 0 = auto
+    /// (available parallelism, clamped to 2..=8).
+    pub workers: usize,
+    /// Live-connection bound; connections past it get the `overloaded`
+    /// reply instead of service.
+    pub max_conns: usize,
+    /// Client back-off hint carried in the `overloaded` reply, ms.
+    pub retry_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 0,
+            max_conns: 1024,
+            retry_ms: 25,
+        }
+    }
+}
+
+impl ServerConfig {
+    fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 8)
+    }
+}
 
 /// Handle returned by [`serve_forever`]'s spawner.
 pub struct ServeHandle {
@@ -40,42 +96,55 @@ pub struct ServeHandle {
     pub thread: std::thread::JoinHandle<()>,
 }
 
-/// Bind `port` (0 = ephemeral) and serve until the coordinator is stopped.
-/// Returns once the listener is ready; serving continues on a thread.
+/// Accepted connections waiting for a worker, plus the live-connection
+/// count that bounds admission.
+struct Admission {
+    queue: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    live: AtomicUsize,
+}
+
+/// Bind `port` (0 = ephemeral) and serve until the coordinator is stopped,
+/// with default tuning. Returns once the listener is ready; serving
+/// continues on background threads (the returned handle joins them all).
 pub fn serve_forever(
     coordinator: Arc<Coordinator>,
     port: u16,
 ) -> anyhow::Result<ServeHandle> {
+    serve_with(coordinator, port, ServerConfig::default())
+}
+
+/// [`serve_forever`] with explicit [`ServerConfig`] tuning.
+pub fn serve_with(
+    coordinator: Arc<Coordinator>,
+    port: u16,
+    scfg: ServerConfig,
+) -> anyhow::Result<ServeHandle> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let actual_port = listener.local_addr()?.port();
     listener.set_nonblocking(true)?;
+    let adm = Arc::new(Admission {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        live: AtomicUsize::new(0),
+    });
+    let n_workers = scfg.resolved_workers();
     let thread = std::thread::Builder::new()
         .name("slit-acceptor".into())
         .spawn(move || {
-            let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-            loop {
-                if coordinator.stopped() {
-                    break;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let c = Arc::clone(&coordinator);
-                        workers.push(
-                            std::thread::Builder::new()
-                                .name("slit-conn".into())
-                                .spawn(move || handle_conn(c, stream))
-                                .expect("spawn conn"),
-                        );
-                        workers.retain(|w| !w.is_finished());
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(
-                            5,
-                        ));
-                    }
-                    Err(_) => break,
-                }
-            }
+            let workers: Vec<_> = (0..n_workers)
+                .map(|i| {
+                    let c = Arc::clone(&coordinator);
+                    let a = Arc::clone(&adm);
+                    std::thread::Builder::new()
+                        .name(format!("slit-worker-{i}"))
+                        .spawn(move || worker_loop(c, a))
+                        .expect("spawn worker")
+                })
+                .collect();
+            accept_loop(&coordinator, &listener, &adm, &scfg);
+            // wake any worker parked on the empty queue so it observes stop
+            adm.cv.notify_all();
             for w in workers {
                 let _ = w.join();
             }
@@ -86,41 +155,246 @@ pub fn serve_forever(
     })
 }
 
-fn handle_conn(c: Arc<Coordinator>, stream: TcpStream) {
-    stream
-        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
-        .ok();
-    // request/reply lines are tiny: Nagle + delayed-ACK would add ~40 ms
-    // per round trip (measured in §Perf; 86 -> >2000 req/s after)
-    stream.set_nodelay(true).ok();
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut buf: Vec<u8> = Vec::new();
+/// Only listener-is-broken errors stop the acceptor; everything else is a
+/// per-connection or resource-pressure condition that a later accept can
+/// survive (the pre-rebuild acceptor broke on *any* non-WouldBlock error,
+/// so one aborted handshake could kill the whole server).
+fn accept_fatal(kind: std::io::ErrorKind) -> bool {
+    use std::io::ErrorKind::*;
+    matches!(kind, InvalidInput | Unsupported | AddrNotAvailable | NotConnected)
+}
+
+fn accept_loop(
+    c: &Arc<Coordinator>,
+    listener: &TcpListener,
+    adm: &Arc<Admission>,
+    scfg: &ServerConfig,
+) {
+    let mut backoff_ms = 1u64;
     loop {
-        buf.clear();
-        match reader.read_until(b'\n', &mut buf) {
-            Ok(0) | Err(_) => break, // EOF or socket error/timeout
-            Ok(_) => {}
+        if c.stopped() {
+            break;
         }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                backoff_ms = 1;
+                if adm.live.load(Ordering::SeqCst) >= scfg.max_conns {
+                    shed_connection(c, stream, scfg.retry_ms);
+                    continue;
+                }
+                adm.live.fetch_add(1, Ordering::SeqCst);
+                // request/reply lines are tiny: Nagle + delayed-ACK would
+                // add ~40 ms per round trip (measured in §Perf; 86 ->
+                // >2000 req/s after)
+                stream.set_nodelay(true).ok();
+                if stream.set_nonblocking(true).is_err() {
+                    adm.live.fetch_sub(1, Ordering::SeqCst);
+                    continue;
+                }
+                adm.queue.lock().expect("admission").push_back(stream);
+                adm.cv.notify_one();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if accept_fatal(e.kind()) => {
+                eprintln!("slit-acceptor: fatal accept error: {e}");
+                break;
+            }
+            Err(_) => {
+                // transient (aborted handshake, fd exhaustion, ...):
+                // capped exponential backoff, reset on the next success
+                std::thread::sleep(Duration::from_millis(backoff_ms));
+                backoff_ms = (backoff_ms * 2).min(100);
+            }
+        }
+    }
+}
+
+/// Bounded-admission refusal: a structured reply with a retry hint, then
+/// close. The accepted socket is still blocking here, so the one-line
+/// write completes synchronously.
+fn shed_connection(c: &Coordinator, mut stream: TcpStream, retry_ms: u64) {
+    let mut r = Json::obj();
+    r.set("ok", Json::Bool(false));
+    r.set("error", Json::Str("overloaded".into()));
+    r.set("retry_ms", Json::Num(retry_ms as f64));
+    let _ = writeln!(stream, "{r}");
+    c.metrics.lock().expect("metrics").overloaded += 1;
+}
+
+/// One multiplexed connection owned by a worker.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    /// Scan resume offset into `rbuf` (no rescans of a long partial line).
+    scan_from: usize,
+    wbuf: Vec<u8>,
+    /// Flush what's pending, then close (EOF seen or protocol violation).
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            scan_from: 0,
+            wbuf: Vec::new(),
+            closing: false,
+        }
+    }
+}
+
+/// Push pending reply bytes out. Returns (made progress, still alive).
+fn flush_wbuf(conn: &mut Conn) -> (bool, bool) {
+    let mut progress = false;
+    while !conn.wbuf.is_empty() {
+        match conn.stream.write(&conn.wbuf) {
+            Ok(0) => return (progress, false),
+            Ok(n) => {
+                conn.wbuf.drain(..n);
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return (progress, false),
+        }
+    }
+    (progress, true)
+}
+
+/// Drive one connection: flush replies, read what's arrived, answer every
+/// complete line. Returns (made progress, still alive).
+fn pump(c: &Coordinator, conn: &mut Conn) -> (bool, bool) {
+    let (mut progress, alive) = flush_wbuf(conn);
+    if !alive {
+        return (progress, false);
+    }
+    if conn.closing {
+        // drain-only mode: done once the reply buffer empties
+        return (progress, !conn.wbuf.is_empty());
+    }
+
+    // pull everything the socket has
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => {
+                conn.closing = true; // EOF: flush any pending reply, then go
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&chunk[..n]);
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return (progress, false),
+        }
+    }
+
+    // answer complete lines in one pass over the buffer
+    let mut consumed = 0usize;
+    while let Some(rel) = conn.rbuf[conn.scan_from..]
+        .iter()
+        .position(|&b| b == b'\n')
+    {
+        let end = conn.scan_from + rel;
         // raw bytes, not `lines()`: a non-UTF-8 line must produce a
-        // structured parse-error reply, not a silent disconnect (the
-        // lossy conversion feeds the JSON parser, which rejects the
-        // replacement characters with a reportable error)
-        let line = String::from_utf8_lossy(&buf);
+        // structured parse-error reply, not a silent disconnect (the lossy
+        // conversion feeds the JSON parser, which rejects the replacement
+        // characters with a reportable error)
+        let line = String::from_utf8_lossy(&conn.rbuf[consumed..end]);
         let line = line.trim();
+        consumed = end + 1;
+        conn.scan_from = consumed;
         if line.is_empty() {
             continue;
         }
-        let reply = respond(&c, line);
-        let stop = matches!(reply.get("stopping").and_then(Json::as_bool), Some(true));
-        if writeln!(writer, "{reply}").is_err() {
+        let reply = respond(c, line);
+        let stop = matches!(
+            reply.get("stopping").and_then(Json::as_bool),
+            Some(true)
+        );
+        conn.wbuf.extend_from_slice(reply.to_string().as_bytes());
+        conn.wbuf.push(b'\n');
+        progress = true;
+        if stop {
+            conn.closing = true;
             break;
         }
-        if stop || c.stopped() {
+    }
+    conn.rbuf.drain(..consumed);
+    conn.scan_from = conn.rbuf.len();
+
+    if conn.rbuf.len() > MAX_LINE_BYTES && !conn.closing {
+        let reply = error_reply("line exceeds 1 MiB");
+        conn.wbuf.extend_from_slice(reply.to_string().as_bytes());
+        conn.wbuf.push(b'\n');
+        conn.closing = true;
+    }
+    if conn.wbuf.len() > MAX_WBUF_BYTES {
+        return (progress, false); // reader too far behind
+    }
+
+    let (p2, alive) = flush_wbuf(conn);
+    (progress || p2, alive && !(conn.closing && conn.wbuf.is_empty()))
+}
+
+fn worker_loop(c: Arc<Coordinator>, adm: Arc<Admission>) {
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        // adopt queued connections: drain freely when idle, trickle when
+        // busy so a burst spreads across workers
+        {
+            let take = if conns.is_empty() { usize::MAX } else { 2 };
+            let mut q = adm.queue.lock().expect("admission");
+            if conns.is_empty() && q.is_empty() && !c.stopped() {
+                let (guard, _) = adm
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(10))
+                    .expect("admission");
+                q = guard;
+            }
+            for _ in 0..take {
+                match q.pop_front() {
+                    Some(s) => conns.push(Conn::new(s)),
+                    None => break,
+                }
+            }
+        }
+
+        let mut progress = false;
+        let mut i = 0;
+        while i < conns.len() {
+            let (p, alive) = pump(&c, &mut conns[i]);
+            progress |= p;
+            if alive {
+                i += 1;
+            } else {
+                conns.swap_remove(i);
+                adm.live.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+
+        if c.stopped() {
+            // bounded drain so in-flight replies (e.g. the shutdown ack
+            // on a sibling connection) reach their clients
+            let deadline = Instant::now() + Duration::from_millis(500);
+            while Instant::now() < deadline
+                && conns.iter().any(|cn| !cn.wbuf.is_empty())
+            {
+                for cn in &mut conns {
+                    let _ = flush_wbuf(cn);
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
             break;
+        }
+        if !progress && !conns.is_empty() {
+            std::thread::sleep(Duration::from_micros(300));
         }
     }
 }
@@ -146,6 +420,43 @@ fn index_field(msg: &Json, key: &str) -> Option<usize> {
     }
 }
 
+/// Token-count field: absent -> `default`; present must be a finite
+/// positive integer (≤ 1e6). Shared by the single-request and batch paths
+/// — they used to disagree (`as u32` on one, `.max(1.0)` on the other),
+/// so a NaN or negative count turned into garbage on exactly one of them.
+fn token_field(msg: &Json, key: &str, default: u32) -> Result<u32, String> {
+    let Some(v) = msg.get(key) else {
+        return Ok(default);
+    };
+    let Some(x) = v.as_f64() else {
+        return Err(format!("'{key}' must be a number"));
+    };
+    if !x.is_finite() || x < 1.0 || x.fract() != 0.0 {
+        return Err(format!("'{key}' must be a positive integer"));
+    }
+    if x > 1e6 {
+        return Err(format!("'{key}' exceeds 1e6 tokens"));
+    }
+    Ok(x as u32)
+}
+
+/// The one reply shape for a placed/rejected request, shared verbatim by
+/// the single-request path and every batch item.
+fn request_reply(c: &Coordinator, res: Option<(usize, f64)>) -> Json {
+    match res {
+        Some((dc, ttft_s)) => {
+            let mut r = Json::obj();
+            r.set("ok", Json::Bool(true));
+            r.set("dc", Json::Str(c.cfg.datacenters[dc].name.clone()));
+            r.set("dc_index", Json::Num(dc as f64));
+            r.set("ttft_ms", Json::Num(ttft_s * 1e3));
+            r.set("epoch", Json::Num(c.current_epoch() as f64));
+            r
+        }
+        None => error_reply("all sites saturated"),
+    }
+}
+
 /// Pure request -> reply mapping (unit-testable without sockets). Every
 /// input, however malformed, maps to exactly one reply object.
 pub fn respond(c: &Coordinator, line: &str) -> Json {
@@ -167,22 +478,7 @@ pub fn respond(c: &Coordinator, line: &str) -> Json {
 /// Dispatch a special `{"op": ...}` message.
 fn respond_op(c: &Coordinator, op: &str, parsed: &Json) -> Json {
     match op {
-        "stats" => {
-            let m = c.metrics_snapshot();
-            let mut r = Json::obj();
-            r.set("ok", Json::Bool(true));
-            r.set("served", Json::Num(m.served as f64));
-            r.set("rejected", Json::Num(m.rejected as f64));
-            r.set("plan_refreshes", Json::Num(m.plan_refreshes as f64));
-            r.set("ttft_mean_ms", Json::Num(m.ttft.mean() * 1e3));
-            r.set("ttft_max_ms", Json::Num(m.ttft.max() * 1e3));
-            r.set("carbon_kg", Json::Num(m.ledger.carbon_kg));
-            r.set("water_l", Json::Num(m.ledger.water_l));
-            r.set("cost_usd", Json::Num(m.ledger.cost_usd));
-            r.set("epoch", Json::Num(c.current_epoch() as f64));
-            r.set("backend", Json::Str(c.backend().into()));
-            return r;
-        }
+        "stats" => stats_reply(c),
         "plan" => {
             let plan = c.current_plan();
             let mut rows = Vec::new();
@@ -192,10 +488,10 @@ fn respond_op(c: &Coordinator, op: &str, parsed: &Json) -> Json {
             let mut r = Json::obj();
             r.set("ok", Json::Bool(true));
             r.set("plan", Json::Arr(rows));
-            return r;
+            r
         }
-        "snapshot" => return snapshot_reply(c),
-        "ledger" => return ledger_reply(c),
+        "snapshot" => snapshot_reply(c),
+        "ledger" => ledger_reply(c),
         "tick" => {
             // force an epoch boundary now: drills and tests drive the
             // epoch clock deterministically instead of waiting wall time
@@ -203,33 +499,31 @@ fn respond_op(c: &Coordinator, op: &str, parsed: &Json) -> Json {
             let mut r = Json::obj();
             r.set("ok", Json::Bool(true));
             r.set("epoch", Json::Num(c.current_epoch() as f64));
-            return r;
+            r
         }
-        "cluster" => {
-            return match parse_cluster_action(c, parsed) {
-                Ok(action) => {
-                    c.apply_cluster_action(&action);
-                    let mut r = Json::obj();
-                    r.set("ok", Json::Bool(true));
-                    r.set(
-                        "applied",
-                        parsed
-                            .get("action")
-                            .and_then(Json::as_str)
-                            .map(|a| Json::Str(a.into()))
-                            .unwrap_or(Json::Null),
-                    );
-                    // actions land on the live state immediately but the
-                    // plan/capacity only rebuild at the next tick
-                    r.set(
-                        "effective_epoch",
-                        Json::Num((c.current_epoch() + 1) as f64),
-                    );
-                    r
-                }
-                Err(msg) => error_reply(&msg),
-            };
-        }
+        "cluster" => match parse_cluster_action(c, parsed) {
+            Ok(action) => {
+                c.apply_cluster_action(&action);
+                let mut r = Json::obj();
+                r.set("ok", Json::Bool(true));
+                r.set(
+                    "applied",
+                    parsed
+                        .get("action")
+                        .and_then(Json::as_str)
+                        .map(|a| Json::Str(a.into()))
+                        .unwrap_or(Json::Null),
+                );
+                // actions land on the live state immediately but the
+                // plan/capacity only rebuild at the next tick
+                r.set(
+                    "effective_epoch",
+                    Json::Num((c.current_epoch() + 1) as f64),
+                );
+                r
+            }
+            Err(msg) => error_reply(&msg),
+        },
         "batch" => {
             // {"op":"batch","requests":[{"region":..,"model":..,...},..]}
             let Some(reqs) = parsed.get("requests").and_then(Json::as_arr)
@@ -237,54 +531,92 @@ fn respond_op(c: &Coordinator, op: &str, parsed: &Json) -> Json {
                 return error_reply("batch needs 'requests'");
             };
             let mut batch = Vec::with_capacity(reqs.len());
-            for q in reqs {
+            for (i, q) in reqs.iter().enumerate() {
                 let region = index_field(q, "region").unwrap_or(usize::MAX);
                 let model = index_field(q, "model").unwrap_or(usize::MAX);
                 if region >= crate::config::REGIONS
                     || model >= crate::config::MODELS
                 {
-                    return error_reply("region/model out of range");
+                    return error_reply(&format!(
+                        "request {i}: region/model out of range"
+                    ));
                 }
-                batch.push((
-                    region,
-                    model,
-                    q.f64_or("tok_in", 128.0).max(1.0) as u32,
-                    q.f64_or("tok_out", 256.0).max(1.0) as u32,
-                ));
+                let tok_in = match token_field(q, "tok_in", 128) {
+                    Ok(t) => t,
+                    Err(e) => return error_reply(&format!("request {i}: {e}")),
+                };
+                let tok_out = match token_field(q, "tok_out", 256) {
+                    Ok(t) => t,
+                    Err(e) => return error_reply(&format!("request {i}: {e}")),
+                };
+                batch.push((region, model, tok_in, tok_out));
             }
             let results = c.handle_batch(&batch);
-            let mut arr = Vec::with_capacity(results.len());
-            for res in results {
-                let mut item = Json::obj();
-                match res {
-                    Some((dc, ttft_s)) => {
-                        item.set("ok", Json::Bool(true));
-                        item.set(
-                            "dc",
-                            Json::Str(c.cfg.datacenters[dc].name.clone()),
-                        );
-                        item.set("ttft_ms", Json::Num(ttft_s * 1e3));
-                    }
-                    None => {
-                        item.set("ok", Json::Bool(false));
-                    }
-                }
-                arr.push(item);
-            }
+            let arr = results
+                .into_iter()
+                .map(|res| request_reply(c, res))
+                .collect();
             let mut r = Json::obj();
             r.set("ok", Json::Bool(true));
             r.set("results", Json::Arr(arr));
-            return r;
+            r
         }
         "shutdown" => {
             c.stop();
             let mut r = Json::obj();
             r.set("ok", Json::Bool(true));
             r.set("stopping", Json::Bool(true));
-            return r;
+            r
         }
         other => error_reply(&format!("unknown op '{other}'")),
     }
+}
+
+/// `{"op": "stats"}` — serving metrics, now with overall and per-class
+/// TTFT percentiles from the log-bucketed histograms.
+fn stats_reply(c: &Coordinator) -> Json {
+    let m = c.metrics_snapshot();
+    let mut r = Json::obj();
+    r.set("ok", Json::Bool(true));
+    r.set("served", Json::Num(m.served as f64));
+    r.set("rejected", Json::Num(m.rejected as f64));
+    r.set("overloaded", Json::Num(m.overloaded as f64));
+    r.set("plan_refreshes", Json::Num(m.plan_refreshes as f64));
+    r.set("ttft_mean_ms", Json::Num(m.ttft.mean() * 1e3));
+    r.set("ttft_max_ms", Json::Num(m.ttft.max() * 1e3));
+    r.set("ttft_p50_ms", Json::Num(m.ttft_hist.p50() * 1e3));
+    r.set("ttft_p95_ms", Json::Num(m.ttft_hist.p95() * 1e3));
+    r.set("ttft_p99_ms", Json::Num(m.ttft_hist.p99() * 1e3));
+    let classes = m
+        .class_ttft
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.count() > 0)
+        .map(|(k, h)| {
+            let mut e = Json::obj();
+            e.set("class", Json::Num(k as f64));
+            e.set(
+                "region",
+                Json::Num((k / crate::config::MODELS) as f64),
+            );
+            e.set(
+                "model",
+                Json::Num((k % crate::config::MODELS) as f64),
+            );
+            e.set("count", Json::Num(h.count() as f64));
+            e.set("ttft_p50_ms", Json::Num(h.p50() * 1e3));
+            e.set("ttft_p95_ms", Json::Num(h.p95() * 1e3));
+            e.set("ttft_p99_ms", Json::Num(h.p99() * 1e3));
+            e
+        })
+        .collect();
+    r.set("classes", Json::Arr(classes));
+    r.set("carbon_kg", Json::Num(m.ledger.carbon_kg));
+    r.set("water_l", Json::Num(m.ledger.water_l));
+    r.set("cost_usd", Json::Num(m.ledger.cost_usd));
+    r.set("epoch", Json::Num(c.current_epoch() as f64));
+    r.set("backend", Json::Str(c.backend().into()));
+    r
 }
 
 /// `{"op": "snapshot"}` — the live cluster topology, per site.
@@ -327,8 +659,12 @@ fn ledger_reply(c: &Coordinator) -> Json {
     r.set("cost_usd", Json::Num(m.ledger.cost_usd));
     r.set("served", Json::Num(m.served as f64));
     r.set("rejected", Json::Num(m.rejected as f64));
+    r.set("overloaded", Json::Num(m.overloaded as f64));
     r.set("batches", Json::Num(m.batches as f64));
     r.set("ttft_mean_ms", Json::Num(m.ttft.mean() * 1e3));
+    r.set("ttft_p50_ms", Json::Num(m.ttft_hist.p50() * 1e3));
+    r.set("ttft_p95_ms", Json::Num(m.ttft_hist.p95() * 1e3));
+    r.set("ttft_p99_ms", Json::Num(m.ttft_hist.p99() * 1e3));
     r
 }
 
@@ -405,28 +741,15 @@ fn respond_request(c: &Coordinator, parsed: &Json) -> Json {
     if region >= crate::config::REGIONS || model >= crate::config::MODELS {
         return error_reply("region/model out of range");
     }
-    let tok_in = parsed.f64_or("tok_in", 128.0) as u32;
-    let tok_out = parsed.f64_or("tok_out", 256.0) as u32;
-    match c.handle(region, model, tok_in.max(1), tok_out.max(1)) {
-        Some((dc, ttft_s)) => {
-            let mut r = Json::obj();
-            r.set("ok", Json::Bool(true));
-            r.set(
-                "dc",
-                Json::Str(c.cfg.datacenters[dc].name.clone()),
-            );
-            r.set("dc_index", Json::Num(dc as f64));
-            r.set("ttft_ms", Json::Num(ttft_s * 1e3));
-            r.set("epoch", Json::Num(c.current_epoch() as f64));
-            r
-        }
-        None => {
-            let mut r = Json::obj();
-            r.set("ok", Json::Bool(false));
-            r.set("error", Json::Str("all sites saturated".into()));
-            r
-        }
-    }
+    let tok_in = match token_field(parsed, "tok_in", 128) {
+        Ok(t) => t,
+        Err(e) => return error_reply(&e),
+    };
+    let tok_out = match token_field(parsed, "tok_out", 256) {
+        Ok(t) => t,
+        Err(e) => return error_reply(&e),
+    };
+    request_reply(c, c.handle(region, model, tok_in, tok_out))
 }
 
 #[cfg(test)]
@@ -483,6 +806,59 @@ mod tests {
     }
 
     #[test]
+    fn token_validation_is_symmetric_across_paths() {
+        let c = coordinator();
+        // the same malformed token count must be rejected with a
+        // structured error on BOTH paths (the single path used to cast
+        // NaN/negatives straight to u32 while batch clamped them)
+        for bad in [
+            r#""tok_in": -5"#,
+            r#""tok_in": 1.5"#,
+            r#""tok_in": "many""#,
+            r#""tok_in": 0"#,
+            r#""tok_in": 1e9"#,
+            r#""tok_out": -1"#,
+        ] {
+            let single = respond(&c, &format!(r#"{{"region":0,"model":0,{bad}}}"#));
+            assert_eq!(
+                single.get("ok").and_then(Json::as_bool),
+                Some(false),
+                "single path accepted {bad}"
+            );
+            assert!(single.get("error").and_then(Json::as_str).is_some());
+            let batch = respond(
+                &c,
+                &format!(
+                    r#"{{"op":"batch","requests":[{{"region":0,"model":0,{bad}}}]}}"#
+                ),
+            );
+            assert_eq!(
+                batch.get("ok").and_then(Json::as_bool),
+                Some(false),
+                "batch path accepted {bad}"
+            );
+            assert!(
+                batch
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .starts_with("request 0:"),
+                "batch error must name the offending request"
+            );
+        }
+        // nothing slipped through to placement
+        assert_eq!(c.metrics_snapshot().served, 0);
+        // missing counts still default on both paths
+        let s = respond(&c, r#"{"region":0,"model":0}"#);
+        assert_eq!(s.get("ok").and_then(Json::as_bool), Some(true));
+        let b = respond(
+            &c,
+            r#"{"op":"batch","requests":[{"region":0,"model":0}]}"#,
+        );
+        assert_eq!(b.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
     fn respond_stats_and_plan() {
         let c = coordinator();
         respond(&c, r#"{"region": 0, "model": 0}"#);
@@ -495,6 +871,43 @@ mod tests {
         let p = respond(&c, r#"{"op": "plan"}"#);
         let rows = p.get("plan").and_then(Json::as_arr).unwrap();
         assert_eq!(rows.len(), c.cfg.num_classes());
+    }
+
+    #[test]
+    fn stats_reports_overall_and_per_class_percentiles() {
+        let c = coordinator();
+        for i in 0..80 {
+            respond(
+                &c,
+                &format!(r#"{{"region": {}, "model": {}}}"#, i % 4, i % 2),
+            );
+        }
+        let s = respond(&c, r#"{"op": "stats"}"#);
+        let f = |k: &str| s.get(k).and_then(Json::as_f64).unwrap();
+        assert!(f("ttft_p50_ms") > 0.0);
+        assert!(f("ttft_p50_ms") <= f("ttft_p95_ms"));
+        assert!(f("ttft_p95_ms") <= f("ttft_p99_ms"));
+        assert!(f("ttft_p99_ms") <= f("ttft_max_ms") + 1e-9);
+        let classes = s.get("classes").and_then(Json::as_arr).unwrap();
+        assert!(classes.len() > 1, "per-class table missing");
+        let total: f64 = classes
+            .iter()
+            .map(|e| e.get("count").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert_eq!(total, f("served"));
+        for e in classes {
+            let p50 = e.get("ttft_p50_ms").and_then(Json::as_f64).unwrap();
+            let p99 = e.get("ttft_p99_ms").and_then(Json::as_f64).unwrap();
+            assert!(p50 > 0.0 && p99 >= p50);
+            assert!(e.get("region").and_then(Json::as_f64).is_some());
+            assert!(e.get("model").and_then(Json::as_f64).is_some());
+        }
+        // the ledger reply carries the same overall percentiles
+        let l = respond(&c, r#"{"op": "ledger"}"#);
+        assert_eq!(
+            l.get("ttft_p99_ms").and_then(Json::as_f64),
+            s.get("ttft_p99_ms").and_then(Json::as_f64)
+        );
     }
 
     #[test]
@@ -518,6 +931,33 @@ mod tests {
         let m = c.metrics_snapshot();
         assert_eq!(m.served, 2);
         assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn batch_items_use_the_single_request_reply_schema() {
+        let c = coordinator();
+        let single = respond(&c, r#"{"region":0,"model":0}"#);
+        let batch = respond(
+            &c,
+            r#"{"op":"batch","requests":[{"region":0,"model":0}]}"#,
+        );
+        let item = &batch.get("results").and_then(Json::as_arr).unwrap()[0];
+        // batch items used to omit dc_index and epoch; now both paths emit
+        // the identical field set
+        for key in ["ok", "dc", "dc_index", "ttft_ms", "epoch"] {
+            assert!(
+                single.get(key).is_some(),
+                "single reply missing '{key}'"
+            );
+            assert!(item.get(key).is_some(), "batch item missing '{key}'");
+        }
+        assert!(
+            item.get("dc_index").and_then(Json::as_f64).unwrap() >= 0.0
+        );
+        assert_eq!(
+            item.get("epoch").and_then(Json::as_f64),
+            Some(c.current_epoch() as f64)
+        );
     }
 
     #[test]
@@ -547,6 +987,26 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap()
             .contains("'op' must be a string"));
+    }
+
+    #[test]
+    fn accept_error_classification() {
+        use std::io::ErrorKind::*;
+        // listener-is-broken: stop accepting
+        for k in [InvalidInput, Unsupported, AddrNotAvailable, NotConnected] {
+            assert!(accept_fatal(k), "{k:?} should be fatal");
+        }
+        // per-connection / resource pressure: retry with backoff (the old
+        // acceptor died on the first of any of these)
+        for k in [
+            ConnectionAborted,
+            ConnectionReset,
+            PermissionDenied,
+            TimedOut,
+            Other,
+        ] {
+            assert!(!accept_fatal(k), "{k:?} must not kill the acceptor");
+        }
     }
 
     #[test]
@@ -692,6 +1152,107 @@ mod tests {
         reader.read_line(&mut line2).unwrap();
         handle.thread.join().unwrap();
         assert!(c.stopped());
+    }
+
+    #[test]
+    fn tcp_pipelined_lines_in_one_segment_all_get_replies() {
+        use std::io::{BufRead, BufReader, Write};
+        let c = coordinator();
+        let handle = serve_forever(Arc::clone(&c), 0).unwrap();
+        let mut stream =
+            std::net::TcpStream::connect(("127.0.0.1", handle.port)).unwrap();
+        // many requests in one write: the worker must answer each line
+        let mut payload = String::new();
+        for i in 0..50 {
+            payload.push_str(&format!(
+                "{{\"region\": {}, \"model\": {}}}\n",
+                i % 4,
+                i % 2
+            ));
+        }
+        stream.write_all(payload.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for _ in 0..50 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let r = Json::parse(line.trim()).unwrap();
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        }
+        writeln!(stream, r#"{{"op": "shutdown"}}"#).unwrap();
+        let mut last = String::new();
+        reader.read_line(&mut last).unwrap();
+        handle.thread.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_connection_flood_gets_backpressure_not_collapse() {
+        use std::io::{BufRead, BufReader, Write};
+        let c = coordinator();
+        let handle = serve_with(
+            Arc::clone(&c),
+            0,
+            ServerConfig {
+                workers: 1,
+                max_conns: 2,
+                retry_ms: 7,
+            },
+        )
+        .unwrap();
+        // saturate admission with connections proven live via a round
+        // trip (so both are admitted before the flood starts)
+        let mut held = Vec::new();
+        for _ in 0..2 {
+            let mut s =
+                std::net::TcpStream::connect(("127.0.0.1", handle.port))
+                    .unwrap();
+            writeln!(s, r#"{{"region": 0, "model": 0}}"#).unwrap();
+            let mut rd = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            rd.read_line(&mut line).unwrap();
+            let r = Json::parse(line.trim()).unwrap();
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+            held.push((s, rd));
+        }
+        // the flood: every connection past the bound gets a structured
+        // overloaded reply with the retry hint, then EOF
+        for _ in 0..5 {
+            let s = std::net::TcpStream::connect(("127.0.0.1", handle.port))
+                .unwrap();
+            let mut reader = BufReader::new(s);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let r = Json::parse(line.trim()).unwrap();
+            assert_eq!(
+                r.get("error").and_then(Json::as_str),
+                Some("overloaded"),
+                "flooded connection was not shed: {line}"
+            );
+            assert_eq!(r.get("retry_ms").and_then(Json::as_f64), Some(7.0));
+            let mut eof = String::new();
+            assert_eq!(reader.read_line(&mut eof).unwrap(), 0);
+        }
+        assert_eq!(c.metrics_snapshot().overloaded, 5);
+        // held connections still get service through the flood
+        {
+            let (stream, rd) = &mut held[0];
+            writeln!(stream, r#"{{"region": 1, "model": 1}}"#).unwrap();
+            let mut line = String::new();
+            rd.read_line(&mut line).unwrap();
+            let r = Json::parse(line.trim()).unwrap();
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        }
+        // ...and once the flood clears, new connections are admitted again
+        drop(held);
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut fresh =
+            std::net::TcpStream::connect(("127.0.0.1", handle.port)).unwrap();
+        writeln!(fresh, r#"{{"op": "shutdown"}}"#).unwrap();
+        let mut reader = BufReader::new(fresh);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let r = Json::parse(line.trim()).unwrap();
+        assert_eq!(r.get("stopping").and_then(Json::as_bool), Some(true));
+        handle.thread.join().unwrap();
     }
 
     #[test]

@@ -179,6 +179,9 @@ pub struct EpochLedger {
     /// serving coordinator's aggregate ledger); the per-class feedback
     /// scheduler falls back to the level-only correction in that case.
     pub class_requests: Vec<f64>,
+    /// TTFT distribution for every request recorded via
+    /// [`EpochLedger::add_request`] (p50/p95/p99 in the epoch CSV).
+    pub ttft_hist: crate::util::histogram::LatencyHistogram,
 }
 
 impl EpochLedger {
@@ -206,6 +209,7 @@ impl EpochLedger {
     pub fn add_request(&mut self, ttft_s: f64) {
         self.ttft_sum_s += ttft_s;
         self.requests += 1.0;
+        self.ttft_hist.record(ttft_s);
     }
 
     pub fn mean_ttft_s(&self) -> f64 {
@@ -232,6 +236,7 @@ impl EpochLedger {
         {
             *a += b;
         }
+        self.ttft_hist.merge(&other.ttft_hist);
     }
 
     /// Objective vector [ttft, carbon, water, cost] (paper's four axes).

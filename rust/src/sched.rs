@@ -184,6 +184,39 @@ pub fn queue_delay_s(phys: &PhysicsConfig, util: f64) -> f64 {
     phys.q_coef * util / (1.0 - util.min(phys.u_max))
 }
 
+/// Predicted first-token service time for a (site, model) pair, seconds —
+/// the service term of the coordinator's Least-Laxity-First laxity
+/// (laxity = SLO - queued age - this). Mirrors the Eq. 4 terms [`place`]
+/// realises per request: best-case decode (T_exec/N = 1/decode rate over
+/// the node types the site actually has) plus the *expected* cold-start
+/// share of the Eq. 2 load latency. An estimate, not a quote: WRR may
+/// pick a slower type and queueing adds on top, but LLF only needs the
+/// relative urgency ordering to be right.
+pub fn predicted_first_token_s(
+    cfg: &SystemConfig,
+    dc: usize,
+    model: usize,
+) -> f64 {
+    let spec = &cfg.datacenters[dc];
+    let mem = cfg.models[model].param_mem_gb;
+    let mut best_decode = 0.0f64;
+    for (ti, nt) in cfg.node_types.iter().enumerate() {
+        if spec.nodes_per_type[ti] > 0 && can_serve(nt, mem) {
+            best_decode = best_decode.max(nt.decode_tokens_s[model]);
+        }
+    }
+    // a site with no feasible type is maximally slow, never negative-laxity
+    // "urgent" by accident
+    let exec_s = if best_decode > 0.0 {
+        1.0 / best_decode
+    } else {
+        cfg.physics.epoch_s
+    };
+    exec_s
+        + cfg.physics.cold_frac
+            * models::load_latency_s(mem, spec.bw_gbs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,6 +311,28 @@ mod tests {
         assert!(q99 > 10.0 * q5);
         // clip prevents infinity
         assert!(queue_delay_s(&cfg.physics, 1.0).is_finite());
+    }
+
+    #[test]
+    fn predicted_first_token_orders_models_and_stays_finite() {
+        let cfg = SystemConfig::small_test();
+        for dc in 0..cfg.datacenters.len() {
+            let small = predicted_first_token_s(&cfg, dc, 0);
+            let large = predicted_first_token_s(&cfg, dc, 1);
+            assert!(small.is_finite() && small > 0.0);
+            assert!(
+                large > small,
+                "dc {dc}: large-model first token must predict slower \
+                 ({large} vs {small})"
+            );
+        }
+        // a site stripped of every node predicts epoch-scale service, so
+        // LLF never ranks an unservable site as urgent
+        let mut dark = cfg.clone();
+        dark.datacenters[0].nodes_per_type = vec![0; 6];
+        assert!(
+            predicted_first_token_s(&dark, 0, 0) >= dark.physics.epoch_s
+        );
     }
 
     #[test]

@@ -353,7 +353,7 @@ pub struct CsvEpochObserver {
 }
 
 impl CsvEpochObserver {
-    pub const HEADER: [&'static str; 9] = [
+    pub const HEADER: [&'static str; 12] = [
         "epoch",
         "ttft_s",
         "carbon_kg",
@@ -363,6 +363,9 @@ impl CsvEpochObserver {
         "dropped",
         "decision_s",
         "nodes_total",
+        "ttft_p50_s",
+        "ttft_p95_s",
+        "ttft_p99_s",
     ];
 
     pub fn create(path: &str) -> std::io::Result<CsvEpochObserver> {
@@ -386,6 +389,9 @@ impl EpochObserver for CsvEpochObserver {
                 record.ledger.dropped,
                 record.decision_s,
                 nodes as f64,
+                record.ledger.ttft_hist.p50(),
+                record.ledger.ttft_hist.p95(),
+                record.ledger.ttft_hist.p99(),
             ]);
         }
     }
@@ -660,6 +666,22 @@ mod tests {
             .collect();
         assert_eq!(header, want);
         assert_eq!(rows.len(), 3);
+        // percentile columns are ordered and populated whenever the epoch
+        // served requests
+        let col = |name: &str| {
+            header.iter().position(|h| h == name).unwrap()
+        };
+        let (c_req, c_p50, c_p99) =
+            (col("requests"), col("ttft_p50_s"), col("ttft_p99_s"));
+        for row in &rows {
+            let req: f64 = row[c_req].parse().unwrap();
+            let p50: f64 = row[c_p50].parse().unwrap();
+            let p99: f64 = row[c_p99].parse().unwrap();
+            assert!(p99 >= p50, "p99 {p99} < p50 {p50}");
+            if req > 0.0 {
+                assert!(p50 > 0.0, "served epoch with zero p50");
+            }
+        }
         std::fs::remove_file(&tmp).ok();
     }
 }

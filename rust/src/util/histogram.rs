@@ -1,0 +1,279 @@
+//! Log-bucketed latency histogram: constant-space p50/p95/p99 over
+//! unbounded streams, mergeable across threads/connections.
+//!
+//! Buckets grow geometrically (8 per octave, ~9% width), so any quantile
+//! is answered with bounded *relative* error — the right contract for
+//! latencies spanning sub-millisecond warm hits to multi-second cold
+//! loads. Exact min/max are tracked on the side so p0/p100 are exact and
+//! interior quantiles can be clamped into the observed range. Two
+//! histograms with the same fixed layout merge by adding counts, which is
+//! what lets per-connection loadgen threads and per-class server metrics
+//! aggregate without retaining raw samples.
+
+/// Smallest resolvable latency, seconds (0.1 ms). Everything below lands
+/// in bucket 0.
+const LO_S: f64 = 1e-4;
+/// Buckets per factor-of-two; relative bucket width 2^(1/8) - 1 ~ 9%.
+const PER_OCTAVE: usize = 8;
+/// 23 octaves above LO_S: covers up to ~840 s before saturating the top
+/// bucket (exact max is still reported via the side channel).
+const N_BUCKETS: usize = 23 * PER_OCTAVE;
+
+/// A fixed-layout log-bucketed histogram of non-negative samples
+/// (seconds, though the unit is the caller's business).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyHistogram {
+    /// Lazily allocated to keep an empty histogram at ~0 bytes (ledgers
+    /// carry one per epoch; most sim paths never record into it).
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+fn bucket_index(x: f64) -> usize {
+    if x <= LO_S {
+        return 0;
+    }
+    let i = ((x / LO_S).log2() * PER_OCTAVE as f64).floor();
+    (i as usize).min(N_BUCKETS - 1)
+}
+
+/// Lower bound of bucket `i`, seconds.
+fn bucket_lo(i: usize) -> f64 {
+    LO_S * 2f64.powf(i as f64 / PER_OCTAVE as f64)
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one sample. Negative values clamp to 0; non-finite values
+    /// are dropped (a NaN latency is a measurement bug, not a tail).
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let x = x.max(0.0);
+        if self.counts.is_empty() {
+            self.counts = vec![0; N_BUCKETS];
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.counts[bucket_index(x)] += 1;
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate, `q` in [0, 1]. Walks the cumulative counts to
+    /// the target rank and interpolates linearly inside the hit bucket;
+    /// the result is clamped to the exact observed [min, max], so
+    /// `quantile(0.0)` and `quantile(1.0)` are exact.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * self.n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                let frac = (target - cum) as f64 / c as f64;
+                let lo = bucket_lo(i);
+                let hi = bucket_lo(i + 1);
+                let v = lo + (hi - lo) * frac;
+                return v.clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold `other` into `self`. Layouts are identical by construction,
+    /// so this is bucket-wise addition; merge(a, b) observes exactly the
+    /// union of both sample streams.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile;
+
+    /// Bucket width bounds the relative error of interior quantiles.
+    const REL_TOL: f64 = 0.10;
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_every_quantile_is_that_sample() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.042);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.042, "q={q}");
+        }
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 0.042).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quantiles_match_exact_percentiles_within_bucket_width() {
+        // lognormal-ish latencies spanning ~3 decades, the serve-path shape
+        let mut rng = Rng::new(7);
+        let mut h = LatencyHistogram::new();
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            let x = rng.lognormal(-(3.5f64.ln()), 0.8);
+            h.record(x);
+            xs.push(x);
+        }
+        for q in [0.10, 0.50, 0.90, 0.95, 0.99] {
+            let exact = percentile(&xs, q * 100.0);
+            let est = h.quantile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(
+                rel <= REL_TOL,
+                "q={q}: est {est} vs exact {exact} (rel {rel:.3})"
+            );
+        }
+        // side-channel extremes are exact
+        let (lo, hi) = crate::util::stats::min_max(&xs);
+        assert_eq!(h.min(), lo);
+        assert_eq!(h.max(), hi);
+        assert_eq!(h.quantile(0.0), lo);
+        assert_eq!(h.quantile(1.0), hi);
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let mut rng = Rng::new(11);
+        let (mut a, mut b, mut all) = (
+            LatencyHistogram::new(),
+            LatencyHistogram::new(),
+            LatencyHistogram::new(),
+        );
+        for i in 0..5_000 {
+            let x = rng.exponential(20.0) + 1e-3;
+            if i % 3 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            all.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, all, "merge must be exactly the union of streams");
+        // merging into / from empty is the identity
+        let mut empty = LatencyHistogram::new();
+        empty.merge(&all);
+        assert_eq!(empty, all);
+        let mut c = all.clone();
+        c.merge(&LatencyHistogram::new());
+        assert_eq!(c, all);
+    }
+
+    #[test]
+    fn out_of_range_samples_saturate_not_panic() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0); // below LO_S: bucket 0
+        h.record(1e-9);
+        h.record(1e9); // above the top bucket: saturates
+        h.record(-5.0); // clamps to 0
+        h.record(f64::NAN); // dropped
+        h.record(f64::INFINITY); // dropped
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9, "exact max survives bucket saturation");
+        assert_eq!(h.quantile(1.0), 1e9);
+        assert!(h.quantile(0.25) >= 0.0);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let mut rng = Rng::new(13);
+        let mut h = LatencyHistogram::new();
+        for _ in 0..2_000 {
+            h.record(rng.range(1e-4, 10.0));
+        }
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = h.quantile(q);
+            assert!(v >= prev, "q={q}: {v} < {prev}");
+            prev = v;
+        }
+    }
+}

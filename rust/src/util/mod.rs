@@ -6,6 +6,7 @@
 pub mod benchkit;
 pub mod csv;
 pub mod dcvec;
+pub mod histogram;
 pub mod json;
 pub mod propkit;
 pub mod rng;

@@ -5,7 +5,12 @@
 //!   * arena-vs-clone candidate batch build,
 //!   * sharded-vs-global memo cache under thread contention,
 //!   * L=48 tiled-DC smoke: the spilled `DcVec` path at planet scale —
-//!     delta-vs-full parity and the per-DC L=16 vs L=48 scaling row.
+//!     delta-vs-full parity and the per-DC L=16 vs L=48 scaling row,
+//!   * loadgen smoke: closed-loop traffic over a real socket against the
+//!     sharded-worker TCP front — zero dropped replies, request mass
+//!     conserved end to end, finite TTFT p99,
+//!   * LLF-vs-FCFS dispatch: slack-normalized worst-class p99 under the
+//!     same saturating batch stream for both policies.
 //!
 //! Each test asserts bit/tolerance *parity* between the fast and reference
 //! paths (the correctness half of the bench) and prints the measured
@@ -220,6 +225,130 @@ fn row_l48_tiled_dc_smoke() {
         (t48 / 48.0) / (t16 / 16.0).max(1e-12),
         t48 * 1e9,
         t16 * 1e9,
+    );
+}
+
+/// A coordinator sized for CI serving rows: tiny optimizer budget, no
+/// epoch thread.
+fn boot_coordinator(
+    policy: slit::coordinator::DispatchPolicy,
+) -> std::sync::Arc<slit::coordinator::Coordinator> {
+    use slit::coordinator::{Coordinator, CoordinatorConfig};
+    let mut cfg = SystemConfig::small_test();
+    cfg.opt.generations = 2;
+    cfg.opt.population = 8;
+    let mut ccfg = CoordinatorConfig {
+        plan_budget_s: 0.2,
+        ..Default::default()
+    };
+    ccfg.batcher.policy = policy;
+    Coordinator::new(cfg, ccfg, None)
+}
+
+/// CI twin of the hot_path serve-loop row: a few hundred closed-loop
+/// requests over a real socket. The correctness half is asserted (zero
+/// dropped replies, zero structured errors, request mass conserved on both
+/// sides of the wire, finite percentiles); the achieved req/s is printed
+/// for eyeballing only.
+#[test]
+fn row_loadgen_closed_loop_smoke() {
+    use slit::coordinator::{
+        run_loadgen, serve_forever, ArrivalMode, DispatchPolicy,
+        LoadgenConfig,
+    };
+
+    let c = boot_coordinator(DispatchPolicy::Llf);
+    let handle =
+        serve_forever(std::sync::Arc::clone(&c), 0).expect("bind ephemeral");
+    let lcfg = LoadgenConfig {
+        port: handle.port,
+        mode: ArrivalMode::Closed,
+        conns: 4,
+        requests: 320,
+        batch: 4,
+        ..Default::default()
+    };
+    let r = run_loadgen(&lcfg).expect("loadgen");
+
+    // the client-side accounting invariant, then agreement with the server
+    assert_eq!(
+        r.ok + r.saturated + r.errors + r.dropped_replies,
+        r.sent,
+        "request mass leaked client-side"
+    );
+    assert_eq!(r.sent, 320, "closed loop must send every request");
+    assert_eq!(r.dropped_replies, 0, "replies dropped");
+    assert_eq!(r.errors, 0, "structured errors under clean load");
+    assert_eq!(r.overloaded_conns, 0, "shed below max_conns");
+    assert!(r.ttft.p99().is_finite() && r.ttft.p99() > 0.0);
+    assert!(r.rtt.p99().is_finite() && r.rtt.p99() > 0.0);
+    let m = c.metrics_snapshot();
+    assert_eq!(
+        m.served + m.rejected,
+        r.ok + r.saturated,
+        "server-side accounting disagrees with the client's view"
+    );
+    println!(
+        "| loadgen closed-loop smoke | {:.0} req/s | (320 reqs, 4 conns, batch 4, ttft p99 {:.2} ms, rtt p99 {:.2} ms) |",
+        r.achieved_rps(),
+        r.ttft.p99() * 1e3,
+        r.rtt.p99() * 1e3,
+    );
+    c.stop();
+    handle.thread.join().expect("server thread");
+}
+
+/// LLF-vs-FCFS dispatch under a saturating batch stream: identical
+/// mixed-class waves into two coordinators differing only in policy. The
+/// figure of merit is the worst class's slack-normalized p99 (TTFT p99
+/// divided by that model's TTFT SLO) — LLF spends scarce site capacity on
+/// tight-SLO groups first, so its worst-case slack should not degrade vs
+/// FCFS. Mass conservation is asserted; the comparison itself is printed,
+/// not asserted, per the noisy-runner policy above.
+#[test]
+fn row_llf_vs_fcfs_slack_normalized_p99() {
+    use slit::config::{MODELS, REGIONS};
+    use slit::coordinator::DispatchPolicy;
+
+    let run = |policy: DispatchPolicy| -> (f64, u64, u64) {
+        let c = boot_coordinator(policy);
+        // enough mass to fill the small-test fleet's epoch capacity, so
+        // dispatch order decides who commits the last slots
+        for wave in 0..16usize {
+            let reqs: Vec<(usize, usize, u32, u32)> = (0..64)
+                .map(|i| ((i + wave) % REGIONS, i % MODELS, 128, 256))
+                .collect();
+            core::hint::black_box(c.handle_batch(&reqs));
+        }
+        let m = c.metrics_snapshot();
+        let worst = m
+            .class_ttft
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(k, h)| h.p99() / c.cfg.models[k % MODELS].ttft_slo_s)
+            .fold(0.0f64, f64::max);
+        (worst, m.served, m.rejected)
+    };
+
+    let (llf, llf_served, llf_rejected) = run(DispatchPolicy::Llf);
+    let (fcfs, fcfs_served, fcfs_rejected) = run(DispatchPolicy::Fcfs);
+    // ordering redistributes capacity between classes; it must not change
+    // how many requests the fleet absorbs in total
+    assert_eq!(
+        llf_served + llf_rejected,
+        fcfs_served + fcfs_rejected,
+        "policy changed total request mass"
+    );
+    assert!(llf.is_finite() && llf > 0.0);
+    assert!(fcfs.is_finite() && fcfs > 0.0);
+    println!(
+        "| dispatch: LLF vs FCFS worst slack-normalized p99 | {:.2}x | (p99/SLO {:.3} vs {:.3}; served {} vs {}) |",
+        fcfs / llf.max(1e-12),
+        llf,
+        fcfs,
+        llf_served,
+        fcfs_served,
     );
 }
 

@@ -205,6 +205,64 @@ fn tcp_malformed_traffic_mid_drill_gets_structured_errors() {
     c.stop();
 }
 
+/// Per-class TTFT percentiles must be visible through a real socket: after
+/// a mixed-class request stream, `{"op": "stats"}` reports overall
+/// p50/p95/p99 plus a per-class breakdown whose counts partition the served
+/// total, and every served reply carries the unified per-request schema
+/// (`dc`/`dc_index`/`ttft_ms`/`epoch`) on the single-request path too.
+#[test]
+fn tcp_stats_expose_per_class_ttft_percentiles() {
+    use slit::config::{MODELS, REGIONS};
+
+    let (c, port) = boot();
+    let mut client =
+        DrillClient::connect("127.0.0.1", port).expect("connect");
+    let mut served = 0u64;
+    for i in 0..64usize {
+        let mut q = Json::obj();
+        q.set("region", Json::Num((i % REGIONS) as f64));
+        q.set("model", Json::Num((i % MODELS) as f64));
+        q.set("tok_in", Json::Num(64.0));
+        q.set("tok_out", Json::Num(128.0));
+        let r = client.call(&q).expect("reply");
+        if r.get("ok").and_then(Json::as_bool) == Some(true) {
+            served += 1;
+            for key in ["dc", "dc_index", "ttft_ms", "epoch"] {
+                assert!(r.get(key).is_some(), "reply missing '{key}'");
+            }
+        }
+    }
+    assert!(served > 0, "small-test fleet served nothing");
+
+    let mut op = Json::obj();
+    op.set("op", Json::Str("stats".into()));
+    let stats = client.call_ok(&op).expect("stats");
+    let f = |j: &Json, k: &str| {
+        j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+    };
+    assert_eq!(f(&stats, "served") as u64, served);
+    assert!(f(&stats, "ttft_p50_ms") > 0.0);
+    assert!(f(&stats, "ttft_p50_ms") <= f(&stats, "ttft_p95_ms"));
+    assert!(f(&stats, "ttft_p95_ms") <= f(&stats, "ttft_p99_ms"));
+    let classes =
+        stats.get("classes").and_then(Json::as_arr).expect("classes");
+    assert!(!classes.is_empty(), "no per-class histograms");
+    let mut count_sum = 0u64;
+    for e in classes {
+        count_sum += f(e, "count") as u64;
+        assert!(f(e, "ttft_p50_ms") > 0.0);
+        assert!(f(e, "ttft_p50_ms") <= f(e, "ttft_p99_ms"));
+        let class = f(e, "class") as usize;
+        assert_eq!(f(e, "region") as usize, class / MODELS);
+        assert_eq!(f(e, "model") as usize, class % MODELS);
+    }
+    assert_eq!(
+        count_sum, served,
+        "class histograms must partition the served total"
+    );
+    c.stop();
+}
+
 /// The feedback-evaluation half of the harness: on the drilled regime
 /// (the event-driven rolling outage), the per-class adaptive scheduler
 /// must be non-dominated against the level-only correction it replaced —

@@ -9,7 +9,9 @@
 # Appends a "### hot_path bench run — <date>" section containing the
 # suite's markdown table verbatim, so the headline speedup rows
 # ("delta speedup (target >= 4x)", "arena speedup", "shard speedup",
-# "per-DC cost L=48/L=16") are greppable straight from EXPERIMENTS.md.
+# "per-DC cost L=48/L=16", "serve: open-loop achieved (target >= 10k)",
+# "dispatch: FCFS/LLF worst-slack ratio") are greppable straight from
+# EXPERIMENTS.md.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
