@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks: the plan evaluator (native scalar, native
 //! batch-parallel, AOT/PJRT), the GBDT surrogate, the MCMF solver, the
-//! predictor fit, and a full optimizer generation. These are the numbers
-//! the §Perf iteration log in EXPERIMENTS.md tracks.
+//! predictor fit, a full optimizer generation, and the temporal-shift
+//! planner's per-epoch overhead. These are the numbers the §Perf
+//! iteration log in EXPERIMENTS.md tracks.
 
 use slit::cluster::build_panels;
 use slit::config::{SystemConfig, EVAL_POPULATION};
@@ -513,6 +514,52 @@ fn main() {
         }
         core::hint::black_box(fit_window(&xs, &ys, 0.1));
     });
+
+    // --- temporal shifting ---------------------------------------------------
+    // the deferral layer's per-epoch overhead inside SimSession::step: one
+    // forecaster observe + refit across all site series, a horizon
+    // forecast, and the queue drain — this must stay negligible next to
+    // the SLIT plan search it precedes
+    {
+        use slit::opt::{ShiftPolicy, TemporalShifter};
+        use slit::scenario::Scenario;
+
+        let mut base = SystemConfig::small_test();
+        base.epochs = 48;
+        let world = Scenario::BatchOvernight.build(&base, base.epochs, 9);
+        let t = std::time::Instant::now();
+        let mut sh = TemporalShifter::new(
+            &world.cfg,
+            &world.trace,
+            ShiftPolicy::Forecast,
+        );
+        bench.record_value(
+            "shift: forecaster warm-start (one-time)",
+            t.elapsed().as_secs_f64() * 1e3,
+            "ms",
+        );
+        let epochs = world.cfg.epochs;
+        let t = std::time::Instant::now();
+        for e in 0..epochs {
+            let (ci, wi, tou) = world.signals.at(e);
+            core::hint::black_box(sh.step(
+                e,
+                epochs - 1,
+                &world.trace.epochs[e],
+                &ci,
+                &wi,
+                &tou,
+            ));
+        }
+        let step_s = t.elapsed().as_secs_f64() / epochs as f64;
+        bench.record_value(
+            "shift: planner step per epoch (forecast policy)",
+            step_s * 1e6,
+            "us",
+        );
+        let (offered, released, expired) = sh.totals();
+        assert_eq!(offered, released + expired + sh.queue_mass());
+    }
 
     bench.finish();
 }

@@ -287,21 +287,31 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `slit scenarios` — list the named workload/grid regimes, each with its
-/// stressed objective and the fleet it runs on (site/region counts after
-/// the regime's config transform), so rows like `global-fleet` are
-/// self-describing.
+/// stressed objective, the fleet it runs on (site/region counts after the
+/// regime's config transform), and its deferrable-workload shape, so rows
+/// like `global-fleet` and `batch-overnight` are self-describing.
 pub fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     let base = load_config(args)?;
-    println!("| scenario | stressed objective | sites | regions | description |");
-    println!("|---|---|---|---|---|");
+    println!(
+        "| scenario | stressed objective | sites | regions | deferrable | \
+         description |"
+    );
+    println!("|---|---|---|---|---|---|");
     for s in Scenario::all() {
         let (sites, regions) = s.fleet(&base);
+        let (frac, slack) = s.deferrable(&base);
+        let deferrable = if frac > 0.0 {
+            format!("{:.0}% / {} ep", 100.0 * frac, slack)
+        } else {
+            "-".to_string()
+        };
         println!(
-            "| {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} |",
             s.name(),
             OBJ_NAMES[s.target_objective()],
             sites,
             regions,
+            deferrable,
             s.description()
         );
     }
@@ -658,7 +668,9 @@ COMMANDS:
   simulate    run frameworks concurrently over a trace (Fig. 4/5 driver)
               --framework all|NAME (see `slit frameworks` for the registry)
               --scenario NAME (see `slit scenarios`; e.g. outage-rolling
-                               takes a region dark mid-run and restores it)
+                               takes a region dark mid-run and restores it;
+                               batch-overnight carries deferrable mass the
+                               slit-shift framework time-shifts)
               --scale paper|small   --epochs N   --seed N   --out results.json
               --epoch-csv FILE (stream the per-epoch time series; one file
                                 per framework when several run)
@@ -668,7 +680,8 @@ COMMANDS:
   trace       write the Fig. 1 workload series  --epochs N --out trace.csv
               --scenario NAME
   frameworks  list the registered scheduling frameworks (names, aliases)
-  scenarios   list the named workload/grid regimes
+  scenarios   list the named workload/grid regimes (stressed objective,
+              fleet shape, deferrable share)
   pareto      dump one epoch's Pareto front     --epoch N --out front.json
   serve       start the online coordinator      --port N --variant NAME
               --epoch-seconds F --use-hlo --policy llf|fcfs
@@ -830,6 +843,25 @@ mod tests {
         let text = std::fs::read_to_string(&tmp).unwrap();
         let j = Json::parse(&text).unwrap();
         let r = j.get("slit-carbon").expect("slit-carbon results");
+        assert!(r.f64_or("requests", 0.0) > 0.0);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn simulate_batch_overnight_with_slit_shift() {
+        // the temporal-shifting regime through the real CLI path: hourly
+        // epochs, deferrable mass, the forecast-driven release policy
+        let tmp = std::env::temp_dir().join("slit_cli_batch_overnight.json");
+        let a = Args::parse(&argv(&format!(
+            "simulate --scale small --epochs 3 --framework slit-shift \
+             --scenario batch-overnight --out {}",
+            tmp.display()
+        )))
+        .unwrap();
+        cmd_simulate(&a).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let r = j.get("slit-shift").expect("slit-shift results");
         assert!(r.f64_or("requests", 0.0) > 0.0);
         std::fs::remove_file(&tmp).ok();
     }

@@ -135,6 +135,14 @@ pub struct WorkloadConfig {
     pub burst_mult: f64,
     /// Regional share of request origins (sums to 1).
     pub region_mix: [f64; REGIONS],
+    /// Fraction of each class's request mass that is deferrable
+    /// (batch/embedding jobs the temporal-shifting layer may move in time).
+    /// 0 (the default) generates a purely interactive trace, bit-identical
+    /// to pre-deferrable builds.
+    pub deferrable_frac: f64,
+    /// Deadline slack for deferrable mass: arrivals at epoch t must be
+    /// served by epoch t + slack (clamped to the trace horizon).
+    pub defer_slack_epochs: usize,
 }
 
 /// SLIT metaheuristic knobs (Algorithm 1).
@@ -333,6 +341,8 @@ impl SystemConfig {
                 burst_prob: 0.06,
                 burst_mult: 3.5,
                 region_mix: [0.3, 0.1, 0.35, 0.25],
+                deferrable_frac: 0.0,
+                defer_slack_epochs: 0,
             },
             opt: OptConfig {
                 population: 24,
@@ -489,6 +499,11 @@ impl SystemConfig {
                 ("burst_prob", Json::Num(w.burst_prob)),
                 ("burst_mult", Json::Num(w.burst_mult)),
                 ("region_mix", Json::num_arr(&w.region_mix)),
+                ("deferrable_frac", Json::Num(w.deferrable_frac)),
+                (
+                    "defer_slack_epochs",
+                    Json::Num(w.defer_slack_epochs as f64),
+                ),
             ]),
         );
         let o = &self.opt;
@@ -622,6 +637,10 @@ impl SystemConfig {
                 burst_prob: w.f64_or("burst_prob", d.burst_prob),
                 burst_mult: w.f64_or("burst_mult", d.burst_mult),
                 region_mix: [mix[0], mix[1], mix[2], mix[3]],
+                deferrable_frac: w
+                    .f64_or("deferrable_frac", d.deferrable_frac),
+                defer_slack_epochs: w
+                    .usize_or("defer_slack_epochs", d.defer_slack_epochs),
             };
         }
         if let Some(o) = j.get("opt") {
@@ -700,6 +719,10 @@ impl SystemConfig {
         anyhow::ensure!(
             (mix_sum - 1.0).abs() < 1e-6,
             "region_mix must sum to 1 (got {mix_sum})"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.workload.deferrable_frac),
+            "deferrable_frac must be in [0, 1]"
         );
         anyhow::ensure!(self.opt.population >= 4, "population too small");
         Ok(())

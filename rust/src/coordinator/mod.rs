@@ -464,6 +464,7 @@ impl Coordinator {
                             * self.cfg.workload.token_scale,
                         tok_out: self.cfg.models[k % MODELS].mean_out_tokens
                             * self.cfg.workload.token_scale,
+                        ..ClassLoad::default()
                     })
                     .collect(),
             };

@@ -18,6 +18,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod forecast;
 pub mod models;
 pub mod opt;
 pub mod pareto;

@@ -182,6 +182,19 @@ pub struct EpochLedger {
     /// TTFT distribution for every request recorded via
     /// [`EpochLedger::add_request`] (p50/p95/p99 in the epoch CSV).
     pub ttft_hist: crate::util::histogram::LatencyHistogram,
+    /// Deferrable request mass offered (enqueued) this epoch.
+    pub deferred_offered: f64,
+    /// Deferred mass released into this epoch's served load by the
+    /// temporal-shifting layer (`opt::shift`).
+    pub deferred_released: f64,
+    /// Deferred mass still queued at the end of this epoch. A snapshot,
+    /// not a flow: `merge` keeps the *latest* value rather than summing,
+    /// so a run-total ledger reports the final queue depth.
+    pub deferred_queued: f64,
+    /// Deferred mass that passed its deadline unreleased. The shifting
+    /// layer force-releases at the deadline, so this stays 0 for every
+    /// shipped policy; the conservation tests pin that.
+    pub deferred_expired: f64,
 }
 
 impl EpochLedger {
@@ -237,6 +250,11 @@ impl EpochLedger {
             *a += b;
         }
         self.ttft_hist.merge(&other.ttft_hist);
+        self.deferred_offered += other.deferred_offered;
+        self.deferred_released += other.deferred_released;
+        self.deferred_expired += other.deferred_expired;
+        // queue depth is a snapshot: keep the most recent one
+        self.deferred_queued = other.deferred_queued;
     }
 
     /// Objective vector [ttft, carbon, water, cost] (paper's four axes).

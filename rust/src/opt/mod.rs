@@ -4,8 +4,10 @@
 
 pub mod gbdt;
 pub mod scheduler;
+pub mod shift;
 pub mod slit;
 
 pub use gbdt::{Gbdt, GbdtConfig};
 pub use scheduler::{FeedbackMode, SlitScheduler, SlitStats, SlitVariant};
+pub use shift::{ShiftPolicy, ShiftScheduler, TemporalShifter};
 pub use slit::{select_population, SlitOptimizer, SlitOptions, SlitOutcome};

@@ -1,0 +1,479 @@
+//! Temporal shifting of deferrable workload (the "when" control axis).
+//!
+//! SLIT searches *where* to serve each epoch's load; this layer decides
+//! *when* deferrable mass (batch/embedding/eval jobs with deadline
+//! epochs, `ClassLoad::defer_req`) is served. The design follows
+//! MetaTune (SNIPPETS.md snippet 1): queue delay-tolerant work and
+//! release it against a per-DC carbon *forecast*, subject to deadlines.
+//!
+//! Two pieces:
+//!
+//! * [`TemporalShifter`] — the deferral queue + release policy, owned by
+//!   `SimSession`. Every epoch it absorbs the trace's deferrable offer,
+//!   then releases queued lots into the epoch's *effective* load (before
+//!   panel build and plan search, so the inner spatial scheduler plans
+//!   for the released mass). With [`ShiftPolicy::Immediate`] (the
+//!   default for every scheduler without an explicit policy) deferrable
+//!   mass is released the epoch it arrives — the pre-shift behaviour.
+//! * [`ShiftScheduler`] — a wrapper that composes the
+//!   [`ShiftPolicy::Forecast`] policy with any inner spatial scheduler
+//!   (the `slit-shift` registry row wraps `slit-carbon`). Plans are
+//!   delegated untouched, so with no deferrable mass in the trace the
+//!   wrapper is bit-identical to its inner framework
+//!   (rust/tests/shift_conservation.rs pins it).
+//!
+//! The Forecast policy is greedy water-filling over the forecast
+//! horizon: each epoch, a lot is released iff the current epoch's
+//! realised fleet-green score is no worse than the forecast minimum over
+//! the epochs the lot could still wait for (ties release, so a flat
+//! forecast degrades gracefully to Immediate), and always at its
+//! deadline epoch. Lots are atomic and integral, so served-mass
+//! comparisons across release schedules stay exact.
+
+use crate::config::SystemConfig;
+use crate::forecast::{epochs_per_day, GridForecaster};
+use crate::plan::Plan;
+use crate::sim::{EpochContext, Scheduler};
+use crate::trace::{EpochLoad, Trace};
+
+/// Weight folding water intensity (L/kWh) into the carbon-primary green
+/// score (kg/kWh): small enough that carbon dominates, large enough that
+/// water breaks ties between similar-CI windows.
+pub const SHIFT_WATER_WEIGHT: f64 = 0.002;
+
+/// Days of synthetic grid history the Forecast policy warm-starts its
+/// forecaster with (the stand-in for a real deployment's signal archive).
+pub const SHIFT_WARMUP_DAYS: usize = 2;
+
+/// When deferrable mass is served relative to its arrival epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShiftPolicy {
+    /// Release deferrable mass the epoch it arrives (no temporal control;
+    /// behaviour is identical to a world where the mass was interactive).
+    #[default]
+    Immediate,
+    /// Hold deferrable mass and release it into forecast low-carbon /
+    /// low-water windows, subject to deadlines.
+    Forecast,
+}
+
+/// One queued parcel of deferrable mass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeferredLot {
+    pub class: usize,
+    pub mass: f64,
+    /// Latest epoch this lot may be released into (inclusive).
+    pub deadline: usize,
+}
+
+/// What the shifter did this epoch (flows in request units; every value
+/// also lands in the epoch ledger's `deferred_*` fields).
+#[derive(Clone, Debug, Default)]
+pub struct ShiftOutcome {
+    /// Per-class mass released into this epoch's effective load.
+    pub released: Vec<f64>,
+    /// Deferrable mass offered (enqueued) this epoch.
+    pub offered: f64,
+    /// Sum of `released`.
+    pub released_mass: f64,
+    /// Mass that missed its deadline (policy bug guard — stays 0 for the
+    /// shipped policies, which force-release at the deadline).
+    pub expired: f64,
+    /// Mass still queued after this epoch's releases.
+    pub queued: f64,
+}
+
+impl ShiftOutcome {
+    fn inert(classes: usize) -> ShiftOutcome {
+        ShiftOutcome {
+            released: vec![0.0; classes],
+            ..ShiftOutcome::default()
+        }
+    }
+}
+
+/// Fleet-green score of one epoch: the best (lowest) carbon+water index
+/// any site offers. With scale-to-zero serving, marginal released mass is
+/// served at the cleanest available site, so the fleet minimum is the
+/// right single-scalar proxy for "how green is this window".
+pub fn fleet_green_score(ci: &[f64], wi: &[f64]) -> f64 {
+    ci.iter()
+        .zip(wi)
+        .map(|(c, w)| c + SHIFT_WATER_WEIGHT * w)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Deferral queue + release policy. Owned by `SimSession`; inert (zero
+/// cost, zero behaviour change) when the trace carries no deferrable mass.
+pub struct TemporalShifter {
+    policy: ShiftPolicy,
+    active: bool,
+    queue: Vec<DeferredLot>,
+    forecaster: Option<GridForecaster>,
+    /// Cumulative flows (request units) for conservation checks.
+    offered_total: f64,
+    released_total: f64,
+    expired_total: f64,
+}
+
+impl TemporalShifter {
+    /// Build the shifter for one session. Scans the trace once: with no
+    /// deferrable mass anywhere the shifter is inert regardless of
+    /// policy (this is what keeps `slit-shift` bit-identical to its
+    /// inner framework at deferrable fraction 0 — no forecaster is even
+    /// constructed).
+    pub fn new(
+        cfg: &SystemConfig,
+        trace: &Trace,
+        policy: ShiftPolicy,
+    ) -> TemporalShifter {
+        let active = trace
+            .epochs
+            .iter()
+            .any(|e| e.classes.iter().any(|c| c.defer_req > 0.0));
+        let forecaster = (active && policy == ShiftPolicy::Forecast).then(
+            || {
+                let horizon = epochs_per_day(cfg.physics.epoch_s);
+                GridForecaster::warmed(cfg, SHIFT_WARMUP_DAYS, horizon)
+            },
+        );
+        TemporalShifter {
+            policy,
+            active,
+            queue: Vec::new(),
+            forecaster,
+            offered_total: 0.0,
+            released_total: 0.0,
+            expired_total: 0.0,
+        }
+    }
+
+    /// Advance one epoch: feed the forecaster the epoch's realised
+    /// signals, absorb the deferrable offer, and decide releases.
+    /// `last_epoch` is the final epoch of the horizon (deadlines clamp to
+    /// it so every lot is releasable before the run ends).
+    pub fn step(
+        &mut self,
+        epoch: usize,
+        last_epoch: usize,
+        actual: &EpochLoad,
+        ci: &[f64],
+        wi: &[f64],
+        _tou: &[f64],
+    ) -> ShiftOutcome {
+        let classes = actual.classes.len();
+        if !self.active {
+            return ShiftOutcome::inert(classes);
+        }
+        if let Some(f) = self.forecaster.as_mut() {
+            f.observe(ci, wi, _tou);
+        }
+
+        let mut out = ShiftOutcome::inert(classes);
+        for (k, c) in actual.classes.iter().enumerate() {
+            if c.defer_req > 0.0 {
+                out.offered += c.defer_req;
+                self.queue.push(DeferredLot {
+                    class: k,
+                    mass: c.defer_req,
+                    deadline: c.defer_deadline.clamp(epoch, last_epoch),
+                });
+            }
+        }
+        self.offered_total += out.offered;
+
+        // forecast fleet-green scores for epochs epoch+1 ..= epoch+H
+        let fc_scores: Vec<f64> = match &self.forecaster {
+            Some(f) => {
+                let fc = f.forecast();
+                (0..f.horizon())
+                    .map(|h| {
+                        fc.ci
+                            .iter()
+                            .zip(&fc.wi)
+                            .map(|(c, w)| {
+                                c[h] + SHIFT_WATER_WEIGHT * w[h]
+                            })
+                            .fold(f64::INFINITY, f64::min)
+                    })
+                    .collect()
+            }
+            None => Vec::new(),
+        };
+        let now_score = fleet_green_score(ci, wi);
+
+        let mut kept = Vec::with_capacity(self.queue.len());
+        for lot in self.queue.drain(..) {
+            if lot.deadline < epoch {
+                // a policy failed to release by the deadline: the mass is
+                // lost, never served late (the conservation tests pin
+                // that this branch is unreachable for shipped policies)
+                out.expired += lot.mass;
+                continue;
+            }
+            let release = match self.policy {
+                ShiftPolicy::Immediate => true,
+                ShiftPolicy::Forecast => {
+                    // water-filling step: release iff no strictly greener
+                    // epoch is forecast within this lot's remaining slack
+                    let look = (lot.deadline - epoch).min(fc_scores.len());
+                    let future_min = fc_scores[..look]
+                        .iter()
+                        .copied()
+                        .fold(f64::INFINITY, f64::min);
+                    lot.deadline == epoch || now_score <= future_min
+                }
+            };
+            if release {
+                out.released[lot.class] += lot.mass;
+            } else {
+                kept.push(lot);
+            }
+        }
+        self.queue = kept;
+
+        out.released_mass = out.released.iter().sum();
+        self.released_total += out.released_mass;
+        self.expired_total += out.expired;
+        out.queued = self.queue_mass();
+        out
+    }
+
+    /// Mass currently queued.
+    pub fn queue_mass(&self) -> f64 {
+        self.queue.iter().map(|l| l.mass).sum()
+    }
+
+    /// Cumulative (offered, released, expired) flows.
+    pub fn totals(&self) -> (f64, f64, f64) {
+        (self.offered_total, self.released_total, self.expired_total)
+    }
+
+    /// Whether the trace carries any deferrable mass.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Forecast backtest of the policy's forecaster, when one exists.
+    pub fn backtest(&self) -> Option<crate::forecast::ForecastBacktest> {
+        self.forecaster.as_ref().map(|f| f.backtest())
+    }
+}
+
+/// Temporal-shifting wrapper around any inner spatial scheduler: plans
+/// are delegated untouched; the only difference is the
+/// [`ShiftPolicy::Forecast`] release policy the session picks up.
+pub struct ShiftScheduler {
+    inner: Box<dyn Scheduler>,
+    name: Option<String>,
+}
+
+impl ShiftScheduler {
+    pub fn new(inner: Box<dyn Scheduler>) -> ShiftScheduler {
+        ShiftScheduler { inner, name: None }
+    }
+
+    /// Override the derived `shift+<inner>` name (registry rows carry
+    /// their spec name).
+    pub fn named(mut self, name: &str) -> ShiftScheduler {
+        self.name = Some(name.into());
+        self
+    }
+}
+
+impl Scheduler for ShiftScheduler {
+    fn name(&self) -> String {
+        self.name
+            .clone()
+            .unwrap_or_else(|| format!("shift+{}", self.inner.name()))
+    }
+
+    fn unused_pr(&self, phys: &crate::config::PhysicsConfig) -> f64 {
+        self.inner.unused_pr(phys)
+    }
+
+    fn plan(&mut self, ctx: &EpochContext) -> Plan {
+        self.inner.plan(ctx)
+    }
+
+    fn shift_policy(&self) -> ShiftPolicy {
+        ShiftPolicy::Forecast
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::GridSignals;
+    use crate::trace::ClassLoad;
+    use crate::util::propkit;
+    use crate::util::rng::Rng;
+
+    fn hourly_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::small_test();
+        cfg.physics.epoch_s = 3600.0;
+        cfg
+    }
+
+    /// A trace of hand-built deferrable lots riding a flat interactive
+    /// base.
+    fn lot_trace(
+        cfg: &SystemConfig,
+        epochs: usize,
+        rng: &mut Rng,
+    ) -> Trace {
+        let classes = cfg.num_classes();
+        let mut out = Vec::with_capacity(epochs);
+        for t in 0..epochs {
+            let mut cl = vec![ClassLoad::default(); classes];
+            for c in cl.iter_mut() {
+                c.n_req = 5.0;
+                c.tok_in = 100.0;
+                c.tok_out = 100.0;
+                if rng.chance(0.6) {
+                    c.defer_req = rng.below(40) as f64;
+                    c.defer_deadline = (t + 1 + rng.below(8)).min(epochs - 1);
+                }
+            }
+            out.push(EpochLoad { classes: cl });
+        }
+        Trace {
+            epochs: out,
+            seed: 0,
+        }
+    }
+
+    fn drive(
+        cfg: &SystemConfig,
+        trace: &Trace,
+        policy: ShiftPolicy,
+        seed: u64,
+    ) -> (Vec<ShiftOutcome>, TemporalShifter) {
+        let epochs = trace.epochs.len();
+        let signals = GridSignals::generate(cfg, epochs, seed);
+        let mut sh = TemporalShifter::new(cfg, trace, policy);
+        let mut outs = Vec::with_capacity(epochs);
+        for t in 0..epochs {
+            let (ci, wi, tou) = signals.at(t);
+            outs.push(sh.step(t, epochs - 1, &trace.epochs[t], &ci, &wi, &tou));
+        }
+        (outs, sh)
+    }
+
+    #[test]
+    fn conservation_and_deadlines_hold_under_both_policies() {
+        let cfg = hourly_cfg();
+        for policy in [ShiftPolicy::Immediate, ShiftPolicy::Forecast] {
+            propkit::check(
+                &format!("shift_conservation_{policy:?}"),
+                0x5348_4946,
+                12,
+                |rng| {
+                    let epochs = 10 + rng.below(20);
+                    (lot_trace(&cfg, epochs, rng), rng.next_u64())
+                },
+                |(trace, seed)| {
+                    let (outs, sh) = drive(&cfg, trace, policy, *seed);
+                    let offered_cum: f64 =
+                        outs.iter().map(|o| o.offered).sum();
+                    let released_cum: f64 =
+                        outs.iter().map(|o| o.released_mass).sum();
+                    let expired_cum: f64 =
+                        outs.iter().map(|o| o.expired).sum();
+                    // integral masses: conservation is exact
+                    propkit::mass_balance(
+                        offered_cum,
+                        &[released_cum, expired_cum, sh.queue_mass()],
+                    )?;
+                    if expired_cum != 0.0 {
+                        return Err(format!("missed deadlines: {expired_cum}"));
+                    }
+                    // deadlines clamp to the horizon, so the queue drains
+                    if sh.queue_mass() != 0.0 {
+                        return Err(format!(
+                            "queue not drained: {}",
+                            sh.queue_mass()
+                        ));
+                    }
+                    let (o, r, e) = sh.totals();
+                    if (o, r, e) != (offered_cum, released_cum, 0.0) {
+                        return Err(format!(
+                            "totals diverge from per-epoch sums: \
+                             ({o}, {r}, {e}) vs ({offered_cum}, \
+                             {released_cum}, 0)"
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn immediate_policy_releases_on_arrival() {
+        let cfg = hourly_cfg();
+        let mut rng = Rng::new(3);
+        let trace = lot_trace(&cfg, 12, &mut rng);
+        let (outs, _) = drive(&cfg, &trace, ShiftPolicy::Immediate, 3);
+        for (t, o) in outs.iter().enumerate() {
+            assert_eq!(o.released_mass, o.offered, "epoch {t}");
+            assert_eq!(o.queued, 0.0);
+        }
+    }
+
+    #[test]
+    fn forecast_policy_moves_mass_but_conserves_it() {
+        let cfg = hourly_cfg();
+        let mut rng = Rng::new(9);
+        let trace = lot_trace(&cfg, 30, &mut rng);
+        let (imm, _) = drive(&cfg, &trace, ShiftPolicy::Immediate, 9);
+        let (fcp, _) = drive(&cfg, &trace, ShiftPolicy::Forecast, 9);
+        let sum =
+            |o: &[ShiftOutcome]| o.iter().map(|x| x.released_mass).sum::<f64>();
+        assert_eq!(sum(&imm), sum(&fcp), "total released mass differs");
+        // the whole point: the release *schedule* differs
+        let moved = imm
+            .iter()
+            .zip(&fcp)
+            .any(|(a, b)| a.released_mass != b.released_mass);
+        assert!(moved, "forecast policy never shifted anything");
+    }
+
+    #[test]
+    fn inactive_trace_makes_the_shifter_inert() {
+        let cfg = hourly_cfg();
+        let trace = Trace::generate(&cfg, 8, 4); // deferrable_frac = 0
+        let mut sh =
+            TemporalShifter::new(&cfg, &trace, ShiftPolicy::Forecast);
+        assert!(!sh.is_active());
+        assert!(sh.backtest().is_none(), "no forecaster should exist");
+        let signals = GridSignals::generate(&cfg, 8, 4);
+        for t in 0..8 {
+            let (ci, wi, tou) = signals.at(t);
+            let o = sh.step(t, 7, &trace.epochs[t], &ci, &wi, &tou);
+            assert_eq!(o.offered, 0.0);
+            assert_eq!(o.released_mass, 0.0);
+            assert_eq!(o.queued, 0.0);
+        }
+    }
+
+    #[test]
+    fn shift_scheduler_delegates_and_reports_forecast_policy() {
+        struct Probe;
+        impl Scheduler for Probe {
+            fn name(&self) -> String {
+                "probe".into()
+            }
+            fn plan(&mut self, ctx: &EpochContext) -> Plan {
+                Plan::uniform(ctx.cfg.num_classes(), ctx.cfg.datacenters.len())
+            }
+        }
+        let s = ShiftScheduler::new(Box::new(Probe));
+        assert_eq!(s.name(), "shift+probe");
+        assert_eq!(s.shift_policy(), ShiftPolicy::Forecast);
+        let named = ShiftScheduler::new(Box::new(Probe)).named("slit-shift");
+        assert_eq!(named.name(), "slit-shift");
+        // default policy on a bare scheduler is Immediate
+        assert_eq!(Probe.shift_policy(), ShiftPolicy::Immediate);
+    }
+}

@@ -262,6 +262,7 @@ impl WorkloadPredictor {
                     n_req: self.per_class[k].predict(),
                     tok_in: self.tok_in[k].max(1.0),
                     tok_out: self.tok_out[k].max(1.0),
+                    ..ClassLoad::default()
                 })
                 .collect(),
         }
@@ -378,6 +379,7 @@ mod tests {
                         n_req: if rng.chance(0.3) { 0.0 } else { rng.range(0.0, 50.0) },
                         tok_in: 100.0,
                         tok_out: 200.0,
+                        ..ClassLoad::default()
                     })
                     .collect(),
             };

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::baselines::{HelixScheduler, RoundRobinScheduler, SplitwiseScheduler};
 use crate::config::SystemConfig;
-use crate::opt::{SlitScheduler, SlitVariant};
+use crate::opt::{ShiftScheduler, SlitScheduler, SlitVariant};
 use crate::runtime::Engine;
 use crate::sim::Scheduler;
 
@@ -100,6 +100,28 @@ fn build_slit_adaptive_level_hlo(
     )
 }
 
+fn build_slit_shift(cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(
+        ShiftScheduler::new(Box::new(SlitScheduler::new(
+            cfg,
+            SlitVariant::Carbon,
+        )))
+        .named("slit-shift"),
+    )
+}
+
+fn build_slit_shift_hlo(
+    cfg: &SystemConfig,
+    engine: Arc<Engine>,
+) -> Box<dyn Scheduler> {
+    Box::new(
+        ShiftScheduler::new(Box::new(
+            SlitScheduler::new(cfg, SlitVariant::Carbon).with_engine(engine),
+        ))
+        .named("slit-shift"),
+    )
+}
+
 /// The iterable framework table. Order is presentation order (baselines
 /// first, SLIT variants after, as in the paper's Fig. 4 rows).
 pub static FRAMEWORKS: &[FrameworkSpec] = &[
@@ -166,6 +188,14 @@ pub static FRAMEWORKS: &[FrameworkSpec] = &[
         in_paper_set: true,
         build: build_slit_balance,
         build_hlo: Some(build_slit_balance_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-shift",
+        aliases: &["shift"],
+        description: "min-carbon SLIT wrapped in forecast-driven temporal shifting of deferrable mass (batch-overnight regime)",
+        in_paper_set: false,
+        build: build_slit_shift,
+        build_hlo: Some(build_slit_shift_hlo),
     },
     FrameworkSpec {
         name: "slit-adaptive",
@@ -267,7 +297,23 @@ mod tests {
             find("slit-feedback-level").unwrap().name,
             "slit-adaptive-level"
         );
+        assert_eq!(find("shift").unwrap().name, "slit-shift");
         assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn slit_shift_is_the_only_forecast_policy_row() {
+        use crate::opt::ShiftPolicy;
+        let cfg = crate::config::SystemConfig::small_test();
+        for spec in all() {
+            let s = (spec.build)(&cfg);
+            let want = if spec.name == "slit-shift" {
+                ShiftPolicy::Forecast
+            } else {
+                ShiftPolicy::Immediate
+            };
+            assert_eq!(s.shift_policy(), want, "{}", spec.name);
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! `ClusterState` mid-run — something the static config transform cannot
 //! express.
 //!
-//! The seven named regimes (plus the untouched baseline):
+//! The eight named regimes (plus the untouched baseline):
 //!   * `diurnal` — sharpened day/night demand swing, no bursts: the
 //!     follow-the-sun routing case (cf. Fig. 1's diurnal trend).
 //!   * `bursty` — heavy-tailed demand spikes on top of frequent bursts:
@@ -34,6 +34,9 @@
 //!     profiles. Exercises the L-generic `DcVec` evaluator path end to
 //!     end (DESIGN.md §14); analytic-only — the fleet exceeds the AOT
 //!     artifact's `DC_SLOTS` padding.
+//!   * `batch-overnight` — hourly epochs and a 40% deferrable batch share
+//!     with ~14h deadlines: the temporal-shifting regime the `slit-shift`
+//!     framework (forecast-driven deferral, DESIGN.md §15) is built for.
 
 use crate::cluster::ClusterAction;
 use crate::config::{
@@ -72,6 +75,10 @@ pub enum Scenario {
     /// Planet-scale fleet: 48 sites from 8 per-zone grid templates — the
     /// regime that breaks the 16-datacenter ceiling.
     GlobalFleet,
+    /// Hourly epochs with a large deferrable (batch/embedding/eval) share
+    /// carrying overnight deadlines — the temporal-shifting regime
+    /// (`slit-shift` is the framework built for it).
+    BatchOvernight,
 }
 
 /// A generated experiment world: config + matching trace, grid signals,
@@ -103,7 +110,7 @@ impl ScenarioWorld {
 
 impl Scenario {
     /// Every scenario including the baseline.
-    pub fn all() -> [Scenario; 8] {
+    pub fn all() -> [Scenario; 9] {
         [
             Scenario::Baseline,
             Scenario::Diurnal,
@@ -113,11 +120,12 @@ impl Scenario {
             Scenario::CarbonSpike,
             Scenario::WaterStressedSummer,
             Scenario::GlobalFleet,
+            Scenario::BatchOvernight,
         ]
     }
 
     /// The named non-baseline regimes (the scenario-matrix set).
-    pub fn named() -> [Scenario; 7] {
+    pub fn named() -> [Scenario; 8] {
         [
             Scenario::Diurnal,
             Scenario::BurstyHeavyTail,
@@ -126,6 +134,7 @@ impl Scenario {
             Scenario::CarbonSpike,
             Scenario::WaterStressedSummer,
             Scenario::GlobalFleet,
+            Scenario::BatchOvernight,
         ]
     }
 
@@ -139,6 +148,7 @@ impl Scenario {
             Scenario::CarbonSpike => "carbon-spike",
             Scenario::WaterStressedSummer => "water-summer",
             Scenario::GlobalFleet => "global-fleet",
+            Scenario::BatchOvernight => "batch-overnight",
         }
     }
 
@@ -167,6 +177,10 @@ impl Scenario {
                 "planet-scale fleet: 48 sites from 8 per-zone grid \
                  templates (analytic-only; exceeds AOT DC slots)"
             }
+            Scenario::BatchOvernight => {
+                "hourly epochs; 40% deferrable batch mass with ~14h \
+                 deadlines — the temporal-shifting regime"
+            }
         }
     }
 
@@ -188,6 +202,8 @@ impl Scenario {
             // the fleet's CI spread (coal-heavy Asia vs Nordic wind) is
             // the signal a planet-scale scheduler must exploit
             Scenario::GlobalFleet => OBJ_CARBON,
+            // shifting batch mass into clean windows is a carbon play
+            Scenario::BatchOvernight => OBJ_CARBON,
         }
     }
 
@@ -202,6 +218,15 @@ impl Scenario {
         regions.sort_unstable();
         regions.dedup();
         (cfg.datacenters.len(), regions.len())
+    }
+
+    /// Deferrable-workload shape after this regime's config transform:
+    /// (deferrable fraction, deadline slack in epochs). `(0.0, 0)` for
+    /// regimes without deferrable mass; `slit scenarios` prints it.
+    pub fn deferrable(&self, base: &SystemConfig) -> (f64, usize) {
+        let mut cfg = base.clone();
+        self.apply_config(&mut cfg);
+        (cfg.workload.deferrable_frac, cfg.workload.defer_slack_epochs)
     }
 
     /// Mid-run cluster mutations this regime schedules (time-varying
@@ -274,6 +299,16 @@ impl Scenario {
             }
             Scenario::GlobalFleet => {
                 cfg.datacenters = global_fleet_datacenters(SITES_PER_ZONE);
+            }
+            Scenario::BatchOvernight => {
+                // hourly epochs: a CI-sized run still spans whole diurnal
+                // cycles, which is what the shift forecaster learns from
+                cfg.physics.epoch_s = 3600.0;
+                cfg.workload.deferrable_frac = 0.4;
+                cfg.workload.defer_slack_epochs = 14;
+                // batch arrivals are steady; bursts belong to interactive
+                // regimes
+                cfg.workload.burst_prob = 0.0;
             }
         }
     }
@@ -481,7 +516,7 @@ mod tests {
             assert!(s.target_objective() < crate::config::N_OBJ);
         }
         assert_eq!(Scenario::from_name("nope"), None);
-        assert_eq!(Scenario::named().len(), 7);
+        assert_eq!(Scenario::named().len(), 8);
     }
 
     #[test]
@@ -722,6 +757,41 @@ mod tests {
             .sum();
         assert!((res.total.requests - expected).abs() < 1e-6);
         assert!(res.total.e_tot_j > 0.0);
+    }
+
+    #[test]
+    fn batch_overnight_carries_deferrable_mass_with_deadlines() {
+        let b = base();
+        let w = Scenario::BatchOvernight.build(&b, 48, 7);
+        assert_eq!(w.cfg.physics.epoch_s, 3600.0);
+        assert_eq!(w.cfg.workload.deferrable_frac, 0.4);
+        assert!(w.events.is_empty());
+        assert_eq!(Scenario::BatchOvernight.deferrable(&b), (0.4, 14));
+        assert_eq!(Scenario::Baseline.deferrable(&b), (0.0, 0));
+
+        let deferred: f64 = w
+            .trace
+            .epochs
+            .iter()
+            .map(|e| e.total_deferrable())
+            .sum();
+        let interactive: f64 =
+            w.trace.epochs.iter().map(|e| e.total_requests()).sum();
+        assert!(deferred > 0.0, "no deferrable mass generated");
+        // the carve-out is ~40% of the offered total
+        let frac = deferred / (deferred + interactive);
+        assert!((0.25..0.55).contains(&frac), "odd deferrable share {frac}");
+        // deadlines are within the slack window and inside the horizon
+        for (t, e) in w.trace.epochs.iter().enumerate() {
+            for c in &e.classes {
+                if c.defer_req > 0.0 {
+                    assert!(c.defer_deadline >= t);
+                    assert!(c.defer_deadline <= (t + 14).min(47));
+                    // integral lots keep conservation checks exact
+                    assert_eq!(c.defer_req, c.defer_req.round());
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,9 +17,9 @@
 //!   previous epoch's *actual* ledger, so schedulers can correct for
 //!   prediction error (the feedback-aware SLIT variant).
 //!
-//! Event ordering within one `step()` (see DESIGN.md §11):
-//!   events -> predict -> panels(state) -> plan -> route/place ->
-//!   account(state) -> observe(predictor) -> observers.
+//! Event ordering within one `step()` (see DESIGN.md §11, §15):
+//!   events -> shift(deferrable) -> predict -> panels(state) -> plan ->
+//!   route/place -> account(state) -> observe(predictor) -> observers.
 //!
 //! With no events and no cluster mutations the session is bit-identical
 //! to the legacy batch path (rust/tests/session_equivalence.rs pins it).
@@ -28,12 +28,13 @@ use crate::cluster::{build_panels_dyn, ClusterAction, ClusterState};
 use crate::config::SystemConfig;
 use crate::eval::{AnalyticEvaluator, EvalConsts};
 use crate::models::EpochLedger;
+use crate::opt::shift::TemporalShifter;
 use crate::plan::Plan;
 use crate::power::GridSignals;
 use crate::predictor::WorkloadPredictor;
 use crate::sched::LocalScheduler;
 use crate::sim::{EpochContext, EpochRecord, Scheduler, SimResult};
-use crate::trace::Trace;
+use crate::trace::{EpochLoad, Trace};
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -77,6 +78,9 @@ pub struct SimSession<'a> {
     locals: Vec<LocalScheduler>,
     state: ClusterState,
     unused_pr: f64,
+    /// Temporal-shifting layer for deferrable trace mass; inert (and
+    /// forecaster-free) when the trace carries none.
+    shifter: TemporalShifter,
     events: Vec<ScenarioEvent>,
     observers: Vec<Box<dyn EpochObserver + 'a>>,
     per_epoch: Vec<EpochRecord>,
@@ -94,6 +98,8 @@ impl<'a> SimSession<'a> {
     ) -> SimSession<'a> {
         let epochs = cfg.epochs.min(trace.epochs.len());
         let unused_pr = scheduler.unused_pr(&cfg.physics);
+        let shifter =
+            TemporalShifter::new(cfg, trace, scheduler.shift_policy());
         SimSession {
             epochs,
             epoch: 0,
@@ -104,6 +110,7 @@ impl<'a> SimSession<'a> {
                 .collect(),
             state: ClusterState::from_config(cfg),
             unused_pr,
+            shifter,
             events: Vec::new(),
             observers: Vec::new(),
             per_epoch: Vec::with_capacity(epochs),
@@ -178,16 +185,47 @@ impl<'a> SimSession<'a> {
             }
         }
 
-        // 2. forecast: first epoch is known at t=0 (bootstrap), then the
-        //    15-minute-lookahead predictor takes over
+        // 2. temporal shifting: deferrable mass is queued/released against
+        //    the epoch's realised grid signals BEFORE prediction and panel
+        //    build, so the spatial scheduler plans for the released mass.
+        //    With no deferrable mass in the trace this is a no-op and the
+        //    effective load aliases the trace epoch (bit-identity).
+        let (ci, wi, tou) = self.signals.at(epoch);
         let actual = &self.trace.epochs[epoch];
+        let shift = self.shifter.step(
+            epoch,
+            self.epochs - 1,
+            actual,
+            &ci,
+            &wi,
+            &tou,
+        );
+        let released_load = (shift.released_mass > 0.0).then(|| {
+            let mut eff = actual.clone();
+            for (k, c) in eff.classes.iter_mut().enumerate() {
+                c.n_req += shift.released[k];
+            }
+            eff
+        });
+        let effective: &EpochLoad = released_load.as_ref().unwrap_or(actual);
+
+        // 3. forecast: first epoch is known at t=0 (bootstrap), then the
+        //    15-minute-lookahead predictor takes over. Released deferrable
+        //    mass is a *known* addition (the shifter just decided it), so
+        //    it rides on top of the interactive prediction.
         let predicted = if epoch == 0 {
-            actual.clone()
+            effective.clone()
         } else {
-            self.predictor.predict_next()
+            let mut p = self.predictor.predict_next();
+            if shift.released_mass > 0.0 {
+                for (k, c) in p.classes.iter_mut().enumerate() {
+                    c.n_req += shift.released[k];
+                }
+            }
+            p
         };
 
-        // 3. panels + evaluator bound to the live cluster state
+        // 4. panels + evaluator bound to the live cluster state
         let (cp, dp) = build_panels_dyn(
             self.cfg,
             &self.state,
@@ -202,7 +240,7 @@ impl<'a> SimSession<'a> {
             EvalConsts::from_physics(&self.cfg.physics),
         );
 
-        // 4. the framework's decision, with last epoch's realised ledger
+        // 5. the framework's decision, with last epoch's realised ledger
         //    exposed for prediction-error feedback
         let ctx = EpochContext {
             cfg: self.cfg,
@@ -221,12 +259,13 @@ impl<'a> SimSession<'a> {
             self.scheduler.name()
         );
 
-        // 5. discrete execution against the ACTUAL load ------------------
+        // 6. discrete execution against the EFFECTIVE load (interactive
+        //    actuals + deferrable mass released this epoch) --------------
         let mut ledger = EpochLedger::default();
         for (l, ls) in self.locals.iter_mut().enumerate() {
             ls.new_epoch_with(self.cfg, self.state.nodes(l));
         }
-        let requests = self.trace.sample_requests(self.cfg, epoch, &mut self.rng);
+        let requests = Trace::sample_load(self.cfg, effective, &mut self.rng);
         let default_plan = Plan::uniform(plan.classes, plan.dcs);
         // per-class realised count to detect prediction misses (Algorithm
         // 1 lines 22-23: overflow rides the default plan)
@@ -273,9 +312,8 @@ impl<'a> SimSession<'a> {
         // per-class feedback scheduler corrects its forecast with
         ledger.class_requests = seen;
 
-        // 6. energy/water/carbon accounting (Eqs. 5-18) against the live
+        // 7. energy/water/carbon accounting (Eqs. 5-18) against the live
         //    node counts — an offline site burns nothing
-        let (ci, wi, tou) = self.signals.at(epoch);
         for (l, ls) in self.locals.iter().enumerate() {
             let spec = &self.cfg.datacenters[l];
             let live = self.state.nodes(l);
@@ -301,7 +339,15 @@ impl<'a> SimSession<'a> {
             );
         }
 
-        // 7. close the loop: predictor, totals, feedback ledger, record
+        // deferral accounting rides the ledger so observers/CSV see it
+        ledger.deferred_offered = shift.offered;
+        ledger.deferred_released = shift.released_mass;
+        ledger.deferred_queued = shift.queued;
+        ledger.deferred_expired = shift.expired;
+
+        // 8. close the loop: predictor, totals, feedback ledger, record.
+        //    The predictor tracks the *interactive* series only — released
+        //    deferrable mass is known, not forecast.
         self.predictor.observe(actual);
         self.total.merge(&ledger);
         self.prev_ledger = Some(ledger.clone());
@@ -314,7 +360,7 @@ impl<'a> SimSession<'a> {
         });
         self.epoch += 1;
 
-        // 8. telemetry sinks see the completed epoch
+        // 9. telemetry sinks see the completed epoch
         let record = self.per_epoch.last().expect("record just pushed");
         for obs in &mut self.observers {
             obs.on_epoch(record, &self.state);
@@ -353,7 +399,7 @@ pub struct CsvEpochObserver {
 }
 
 impl CsvEpochObserver {
-    pub const HEADER: [&'static str; 12] = [
+    pub const HEADER: [&'static str; 16] = [
         "epoch",
         "ttft_s",
         "carbon_kg",
@@ -366,6 +412,10 @@ impl CsvEpochObserver {
         "ttft_p50_s",
         "ttft_p95_s",
         "ttft_p99_s",
+        "deferred_offered",
+        "deferred_released",
+        "deferred_queued",
+        "deferred_expired",
     ];
 
     pub fn create(path: &str) -> std::io::Result<CsvEpochObserver> {
@@ -392,6 +442,10 @@ impl EpochObserver for CsvEpochObserver {
                 record.ledger.ttft_hist.p50(),
                 record.ledger.ttft_hist.p95(),
                 record.ledger.ttft_hist.p99(),
+                record.ledger.deferred_offered,
+                record.ledger.deferred_released,
+                record.ledger.deferred_queued,
+                record.ledger.deferred_expired,
             ]);
         }
     }

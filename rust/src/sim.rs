@@ -50,6 +50,13 @@ pub trait Scheduler {
     }
     /// Produce the epoch's scheduling plan.
     fn plan(&mut self, ctx: &EpochContext) -> Plan;
+    /// When deferrable trace mass is served relative to arrival. The
+    /// default releases on arrival (no temporal control); wrap a
+    /// scheduler in [`crate::opt::shift::ShiftScheduler`] to opt into
+    /// forecast-driven shifting.
+    fn shift_policy(&self) -> crate::opt::shift::ShiftPolicy {
+        crate::opt::shift::ShiftPolicy::Immediate
+    }
 }
 
 /// Per-epoch record for the Fig. 5 time series.

@@ -17,12 +17,23 @@ use crate::util::rng::Rng;
 /// Aggregate demand of one (origin region, model) class within an epoch.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ClassLoad {
-    /// Number of requests arriving this epoch.
+    /// Number of interactive requests arriving this epoch (must be served
+    /// in their arrival epoch).
     pub n_req: f64,
     /// Mean input tokens per request.
     pub tok_in: f64,
     /// Mean output tokens per request.
     pub tok_out: f64,
+    /// Deferrable request mass arriving this epoch (batch/embedding/eval
+    /// jobs) on top of `n_req`. The temporal-shifting layer (`opt::shift`)
+    /// may hold it and release it into a later epoch's load; schedulers
+    /// without a shifting policy serve it in the arrival epoch. Kept
+    /// integral by the generator so served-mass comparisons across release
+    /// schedules stay exact under `round()` sampling.
+    pub defer_req: f64,
+    /// Latest epoch (absolute index) by which `defer_req` must be served.
+    /// Only meaningful when `defer_req > 0`.
+    pub defer_deadline: usize,
 }
 
 /// Demand of all classes within one epoch.
@@ -43,6 +54,11 @@ impl EpochLoad {
             .sum()
     }
 
+    /// Deferrable request mass offered this epoch (sum over classes).
+    pub fn total_deferrable(&self) -> f64 {
+        self.classes.iter().map(|c| c.defer_req).sum()
+    }
+
     /// Scale request counts (used when realising predictions).
     pub fn scaled(&self, f: f64) -> EpochLoad {
         EpochLoad {
@@ -51,6 +67,7 @@ impl EpochLoad {
                 .iter()
                 .map(|c| ClassLoad {
                     n_req: c.n_req * f,
+                    defer_req: c.defer_req * f,
                     ..*c
                 })
                 .collect(),
@@ -149,7 +166,21 @@ impl Trace {
                             * w.token_scale
                             * rng.lognormal(0.0, 0.12))
                         .max(1.0),
+                        ..ClassLoad::default()
                     };
+                }
+            }
+            // Deferrable split: carve an integral share of each class off
+            // into the deferrable component. Done *after* all RNG draws so
+            // a deferrable trace is an exact partition of the frac=0 trace
+            // (same seed => same totals), and so frac=0 stays bit-identical.
+            if w.deferrable_frac > 0.0 {
+                let deadline = (t + w.defer_slack_epochs).min(epochs - 1);
+                for c in classes.iter_mut() {
+                    let d = (c.n_req * w.deferrable_frac).round();
+                    c.defer_req = d;
+                    c.n_req -= d;
+                    c.defer_deadline = deadline;
                 }
             }
             out.push(EpochLoad { classes });
@@ -165,7 +196,18 @@ impl Trace {
         epoch: usize,
         rng: &mut Rng,
     ) -> Vec<Request> {
-        let load = &self.epochs[epoch];
+        Trace::sample_load(cfg, &self.epochs[epoch], rng)
+    }
+
+    /// Sample requests for an arbitrary epoch load — the session uses this
+    /// on the *effective* load (interactive + released deferrable mass)
+    /// rather than the raw trace epoch. Deferrable mass still queued is
+    /// not sampled; only `n_req` is realised.
+    pub fn sample_load(
+        cfg: &SystemConfig,
+        load: &EpochLoad,
+        rng: &mut Rng,
+    ) -> Vec<Request> {
         let mut reqs = Vec::new();
         for (k, c) in load.classes.iter().enumerate() {
             let n = c.n_req.round() as usize;
@@ -213,6 +255,7 @@ impl Trace {
                         .unwrap_or(0.0),
                     tok_in: spec.mean_in_tokens * cfg.workload.token_scale,
                     tok_out: spec.mean_out_tokens * cfg.workload.token_scale,
+                    ..ClassLoad::default()
                 };
             }
             epochs.push(EpochLoad { classes });
@@ -415,6 +458,46 @@ mod tests {
         let cfg = SystemConfig::small_test();
         assert!(Trace::from_csv(dir.to_str().unwrap(), &cfg).is_err());
         std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn deferrable_split_partitions_the_frac0_trace() {
+        // the deferrable carve-out happens after all RNG draws, so a
+        // deferrable trace is an exact partition of the frac=0 trace
+        let mut cfg = SystemConfig::small_test();
+        let plain = Trace::generate(&cfg, 48, 7);
+        cfg.workload.deferrable_frac = 0.35;
+        cfg.workload.defer_slack_epochs = 12;
+        let split = Trace::generate(&cfg, 48, 7);
+        for (t, (a, b)) in plain.epochs.iter().zip(&split.epochs).enumerate()
+        {
+            for (ca, cb) in a.classes.iter().zip(&b.classes) {
+                assert_eq!(ca.n_req, cb.n_req + cb.defer_req, "epoch {t}");
+                assert_eq!(ca.tok_in, cb.tok_in);
+                assert_eq!(ca.tok_out, cb.tok_out);
+                // integral deferrable units keep round() sampling exact
+                assert_eq!(cb.defer_req, cb.defer_req.round());
+                assert!(cb.defer_req >= 0.0);
+                if cb.defer_req > 0.0 {
+                    assert!(cb.defer_deadline >= t);
+                    assert!(cb.defer_deadline <= (t + 12).min(47));
+                }
+            }
+        }
+        assert!(
+            split.epochs.iter().map(EpochLoad::total_deferrable).sum::<f64>()
+                > 0.0,
+            "split produced no deferrable mass"
+        );
+    }
+
+    #[test]
+    fn zero_deferrable_frac_is_bit_identical() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.workload.deferrable_frac = 0.0;
+        let a = Trace::generate(&cfg, 32, 5);
+        let b = Trace::generate(&SystemConfig::small_test(), 32, 5);
+        assert_eq!(a.epochs, b.epochs);
     }
 
     #[test]

@@ -54,6 +54,23 @@ fn derive_seed(seed: u64, case: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Exact mass-balance check: `total` must equal the sum of `parts` bit-for-bit.
+///
+/// Meant for integral flows (request counts, deferred lots) where f64
+/// addition is exact and any drift is a real accounting bug, not rounding.
+pub fn mass_balance(total: f64, parts: &[f64]) -> Result<(), String> {
+    let sum: f64 = parts.iter().sum();
+    if total == sum {
+        Ok(())
+    } else {
+        Err(format!(
+            "mass not conserved: total {total} != sum{parts:?} = {sum} \
+             (diff {})",
+            total - sum
+        ))
+    }
+}
+
 /// Assert two floats agree to relative tolerance (helper for properties).
 pub fn close(a: f64, b: f64, rtol: f64) -> Result<(), String> {
     let scale = a.abs().max(b.abs()).max(1e-12);
@@ -128,6 +145,13 @@ mod tests {
             },
         );
         assert!(r.is_ok());
+    }
+
+    #[test]
+    fn mass_balance_is_exact() {
+        assert!(mass_balance(10.0, &[4.0, 6.0]).is_ok());
+        assert!(mass_balance(10.0, &[4.0, 6.0 + 1e-9]).is_err());
+        assert!(mass_balance(0.0, &[]).is_ok());
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!     sharded-worker TCP front — zero dropped replies, request mass
 //!     conserved end to end, finite TTFT p99,
 //!   * LLF-vs-FCFS dispatch: slack-normalized worst-class p99 under the
-//!     same saturating batch stream for both policies.
+//!     same saturating batch stream for both policies,
+//!   * temporal shifting: batch-overnight carbon with vs without the
+//!     forecast-driven release policy, at (asserted) equal served mass
+//!     and zero missed deadlines.
 //!
 //! Each test asserts bit/tolerance *parity* between the fast and reference
 //! paths (the correctness half of the bench) and prints the measured
@@ -349,6 +352,59 @@ fn row_llf_vs_fcfs_slack_normalized_p99() {
         fcfs,
         llf_served,
         fcfs_served,
+    );
+}
+
+/// CI twin of the hot_path shift-overhead row: the batch-overnight regime
+/// under the same spatial policy with and without forecast-driven temporal
+/// shifting. Mass parity and zero missed deadlines are asserted (the
+/// correctness half — the strict carbon win is pinned at full size in
+/// scenario_matrix.rs); the carbon ratio and wall-clock overhead of the
+/// shifting layer are printed for eyeballing.
+#[test]
+fn row_shift_carbon_vs_noshift() {
+    use slit::baselines::RoundRobinScheduler;
+    use slit::opt::ShiftScheduler;
+    use slit::scenario::Scenario;
+    use slit::sim::simulate;
+
+    let mut base = SystemConfig::small_test();
+    base.epochs = 30;
+    let world = Scenario::BatchOvernight.build(&base, base.epochs, 9);
+
+    let t = Instant::now();
+    let mut bare = RoundRobinScheduler;
+    let noshift =
+        simulate(&world.cfg, &world.trace, &world.signals, &mut bare, 9);
+    let noshift_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let mut wrapped = ShiftScheduler::new(Box::new(RoundRobinScheduler));
+    let shift =
+        simulate(&world.cfg, &world.trace, &world.signals, &mut wrapped, 9);
+    let shift_s = t.elapsed().as_secs_f64();
+
+    // the correctness half: exact served-mass parity (integral lots) and
+    // zero missed deadlines on both sides
+    assert_eq!(
+        shift.total.requests, noshift.total.requests,
+        "release schedule changed the served mass"
+    );
+    assert!(shift.total.requests > 0.0);
+    assert_eq!(shift.total.deferred_expired, 0.0, "missed deadlines");
+    assert_eq!(noshift.total.deferred_expired, 0.0);
+    assert_eq!(
+        shift.total.deferred_offered,
+        shift.total.deferred_released,
+        "queue not drained"
+    );
+    println!(
+        "| temporal shift: carbon vs no-shift | {:.3}x | ({:.2} kg vs {:.2} kg; {:.1} ms vs {:.1} ms wall for 30 epochs) |",
+        shift.total.carbon_kg / noshift.total.carbon_kg.max(1e-12),
+        shift.total.carbon_kg,
+        noshift.total.carbon_kg,
+        shift_s * 1e3,
+        noshift_s * 1e3,
     );
 }
 

@@ -1,0 +1,204 @@
+//! Deadline/conservation properties for the temporal-shifting subsystem
+//! (PR 7), at the *session* level — the shifter's own unit tests cover the
+//! queue in isolation; these pin what reaches the ledgers end-to-end:
+//!
+//! * every epoch, cumulative offered == cumulative released + cumulative
+//!   expired + mass still queued (exact — lots are integral);
+//! * nothing expires: both shipped policies force-release at the deadline,
+//!   so `deferred_expired` staying 0 certifies every deadline was met;
+//! * the release *schedule* never changes the served mass — Immediate and
+//!   Forecast serve bit-for-bit the same request count;
+//! * at deferrable fraction 0 the `slit-shift` wrapper is bit-identical
+//!   to its inner framework (`slit-carbon`): same plans, same ledgers.
+
+use slit::baselines::RoundRobinScheduler;
+use slit::config::SystemConfig;
+use slit::opt::ShiftScheduler;
+use slit::power::GridSignals;
+use slit::registry;
+use slit::sim::{simulate, SimResult};
+use slit::trace::Trace;
+use slit::util::propkit;
+
+/// Hourly-epoch config with a randomised deferrable carve-out.
+fn deferrable_cfg(frac: f64, slack: usize, epochs: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::small_test();
+    cfg.physics.epoch_s = 3600.0;
+    cfg.workload.deferrable_frac = frac;
+    cfg.workload.defer_slack_epochs = slack;
+    cfg.epochs = epochs;
+    cfg
+}
+
+/// Run one world under the round-robin spatial policy, either bare
+/// (Immediate release) or wrapped (Forecast release).
+fn run_world(cfg: &SystemConfig, seed: u64, wrapped: bool) -> SimResult {
+    let trace = Trace::generate(cfg, cfg.epochs, seed);
+    let signals = GridSignals::generate(cfg, cfg.epochs, seed);
+    if wrapped {
+        let mut s = ShiftScheduler::new(Box::new(RoundRobinScheduler));
+        simulate(cfg, &trace, &signals, &mut s, seed)
+    } else {
+        let mut s = RoundRobinScheduler;
+        simulate(cfg, &trace, &signals, &mut s, seed)
+    }
+}
+
+#[test]
+fn session_ledgers_conserve_deferred_mass_under_both_policies() {
+    propkit::check(
+        "session_deferred_conservation",
+        0x5348_4950,
+        6,
+        |rng| {
+            let frac = 0.05 + 0.55 * rng.f64();
+            let slack = 1 + rng.below(10);
+            let epochs = 8 + rng.below(10);
+            (frac, slack, epochs, rng.next_u64())
+        },
+        |&(frac, slack, epochs, seed)| {
+            let cfg = deferrable_cfg(frac, slack, epochs);
+            for wrapped in [false, true] {
+                let res = run_world(&cfg, seed, wrapped);
+                let (mut off, mut rel, mut exp) = (0.0, 0.0, 0.0);
+                for r in &res.per_epoch {
+                    off += r.ledger.deferred_offered;
+                    rel += r.ledger.deferred_released;
+                    exp += r.ledger.deferred_expired;
+                    // the every-epoch invariant, exact
+                    propkit::mass_balance(
+                        off,
+                        &[rel, exp, r.ledger.deferred_queued],
+                    )?;
+                }
+                if off == 0.0 {
+                    return Err(format!(
+                        "frac {frac} generated no deferrable mass"
+                    ));
+                }
+                if exp != 0.0 {
+                    return Err(format!("missed deadlines: {exp}"));
+                }
+                let tail =
+                    res.per_epoch.last().unwrap().ledger.deferred_queued;
+                if tail != 0.0 {
+                    return Err(format!("queue not drained: {tail}"));
+                }
+                // everything the trace offered (interactive rounds +
+                // deferrable lots) was accounted as a request exactly
+                // once, regardless of the release schedule: released lots
+                // are integral, so round(interactive + released) ==
+                // round(interactive) + released in every epoch
+                let trace = Trace::generate(&cfg, cfg.epochs, seed);
+                let interactive: f64 = trace.epochs[..cfg.epochs]
+                    .iter()
+                    .map(|e| {
+                        e.classes
+                            .iter()
+                            .map(|c| c.n_req.round())
+                            .sum::<f64>()
+                    })
+                    .sum();
+                let deferred: f64 = trace.epochs[..cfg.epochs]
+                    .iter()
+                    .map(|e| e.total_deferrable())
+                    .sum();
+                propkit::mass_balance(
+                    res.total.requests,
+                    &[interactive, deferred],
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn release_schedule_never_changes_served_mass() {
+    propkit::check(
+        "served_mass_policy_invariance",
+        0x4D41_5353,
+        6,
+        |rng| {
+            let frac = 0.1 + 0.4 * rng.f64();
+            let slack = 2 + rng.below(12);
+            (frac, slack, rng.next_u64())
+        },
+        |&(frac, slack, seed)| {
+            let cfg = deferrable_cfg(frac, slack, 20);
+            let imm = run_world(&cfg, seed, false);
+            let fcp = run_world(&cfg, seed, true);
+            // integral lots: equality is exact across release schedules
+            propkit::mass_balance(
+                imm.total.requests,
+                &[fcp.total.requests],
+            )?;
+            propkit::mass_balance(
+                imm.total.deferred_released,
+                &[fcp.total.deferred_released],
+            )?;
+            if fcp.total.deferred_expired != 0.0 {
+                return Err("forecast policy missed a deadline".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn slit_shift_is_bit_identical_to_slit_carbon_at_fraction_zero() {
+    // deferrable_frac stays at small_test's default 0: the shifter must be
+    // structurally inert — no forecaster, no RNG draws, no float changes —
+    // so the wrapper reproduces its inner framework bit-for-bit
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 4;
+    cfg.opt.budget_s = 60.0;
+    cfg.opt.generations = 4;
+    assert_eq!(cfg.workload.deferrable_frac, 0.0);
+    let trace = Trace::generate(&cfg, cfg.epochs, 42);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, 42);
+
+    let run = |name: &str| -> SimResult {
+        let mut sched = registry::build(name, &cfg, None).expect("framework");
+        simulate(&cfg, &trace, &signals, sched.as_mut(), 42)
+    };
+    let inner = run("slit-carbon");
+    let wrapped = run("slit-shift");
+
+    assert_eq!(wrapped.name, "slit-shift");
+    assert_eq!(wrapped.per_epoch.len(), inner.per_epoch.len());
+    for (a, b) in inner.per_epoch.iter().zip(&wrapped.per_epoch) {
+        assert_eq!(a.plan, b.plan, "plans diverge at epoch {}", a.epoch);
+        let la = &a.ledger;
+        let lb = &b.ledger;
+        for (x, y, what) in [
+            (la.requests, lb.requests, "requests"),
+            (la.dropped, lb.dropped, "dropped"),
+            (la.ttft_sum_s, lb.ttft_sum_s, "ttft_sum_s"),
+            (la.e_it_j, lb.e_it_j, "e_it_j"),
+            (la.carbon_kg, lb.carbon_kg, "carbon_kg"),
+            (la.water_l, lb.water_l, "water_l"),
+            (la.cost_usd, lb.cost_usd, "cost_usd"),
+        ] {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what} diverges at epoch {}: {x} vs {y}",
+                a.epoch
+            );
+        }
+        // and the deferral accounting is all-zero on both sides
+        for v in [
+            lb.deferred_offered,
+            lb.deferred_released,
+            lb.deferred_queued,
+            lb.deferred_expired,
+        ] {
+            assert_eq!(v, 0.0);
+        }
+    }
+    assert_eq!(
+        inner.total.carbon_kg.to_bits(),
+        wrapped.total.carbon_kg.to_bits()
+    );
+}

@@ -10,8 +10,10 @@
 # suite's markdown table verbatim, so the headline speedup rows
 # ("delta speedup (target >= 4x)", "arena speedup", "shard speedup",
 # "per-DC cost L=48/L=16", "serve: open-loop achieved (target >= 10k)",
-# "dispatch: FCFS/LLF worst-slack ratio") are greppable straight from
-# EXPERIMENTS.md.
+# "dispatch: FCFS/LLF worst-slack ratio",
+# "shift: forecaster warm-start (one-time)",
+# "shift: planner step per epoch (forecast policy)") are greppable
+# straight from EXPERIMENTS.md.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
