@@ -1,8 +1,9 @@
 //! Hot-path microbenchmarks: the plan evaluator (native scalar, native
 //! batch-parallel, AOT/PJRT), the GBDT surrogate, the MCMF solver, the
-//! predictor fit, a full optimizer generation, and the temporal-shift
-//! planner's per-epoch overhead. These are the numbers the §Perf
-//! iteration log in EXPERIMENTS.md tracks.
+//! predictor fit, a full optimizer generation, the temporal-shift
+//! planner's per-epoch overhead, and the optimality-gap oracle's
+//! per-epoch solve. These are the numbers the §Perf iteration log in
+//! EXPERIMENTS.md tracks.
 
 use slit::cluster::build_panels;
 use slit::config::{SystemConfig, EVAL_POPULATION};
@@ -499,6 +500,39 @@ fn main() {
         let mut h = slit::baselines::HelixScheduler;
         core::hint::black_box(h.plan(&ctx));
     });
+
+    // --- optimality-gap oracle -----------------------------------------------
+    // the certified lower-bound solve (four scalarizations, each one MCMF
+    // run plus the TTFT queue-hull expansion) that SimSession::step now
+    // pays every epoch — tracked at both fleet scales so the per-epoch
+    // tax stays visibly small next to the plan search above
+    {
+        use slit::config::N_OBJ;
+        use slit::opt::epoch_lower_bound;
+        use slit::scenario::global_fleet_datacenters;
+
+        let fleet48 = global_fleet_datacenters(6);
+        let eval_at = |dcs: usize| -> AnalyticEvaluator {
+            let mut c = SystemConfig::paper_default();
+            c.datacenters = fleet48[..dcs].to_vec();
+            let signals = GridSignals::generate(&c, 8, 3);
+            let trace = Trace::generate(&c, 8, 3);
+            let (cp, dp) = build_panels(&c, &signals, 4, &trace.epochs[4], 0.0);
+            AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&c.physics))
+        };
+        let ev16 = eval_at(16);
+        bench.bench("oracle: per-epoch solve (L=16)", || {
+            for obj in 0..N_OBJ {
+                core::hint::black_box(epoch_lower_bound(&ev16, obj));
+            }
+        });
+        let ev48 = eval_at(48);
+        bench.bench("oracle: per-epoch solve (L=48)", || {
+            for obj in 0..N_OBJ {
+                core::hint::black_box(epoch_lower_bound(&ev48, obj));
+            }
+        });
+    }
 
     // --- predictor ------------------------------------------------------------
     let series: Vec<f64> = (0..192)

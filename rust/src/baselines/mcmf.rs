@@ -272,6 +272,143 @@ mod tests {
         );
     }
 
+    /// Exhaustive reference: enumerate every integral flow assignment on
+    /// a tiny edge list (s = 0, t = n-1), keep the conservation-feasible
+    /// ones, and return max flow with min cost among max flows — the
+    /// exact objective `min_cost_max_flow` claims to optimise.
+    fn brute_force(n: usize, edges: &[(usize, usize, i64, i64)]) -> (i64, i64) {
+        let m = edges.len();
+        let mut f = vec![0i64; m];
+        let mut best = (0i64, 0i64);
+        loop {
+            let mut net = vec![0i64; n];
+            let mut cost = 0i64;
+            for (i, &(u, v, _, c)) in edges.iter().enumerate() {
+                net[u] -= f[i];
+                net[v] += f[i];
+                cost += f[i] * c;
+            }
+            if (0..n).all(|u| u == 0 || u == n - 1 || net[u] == 0) {
+                let flow = net[n - 1];
+                if flow > best.0 || (flow == best.0 && cost < best.1) {
+                    best = (flow, cost);
+                }
+            }
+            // odometer over per-edge flows 0..=cap
+            let mut i = 0;
+            while i < m {
+                f[i] += 1;
+                if f[i] <= edges[i].2 {
+                    break;
+                }
+                f[i] = 0;
+                i += 1;
+            }
+            if i == m {
+                return best;
+            }
+        }
+    }
+
+    #[test]
+    fn parity_with_bruteforce_on_tiny_graphs() {
+        // random tiny DAGs (u < v, so negative costs cannot form negative
+        // cycles — the solver's stated precondition), caps small enough
+        // that full enumeration is the ground truth
+        propkit::check(
+            "mcmf-bruteforce-parity",
+            0xB0F,
+            60,
+            |r: &mut Rng| {
+                let n = 3 + r.below(3);
+                let m = 3 + r.below(4);
+                let edges: Vec<(usize, usize, i64, i64)> = (0..m)
+                    .map(|_| {
+                        let u = r.below(n - 1);
+                        let v = u + 1 + r.below(n - 1 - u);
+                        (u, v, r.int(0, 2), r.int(-3, 3))
+                    })
+                    .collect();
+                (n, edges)
+            },
+            |(n, edges)| {
+                let mut g = FlowNetwork::new(*n);
+                for &(u, v, cap, cost) in edges {
+                    g.add_edge(u, v, cap, cost);
+                }
+                let got = g.min_cost_max_flow(0, n - 1);
+                let want = brute_force(*n, edges);
+                if got != want {
+                    return Err(format!(
+                        "solver {got:?} vs brute force {want:?} on {edges:?}"
+                    ));
+                }
+                if !g.conserves_flow(0, *n - 1) {
+                    return Err("conservation violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_edges_fill_cheapest_first() {
+        // two same-endpoint edges must be tracked independently: the
+        // cheap one saturates, the dear one carries only the remainder
+        let mut g = FlowNetwork::new(3);
+        let cheap = g.add_edge(0, 1, 3, 1);
+        let dear = g.add_edge(0, 1, 3, 5);
+        let out = g.add_edge(1, 2, 4, 0);
+        let (f, c) = g.min_cost_max_flow(0, 2);
+        assert_eq!(f, 4);
+        assert_eq!(c, 3 * 1 + 1 * 5);
+        assert_eq!(g.flow_on(cheap), 3);
+        assert_eq!(g.flow_on(dear), 1);
+        assert_eq!(g.flow_on(out), 4);
+    }
+
+    #[test]
+    fn potentials_stay_correct_across_negative_cost_augmentations() {
+        // three augmenting rounds over a graph whose cheapest paths ride
+        // a negative edge: the Dijkstra rounds after the first are only
+        // correct if the Johnson potentials absorbed the Bellman-Ford
+        // negative-edge initialisation and each round's distance update.
+        // Max flow 3 is forced (source cut), and so is its routing:
+        // 0→1→3, 0→1→2→3, 0→2→3 => cost (−2+3)+(−2+1+1)+(4+1) = 6.
+        let mut g = FlowNetwork::new(4);
+        g.add_edge(0, 1, 2, -2);
+        g.add_edge(1, 3, 1, 3);
+        g.add_edge(1, 2, 1, 1);
+        g.add_edge(2, 3, 2, 1);
+        g.add_edge(0, 2, 1, 4);
+        let (f, c) = g.min_cost_max_flow(0, 3);
+        assert_eq!(f, 3);
+        assert_eq!(c, 6);
+        assert!(g.conserves_flow(0, 3));
+    }
+
+    #[test]
+    fn flow_on_ids_are_stable_across_add_node_and_solve() {
+        // forward ids are even and assigned in insertion order, residual
+        // twins at id+1 — interleaving add_node must not disturb either,
+        // and a solve must leave ids addressing the same edges
+        let mut g = FlowNetwork::new(2);
+        let direct = g.add_edge(0, 1, 2, 7);
+        let mid = g.add_node();
+        let e_in = g.add_edge(0, mid, 5, 1);
+        let e_out = g.add_edge(mid, 1, 4, 1);
+        assert_eq!((direct, e_in, e_out), (0, 2, 4));
+        let (f, c) = g.min_cost_max_flow(0, 1);
+        assert_eq!(f, 6);
+        assert_eq!(c, 2 * 7 + 4 * 2);
+        assert_eq!(g.flow_on(direct), 2);
+        assert_eq!(g.flow_on(e_in), 4);
+        assert_eq!(g.flow_on(e_out), 4);
+        // residual twins carry the negated flow at id+1
+        assert_eq!(g.flow_on(direct + 1), -2);
+        assert_eq!(g.flow_on(e_in + 1), -4);
+    }
+
     #[test]
     fn max_flow_matches_min_cut_on_bipartite() {
         // bipartite 2x2, unit capacities: max matching = 2

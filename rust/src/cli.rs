@@ -473,6 +473,29 @@ pub fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     root.set("showcase", showcased);
     root.set("evaluations", Json::Num(outcome.evaluations as f64));
     root.set("delta_evals", Json::Num(outcome.delta_evals as f64));
+    // self-calibration: the certified per-objective lower bound for this
+    // epoch's placement problem, plus how far the front's best point on
+    // each axis sits from it (DESIGN.md §16)
+    let mut oracle = Json::obj();
+    for (obj, name) in OBJ_NAMES.iter().enumerate() {
+        let bound = crate::opt::oracle::epoch_lower_bound(&ev, obj);
+        let best = outcome
+            .archive
+            .solutions
+            .iter()
+            .map(|s| s.obj[obj])
+            .fold(f64::INFINITY, f64::min);
+        let mut o = Json::obj();
+        o.set("lower_bound", Json::Num(bound.score()));
+        o.set("quantization_slack", Json::Num(bound.slack));
+        o.set("best_front_point", Json::Num(best));
+        o.set(
+            "gap_frac",
+            Json::Num((best - bound.score()) / best.abs().max(1e-12)),
+        );
+        oracle.set(name, o);
+    }
+    root.set("oracle", oracle);
     let out = args.get("out").unwrap_or("front.json");
     std::fs::write(out, root.to_string_pretty())?;
     println!(

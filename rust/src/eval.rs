@@ -413,6 +413,15 @@ impl AnalyticEvaluator {
         self.cp.classes
     }
 
+    /// The TTFT denominator: `sum_k n_req[k]` clamped to >= 1 exactly as
+    /// `finish` uses it. Public so the optimality-gap oracle
+    /// (`opt::oracle`) normalises its flow-cost bound by the identical
+    /// divisor — any other reconstruction would break the certified
+    /// oracle <= achieved comparison at the last ulp.
+    pub fn total_requests(&self) -> f64 {
+        self.total_req
+    }
+
     /// Evaluate one plan -> [ttft_s, carbon_kg, water_l, cost_usd].
     /// The O(K*L) [`AnalyticEvaluator::aggregate`] contraction followed by
     /// the O(L) [`AnalyticEvaluator::finish`] physics pass; allocation-free

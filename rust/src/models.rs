@@ -195,6 +195,19 @@ pub struct EpochLedger {
     /// layer force-releases at the deadline, so this stays 0 for every
     /// shipped policy; the conservation tests pin that.
     pub deferred_expired: f64,
+    /// Per-objective certified lower bound from the optimality-gap
+    /// oracle (`opt::oracle`), [ttft, carbon, water, cost]. Sums across
+    /// merges (the bound on a run is the sum of per-epoch bounds, since
+    /// epochs are independent placement problems). 0 when the producer
+    /// does not run the oracle (serving coordinator).
+    pub oracle_lb: [f64; 4],
+    /// The framework plan's analytic score on each objective for the
+    /// same epochs — the oracle's comparison side. Analytic, not the
+    /// sampled discrete ledger: soundness (lb <= achieved) then holds
+    /// deterministically, free of warm/cold sampling noise.
+    pub oracle_achieved: [f64; 4],
+    /// Summed quantization slack the bounds already concede.
+    pub oracle_slack: [f64; 4],
 }
 
 impl EpochLedger {
@@ -253,6 +266,11 @@ impl EpochLedger {
         self.deferred_offered += other.deferred_offered;
         self.deferred_released += other.deferred_released;
         self.deferred_expired += other.deferred_expired;
+        for i in 0..4 {
+            self.oracle_lb[i] += other.oracle_lb[i];
+            self.oracle_achieved[i] += other.oracle_achieved[i];
+            self.oracle_slack[i] += other.oracle_slack[i];
+        }
         // queue depth is a snapshot: keep the most recent one
         self.deferred_queued = other.deferred_queued;
     }
@@ -265,6 +283,16 @@ impl EpochLedger {
             self.water_l,
             self.cost_usd,
         ]
+    }
+
+    /// Optimality gap on objective `obj` vs the accumulated oracle lower
+    /// bound: `(achieved - lb) / |achieved|`. 0 = provably optimal; 1 =
+    /// the oracle certifies nothing beyond nonnegativity. Uses the
+    /// analytic achieved side recorded next to the bound, so soundness
+    /// (result >= 0) is deterministic.
+    pub fn oracle_gap_frac(&self, obj: usize) -> f64 {
+        let a = self.oracle_achieved[obj];
+        (a - self.oracle_lb[obj]) / a.abs().max(1e-12)
     }
 }
 

@@ -3,11 +3,13 @@
 //! simulator-facing scheduler adapter.
 
 pub mod gbdt;
+pub mod oracle;
 pub mod scheduler;
 pub mod shift;
 pub mod slit;
 
 pub use gbdt::{Gbdt, GbdtConfig};
+pub use oracle::{epoch_lower_bound, gap_reports, GapReport, OracleBound};
 pub use scheduler::{FeedbackMode, SlitScheduler, SlitStats, SlitVariant};
 pub use shift::{ShiftPolicy, ShiftScheduler, TemporalShifter};
 pub use slit::{select_population, SlitOptimizer, SlitOptions, SlitOutcome};

@@ -345,6 +345,17 @@ impl<'a> SimSession<'a> {
         ledger.deferred_queued = shift.queued;
         ledger.deferred_expired = shift.expired;
 
+        // optimality-gap oracle: certified per-objective lower bound for
+        // this epoch's placement problem vs the plan's analytic score,
+        // under the same evaluator the framework planned against. Pure
+        // and RNG-free, so the simulation stays bit-identical per seed.
+        let gaps = crate::opt::oracle::gap_reports(&evaluator, &plan);
+        for (i, g) in gaps.iter().enumerate() {
+            ledger.oracle_lb[i] = g.oracle_score;
+            ledger.oracle_achieved[i] = g.achieved;
+            ledger.oracle_slack[i] = g.quantization_slack;
+        }
+
         // 8. close the loop: predictor, totals, feedback ledger, record.
         //    The predictor tracks the *interactive* series only — released
         //    deferrable mass is known, not forecast.
@@ -357,6 +368,7 @@ impl<'a> SimSession<'a> {
             plan,
             decision_s,
             site_nodes: self.state.site_totals(),
+            gaps,
         });
         self.epoch += 1;
 
@@ -399,7 +411,7 @@ pub struct CsvEpochObserver {
 }
 
 impl CsvEpochObserver {
-    pub const HEADER: [&'static str; 16] = [
+    pub const HEADER: [&'static str; 20] = [
         "epoch",
         "ttft_s",
         "carbon_kg",
@@ -416,6 +428,10 @@ impl CsvEpochObserver {
         "deferred_released",
         "deferred_queued",
         "deferred_expired",
+        "gap_ttft",
+        "gap_carbon",
+        "gap_water",
+        "gap_cost",
     ];
 
     pub fn create(path: &str) -> std::io::Result<CsvEpochObserver> {
@@ -446,6 +462,10 @@ impl EpochObserver for CsvEpochObserver {
                 record.ledger.deferred_released,
                 record.ledger.deferred_queued,
                 record.ledger.deferred_expired,
+                record.gaps[0].gap_frac,
+                record.gaps[1].gap_frac,
+                record.gaps[2].gap_frac,
+                record.gaps[3].gap_frac,
             ]);
         }
     }

@@ -70,6 +70,9 @@ pub struct EpochRecord {
     /// Live total node count per site this epoch (shows capacity dips
     /// and recoveries under rolling-outage events).
     pub site_nodes: Vec<usize>,
+    /// Per-objective oracle-vs-achieved comparison for this epoch's
+    /// plan under this epoch's evaluator (`opt::oracle::gap_reports`).
+    pub gaps: [crate::opt::oracle::GapReport; N_OBJ],
 }
 
 /// Full simulation result for one framework.
@@ -84,6 +87,12 @@ impl SimResult {
     /// Aggregate objective vector [mean ttft, carbon, water, cost].
     pub fn objectives(&self) -> [f64; N_OBJ] {
         self.total.objectives()
+    }
+
+    /// Whole-run optimality gap on `obj` vs the summed per-epoch oracle
+    /// lower bounds ([`EpochLedger::oracle_gap_frac`]).
+    pub fn oracle_gap(&self, obj: usize) -> f64 {
+        self.total.oracle_gap_frac(obj)
     }
 }
 

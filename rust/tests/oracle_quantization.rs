@@ -1,0 +1,121 @@
+//! PR 8 satellite: quantization round-trip for the lower-bound oracle.
+//!
+//! The oracle solves a fixed-point min-cost-flow relaxation and then
+//! *certifies* the result: `OracleBound::score()` is the raw flow value
+//! minus the stated quantization slack (floored demand residue priced at
+//! the most favourable arc, plus a small FP-association margin). The
+//! contract under test: on every ≤16-site world we can build, that
+//! certified value never exceeds the exact f64 evaluation of any plan —
+//! i.e. the stated slack really does cover everything the integer
+//! round-trip discarded. A companion test pins bit-determinism of the
+//! bound across thread-pool sizes (the oracle must not perturb the
+//! simulation's reproducibility guarantees).
+
+use slit::cluster::build_panels;
+use slit::config::{SystemConfig, N_OBJ};
+use slit::eval::{AnalyticEvaluator, EvalConsts};
+use slit::opt::epoch_lower_bound;
+use slit::plan::Plan;
+use slit::power::GridSignals;
+use slit::trace::Trace;
+use slit::util::propkit;
+use slit::util::rng::Rng;
+use slit::util::threadpool;
+
+/// Paper fleet truncated to `sites` datacenters, demand scaled by
+/// `load_mult` (0.2 = deep linear regime, 20 = heavily saturated).
+fn make_eval(
+    sites: usize,
+    unused_pr: f64,
+    load_mult: f64,
+    seed: u64,
+) -> (SystemConfig, AnalyticEvaluator) {
+    let mut cfg = SystemConfig::paper_default();
+    cfg.datacenters.truncate(sites);
+    cfg.workload.base_requests_per_epoch *= load_mult;
+    let signals = GridSignals::generate(&cfg, 8, seed);
+    let trace = Trace::generate(&cfg, 8, seed);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], unused_pr);
+    let consts = EvalConsts::from_physics(&cfg.physics);
+    (cfg, AnalyticEvaluator::new(cp, dp, consts))
+}
+
+#[test]
+fn certified_bound_never_exceeds_exact_evaluation() {
+    propkit::check(
+        "oracle-quantization-roundtrip",
+        0x51_AC4,
+        12,
+        |r| {
+            (
+                // paper fleet is 12 sites; each prefix keeps whole-region
+                // blocks out rather than resampling
+                [4usize, 6, 9, 12][r.below(4)],
+                r.range(0.02, 0.4),
+                [0.2f64, 1.0, 20.0][r.below(3)],
+                r.int(1, 1_000_000) as u64,
+            )
+        },
+        |&(sites, unused_pr, load_mult, seed)| {
+            let (cfg, ev) = make_eval(sites, unused_pr, load_mult, seed);
+            let mut rng = Rng::new(seed ^ 0xDEAD);
+            let mut plans: Vec<Plan> = (0..8)
+                .map(|_| {
+                    Plan::random(cfg.num_classes(), ev.dcs(), 0.5, &mut rng)
+                })
+                .collect();
+            plans.push(Plan::uniform(cfg.num_classes(), ev.dcs()));
+            for l in 0..ev.dcs() {
+                plans.push(Plan::one_dc(cfg.num_classes(), ev.dcs(), l));
+            }
+            plans.extend(ev.greedy_seed_plans());
+            for obj in 0..N_OBJ {
+                let bound = epoch_lower_bound(&ev, obj);
+                if !bound.score().is_finite() || bound.slack < 0.0 {
+                    return Err(format!(
+                        "obj {obj}: bad bound raw={} slack={}",
+                        bound.raw, bound.slack
+                    ));
+                }
+                for (i, p) in plans.iter().enumerate() {
+                    let exact = ev.evaluate(p)[obj];
+                    if bound.score() > exact {
+                        return Err(format!(
+                            "sites={sites} load={load_mult} obj={obj} \
+                             plan#{i}: certified {} > exact {} \
+                             (raw {} slack {})",
+                            bound.score(),
+                            exact,
+                            bound.raw,
+                            bound.slack
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bound_is_bit_identical_across_thread_counts() {
+    let (_, ev) = make_eval(12, 0.05, 1.0, 7);
+    let baseline: Vec<(f64, f64)> = (0..N_OBJ)
+        .map(|obj| {
+            let b = epoch_lower_bound(&ev, obj);
+            (b.raw, b.slack)
+        })
+        .collect();
+    for &threads in &[1usize, 2, 8] {
+        threadpool::set_thread_override(threads);
+        for obj in 0..N_OBJ {
+            let b = epoch_lower_bound(&ev, obj);
+            assert_eq!(
+                (b.raw, b.slack),
+                baseline[obj],
+                "obj {obj}: bound drifted at {threads} threads"
+            );
+        }
+    }
+    threadpool::set_thread_override(0);
+}

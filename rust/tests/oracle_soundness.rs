@@ -1,0 +1,90 @@
+//! PR 8 satellite: oracle soundness across the whole framework registry.
+//!
+//! The certified lower bound (`opt::oracle`) claims to sit at or below
+//! the scalarized score of *every* valid plan. The strongest cheap
+//! falsifier we have is the registry itself: every shipped framework —
+//! baselines and all SLIT variants, warm and scale-to-zero power
+//! policies, shifting and feedback layers — produces real plans under
+//! real predicted panels every epoch. On randomized small worlds (seed,
+//! load level, thread count all varied), the per-epoch `GapReport`s the
+//! session records must show `oracle_score <= achieved` for each of the
+//! four objectives, with no exceptions.
+
+use slit::config::{SystemConfig, OBJ_NAMES};
+use slit::power::GridSignals;
+use slit::registry;
+use slit::sim::simulate;
+use slit::trace::Trace;
+use slit::util::propkit;
+use slit::util::threadpool;
+
+#[test]
+fn oracle_is_below_every_frameworks_achieved_score() {
+    propkit::check(
+        "oracle-soundness-registry",
+        0x0AC1E5,
+        4,
+        |r| {
+            (
+                r.int(1, 1_000_000) as u64,
+                // 0.4x..2.5x the small_test load: spans comfortably
+                // unsaturated through queue-pressured regimes
+                r.range(0.4, 2.5),
+                // 0 = the harness default worker count
+                [0usize, 1, 2][r.below(3)],
+            )
+        },
+        |&(seed, load_mult, threads)| {
+            threadpool::set_thread_override(threads);
+            let mut cfg = SystemConfig::small_test();
+            cfg.epochs = 2;
+            cfg.opt.generations = 2;
+            cfg.opt.budget_s = 30.0;
+            cfg.workload.base_requests_per_epoch *= load_mult;
+            let trace = Trace::generate(&cfg, cfg.epochs, seed);
+            let signals = GridSignals::generate(&cfg, cfg.epochs, seed);
+            let result = (|| {
+                for name in registry::names() {
+                    let mut sched = registry::build(name, &cfg, None)
+                        .map_err(|e| e.to_string())?;
+                    let res =
+                        simulate(&cfg, &trace, &signals, sched.as_mut(), seed);
+                    for rec in &res.per_epoch {
+                        for (obj, g) in rec.gaps.iter().enumerate() {
+                            if !g.oracle_score.is_finite()
+                                || !g.achieved.is_finite()
+                            {
+                                return Err(format!(
+                                    "{name} epoch {} {}: non-finite {g:?}",
+                                    rec.epoch, OBJ_NAMES[obj]
+                                ));
+                            }
+                            if g.oracle_score > g.achieved {
+                                return Err(format!(
+                                    "{name} epoch {} {}: oracle {} > \
+                                     achieved {} (slack {})",
+                                    rec.epoch,
+                                    OBJ_NAMES[obj],
+                                    g.oracle_score,
+                                    g.achieved,
+                                    g.quantization_slack
+                                ));
+                            }
+                            if g.gap_frac < 0.0 || g.quantization_slack < 0.0 {
+                                return Err(format!(
+                                    "{name} epoch {} {}: negative gap \
+                                     fields {g:?}",
+                                    rec.epoch, OBJ_NAMES[obj]
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })();
+            threadpool::set_thread_override(0);
+            result
+        },
+    );
+    threadpool::set_thread_override(0);
+}

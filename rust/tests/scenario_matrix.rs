@@ -96,6 +96,84 @@ fn slit_stays_nondominated_on_target_objective_in_every_scenario() {
     }
 }
 
+/// Pinned optimality-gap ceiling per regime (PR 8). These are ratchets:
+/// loose enough that legitimate relaxation weakness under the pressured
+/// config (saturation flattens the oracle's chord bound) cannot flake
+/// them, tight enough that a search-quality regression that pushes SLIT
+/// an order of magnitude off the certified optimum fails CI. The
+/// harder-to-certify regimes — `global-fleet` (48 sites dilute the
+/// per-site bound) and `batch-overnight` (released deferrable mass rides
+/// on top of the interactive prediction) — get the wider ceiling.
+fn gap_ceiling(scenario: &str) -> f64 {
+    match scenario {
+        "global-fleet" | "batch-overnight" => 0.98,
+        _ => 0.95,
+    }
+}
+
+/// The PR 8 tentpole claim at matrix level. (a) Soundness: the certified
+/// per-epoch oracle never exceeds *any* framework's achieved scalarized
+/// score, on any objective, in any epoch of any regime — this is the
+/// blocking guard that keeps the bound honest. (b) Calibration: on every
+/// regime's target objective — including `global-fleet` at L=48 and
+/// `batch-overnight` — the matching SLIT variant's whole-run gap stays
+/// under a finite pinned ceiling, turning "non-dominated" into a
+/// quantified distance from optimal.
+#[test]
+fn oracle_gap_is_sound_and_bounded_in_every_scenario() {
+    let base = pressured_config();
+    for sc in Scenario::named() {
+        let world = sc.build(&base, base.epochs, 42);
+        let target = sc.target_objective();
+        let run = |name: &str| -> SimResult {
+            let mut sched =
+                registry::build(name, &world.cfg, None).expect("framework");
+            world.run(sched.as_mut(), 42)
+        };
+        for name in ["helix", "splitwise", variant_for(target).name()] {
+            let res = run(name);
+            for rec in &res.per_epoch {
+                for (obj, g) in rec.gaps.iter().enumerate() {
+                    assert!(
+                        g.oracle_score.is_finite() && g.achieved.is_finite(),
+                        "{}/{name} epoch {} obj {obj}: non-finite {g:?}",
+                        sc.name(),
+                        rec.epoch
+                    );
+                    assert!(
+                        g.oracle_score <= g.achieved,
+                        "{}/{name} epoch {} {}: oracle {} > achieved {} — \
+                         the bound is not a lower bound",
+                        sc.name(),
+                        rec.epoch,
+                        OBJ_NAMES[obj],
+                        g.oracle_score,
+                        g.achieved
+                    );
+                    assert!(g.gap_frac >= 0.0);
+                    assert!(g.quantization_slack >= 0.0);
+                }
+            }
+            if name == variant_for(target).name() {
+                let gap = res.oracle_gap(target);
+                let ceiling = gap_ceiling(sc.name());
+                assert!(
+                    gap >= 0.0 && gap <= ceiling,
+                    "{} ({}): slit gap {gap:.4} breaches ceiling {ceiling}",
+                    sc.name(),
+                    OBJ_NAMES[target]
+                );
+                // the EXPERIMENTS.md gap-table row, printable from CI logs
+                eprintln!(
+                    "| {} | {} | gap {gap:.3} | ceiling {ceiling:.2} |",
+                    sc.name(),
+                    OBJ_NAMES[target]
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn global_fleet_matrix_really_runs_at_l48() {
     // the non-domination sweep above covers global-fleet like any named

@@ -12,7 +12,9 @@
 # "per-DC cost L=48/L=16", "serve: open-loop achieved (target >= 10k)",
 # "dispatch: FCFS/LLF worst-slack ratio",
 # "shift: forecaster warm-start (one-time)",
-# "shift: planner step per epoch (forecast policy)") are greppable
+# "shift: planner step per epoch (forecast policy)",
+# "oracle: per-epoch solve (L=16)",
+# "oracle: per-epoch solve (L=48)") are greppable
 # straight from EXPERIMENTS.md.
 
 set -euo pipefail
