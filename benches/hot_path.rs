@@ -595,5 +595,37 @@ fn main() {
         assert_eq!(offered, released + expired + sh.queue_mass());
     }
 
+    // --- degraded-signal feed ------------------------------------------------
+    // the believed-panel resolve SimSession::step pays every epoch: one
+    // feed observe (delivery + plausibility gates + fleet median) plus the
+    // robust-view read — must stay invisible next to the plan search it
+    // feeds (the zero-heap pin for this loop lives in alloc_hotpath.rs)
+    {
+        use slit::signals::{SignalFeed, SignalPolicy};
+
+        let epochs = 64;
+        let sig = GridSignals::generate(&cfg, epochs, 3);
+        let truth: Vec<_> = (0..epochs).map(|t| sig.at(t)).collect();
+        let mut feed = SignalFeed::new(&cfg);
+        // warm: median scratch + diurnal rings settle their capacities
+        for (e, (ci, wi, tou)) in truth.iter().enumerate() {
+            feed.observe(e, ci, wi, tou);
+        }
+        let reps = if quick { 20 } else { 200 };
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            for (e, (ci, wi, tou)) in truth.iter().enumerate() {
+                feed.observe(e, ci, wi, tou);
+                core::hint::black_box(feed.view(SignalPolicy::Robust));
+            }
+        }
+        let resolve_s = t.elapsed().as_secs_f64() / (reps * epochs) as f64;
+        bench.record_value(
+            "signals: believed-panel resolve per epoch",
+            resolve_s * 1e6,
+            "us",
+        );
+    }
+
     bench.finish();
 }

@@ -292,11 +292,14 @@ pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 /// like `global-fleet` and `batch-overnight` are self-describing.
 pub fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     let base = load_config(args)?;
+    // telemetry-fault schedules depend on the run length; list them for
+    // the config's own horizon so the column matches what `simulate` runs
+    let epochs = base.epochs;
     println!(
         "| scenario | stressed objective | sites | regions | deferrable | \
-         description |"
+         faults | description |"
     );
-    println!("|---|---|---|---|---|---|");
+    println!("|---|---|---|---|---|---|---|");
     for s in Scenario::all() {
         let (sites, regions) = s.fleet(&base);
         let (frac, slack) = s.deferrable(&base);
@@ -306,12 +309,13 @@ pub fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             "-".to_string()
         };
         println!(
-            "| {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {} |",
             s.name(),
             OBJ_NAMES[s.target_objective()],
             sites,
             regions,
             deferrable,
+            s.fault_summary(epochs),
             s.description()
         );
     }
@@ -496,6 +500,31 @@ pub fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
         oracle.set(name, o);
     }
     root.set("oracle", oracle);
+    // believed-signal panel for this epoch: ground truth pushed through a
+    // fault-free SignalFeed. Bit-identical to truth here (no faults are
+    // injected on this path) — the block documents exactly what a
+    // robust-policy scheduler would have consumed (DESIGN.md §17).
+    let mut feed = crate::signals::SignalFeed::new(&cfg);
+    for t in 0..=epoch {
+        let (ci, wi, tou) = signals.at(t);
+        feed.observe(t, &ci, &wi, &tou);
+    }
+    let (bci, bwi, btou) =
+        feed.view(crate::signals::SignalPolicy::Robust);
+    let (fresh, stale, quarantined) = feed.health_counts();
+    let mut sig = Json::obj();
+    sig.set("policy", Json::Str("robust".into()));
+    sig.set(
+        "faults_injected",
+        Json::Num(feed.faults_injected() as f64),
+    );
+    sig.set("fresh", Json::Num(fresh as f64));
+    sig.set("stale", Json::Num(stale as f64));
+    sig.set("quarantined", Json::Num(quarantined as f64));
+    sig.set("ci", Json::num_arr(bci));
+    sig.set("wue", Json::num_arr(bwi));
+    sig.set("tou", Json::num_arr(btou));
+    root.set("signals", sig);
     let out = args.get("out").unwrap_or("front.json");
     std::fs::write(out, root.to_string_pretty())?;
     println!(

@@ -41,6 +41,12 @@ pub enum ClusterAction {
     RestoreSite { dc: usize },
     /// Replace one site's per-type node counts outright (node additions).
     SetSite { dc: usize, nodes_per_type: Vec<usize> },
+    /// Inject a grid-telemetry fault into the session's [`crate::signals::
+    /// SignalFeed`]. Topology-inert: `ClusterState::apply` treats it as a
+    /// no-op — the session routes it to the feed instead, so telemetry
+    /// faults flow through the same `ScenarioEvent` schedule as capacity
+    /// faults.
+    Signal(crate::signals::SignalFault),
 }
 
 impl ClusterState {
@@ -117,6 +123,9 @@ impl ClusterState {
                 nodes.resize(self.baseline[*dc].len(), 0);
                 self.nodes[*dc] = nodes;
             }
+            // telemetry faults never touch topology; the session owns the
+            // SignalFeed they target
+            ClusterAction::Signal(_) => {}
         }
     }
 }
@@ -263,6 +272,24 @@ pub fn build_panels_dyn(
     load: &EpochLoad,
     unused_pr: f64,
 ) -> (ClassPanels, DcPanels) {
+    let (ci, wi, tou) = signals.at(epoch);
+    build_panels_with(cfg, state, &ci, &wi, &tou, load, unused_pr)
+}
+
+/// Build the evaluator panels from *explicit* per-site grid values
+/// instead of reading ground truth at an epoch — the seam the signal
+/// plane uses to hand schedulers *believed* CI/WUE/TOU panels
+/// (`signals::SignalFeed::view`) while ledger accounting stays on truth.
+/// [`build_panels_dyn`] is exactly this over `signals.at(epoch)`.
+pub fn build_panels_with(
+    cfg: &SystemConfig,
+    state: &ClusterState,
+    ci: &[f64],
+    wi: &[f64],
+    tou: &[f64],
+    load: &EpochLoad,
+    unused_pr: f64,
+) -> (ClassPanels, DcPanels) {
     let k_n = cfg.num_classes();
     let l_n = cfg.datacenters.len();
     let mut cp = ClassPanels {
@@ -292,7 +319,6 @@ pub fn build_panels_dyn(
         }
     }
 
-    let (ci, wi, tou) = signals.at(epoch);
     let dp = DcPanels {
         dcs: l_n,
         nodes: (0..l_n).map(|l| state.total_nodes(l) as f64).collect(),
@@ -300,9 +326,9 @@ pub fn build_panels_dyn(
             .map(|l| mean_node_tdp_n(cfg, state.nodes(l)))
             .collect(),
         cop: cfg.datacenters.iter().map(|d| d.cop).collect(),
-        tou,
-        ci,
-        wi,
+        tou: tou.to_vec(),
+        ci: ci.to_vec(),
+        wi: wi.to_vec(),
         bw: cfg.datacenters.iter().map(|d| d.bw_gbs).collect(),
         unused_pr: vec![unused_pr; l_n],
     };
@@ -553,7 +579,7 @@ mod tests {
 
     /// Random well-formed [`ClusterAction`] over the small-test topology.
     fn gen_action(rng: &mut crate::util::rng::Rng, dcs: usize) -> ClusterAction {
-        match rng.below(5) {
+        match rng.below(6) {
             0 => ClusterAction::ScaleRegion {
                 region: rng.below(crate::config::REGIONS),
                 frac: rng.range(0.0, 1.0),
@@ -566,10 +592,16 @@ mod tests {
                 frac: rng.range(0.0, 1.0),
             },
             3 => ClusterAction::RestoreSite { dc: rng.below(dcs) },
-            _ => ClusterAction::SetSite {
+            4 => ClusterAction::SetSite {
                 dc: rng.below(dcs),
                 nodes_per_type: (0..6).map(|_| rng.below(11)).collect(),
             },
+            // topology-inert by contract: the round-trip/panel properties
+            // must hold with telemetry faults interleaved
+            _ => ClusterAction::Signal(crate::signals::SignalFault::Freeze {
+                site: rng.below(dcs),
+                epochs: 1 + rng.below(8),
+            }),
         }
     }
 

@@ -25,9 +25,15 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::config::{MODELS, REGIONS};
 use crate::util::json::Json;
+
+/// Socket read/write deadline. A wedged or half-dead server turns into a
+/// structured timeout error instead of hanging the drill (and whatever CI
+/// job is running it) forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Parameters of one scripted outage drill.
 #[derive(Clone, Debug)]
@@ -106,6 +112,8 @@ impl DrillClient {
     pub fn connect(host: &str, port: u16) -> anyhow::Result<DrillClient> {
         let stream = TcpStream::connect((host, port))?;
         stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
         Ok(DrillClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,

@@ -34,6 +34,42 @@ use crate::util::histogram::LatencyHistogram;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+/// Socket write deadline (each worker sets its own read timeout). A
+/// wedged server turns into a structured error, never a hung CI job.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Connect retry schedule: transient refusals (a server still binding,
+/// fd pressure) get a few capped-backoff attempts before a structured
+/// error.
+const CONNECT_ATTEMPTS: u32 = 5;
+const CONNECT_BACKOFF: Duration = Duration::from_millis(50);
+
+/// `TcpStream::connect` with capped retry-with-backoff: attempts spaced
+/// 50/100/200/400 ms apart, then a structured error naming the target —
+/// a loadgen pointed at a dead or still-starting server fails fast with
+/// a report instead of hanging whatever drives it.
+fn connect_with_retry(host: &str, port: u16) -> anyhow::Result<TcpStream> {
+    let mut backoff = CONNECT_BACKOFF;
+    let mut last_err = String::new();
+    for attempt in 0..CONNECT_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(backoff);
+            backoff *= 2;
+        }
+        match TcpStream::connect((host, port)) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                s.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+                return Ok(s);
+            }
+            Err(e) => last_err = e.to_string(),
+        }
+    }
+    Err(anyhow::anyhow!(
+        "loadgen could not connect to {host}:{port} after \
+         {CONNECT_ATTEMPTS} attempts: {last_err}"
+    ))
+}
+
 /// How requests are offered to the server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArrivalMode {
@@ -237,8 +273,7 @@ fn closed_worker(
     first_index: usize,
 ) -> anyhow::Result<LoadgenReport> {
     let mut report = LoadgenReport::default();
-    let stream = TcpStream::connect((cfg.host.as_str(), cfg.port))?;
-    stream.set_nodelay(true).ok();
+    let stream = connect_with_retry(cfg.host.as_str(), cfg.port)?;
     stream
         .set_read_timeout(Some(Duration::from_secs(10)))
         .ok();
@@ -293,8 +328,7 @@ fn open_worker(
     first_index: usize,
 ) -> anyhow::Result<LoadgenReport> {
     let mut report = LoadgenReport::default();
-    let stream = TcpStream::connect((cfg.host.as_str(), cfg.port))?;
-    stream.set_nodelay(true).ok();
+    let stream = connect_with_retry(cfg.host.as_str(), cfg.port)?;
     let mut writer = stream.try_clone()?;
     let reader_stream = stream.try_clone()?;
     reader_stream
@@ -535,6 +569,25 @@ mod tests {
                 .unwrap()
                 .len(),
             4
+        );
+    }
+
+    #[test]
+    fn connect_retry_fails_fast_with_structured_error() {
+        // grab an ephemeral port, then close it again: nothing listens
+        let port = {
+            let l = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let t0 = Instant::now();
+        let err = connect_with_retry("127.0.0.1", port).unwrap_err();
+        assert!(
+            err.to_string().contains("attempts"),
+            "error must describe the retry budget: {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "connect retry must be capped, not a hang"
         );
     }
 

@@ -34,7 +34,7 @@ pub use server::{serve_forever, serve_with, ServeHandle, ServerConfig};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::cluster::{build_panels_dyn, ClusterAction, ClusterState};
+use crate::cluster::{build_panels_with, ClusterAction, ClusterState};
 use crate::config::{SystemConfig, MODELS};
 use crate::eval::{AnalyticEvaluator, EvalConsts};
 use crate::models::EpochLedger;
@@ -44,6 +44,7 @@ use crate::power::GridSignals;
 use crate::predictor::WorkloadPredictor;
 use crate::runtime::{Engine, HloPlanEvaluator};
 use crate::sched::LocalScheduler;
+use crate::signals::{SignalFeed, SignalPolicy};
 use crate::trace::{ClassLoad, EpochLoad};
 use crate::util::histogram::LatencyHistogram;
 use crate::util::rng::Rng;
@@ -58,6 +59,11 @@ pub struct CoordinatorConfig {
     pub epoch_wall_s: f64,
     /// Optimizer budget per plan refresh, seconds.
     pub plan_budget_s: f64,
+    /// Which believed-telemetry view the re-plan consumes. Robust by
+    /// default: with zero injected faults the robust view is bit-identical
+    /// to ground truth, and under faults the fallback ladder keeps the
+    /// planner on plausible signals instead of frozen/corrupt ones.
+    pub signal_policy: SignalPolicy,
     pub batcher: BatcherConfig,
 }
 
@@ -67,6 +73,7 @@ impl Default for CoordinatorConfig {
             variant: SlitVariant::Balance,
             epoch_wall_s: 2.0,
             plan_budget_s: 1.0,
+            signal_policy: SignalPolicy::Robust,
             batcher: BatcherConfig::default(),
         }
     }
@@ -106,6 +113,25 @@ impl Metrics {
     }
 }
 
+/// One row of [`Coordinator::signal_snapshot`]: the believed-telemetry
+/// health of a single site's grid feed (TCP `{"op": "signals"}` reply).
+#[derive(Clone, Debug)]
+pub struct SiteSignal {
+    pub name: String,
+    pub region: usize,
+    /// Health classification: `fresh` / `stale` / `quarantined`.
+    pub state: &'static str,
+    /// Epochs since the last accepted measurement.
+    pub age: usize,
+    /// Fallback-ladder rung behind the current robust value.
+    pub source: &'static str,
+    /// Believed CI/WUE/TOU under the deployed [`SignalPolicy`] — what the
+    /// next re-plan will consume, not necessarily the ground truth.
+    pub ci: f64,
+    pub wue: f64,
+    pub tou: f64,
+}
+
 /// Shared state between the router, batcher flushers, and the epoch thread.
 pub struct Coordinator {
     pub cfg: SystemConfig,
@@ -123,6 +149,11 @@ pub struct Coordinator {
     /// Per-origin-region site order, nearest-first by Eq. 3 hops —
     /// precomputed once so the per-request failover walk allocates nothing.
     failover_by_region: Vec<Vec<usize>>,
+    /// Believed-telemetry layer for the re-plan: each tick the ground
+    /// truth flows through the feed (where injected telemetry faults
+    /// distort delivery) and the optimizer panels are built from the
+    /// believed view, while ledger accounting stays on ground truth.
+    feed: Mutex<SignalFeed>,
     pub metrics: Mutex<Metrics>,
     engine: Option<Arc<Engine>>,
     rng: Mutex<Rng>,
@@ -160,6 +191,7 @@ impl Coordinator {
             plan: RwLock::new(Plan::uniform(classes, dcs)),
             locals,
             failover_by_region,
+            feed: Mutex::new(SignalFeed::new(&cfg)),
             epoch: AtomicUsize::new(0),
             signals,
             predictor: Mutex::new(WorkloadPredictor::new(&cfg)),
@@ -180,12 +212,45 @@ impl Coordinator {
     /// additions). Takes effect at the next epoch tick: the re-plan and
     /// per-site capacity resets both derive from this state.
     pub fn apply_cluster_action(&self, action: &ClusterAction) {
+        if let ClusterAction::Signal(fault) = action {
+            // telemetry faults live on the signal feed, not the topology;
+            // like capacity actions they take effect at the next tick
+            // (whose feed observation is for current_epoch() + 1)
+            let epoch = self.current_epoch() + 1;
+            self.feed.lock().expect("signal feed").inject(epoch, fault);
+            return;
+        }
         self.state.write().expect("cluster state").apply(action);
     }
 
     /// Snapshot of the live cluster topology.
     pub fn cluster_snapshot(&self) -> ClusterState {
         self.state.read().expect("cluster state").clone()
+    }
+
+    /// Per-site believed-telemetry health, as served by the TCP
+    /// `{"op": "signals"}` reply: total faults injected so far plus one
+    /// [`SiteSignal`] row per site.
+    pub fn signal_snapshot(&self) -> (usize, Vec<SiteSignal>) {
+        let feed = self.feed.lock().expect("signal feed");
+        let (ci, wi, tou) = feed.view(self.ccfg.signal_policy);
+        let rows = self
+            .cfg
+            .datacenters
+            .iter()
+            .enumerate()
+            .map(|(l, d)| SiteSignal {
+                name: d.name.clone(),
+                region: d.region,
+                state: feed.site_state(l).as_str(),
+                age: feed.site_age(l),
+                source: feed.site_source(l).as_str(),
+                ci: ci[l],
+                wue: wi[l],
+                tou: tou[l],
+            })
+            .collect();
+        (feed.faults_injected(), rows)
     }
 
     pub fn current_epoch(&self) -> usize {
@@ -473,15 +538,46 @@ impl Coordinator {
         };
 
         // --- re-plan against the forecast + live topology ------------------
+        // The planning panels resolve through the signal plane: ground
+        // truth is observed into the feed (where any injected telemetry
+        // faults distort delivery) and the optimizer sees the believed
+        // view under the deployed policy. Accounting above stayed on
+        // truth, so the ledger's signal_* fields measure exactly what
+        // scheduling on degraded telemetry cost.
         let next_epoch = epoch + 1;
-        let (cp, dp) = build_panels_dyn(
-            &self.cfg,
-            &state,
-            &self.signals,
-            next_epoch.min(self.signals.epochs() - 1),
-            &predicted,
-            self.cfg.physics.pr_off,
-        );
+        let (tci, twi, ttou) = self
+            .signals
+            .at(next_epoch.min(self.signals.epochs() - 1));
+        let (cp, dp) = {
+            let mut feed = self.feed.lock().expect("signal feed");
+            feed.observe(next_epoch, &tci, &twi, &ttou);
+            let div = feed.divergence(
+                self.ccfg.signal_policy,
+                &tci,
+                &twi,
+                &ttou,
+            );
+            let (fresh, stale, quarantined) = feed.health_counts();
+            {
+                let mut m = self.metrics.lock().expect("metrics");
+                m.ledger.signal_fresh += fresh as f64;
+                m.ledger.signal_stale += stale as f64;
+                m.ledger.signal_quarantined += quarantined as f64;
+                for (a, d) in div.iter().enumerate() {
+                    m.ledger.signal_div[a] += d;
+                }
+            }
+            let (bci, bwi, btou) = feed.view(self.ccfg.signal_policy);
+            build_panels_with(
+                &self.cfg,
+                &state,
+                bci,
+                bwi,
+                btou,
+                &predicted,
+                self.cfg.physics.pr_off,
+            )
+        };
         let analytic = AnalyticEvaluator::new(
             cp,
             dp,
@@ -672,6 +768,68 @@ mod tests {
         }
         c.tick_epoch();
         assert!(c.current_plan().is_valid());
+    }
+
+    #[test]
+    fn signal_fault_degrades_feed_and_planning_continues() {
+        let c = coordinator();
+        // before any fault: snapshot exists and every believed value is a
+        // positive finite number
+        let (faults, rows) = c.signal_snapshot();
+        assert_eq!(faults, 0);
+        assert_eq!(rows.len(), c.cfg.datacenters.len());
+        c.apply_cluster_action(&ClusterAction::Signal(
+            crate::signals::SignalFault::RegionBlackout {
+                region: 1,
+                epochs: 8,
+            },
+        ));
+        for i in 0..40 {
+            c.handle(i % 4, 0, 64, 100);
+        }
+        c.tick_epoch();
+        let (faults, rows) = c.signal_snapshot();
+        assert_eq!(faults, 1);
+        for row in &rows {
+            assert!(
+                row.ci.is_finite() && row.ci > 0.0,
+                "{}: believed CI {}",
+                row.name,
+                row.ci
+            );
+            if row.region == 1 {
+                assert_ne!(row.state, "fresh", "{} should be dark", row.name);
+                assert_ne!(row.source, "live");
+            } else {
+                assert_eq!(row.state, "fresh", "{}", row.name);
+                assert_eq!(row.source, "live");
+            }
+        }
+        // planning survived the blackout and the health counters landed in
+        // the ledger (3 dark sites, 9 fresh, nothing quarantined)
+        assert!(c.current_plan().is_valid());
+        let m = c.metrics_snapshot();
+        assert_eq!(m.ledger.signal_fresh, 9.0);
+        assert_eq!(m.ledger.signal_stale, 3.0);
+        assert_eq!(m.ledger.signal_quarantined, 0.0);
+    }
+
+    #[test]
+    fn no_faults_leave_no_signal_divergence() {
+        let c = coordinator();
+        for i in 0..40 {
+            c.handle(i % 4, 0, 64, 100);
+        }
+        c.tick_epoch();
+        c.tick_epoch();
+        let m = c.metrics_snapshot();
+        assert_eq!(m.ledger.signal_div, [0.0; 3]);
+        assert_eq!(m.ledger.signal_quarantined, 0.0);
+        assert_eq!(m.ledger.signal_stale, 0.0);
+        assert_eq!(
+            m.ledger.signal_fresh,
+            (2 * c.cfg.datacenters.len()) as f64
+        );
     }
 
     #[test]

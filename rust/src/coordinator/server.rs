@@ -14,6 +14,9 @@
 //!                            each item uses the same reply object as a
 //!                            single request (dc, dc_index, ttft_ms, epoch)
 //!   -> {"op": "snapshot"} <- live cluster topology (per-site node counts)
+//!   -> {"op": "signals"}  <- believed grid-telemetry health (per-site
+//!                            feed state, staleness age, fallback source,
+//!                            believed CI/WUE/TOU)
 //!   -> {"op": "ledger"}   <- cumulative sustainability ledger
 //!   -> {"op": "cluster"}  <- apply a ClusterAction (outage drills);
 //!                            takes effect at the next epoch tick
@@ -491,6 +494,7 @@ fn respond_op(c: &Coordinator, op: &str, parsed: &Json) -> Json {
             r
         }
         "snapshot" => snapshot_reply(c),
+        "signals" => signals_reply(c),
         "ledger" => ledger_reply(c),
         "tick" => {
             // force an epoch boundary now: drills and tests drive the
@@ -645,6 +649,40 @@ fn snapshot_reply(c: &Coordinator) -> Json {
     r
 }
 
+/// `{"op": "signals"}` — believed grid-telemetry health per site: feed
+/// state, staleness age, fallback-ladder source, and the believed
+/// CI/WUE/TOU panel the next re-plan will consume.
+fn signals_reply(c: &Coordinator) -> Json {
+    let (faults, rows) = c.signal_snapshot();
+    let sites = rows
+        .iter()
+        .enumerate()
+        .map(|(l, row)| {
+            let mut s = Json::obj();
+            s.set("dc", Json::Num(l as f64));
+            s.set("name", Json::Str(row.name.clone()));
+            s.set("region", Json::Num(row.region as f64));
+            s.set("state", Json::Str(row.state.into()));
+            s.set("age", Json::Num(row.age as f64));
+            s.set("source", Json::Str(row.source.into()));
+            s.set("ci", Json::Num(row.ci));
+            s.set("wue", Json::Num(row.wue));
+            s.set("tou", Json::Num(row.tou));
+            s
+        })
+        .collect();
+    let mut r = Json::obj();
+    r.set("ok", Json::Bool(true));
+    r.set("epoch", Json::Num(c.current_epoch() as f64));
+    r.set(
+        "policy",
+        Json::Str(c.ccfg.signal_policy.as_str().into()),
+    );
+    r.set("faults_injected", Json::Num(faults as f64));
+    r.set("sites", Json::Arr(sites));
+    r
+}
+
 /// `{"op": "ledger"}` — the cumulative sustainability/performance ledger
 /// (everything accounted since the coordinator started).
 fn ledger_reply(c: &Coordinator) -> Json {
@@ -665,6 +703,17 @@ fn ledger_reply(c: &Coordinator) -> Json {
     r.set("ttft_p50_ms", Json::Num(m.ttft_hist.p50() * 1e3));
     r.set("ttft_p95_ms", Json::Num(m.ttft_hist.p95() * 1e3));
     r.set("ttft_p99_ms", Json::Num(m.ttft_hist.p99() * 1e3));
+    // believed-vs-truth telemetry accounting (site-epoch counts + summed
+    // |believed − truth| per axis; all zero when no faults were injected)
+    r.set("signal_fresh", Json::Num(m.ledger.signal_fresh));
+    r.set("signal_stale", Json::Num(m.ledger.signal_stale));
+    r.set(
+        "signal_quarantined",
+        Json::Num(m.ledger.signal_quarantined),
+    );
+    r.set("signal_div_ci", Json::Num(m.ledger.signal_div[0]));
+    r.set("signal_div_wue", Json::Num(m.ledger.signal_div[1]));
+    r.set("signal_div_tou", Json::Num(m.ledger.signal_div[2]));
     r
 }
 
@@ -1113,6 +1162,61 @@ mod tests {
             .get("total")
             .and_then(Json::as_f64);
         assert_eq!(site0, Some(6.0));
+    }
+
+    #[test]
+    fn respond_signals_reports_feed_health() {
+        let c = coordinator();
+        let s = respond(&c, r#"{"op": "signals"}"#);
+        assert_eq!(s.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            s.get("faults_injected").and_then(Json::as_f64),
+            Some(0.0)
+        );
+        assert_eq!(
+            s.get("policy").and_then(Json::as_str),
+            Some("robust")
+        );
+        assert_eq!(
+            s.get("sites").and_then(Json::as_arr).unwrap().len(),
+            c.cfg.datacenters.len()
+        );
+        // darken one region's telemetry, tick: those feeds read non-fresh
+        // with a fallback source while the rest stay live — and every
+        // believed value remains finite and positive
+        c.apply_cluster_action(&ClusterAction::Signal(
+            crate::signals::SignalFault::RegionBlackout {
+                region: 1,
+                epochs: 8,
+            },
+        ));
+        respond(&c, r#"{"op": "tick"}"#);
+        let s = respond(&c, r#"{"op": "signals"}"#);
+        assert_eq!(
+            s.get("faults_injected").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        for site in s.get("sites").and_then(Json::as_arr).unwrap() {
+            let region =
+                site.get("region").and_then(Json::as_f64).unwrap() as usize;
+            let state = site.get("state").and_then(Json::as_str).unwrap();
+            let source = site.get("source").and_then(Json::as_str).unwrap();
+            if region == 1 {
+                assert_ne!(state, "fresh");
+                assert_ne!(source, "live");
+            } else {
+                assert_eq!(state, "fresh");
+                assert_eq!(source, "live");
+            }
+            for axis in ["ci", "wue", "tou"] {
+                let v = site.get(axis).and_then(Json::as_f64).unwrap();
+                assert!(v.is_finite() && v > 0.0, "{axis} = {v}");
+            }
+        }
+        // the ledger reply carries the matching health counters
+        let l = respond(&c, r#"{"op": "ledger"}"#);
+        assert_eq!(l.get("signal_stale").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(l.get("signal_fresh").and_then(Json::as_f64), Some(9.0));
     }
 
     #[test]

@@ -32,6 +32,44 @@ pub fn epochs_per_day(epoch_s: f64) -> usize {
     ((86_400.0 / epoch_s).round() as usize).max(1)
 }
 
+/// Diurnal persistence memory for one scalar series: the last observed
+/// value at each phase-of-day slot. The signal plane's fallback ladder
+/// (`signals.rs`) anchors stale feeds on "yesterday, same time" — the
+/// strongest single predictor for diurnal grid signals — without paying
+/// for a ridge fit per site × axis. Fixed-size after construction; the
+/// observe/lookup path never allocates.
+#[derive(Clone, Debug)]
+pub struct DiurnalRing {
+    slots: Vec<f64>,
+    filled: Vec<bool>,
+    per_day: usize,
+}
+
+impl DiurnalRing {
+    pub fn new(epochs_per_day: usize) -> DiurnalRing {
+        let per_day = epochs_per_day.max(1);
+        DiurnalRing {
+            slots: vec![0.0; per_day],
+            filled: vec![false; per_day],
+            per_day,
+        }
+    }
+
+    /// Record the realised value at `epoch`'s phase slot.
+    pub fn observe(&mut self, epoch: usize, value: f64) {
+        let i = epoch % self.per_day;
+        self.slots[i] = value;
+        self.filled[i] = true;
+    }
+
+    /// The last value seen at `epoch`'s phase of day, if any day has
+    /// covered that slot yet.
+    pub fn at_phase(&self, epoch: usize) -> Option<f64> {
+        let i = epoch % self.per_day;
+        self.filled[i].then(|| self.slots[i])
+    }
+}
+
 /// Feature vector for predicting the value at absolute epoch `abs_t`,
 /// given `y` = the most recent history (oldest first, ending at
 /// `abs_t - 1`). Same layout as `predictor::features`, but lags index
@@ -471,6 +509,24 @@ mod tests {
         for (x, y) in a.tou.iter().flatten().zip(b.tou.iter().flatten()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn diurnal_ring_remembers_yesterdays_phase() {
+        let mut r = DiurnalRing::new(24);
+        assert_eq!(r.at_phase(5), None);
+        for t in 0..24 {
+            r.observe(t, t as f64);
+        }
+        // next day, same phase: yesterday's value
+        assert_eq!(r.at_phase(24 + 5), Some(5.0));
+        r.observe(24 + 5, 99.0);
+        assert_eq!(r.at_phase(48 + 5), Some(99.0));
+        // unvisited phases of a partial day stay empty
+        let mut p = DiurnalRing::new(24);
+        p.observe(3, 1.0);
+        assert_eq!(p.at_phase(27), Some(1.0));
+        assert_eq!(p.at_phase(28), None);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sched;
 pub mod session;
+pub mod signals;
 pub mod sim;
 pub mod trace;
 pub mod util;

@@ -208,6 +208,19 @@ pub struct EpochLedger {
     pub oracle_achieved: [f64; 4],
     /// Summed quantization slack the bounds already concede.
     pub oracle_slack: [f64; 4],
+    /// Sites whose grid-telemetry feed was Fresh / Stale / Quarantined
+    /// this epoch (`signals::SignalFeed::health_counts`). Sum across
+    /// merges, so a run total reads in site-epochs. 0 when the producer
+    /// has no signal feed.
+    pub signal_fresh: f64,
+    pub signal_stale: f64,
+    pub signal_quarantined: f64,
+    /// Sum over sites of |believed − truth| for the signal view the
+    /// framework actually consumed, per axis [ci, wue, tou]. Exactly 0
+    /// when no faults are injected (rust/tests/signal_faults.rs pins
+    /// it); under faults this is the measured telemetry error the
+    /// scheduler planned on.
+    pub signal_div: [f64; 3],
 }
 
 impl EpochLedger {
@@ -270,6 +283,12 @@ impl EpochLedger {
             self.oracle_lb[i] += other.oracle_lb[i];
             self.oracle_achieved[i] += other.oracle_achieved[i];
             self.oracle_slack[i] += other.oracle_slack[i];
+        }
+        self.signal_fresh += other.signal_fresh;
+        self.signal_stale += other.signal_stale;
+        self.signal_quarantined += other.signal_quarantined;
+        for i in 0..3 {
+            self.signal_div[i] += other.signal_div[i];
         }
         // queue depth is a snapshot: keep the most recent one
         self.deferred_queued = other.deferred_queued;

@@ -299,6 +299,11 @@ impl Scheduler for ShiftScheduler {
     fn shift_policy(&self) -> ShiftPolicy {
         ShiftPolicy::Forecast
     }
+
+    // composability: shift(robust(s)) keeps the inner believed-signal view
+    fn signal_policy(&self) -> crate::signals::SignalPolicy {
+        self.inner.signal_policy()
+    }
 }
 
 #[cfg(test)]

@@ -13,6 +13,7 @@ use crate::baselines::{HelixScheduler, RoundRobinScheduler, SplitwiseScheduler};
 use crate::config::SystemConfig;
 use crate::opt::{ShiftScheduler, SlitScheduler, SlitVariant};
 use crate::runtime::Engine;
+use crate::signals::RobustScheduler;
 use crate::sim::Scheduler;
 
 /// One registered scheduling framework.
@@ -122,6 +123,28 @@ fn build_slit_shift_hlo(
     )
 }
 
+fn build_slit_robust(cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(
+        RobustScheduler::new(Box::new(SlitScheduler::new(
+            cfg,
+            SlitVariant::Carbon,
+        )))
+        .named("slit-robust"),
+    )
+}
+
+fn build_slit_robust_hlo(
+    cfg: &SystemConfig,
+    engine: Arc<Engine>,
+) -> Box<dyn Scheduler> {
+    Box::new(
+        RobustScheduler::new(Box::new(
+            SlitScheduler::new(cfg, SlitVariant::Carbon).with_engine(engine),
+        ))
+        .named("slit-robust"),
+    )
+}
+
 /// The iterable framework table. Order is presentation order (baselines
 /// first, SLIT variants after, as in the paper's Fig. 4 rows).
 pub static FRAMEWORKS: &[FrameworkSpec] = &[
@@ -196,6 +219,14 @@ pub static FRAMEWORKS: &[FrameworkSpec] = &[
         in_paper_set: false,
         build: build_slit_shift,
         build_hlo: Some(build_slit_shift_hlo),
+    },
+    FrameworkSpec {
+        name: "slit-robust",
+        aliases: &["robust"],
+        description: "min-carbon SLIT planning on the health-gated believed-signal fallback ladder (degraded-telemetry regimes)",
+        in_paper_set: false,
+        build: build_slit_robust,
+        build_hlo: Some(build_slit_robust_hlo),
     },
     FrameworkSpec {
         name: "slit-adaptive",
@@ -298,6 +329,7 @@ mod tests {
             "slit-adaptive-level"
         );
         assert_eq!(find("shift").unwrap().name, "slit-shift");
+        assert_eq!(find("robust").unwrap().name, "slit-robust");
         assert!(find("nope").is_none());
     }
 
@@ -313,6 +345,21 @@ mod tests {
                 ShiftPolicy::Immediate
             };
             assert_eq!(s.shift_policy(), want, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn slit_robust_is_the_only_robust_signal_row() {
+        use crate::signals::SignalPolicy;
+        let cfg = crate::config::SystemConfig::small_test();
+        for spec in all() {
+            let s = (spec.build)(&cfg);
+            let want = if spec.name == "slit-robust" {
+                SignalPolicy::Robust
+            } else {
+                SignalPolicy::Trusting
+            };
+            assert_eq!(s.signal_policy(), want, "{}", spec.name);
         }
     }
 

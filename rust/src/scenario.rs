@@ -14,7 +14,13 @@
 //! `ClusterState` mid-run — something the static config transform cannot
 //! express.
 //!
-//! The eight named regimes (plus the untouched baseline):
+//! Regimes can also schedule *telemetry* faults
+//! ([`crate::signals::SignalFault`] via `ClusterAction::Signal`): the
+//! cluster ignores them, but the session's [`crate::signals::SignalFeed`]
+//! distorts what schedulers believe about the grid while the ledger keeps
+//! accounting against ground truth.
+//!
+//! The ten named regimes (plus the untouched baseline):
 //!   * `diurnal` — sharpened day/night demand swing, no bursts: the
 //!     follow-the-sun routing case (cf. Fig. 1's diurnal trend).
 //!   * `bursty` — heavy-tailed demand spikes on top of frequent bursts:
@@ -37,6 +43,13 @@
 //!   * `batch-overnight` — hourly epochs and a 40% deferrable batch share
 //!     with ~14h deadlines: the temporal-shifting regime the `slit-shift`
 //!     framework (forecast-driven deferral, DESIGN.md §15) is built for.
+//!   * `feed-blackout` — western-europe's grid telemetry goes dark for a
+//!     quarter of the horizon while its true carbon intensity spikes:
+//!     fault-blind routers keep chasing stockholm's stale clean readings.
+//!   * `stale-creep` — feeds freeze one by one (cleanest magnets first)
+//!     until only north-america reports fresh data, while the frozen
+//!     clean sites' true CI climbs in the second half. The `slit-robust`
+//!     fallback ladder (DESIGN.md §17) is built for these two.
 
 use crate::cluster::ClusterAction;
 use crate::config::{
@@ -44,6 +57,7 @@ use crate::config::{
 };
 use crate::power::GridSignals;
 use crate::session::{ScenarioEvent, SimSession};
+use crate::signals::SignalFault;
 use crate::sim::{Scheduler, SimResult};
 use crate::trace::Trace;
 use crate::util::rng::Rng;
@@ -54,6 +68,37 @@ pub const OUTAGE_REGION: usize = 2;
 
 /// Fraction of nodes that survive the outage at affected sites.
 pub const OUTAGE_SURVIVING_FRAC: f64 = 0.1;
+
+/// The region whose telemetry feed goes dark in [`Scenario::FeedBlackout`]
+/// (western-europe: home of the fleet's cleanest site, stockholm — the
+/// magnet a fault-blind carbon router keeps chasing on stale readings).
+pub const FEED_BLACKOUT_REGION: usize = 3;
+
+/// Truth carbon-intensity multiplier inside the blackout window: big
+/// enough that the stale-believed clean sites are genuinely dirty
+/// (stockholm 0.03 → 0.30, past oregon's 0.11) while the feed is dark.
+pub const FEED_BLACKOUT_CI_MULT: f64 = 10.0;
+
+/// The region whose feeds stay fresh under [`Scenario::StaleCreep`]
+/// (north-america: oregon is the genuinely-clean refuge a robust router
+/// can still verify while everything else freezes).
+pub const STALE_FRESH_REGION: usize = 2;
+
+/// Truth CI multiplier applied, over the second half of the horizon, to
+/// the frozen clean magnets (`ci_base <` [`STALE_CLEAN_CI_CEILING`]
+/// outside the fresh region): stockholm 0.03 → 0.18, auckland 0.09 →
+/// 0.54 — both dirtier than fresh oregon's 0.11.
+pub const STALE_CREEP_CI_MULT: f64 = 6.0;
+
+/// `ci_base` ceiling below which a frozen site counts as a "clean magnet"
+/// for [`Scenario::StaleCreep`]'s truth rotation.
+pub const STALE_CLEAN_CI_CEILING: f64 = 0.15;
+
+/// Paper-layout site indices outside [`STALE_FRESH_REGION`], cleanest
+/// first, frozen in creeping order by [`Scenario::StaleCreep`]. The feed
+/// ignores indices past a smaller custom fleet, so the fixed table
+/// degrades gracefully.
+pub const STALE_CREEP_SITES: [usize; 9] = [11, 5, 9, 10, 0, 1, 2, 3, 4];
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scenario {
@@ -79,6 +124,14 @@ pub enum Scenario {
     /// carrying overnight deadlines — the temporal-shifting regime
     /// (`slit-shift` is the framework built for it).
     BatchOvernight,
+    /// Western-europe's telemetry feed goes dark for a quarter of the
+    /// horizon while its true CI spikes (telemetry fault via
+    /// `ClusterAction::Signal`; capacity untouched).
+    FeedBlackout,
+    /// Feeds freeze one by one — cleanest magnets first — until only
+    /// north-america reports fresh data; the frozen clean sites' true CI
+    /// climbs in the second half.
+    StaleCreep,
 }
 
 /// A generated experiment world: config + matching trace, grid signals,
@@ -110,7 +163,7 @@ impl ScenarioWorld {
 
 impl Scenario {
     /// Every scenario including the baseline.
-    pub fn all() -> [Scenario; 9] {
+    pub fn all() -> [Scenario; 11] {
         [
             Scenario::Baseline,
             Scenario::Diurnal,
@@ -121,11 +174,13 @@ impl Scenario {
             Scenario::WaterStressedSummer,
             Scenario::GlobalFleet,
             Scenario::BatchOvernight,
+            Scenario::FeedBlackout,
+            Scenario::StaleCreep,
         ]
     }
 
     /// The named non-baseline regimes (the scenario-matrix set).
-    pub fn named() -> [Scenario; 8] {
+    pub fn named() -> [Scenario; 10] {
         [
             Scenario::Diurnal,
             Scenario::BurstyHeavyTail,
@@ -135,6 +190,8 @@ impl Scenario {
             Scenario::WaterStressedSummer,
             Scenario::GlobalFleet,
             Scenario::BatchOvernight,
+            Scenario::FeedBlackout,
+            Scenario::StaleCreep,
         ]
     }
 
@@ -149,6 +206,8 @@ impl Scenario {
             Scenario::WaterStressedSummer => "water-summer",
             Scenario::GlobalFleet => "global-fleet",
             Scenario::BatchOvernight => "batch-overnight",
+            Scenario::FeedBlackout => "feed-blackout",
+            Scenario::StaleCreep => "stale-creep",
         }
     }
 
@@ -181,6 +240,14 @@ impl Scenario {
                 "hourly epochs; 40% deferrable batch mass with ~14h \
                  deadlines — the temporal-shifting regime"
             }
+            Scenario::FeedBlackout => {
+                "western-europe telemetry dark for a quarter of the run \
+                 while its true CI spikes 10x"
+            }
+            Scenario::StaleCreep => {
+                "feeds freeze one by one (cleanest first); frozen clean \
+                 magnets' true CI climbs 6x in the second half"
+            }
         }
     }
 
@@ -204,6 +271,10 @@ impl Scenario {
             Scenario::GlobalFleet => OBJ_CARBON,
             // shifting batch mass into clean windows is a carbon play
             Scenario::BatchOvernight => OBJ_CARBON,
+            // both telemetry regimes corrupt the carbon picture: the cost
+            // of believing bad signals lands on true carbon
+            Scenario::FeedBlackout => OBJ_CARBON,
+            Scenario::StaleCreep => OBJ_CARBON,
         }
     }
 
@@ -259,7 +330,72 @@ impl Scenario {
                     ),
                 ]
             }
+            Scenario::FeedBlackout => {
+                // same window arithmetic as the rolling outage: dark for
+                // the (second) quarter of the horizon, healthy epochs on
+                // both sides; a 1-epoch run has no mid-run
+                if epochs < 2 {
+                    return Vec::new();
+                }
+                let start = (epochs / 4).clamp(1, epochs - 1);
+                let span = (epochs / 4).max(1);
+                vec![ScenarioEvent::at(
+                    start,
+                    ClusterAction::Signal(SignalFault::RegionBlackout {
+                        region: FEED_BLACKOUT_REGION,
+                        epochs: span,
+                    }),
+                )]
+            }
+            Scenario::StaleCreep => {
+                // feeds freeze one by one, cleanest magnets first, each
+                // staying frozen to the end of the horizon — fleet-wide
+                // staleness that only grows
+                if epochs < 2 {
+                    return Vec::new();
+                }
+                let start = (epochs / 4).clamp(1, epochs - 1);
+                STALE_CREEP_SITES
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(k, &site)| {
+                        let at = start
+                            + k * (epochs - start) / STALE_CREEP_SITES.len();
+                        (at < epochs).then(|| {
+                            ScenarioEvent::at(
+                                at,
+                                ClusterAction::Signal(SignalFault::Freeze {
+                                    site,
+                                    epochs,
+                                }),
+                            )
+                        })
+                    })
+                    .collect()
+            }
             _ => Vec::new(),
+        }
+    }
+
+    /// Telemetry-fault summary for `slit scenarios` listings: scheduled
+    /// [`SignalFault`] count plus distinct kind tags, `-` when the regime
+    /// injects none.
+    pub fn fault_summary(&self, epochs: usize) -> String {
+        let mut kinds: Vec<&'static str> = Vec::new();
+        let mut count = 0usize;
+        for ev in self.events(epochs) {
+            if let ClusterAction::Signal(f) = &ev.action {
+                count += 1;
+                let kind = f.kind();
+                if !kinds.contains(&kind) {
+                    kinds.push(kind);
+                }
+            }
+        }
+        if count == 0 {
+            "-".into()
+        } else {
+            format!("{} {}", count, kinds.join("+"))
         }
     }
 
@@ -310,6 +446,10 @@ impl Scenario {
                 // regimes
                 cfg.workload.burst_prob = 0.0;
             }
+            // telemetry faults arrive via ScenarioEvents; the grid truth
+            // rotation happens in shape_signals
+            Scenario::FeedBlackout => {}
+            Scenario::StaleCreep => {}
         }
     }
 
@@ -345,22 +485,69 @@ impl Scenario {
 
     /// Post-generation grid-signal shaping.
     fn shape_signals(&self, cfg: &SystemConfig, signals: &mut GridSignals) {
-        if let Scenario::CarbonSpike = self {
-            // the cleanest quarter of sites (by CI base) spike 4x during
-            // the middle third of the horizon — a wind lull backed by coal
-            let epochs = signals.epochs();
-            let window = epochs / 3..(2 * epochs) / 3;
-            let mut order: Vec<usize> = (0..cfg.datacenters.len()).collect();
-            order.sort_by(|&a, &b| {
-                cfg.datacenters[a]
-                    .ci_base
-                    .partial_cmp(&cfg.datacenters[b].ci_base)
-                    .unwrap()
-            });
-            let afflicted = (cfg.datacenters.len() / 4).max(1);
-            for &dc in order.iter().take(afflicted) {
-                signals.scale_window(dc, window.clone(), 4.0, 1.0, 1.0);
+        match self {
+            Scenario::CarbonSpike => {
+                // the cleanest quarter of sites (by CI base) spike 4x
+                // during the middle third of the horizon — a wind lull
+                // backed by coal
+                let epochs = signals.epochs();
+                let window = epochs / 3..(2 * epochs) / 3;
+                let mut order: Vec<usize> =
+                    (0..cfg.datacenters.len()).collect();
+                order.sort_by(|&a, &b| {
+                    cfg.datacenters[a]
+                        .ci_base
+                        .partial_cmp(&cfg.datacenters[b].ci_base)
+                        .unwrap()
+                });
+                let afflicted = (cfg.datacenters.len() / 4).max(1);
+                for &dc in order.iter().take(afflicted) {
+                    signals.scale_window(dc, window.clone(), 4.0, 1.0, 1.0);
+                }
             }
+            Scenario::FeedBlackout => {
+                // the dark region's true CI spikes over exactly the
+                // blackout window (same arithmetic as events()): the
+                // fault-blind believed picture and the truth diverge
+                let epochs = signals.epochs();
+                if epochs >= 2 {
+                    let start = (epochs / 4).clamp(1, epochs - 1);
+                    let span = (epochs / 4).max(1);
+                    let window = start..start + span;
+                    for (dc, d) in cfg.datacenters.iter().enumerate() {
+                        if d.region == FEED_BLACKOUT_REGION {
+                            signals.scale_window(
+                                dc,
+                                window.clone(),
+                                FEED_BLACKOUT_CI_MULT,
+                                1.0,
+                                1.0,
+                            );
+                        }
+                    }
+                }
+            }
+            Scenario::StaleCreep => {
+                // the frozen clean magnets get dirty in the second half
+                // while their feeds keep replaying clean pre-freeze
+                // values; the fresh region's truth is untouched
+                let epochs = signals.epochs();
+                let window = epochs / 2..epochs;
+                for (dc, d) in cfg.datacenters.iter().enumerate() {
+                    if d.region != STALE_FRESH_REGION
+                        && d.ci_base < STALE_CLEAN_CI_CEILING
+                    {
+                        signals.scale_window(
+                            dc,
+                            window.clone(),
+                            STALE_CREEP_CI_MULT,
+                            1.0,
+                            1.0,
+                        );
+                    }
+                }
+            }
+            _ => {}
         }
     }
 
@@ -516,7 +703,7 @@ mod tests {
             assert!(s.target_objective() < crate::config::N_OBJ);
         }
         assert_eq!(Scenario::from_name("nope"), None);
-        assert_eq!(Scenario::named().len(), 8);
+        assert_eq!(Scenario::named().len(), 10);
     }
 
     #[test]
@@ -605,10 +792,19 @@ mod tests {
                 region: OUTAGE_REGION
             }
         );
-        // every other regime schedules no events
+        // every other regime schedules no *capacity* events — the two
+        // telemetry regimes only inject topology-inert Signal faults
         for sc in Scenario::all() {
             if sc != Scenario::RollingOutage {
-                assert!(sc.build(&base(), 24, 1).events.is_empty());
+                let w = sc.build(&base(), 24, 1);
+                assert!(
+                    w.events.iter().all(|ev| matches!(
+                        ev.action,
+                        crate::cluster::ClusterAction::Signal(_)
+                    )),
+                    "{} schedules capacity events",
+                    sc.name()
+                );
             }
         }
         // short horizons keep epoch 0 healthy; a 1-epoch run has no
@@ -792,6 +988,114 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn feed_blackout_darkens_and_dirties_western_europe() {
+        use crate::cluster::ClusterAction;
+        use crate::signals::SignalFault;
+
+        let b = Scenario::Baseline.build(&base(), 96, 9);
+        let w = Scenario::FeedBlackout.build(&base(), 96, 9);
+        // capacity untouched: the only event is the telemetry blackout
+        assert_eq!(w.cfg.datacenters, base().datacenters);
+        assert_eq!(w.events.len(), 1);
+        assert_eq!(w.events[0].epoch, 24);
+        assert_eq!(
+            w.events[0].action,
+            ClusterAction::Signal(SignalFault::RegionBlackout {
+                region: FEED_BLACKOUT_REGION,
+                epochs: 24,
+            })
+        );
+        // the dark region's truth spikes inside the window only
+        let window = 24..48;
+        for (dc, d) in w.cfg.datacenters.iter().enumerate() {
+            let inside_base = b.signals.mean_ci(dc, window.clone());
+            let inside = w.signals.mean_ci(dc, window.clone());
+            let before_base = b.signals.mean_ci(dc, 0..24);
+            let before = w.signals.mean_ci(dc, 0..24);
+            if d.region == FEED_BLACKOUT_REGION {
+                assert!(
+                    inside > 8.0 * inside_base,
+                    "{} not spiked: {inside} vs {inside_base}",
+                    d.name
+                );
+            } else {
+                assert!((inside - inside_base).abs() < 1e-12, "{}", d.name);
+            }
+            assert!((before - before_base).abs() < 1e-12, "{}", d.name);
+        }
+        // a 1-epoch run has no mid-run to black out
+        assert!(Scenario::FeedBlackout.events(1).is_empty());
+    }
+
+    #[test]
+    fn stale_creep_freezes_cleanest_first_and_spares_the_fresh_region() {
+        use crate::cluster::ClusterAction;
+        use crate::signals::SignalFault;
+
+        let cfg = base();
+        let b = Scenario::Baseline.build(&cfg, 96, 9);
+        let w = Scenario::StaleCreep.build(&cfg, 96, 9);
+        assert_eq!(w.events.len(), STALE_CREEP_SITES.len());
+        let mut prev_epoch = 0;
+        for (k, ev) in w.events.iter().enumerate() {
+            // freezes creep outward in time, cleanest magnets first
+            assert!(ev.epoch >= prev_epoch, "events out of order");
+            prev_epoch = ev.epoch;
+            match &ev.action {
+                ClusterAction::Signal(SignalFault::Freeze {
+                    site,
+                    epochs,
+                }) => {
+                    assert_eq!(*site, STALE_CREEP_SITES[k]);
+                    assert_eq!(*epochs, 96, "frozen to end of horizon");
+                    assert_ne!(
+                        cfg.datacenters[*site].region,
+                        STALE_FRESH_REGION,
+                        "the fresh region must stay fresh"
+                    );
+                }
+                other => panic!("unexpected action {other:?}"),
+            }
+        }
+        // stockholm (the cleanest magnet) freezes first
+        assert_eq!(w.events[0].epoch, 24);
+        assert!(matches!(
+            w.events[0].action,
+            ClusterAction::Signal(SignalFault::Freeze { site: 11, .. })
+        ));
+        // second-half truth: frozen clean magnets get dirty, the fresh
+        // refuge is untouched
+        let second_half = 48..96;
+        for (dc, d) in cfg.datacenters.iter().enumerate() {
+            let base_ci = b.signals.mean_ci(dc, second_half.clone());
+            let creep_ci = w.signals.mean_ci(dc, second_half.clone());
+            if d.region != STALE_FRESH_REGION
+                && d.ci_base < STALE_CLEAN_CI_CEILING
+            {
+                assert!(
+                    creep_ci > 5.0 * base_ci,
+                    "{} not dirtied: {creep_ci} vs {base_ci}",
+                    d.name
+                );
+            } else {
+                assert!((creep_ci - base_ci).abs() < 1e-12, "{}", d.name);
+            }
+        }
+        assert!(Scenario::StaleCreep.events(1).is_empty());
+    }
+
+    #[test]
+    fn fault_summaries_describe_signal_schedules() {
+        assert_eq!(Scenario::Baseline.fault_summary(96), "-");
+        assert_eq!(Scenario::RollingOutage.fault_summary(96), "-");
+        assert_eq!(
+            Scenario::FeedBlackout.fault_summary(96),
+            "1 region-blackout"
+        );
+        assert_eq!(Scenario::StaleCreep.fault_summary(96), "9 freeze");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! With no events and no cluster mutations the session is bit-identical
 //! to the legacy batch path (rust/tests/session_equivalence.rs pins it).
 
-use crate::cluster::{build_panels_dyn, ClusterAction, ClusterState};
+use crate::cluster::{build_panels_with, ClusterAction, ClusterState};
 use crate::config::SystemConfig;
 use crate::eval::{AnalyticEvaluator, EvalConsts};
 use crate::models::EpochLedger;
@@ -33,6 +33,7 @@ use crate::plan::Plan;
 use crate::power::GridSignals;
 use crate::predictor::WorkloadPredictor;
 use crate::sched::LocalScheduler;
+use crate::signals::{SignalFeed, SignalPolicy};
 use crate::sim::{EpochContext, EpochRecord, Scheduler, SimResult};
 use crate::trace::{EpochLoad, Trace};
 use crate::util::csv::CsvWriter;
@@ -81,6 +82,12 @@ pub struct SimSession<'a> {
     /// Temporal-shifting layer for deferrable trace mass; inert (and
     /// forecaster-free) when the trace carries none.
     shifter: TemporalShifter,
+    /// Telemetry layer between ground truth and every signal consumer.
+    /// With no `Signal` events it is a bit-exact passthrough.
+    feed: SignalFeed,
+    /// Which believed view the framework consumes (from
+    /// `Scheduler::signal_policy`, read once at construction).
+    signal_policy: SignalPolicy,
     events: Vec<ScenarioEvent>,
     observers: Vec<Box<dyn EpochObserver + 'a>>,
     per_epoch: Vec<EpochRecord>,
@@ -100,7 +107,11 @@ impl<'a> SimSession<'a> {
         let unused_pr = scheduler.unused_pr(&cfg.physics);
         let shifter =
             TemporalShifter::new(cfg, trace, scheduler.shift_policy());
+        let feed = SignalFeed::new(cfg);
+        let signal_policy = scheduler.signal_policy();
         SimSession {
+            feed,
+            signal_policy,
             epochs,
             epoch: 0,
             rng: Rng::new(seed ^ 0x53494D), // "SIM" — matches the legacy path
@@ -177,28 +188,44 @@ impl<'a> SimSession<'a> {
         }
         let epoch = self.epoch;
 
-        // 1. scheduled events for this epoch mutate the cluster first, so
-        //    the framework plans against the changed world
+        // 1. scheduled events for this epoch fire first, so the framework
+        //    plans against the changed world: capacity events mutate the
+        //    cluster, telemetry faults go to the signal feed
         for ev in &self.events {
             if ev.epoch == epoch {
-                self.state.apply(&ev.action);
+                if let ClusterAction::Signal(fault) = &ev.action {
+                    self.feed.inject(epoch, fault);
+                } else {
+                    self.state.apply(&ev.action);
+                }
             }
         }
 
+        // 1b. the signal plane absorbs this epoch's ground truth; every
+        //    *planning* consumer below (shifter, panels) reads the
+        //    framework's believed view instead of truth. With no faults
+        //    the believed view is bit-identical to truth, so every
+        //    pre-existing path is unchanged (rust/tests/signal_faults.rs).
+        let (ci, wi, tou) = self.signals.at(epoch);
+        self.feed.observe(epoch, &ci, &wi, &tou);
+        let (sig_fresh, sig_stale, sig_quar) = self.feed.health_counts();
+        let sig_div =
+            self.feed.divergence(self.signal_policy, &ci, &wi, &tou);
+        let (bci, bwi, btou) = self.feed.view(self.signal_policy);
+
         // 2. temporal shifting: deferrable mass is queued/released against
-        //    the epoch's realised grid signals BEFORE prediction and panel
+        //    the epoch's believed grid signals BEFORE prediction and panel
         //    build, so the spatial scheduler plans for the released mass.
         //    With no deferrable mass in the trace this is a no-op and the
         //    effective load aliases the trace epoch (bit-identity).
-        let (ci, wi, tou) = self.signals.at(epoch);
         let actual = &self.trace.epochs[epoch];
         let shift = self.shifter.step(
             epoch,
             self.epochs - 1,
             actual,
-            &ci,
-            &wi,
-            &tou,
+            bci,
+            bwi,
+            btou,
         );
         let released_load = (shift.released_mass > 0.0).then(|| {
             let mut eff = actual.clone();
@@ -225,12 +252,14 @@ impl<'a> SimSession<'a> {
             p
         };
 
-        // 4. panels + evaluator bound to the live cluster state
-        let (cp, dp) = build_panels_dyn(
+        // 4. panels + evaluator bound to the live cluster state and the
+        //    framework's *believed* grid signals
+        let (cp, dp) = build_panels_with(
             self.cfg,
             &self.state,
-            self.signals,
-            epoch,
+            bci,
+            bwi,
+            btou,
             &predicted,
             self.unused_pr,
         );
@@ -345,6 +374,14 @@ impl<'a> SimSession<'a> {
         ledger.deferred_queued = shift.queued;
         ledger.deferred_expired = shift.expired;
 
+        // signal-plane accounting: feed health plus the believed-vs-truth
+        // divergence the framework actually planned on (zero without
+        // faults — the measurable regret input)
+        ledger.signal_fresh = sig_fresh as f64;
+        ledger.signal_stale = sig_stale as f64;
+        ledger.signal_quarantined = sig_quar as f64;
+        ledger.signal_div = sig_div;
+
         // optimality-gap oracle: certified per-objective lower bound for
         // this epoch's placement problem vs the plan's analytic score,
         // under the same evaluator the framework planned against. Pure
@@ -411,7 +448,7 @@ pub struct CsvEpochObserver {
 }
 
 impl CsvEpochObserver {
-    pub const HEADER: [&'static str; 20] = [
+    pub const HEADER: [&'static str; 26] = [
         "epoch",
         "ttft_s",
         "carbon_kg",
@@ -432,6 +469,12 @@ impl CsvEpochObserver {
         "gap_carbon",
         "gap_water",
         "gap_cost",
+        "sig_fresh",
+        "sig_stale",
+        "sig_quar",
+        "sig_div_ci",
+        "sig_div_wue",
+        "sig_div_tou",
     ];
 
     pub fn create(path: &str) -> std::io::Result<CsvEpochObserver> {
@@ -466,6 +509,12 @@ impl EpochObserver for CsvEpochObserver {
                 record.gaps[1].gap_frac,
                 record.gaps[2].gap_frac,
                 record.gaps[3].gap_frac,
+                record.ledger.signal_fresh,
+                record.ledger.signal_stale,
+                record.ledger.signal_quarantined,
+                record.ledger.signal_div[0],
+                record.ledger.signal_div[1],
+                record.ledger.signal_div[2],
             ]);
         }
     }

@@ -1,0 +1,842 @@
+//! The signal plane: believed grid telemetry vs ground truth.
+//!
+//! Every scheduler used to read carbon intensity (CI), water intensity
+//! (WUE), and TOU price straight from the `power.rs` ground truth. Real
+//! deployments consume external grid feeds (WattTime / Electricity-Maps
+//! style) that go stale, drop out, lag, and spike — and carbon-aware
+//! allocation quality is bounded by the quality of those signals. This
+//! module interposes a [`SignalFeed`] between ground truth and everything
+//! that reads it:
+//!
+//! * **Fault injection** — deterministic [`SignalFault`]s (freeze,
+//!   dropout, spike×k, fixed-lag delivery, region-wide blackout) ride the
+//!   existing `ScenarioEvent` path (`ClusterAction::Signal`), so
+//!   telemetry faults are scheduled exactly like capacity faults.
+//! * **Health monitoring** — a per-site staleness clock plus plausibility
+//!   gates (absolute range + max rate-of-change per axis) classify each
+//!   site [`FeedState::Fresh`] / [`Stale`](FeedState::Stale) /
+//!   [`Quarantined`](FeedState::Quarantined); quarantined feeds recover
+//!   after [`RECOVERY_STREAK`] consecutive plausible samples.
+//! * **Fallback ladder** — the *robust* believed value blends
+//!   last-known-good (confidence decaying [`LKG_DECAY`]^age) toward an
+//!   anchor: diurnal persistence (same-phase value from yesterday, via
+//!   [`crate::forecast::DiurnalRing`]) → fleet median of currently-fresh
+//!   sites → the site's config prior. Robust believed values are always
+//!   finite and clamped into the plausibility range (property-tested).
+//! * **Two views** — [`SignalPolicy::Trusting`] schedulers consume the
+//!   *naive* view (last delivered value verbatim — fault-blind);
+//!   [`SignalPolicy::Robust`] schedulers (the `slit-robust` registry row,
+//!   a [`RobustScheduler`] wrapper) consume the ladder. `EpochLedger`
+//!   accounting always uses ground truth, so the regret of scheduling on
+//!   bad signals is directly measurable (`signal_*` ledger fields).
+//!
+//! With zero faults injected both views are bit-identical copies of the
+//! ground truth, so every pre-existing framework is unchanged
+//! (rust/tests/signal_faults.rs pins it). See DESIGN.md §17.
+
+use crate::config::SystemConfig;
+use crate::forecast::{epochs_per_day, DiurnalRing};
+use crate::sim::{EpochContext, Scheduler};
+
+/// Signal axes carried per site: CI, WUE, TOU.
+pub const AXES: usize = 3;
+pub const AXIS_CI: usize = 0;
+pub const AXIS_WUE: usize = 1;
+pub const AXIS_TOU: usize = 2;
+pub const AXIS_NAMES: [&str; AXES] = ["ci", "wue", "tou"];
+
+/// Absolute plausibility range per axis (kg/kWh, L/kWh, $/kWh). Generous
+/// vs the generator floors (0.005 / 0.05 / 0.005) and the paper's site
+/// bases, so honest telemetry never trips the gate.
+pub const PLAUSIBLE_MIN: [f64; AXES] = [1e-3, 1e-2, 1e-3];
+pub const PLAUSIBLE_MAX: [f64; AXES] = [3.0, 60.0, 3.0];
+
+/// Rate-of-change gate vs the last accepted sample: a step is rejected
+/// only when it exceeds BOTH the multiplicative ratio and the absolute
+/// delta — low-valued signals near the generator floor can legitimately
+/// triple between epochs while moving by almost nothing.
+pub const MAX_STEP_RATIO: f64 = 3.0;
+pub const MAX_STEP_ABS: [f64; AXES] = [0.5, 10.0, 0.5];
+
+/// Consecutive plausible samples a quarantined feed must deliver before
+/// it is trusted (and re-classified Fresh) again.
+pub const RECOVERY_STREAK: u32 = 2;
+
+/// Per-epoch confidence decay of a last-known-good value: believed =
+/// decay^age · lkg + (1 − decay^age) · anchor.
+pub const LKG_DECAY: f64 = 0.7;
+
+/// Age at which the decay weight bottoms out (0.7^16 ≈ 3e-3: effectively
+/// all anchor).
+pub const MAX_DECAY_AGE: usize = 16;
+
+/// One scheduled telemetry fault. Injected via
+/// [`crate::cluster::ClusterAction::Signal`] at the start of its epoch;
+/// windows are `[epoch, epoch + epochs)`. Site indices out of range are
+/// ignored (scenario tables can name sites a small config does not have).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SignalFault {
+    /// The feed keeps reporting its last delivered value (with its
+    /// original timestamp) for `epochs` epochs.
+    Freeze { site: usize, epochs: usize },
+    /// The feed delivers nothing for `epochs` epochs.
+    Dropout { site: usize, epochs: usize },
+    /// One axis of the feed is multiplied by `factor` (corruption that
+    /// *claims* freshness — only the plausibility gates can catch it).
+    Spike {
+        site: usize,
+        axis: usize,
+        factor: f64,
+        epochs: usize,
+    },
+    /// The feed delivers the truth from `lag` epochs ago (correctly
+    /// timestamped) for `epochs` epochs.
+    Lag {
+        site: usize,
+        lag: usize,
+        epochs: usize,
+    },
+    /// Every feed in a region goes dark for `epochs` epochs.
+    RegionBlackout { region: usize, epochs: usize },
+}
+
+impl SignalFault {
+    /// Short kind tag for scenario listings (`slit scenarios` faults
+    /// column).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SignalFault::Freeze { .. } => "freeze",
+            SignalFault::Dropout { .. } => "dropout",
+            SignalFault::Spike { .. } => "spike",
+            SignalFault::Lag { .. } => "lag",
+            SignalFault::RegionBlackout { .. } => "region-blackout",
+        }
+    }
+}
+
+/// Health classification of one site's feed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeedState {
+    /// A plausible sample measured this epoch was accepted.
+    Fresh,
+    /// Last accepted information is from an earlier epoch (no delivery,
+    /// or an accepted-but-lagged/frozen sample).
+    Stale,
+    /// The last delivery failed the plausibility gates; nothing is
+    /// trusted until [`RECOVERY_STREAK`] plausible samples arrive.
+    Quarantined,
+}
+
+impl FeedState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FeedState::Fresh => "fresh",
+            FeedState::Stale => "stale",
+            FeedState::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// Which rung of the fallback ladder produced a site's robust believed
+/// value this epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FallbackSource {
+    /// Fresh accepted sample — believed == delivered.
+    Live,
+    /// Last-known-good still dominates the blend (decay weight ≥ 0.5).
+    LastKnownGood,
+    /// Diurnal persistence: yesterday's value at the same phase.
+    Diurnal,
+    /// Per-axis median over currently-fresh sites.
+    FleetMedian,
+    /// The site's static config prior (ci_base / wi_base / tou_base).
+    Prior,
+}
+
+impl FallbackSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FallbackSource::Live => "live",
+            FallbackSource::LastKnownGood => "last-known-good",
+            FallbackSource::Diurnal => "diurnal",
+            FallbackSource::FleetMedian => "fleet-median",
+            FallbackSource::Prior => "prior",
+        }
+    }
+}
+
+/// Which believed view a scheduler consumes (mirrors
+/// `opt::shift::ShiftPolicy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SignalPolicy {
+    /// Last delivered value verbatim — fault-blind (the default; with
+    /// zero faults this is exactly the ground truth).
+    #[default]
+    Trusting,
+    /// The health-gated fallback ladder.
+    Robust,
+}
+
+impl SignalPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SignalPolicy::Trusting => "trusting",
+            SignalPolicy::Robust => "robust",
+        }
+    }
+}
+
+/// Per-site feed bookkeeping: active fault windows, delivery memory, and
+/// health state. All fixed-size — the per-epoch path never allocates.
+#[derive(Clone, Debug)]
+struct SiteState {
+    freeze_until: usize,
+    /// Value + measurement epoch the frozen feed keeps replaying.
+    frozen: Option<([f64; AXES], usize)>,
+    dropout_until: usize,
+    lag_until: usize,
+    lag: usize,
+    spike_until: [usize; AXES],
+    spike_factor: [f64; AXES],
+    /// Last delivered (possibly corrupt) sample + its measurement epoch.
+    last_delivered: Option<([f64; AXES], usize)>,
+    /// Last accepted (gate-passing) sample.
+    lkg: [f64; AXES],
+    has_lkg: bool,
+    /// Measurement epoch of the last accepted sample.
+    last_measured: Option<usize>,
+    /// Epochs between now and the last accepted measurement.
+    age: usize,
+    /// Consecutive plausible samples while quarantined.
+    streak: u32,
+    state: FeedState,
+    source: FallbackSource,
+}
+
+impl SiteState {
+    fn new() -> SiteState {
+        SiteState {
+            freeze_until: 0,
+            frozen: None,
+            dropout_until: 0,
+            lag_until: 0,
+            lag: 0,
+            spike_until: [0; AXES],
+            spike_factor: [1.0; AXES],
+            last_delivered: None,
+            lkg: [0.0; AXES],
+            has_lkg: false,
+            last_measured: None,
+            age: 0,
+            streak: 0,
+            state: FeedState::Stale,
+            source: FallbackSource::Prior,
+        }
+    }
+}
+
+/// The telemetry layer between ground-truth [`crate::power::GridSignals`]
+/// and every consumer. Feed it one epoch of truth via
+/// [`SignalFeed::observe`] (faults distort what is *delivered*), then
+/// read believed per-site values via [`SignalFeed::view`].
+pub struct SignalFeed {
+    n: usize,
+    regions: Vec<usize>,
+    prior: Vec<[f64; AXES]>,
+    sites: Vec<SiteState>,
+    /// Diurnal persistence rings, `[site * AXES + axis]`, fed only by
+    /// fresh accepted samples.
+    rings: Vec<DiurnalRing>,
+    /// Ground-truth history ring for lag delivery:
+    /// `[(epoch % depth) * n * AXES + site * AXES + axis]`.
+    truth_ring: Vec<f64>,
+    depth: usize,
+    naive: [Vec<f64>; AXES],
+    robust: [Vec<f64>; AXES],
+    /// Per-axis fleet median of fresh sites this epoch (None when no
+    /// site is fresh).
+    median: [Option<f64>; AXES],
+    median_scratch: Vec<f64>,
+    faults_injected: usize,
+    observed_epochs: usize,
+}
+
+impl SignalFeed {
+    pub fn new(cfg: &SystemConfig) -> SignalFeed {
+        let n = cfg.datacenters.len();
+        let epd = epochs_per_day(cfg.physics.epoch_s);
+        // lag delivery looks back at most one day (capped so huge epoch
+        // counts cannot balloon the ring)
+        let depth = epd.clamp(4, 192);
+        let prior: Vec<[f64; AXES]> = cfg
+            .datacenters
+            .iter()
+            .map(|d| {
+                let mut p = [d.ci_base, d.wi_base, d.tou_base];
+                for (a, v) in p.iter_mut().enumerate() {
+                    *v = v.clamp(PLAUSIBLE_MIN[a], PLAUSIBLE_MAX[a]);
+                }
+                p
+            })
+            .collect();
+        let naive_init = |axis: usize| -> Vec<f64> {
+            prior.iter().map(|p| p[axis]).collect()
+        };
+        SignalFeed {
+            n,
+            regions: cfg.datacenters.iter().map(|d| d.region).collect(),
+            sites: (0..n).map(|_| SiteState::new()).collect(),
+            rings: (0..n * AXES).map(|_| DiurnalRing::new(epd)).collect(),
+            truth_ring: vec![0.0; depth * n * AXES],
+            depth,
+            naive: [naive_init(0), naive_init(1), naive_init(2)],
+            robust: [naive_init(0), naive_init(1), naive_init(2)],
+            median: [None; AXES],
+            median_scratch: Vec::with_capacity(n),
+            faults_injected: 0,
+            observed_epochs: 0,
+            prior,
+        }
+    }
+
+    pub fn sites(&self) -> usize {
+        self.n
+    }
+
+    /// Number of faults injected so far (0 ⇒ both views are bit-identical
+    /// to ground truth).
+    pub fn faults_injected(&self) -> usize {
+        self.faults_injected
+    }
+
+    /// Schedule a fault starting at `epoch`. Out-of-range sites/regions
+    /// are ignored; spike axes are taken mod [`AXES`].
+    pub fn inject(&mut self, epoch: usize, fault: &SignalFault) {
+        self.faults_injected += 1;
+        match fault {
+            SignalFault::Freeze { site, epochs } => {
+                if let Some(s) = self.sites.get_mut(*site) {
+                    s.freeze_until = s.freeze_until.max(epoch + epochs);
+                    if s.frozen.is_none() {
+                        s.frozen = s.last_delivered;
+                    }
+                }
+            }
+            SignalFault::Dropout { site, epochs } => {
+                if let Some(s) = self.sites.get_mut(*site) {
+                    s.dropout_until = s.dropout_until.max(epoch + epochs);
+                }
+            }
+            SignalFault::Spike {
+                site,
+                axis,
+                factor,
+                epochs,
+            } => {
+                if let Some(s) = self.sites.get_mut(*site) {
+                    let a = axis % AXES;
+                    s.spike_until[a] = s.spike_until[a].max(epoch + epochs);
+                    s.spike_factor[a] = *factor;
+                }
+            }
+            SignalFault::Lag { site, lag, epochs } => {
+                if let Some(s) = self.sites.get_mut(*site) {
+                    s.lag_until = s.lag_until.max(epoch + epochs);
+                    s.lag = (*lag).min(self.depth - 1);
+                }
+            }
+            SignalFault::RegionBlackout { region, epochs } => {
+                for (l, r) in self.regions.iter().enumerate() {
+                    if r == region {
+                        let s = &mut self.sites[l];
+                        s.dropout_until = s.dropout_until.max(epoch + epochs);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Absorb one epoch of ground truth: faults distort delivery, the
+    /// health monitor gates acceptance, and both believed views are
+    /// refreshed. Allocation-free once constructed.
+    pub fn observe(&mut self, epoch: usize, ci: &[f64], wi: &[f64], tou: &[f64]) {
+        // 1. record truth for lag delivery
+        let row = (epoch % self.depth) * self.n * AXES;
+        for l in 0..self.n {
+            self.truth_ring[row + l * AXES + AXIS_CI] = ci[l];
+            self.truth_ring[row + l * AXES + AXIS_WUE] = wi[l];
+            self.truth_ring[row + l * AXES + AXIS_TOU] = tou[l];
+        }
+
+        // 2. per-site delivery + health update
+        for l in 0..self.n {
+            let truth = [ci[l], wi[l], tou[l]];
+            let s = &mut self.sites[l];
+
+            // what does the (possibly faulty) feed deliver this epoch?
+            let mut delivered: Option<([f64; AXES], usize)> =
+                if epoch < s.dropout_until {
+                    None
+                } else if epoch < s.freeze_until {
+                    if s.frozen.is_none() {
+                        // feed froze before its first delivery: it
+                        // latches the first truth it measured
+                        s.frozen = Some((truth, epoch));
+                    }
+                    s.frozen
+                } else if epoch < s.lag_until {
+                    if epoch >= s.lag {
+                        let src = epoch - s.lag;
+                        let base = (src % self.depth) * self.n * AXES + l * AXES;
+                        Some((
+                            [
+                                self.truth_ring[base + AXIS_CI],
+                                self.truth_ring[base + AXIS_WUE],
+                                self.truth_ring[base + AXIS_TOU],
+                            ],
+                            src,
+                        ))
+                    } else {
+                        None // nothing was measured that far back
+                    }
+                } else {
+                    Some((truth, epoch))
+                };
+
+            // spikes corrupt whatever is delivered, timestamp untouched
+            if let Some((v, _)) = &mut delivered {
+                for a in 0..AXES {
+                    if epoch < s.spike_until[a] {
+                        v[a] *= s.spike_factor[a];
+                    }
+                }
+            }
+
+            match delivered {
+                None => {
+                    s.age = match s.last_measured {
+                        Some(m) => epoch - m,
+                        None => epoch + 1,
+                    };
+                    if s.state != FeedState::Quarantined {
+                        s.state = FeedState::Stale;
+                    }
+                    // a gap breaks any recovery streak
+                    s.streak = 0;
+                }
+                Some((v, measured)) => {
+                    s.last_delivered = Some((v, measured));
+                    for (a, x) in v.iter().enumerate() {
+                        self.naive[a][l] = *x;
+                    }
+                    let plausible = (0..AXES).all(|a| {
+                        let x = v[a];
+                        let in_range = x.is_finite()
+                            && x >= PLAUSIBLE_MIN[a]
+                            && x <= PLAUSIBLE_MAX[a];
+                        let step_ok = !s.has_lkg || {
+                            let prev = s.lkg[a];
+                            (x - prev).abs() <= MAX_STEP_ABS[a]
+                                || (x <= prev * MAX_STEP_RATIO
+                                    && x * MAX_STEP_RATIO >= prev)
+                        };
+                        in_range && step_ok
+                    });
+                    let recovering = s.state == FeedState::Quarantined
+                        && s.streak + 1 < RECOVERY_STREAK;
+                    if !plausible {
+                        s.state = FeedState::Quarantined;
+                        s.streak = 0;
+                        s.age = match s.last_measured {
+                            Some(m) => epoch - m,
+                            None => epoch + 1,
+                        };
+                    } else if recovering {
+                        s.streak += 1;
+                        s.age = match s.last_measured {
+                            Some(m) => epoch - m,
+                            None => epoch + 1,
+                        };
+                    } else {
+                        // accept
+                        s.streak = 0;
+                        s.lkg = v;
+                        s.has_lkg = true;
+                        s.last_measured = Some(measured);
+                        s.age = epoch - measured;
+                        s.state = if s.age == 0 {
+                            FeedState::Fresh
+                        } else {
+                            FeedState::Stale
+                        };
+                        if s.age == 0 {
+                            for (a, x) in v.iter().enumerate() {
+                                self.rings[l * AXES + a].observe(epoch, *x);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // 3. per-axis fleet median over fresh sites (anchor rung 2)
+        for a in 0..AXES {
+            self.median_scratch.clear();
+            for s in &self.sites {
+                if s.state == FeedState::Fresh {
+                    self.median_scratch.push(s.lkg[a]);
+                }
+            }
+            self.median_scratch.sort_unstable_by(|x, y| x.total_cmp(y));
+            self.median[a] = if self.median_scratch.is_empty() {
+                None
+            } else {
+                Some(self.median_scratch[(self.median_scratch.len() - 1) / 2])
+            };
+        }
+
+        // 4. resolve the robust view through the fallback ladder
+        for l in 0..self.n {
+            let s = &mut self.sites[l];
+            let w = if s.has_lkg {
+                LKG_DECAY.powi(s.age.min(MAX_DECAY_AGE) as i32)
+            } else {
+                0.0
+            };
+            let mut anchor_src = FallbackSource::Prior;
+            for a in 0..AXES {
+                let (anchor, src) = match self.rings[l * AXES + a]
+                    .at_phase(epoch)
+                {
+                    Some(d) => (d, FallbackSource::Diurnal),
+                    None => match self.median[a] {
+                        Some(m) => (m, FallbackSource::FleetMedian),
+                        None => (self.prior[l][a], FallbackSource::Prior),
+                    },
+                };
+                if a == AXIS_CI {
+                    anchor_src = src;
+                }
+                let mut v = w * s.lkg[a] + (1.0 - w) * anchor;
+                if !(v >= PLAUSIBLE_MIN[a]) {
+                    v = PLAUSIBLE_MIN[a];
+                } else if v > PLAUSIBLE_MAX[a] {
+                    v = PLAUSIBLE_MAX[a];
+                }
+                self.robust[a][l] = v;
+            }
+            s.source = if s.state == FeedState::Fresh {
+                FallbackSource::Live
+            } else if w >= 0.5 {
+                FallbackSource::LastKnownGood
+            } else {
+                anchor_src
+            };
+        }
+        self.observed_epochs = self.observed_epochs.max(epoch + 1);
+    }
+
+    /// The believed per-site panels for a policy: `(ci, wi, tou)` slices
+    /// of length [`SignalFeed::sites`].
+    pub fn view(&self, policy: SignalPolicy) -> (&[f64], &[f64], &[f64]) {
+        let v = match policy {
+            SignalPolicy::Trusting => &self.naive,
+            SignalPolicy::Robust => &self.robust,
+        };
+        (&v[AXIS_CI], &v[AXIS_WUE], &v[AXIS_TOU])
+    }
+
+    pub fn site_state(&self, l: usize) -> FeedState {
+        self.sites[l].state
+    }
+
+    /// Epochs since the site's last accepted measurement.
+    pub fn site_age(&self, l: usize) -> usize {
+        self.sites[l].age
+    }
+
+    /// Ladder rung that produced the site's robust value this epoch.
+    pub fn site_source(&self, l: usize) -> FallbackSource {
+        self.sites[l].source
+    }
+
+    /// `(fresh, stale, quarantined)` site counts this epoch.
+    pub fn health_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0usize, 0usize, 0usize);
+        for s in &self.sites {
+            match s.state {
+                FeedState::Fresh => c.0 += 1,
+                FeedState::Stale => c.1 += 1,
+                FeedState::Quarantined => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Sum over sites of |believed − truth| per axis for one view.
+    pub fn divergence(
+        &self,
+        policy: SignalPolicy,
+        ci: &[f64],
+        wi: &[f64],
+        tou: &[f64],
+    ) -> [f64; AXES] {
+        let (bci, bwi, btou) = self.view(policy);
+        let mut d = [0.0; AXES];
+        for l in 0..self.n {
+            d[AXIS_CI] += (bci[l] - ci[l]).abs();
+            d[AXIS_WUE] += (bwi[l] - wi[l]).abs();
+            d[AXIS_TOU] += (btou[l] - tou[l]).abs();
+        }
+        d
+    }
+}
+
+/// Signal-robustness wrapper around any inner spatial scheduler: plans
+/// are delegated untouched; the only difference is the
+/// [`SignalPolicy::Robust`] believed view the session resolves panels
+/// through (the `slit-robust` registry row wraps `slit-carbon`).
+pub struct RobustScheduler {
+    inner: Box<dyn Scheduler>,
+    name: Option<String>,
+}
+
+impl RobustScheduler {
+    pub fn new(inner: Box<dyn Scheduler>) -> RobustScheduler {
+        RobustScheduler { inner, name: None }
+    }
+
+    /// Override the derived `robust+<inner>` name (registry rows carry
+    /// their spec name).
+    pub fn named(mut self, name: &str) -> RobustScheduler {
+        self.name = Some(name.into());
+        self
+    }
+}
+
+impl Scheduler for RobustScheduler {
+    fn name(&self) -> String {
+        self.name
+            .clone()
+            .unwrap_or_else(|| format!("robust+{}", self.inner.name()))
+    }
+
+    fn unused_pr(&self, phys: &crate::config::PhysicsConfig) -> f64 {
+        self.inner.unused_pr(phys)
+    }
+
+    fn plan(&mut self, ctx: &EpochContext) -> crate::plan::Plan {
+        self.inner.plan(ctx)
+    }
+
+    fn shift_policy(&self) -> crate::opt::shift::ShiftPolicy {
+        self.inner.shift_policy()
+    }
+
+    fn signal_policy(&self) -> SignalPolicy {
+        SignalPolicy::Robust
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::GridSignals;
+
+    fn world(epochs: usize, seed: u64) -> (SystemConfig, GridSignals) {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = epochs;
+        let signals = GridSignals::generate(&cfg, epochs, seed);
+        (cfg, signals)
+    }
+
+    fn drive(feed: &mut SignalFeed, signals: &GridSignals, epoch: usize) {
+        let (ci, wi, tou) = signals.at(epoch);
+        feed.observe(epoch, &ci, &wi, &tou);
+    }
+
+    #[test]
+    fn no_faults_both_views_are_bitwise_truth() {
+        let (cfg, signals) = world(16, 3);
+        let mut feed = SignalFeed::new(&cfg);
+        for t in 0..16 {
+            let (ci, wi, tou) = signals.at(t);
+            feed.observe(t, &ci, &wi, &tou);
+            for policy in [SignalPolicy::Trusting, SignalPolicy::Robust] {
+                let (bci, bwi, btou) = feed.view(policy);
+                for l in 0..feed.sites() {
+                    assert_eq!(bci[l].to_bits(), ci[l].to_bits());
+                    assert_eq!(bwi[l].to_bits(), wi[l].to_bits());
+                    assert_eq!(btou[l].to_bits(), tou[l].to_bits());
+                }
+            }
+            assert_eq!(feed.health_counts(), (feed.sites(), 0, 0));
+            assert_eq!(
+                feed.divergence(SignalPolicy::Robust, &ci, &wi, &tou),
+                [0.0; AXES]
+            );
+        }
+        assert_eq!(feed.faults_injected(), 0);
+    }
+
+    #[test]
+    fn freeze_replays_the_pre_freeze_value_and_goes_stale() {
+        let (cfg, signals) = world(12, 7);
+        let mut feed = SignalFeed::new(&cfg);
+        drive(&mut feed, &signals, 0);
+        drive(&mut feed, &signals, 1);
+        let (ci1, _, _) = signals.at(1);
+        feed.inject(2, &SignalFault::Freeze { site: 0, epochs: 6 });
+        for t in 2..8 {
+            drive(&mut feed, &signals, t);
+            let (nci, _, _) = feed.view(SignalPolicy::Trusting);
+            assert_eq!(nci[0].to_bits(), ci1[0].to_bits(), "epoch {t}");
+            assert_eq!(feed.site_state(0), FeedState::Stale);
+            assert_eq!(feed.site_age(0), t - 1, "staleness clock");
+        }
+        // thaw: the next epoch is fresh again (the small post-freeze step
+        // passes the rate gate on these smooth signals)
+        drive(&mut feed, &signals, 8);
+        assert_eq!(feed.site_state(0), FeedState::Fresh);
+        assert_eq!(feed.site_age(0), 0);
+    }
+
+    #[test]
+    fn dropout_decays_belief_toward_anchor_and_stays_in_bounds() {
+        let (cfg, signals) = world(24, 11);
+        let mut feed = SignalFeed::new(&cfg);
+        drive(&mut feed, &signals, 0);
+        feed.inject(1, &SignalFault::Dropout { site: 2, epochs: 20 });
+        for t in 1..21 {
+            drive(&mut feed, &signals, t);
+            let (bci, bwi, btou) = feed.view(SignalPolicy::Robust);
+            assert!(bci[2].is_finite() && bwi[2].is_finite());
+            assert!(bci[2] >= PLAUSIBLE_MIN[AXIS_CI]);
+            assert!(btou[2] <= PLAUSIBLE_MAX[AXIS_TOU]);
+            assert_ne!(feed.site_state(2), FeedState::Fresh);
+            assert_eq!(feed.site_age(2), t, "staleness clock keeps ticking");
+        }
+        assert_ne!(
+            feed.site_source(2),
+            FallbackSource::Live,
+            "20 dark epochs cannot be live"
+        );
+    }
+
+    #[test]
+    fn huge_spike_quarantines_then_recovers_after_streak() {
+        let (cfg, signals) = world(12, 5);
+        let mut feed = SignalFeed::new(&cfg);
+        drive(&mut feed, &signals, 0);
+        feed.inject(
+            1,
+            &SignalFault::Spike {
+                site: 1,
+                axis: AXIS_CI,
+                factor: 50.0,
+                epochs: 3,
+            },
+        );
+        for t in 1..4 {
+            drive(&mut feed, &signals, t);
+            assert_eq!(feed.site_state(1), FeedState::Quarantined, "epoch {t}");
+            // the robust view never swallows the corrupt value
+            let (bci, _, _) = feed.view(SignalPolicy::Robust);
+            assert!(bci[1] <= PLAUSIBLE_MAX[AXIS_CI]);
+        }
+        // spike over: RECOVERY_STREAK plausible epochs restore Fresh
+        drive(&mut feed, &signals, 4);
+        assert_eq!(feed.site_state(1), FeedState::Quarantined);
+        drive(&mut feed, &signals, 5);
+        assert_eq!(feed.site_state(1), FeedState::Fresh);
+        assert_eq!(feed.site_source(1), FallbackSource::Live);
+        // but the naive view swallowed it whole while it lasted
+        feed.inject(
+            6,
+            &SignalFault::Spike {
+                site: 1,
+                axis: AXIS_CI,
+                factor: 50.0,
+                epochs: 1,
+            },
+        );
+        let (ci6, wi6, tou6) = signals.at(6);
+        feed.observe(6, &ci6, &wi6, &tou6);
+        let (nci, _, _) = feed.view(SignalPolicy::Trusting);
+        assert_eq!(nci[1].to_bits(), (ci6[1] * 50.0).to_bits());
+    }
+
+    #[test]
+    fn lag_delivers_old_truth_with_honest_timestamp() {
+        let (cfg, signals) = world(12, 9);
+        let mut feed = SignalFeed::new(&cfg);
+        for t in 0..4 {
+            drive(&mut feed, &signals, t);
+        }
+        feed.inject(
+            4,
+            &SignalFault::Lag {
+                site: 3,
+                lag: 2,
+                epochs: 4,
+            },
+        );
+        for t in 4..8 {
+            drive(&mut feed, &signals, t);
+            let (lag_ci, _, _) = signals.at(t - 2);
+            let (nci, _, _) = feed.view(SignalPolicy::Trusting);
+            assert_eq!(nci[3].to_bits(), lag_ci[3].to_bits(), "epoch {t}");
+            assert_eq!(feed.site_state(3), FeedState::Stale);
+            assert_eq!(feed.site_age(3), 2);
+        }
+    }
+
+    #[test]
+    fn region_blackout_darkens_every_site_in_the_region() {
+        let (cfg, signals) = world(8, 13);
+        let mut feed = SignalFeed::new(&cfg);
+        drive(&mut feed, &signals, 0);
+        feed.inject(1, &SignalFault::RegionBlackout { region: 2, epochs: 4 });
+        drive(&mut feed, &signals, 1);
+        for (l, d) in cfg.datacenters.iter().enumerate() {
+            if d.region == 2 {
+                assert_ne!(feed.site_state(l), FeedState::Fresh, "{}", d.name);
+            } else {
+                assert_eq!(feed.site_state(l), FeedState::Fresh, "{}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_sites_are_ignored() {
+        let (cfg, signals) = world(4, 1);
+        let mut feed = SignalFeed::new(&cfg);
+        feed.inject(0, &SignalFault::Freeze { site: 999, epochs: 4 });
+        feed.inject(0, &SignalFault::RegionBlackout { region: 99, epochs: 4 });
+        drive(&mut feed, &signals, 0);
+        assert_eq!(feed.health_counts().0, feed.sites());
+        assert_eq!(feed.faults_injected(), 2);
+    }
+
+    #[test]
+    fn robust_wrapper_delegates_and_flips_the_policy() {
+        struct Probe;
+        impl Scheduler for Probe {
+            fn name(&self) -> String {
+                "probe".into()
+            }
+            fn plan(&mut self, ctx: &EpochContext) -> crate::plan::Plan {
+                crate::plan::Plan::uniform(
+                    ctx.cfg.num_classes(),
+                    ctx.cfg.datacenters.len(),
+                )
+            }
+        }
+        assert_eq!(Probe.signal_policy(), SignalPolicy::Trusting);
+        let s = RobustScheduler::new(Box::new(Probe));
+        assert_eq!(s.signal_policy(), SignalPolicy::Robust);
+        assert_eq!(s.name(), "robust+probe");
+        let named = RobustScheduler::new(Box::new(Probe)).named("slit-robust");
+        assert_eq!(named.name(), "slit-robust");
+    }
+}

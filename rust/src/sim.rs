@@ -57,6 +57,14 @@ pub trait Scheduler {
     fn shift_policy(&self) -> crate::opt::shift::ShiftPolicy {
         crate::opt::shift::ShiftPolicy::Immediate
     }
+    /// Which believed grid-signal view the session resolves panels
+    /// through. The default trusts the feed verbatim (fault-blind; with
+    /// zero injected faults this is exactly the ground truth); wrap a
+    /// scheduler in [`crate::signals::RobustScheduler`] to opt into the
+    /// health-gated fallback ladder.
+    fn signal_policy(&self) -> crate::signals::SignalPolicy {
+        crate::signals::SignalPolicy::Trusting
+    }
 }
 
 /// Per-epoch record for the Fig. 5 time series.

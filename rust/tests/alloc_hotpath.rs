@@ -13,7 +13,10 @@
 //!     a reserved arena) performs zero heap operations at any fleet size;
 //!   * past the tile (L = 48), the search-loop delta rescore (scratch
 //!     `copy_from` + row delta + `finish`) is heap-silent once the spill
-//!     capacity is warm.
+//!     capacity is warm;
+//!   * the degraded-signal feed's per-epoch believed-panel resolve
+//!     (`SignalFeed::observe` + `view` + `health_counts`) performs zero
+//!     heap operations once the median scratch is warm.
 //!
 //! These are the invariants the SoA-arena + delta-scoring + tiled-DC
 //! redesigns exist to provide; a regression here silently reintroduces
@@ -117,6 +120,30 @@ fn spilled_delta_scoring_is_alloc_free_once_warm() {
     assert_eq!(
         ops, 0,
         "spilled delta rescoring must reuse the scratch allocation"
+    );
+}
+
+#[test]
+fn warm_signal_feed_resolve_performs_zero_heap_operations() {
+    use slit::signals::{SignalFeed, SignalPolicy};
+
+    let cfg = SystemConfig::paper_default();
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let (ci, wi, tou) = signals.at(4);
+    let mut feed = SignalFeed::new(&cfg);
+    // warm: the fleet-median scratch establishes its capacity here
+    feed.observe(0, &ci, &wi, &tou);
+    core::hint::black_box(feed.view(SignalPolicy::Robust));
+    let (ops, _) = count_allocs(|| {
+        for t in 1..65 {
+            feed.observe(t, &ci, &wi, &tou);
+            core::hint::black_box(feed.view(SignalPolicy::Robust));
+            core::hint::black_box(feed.health_counts());
+        }
+    });
+    assert_eq!(
+        ops, 0,
+        "warm believed-panel resolve must not touch the heap"
     );
 }
 

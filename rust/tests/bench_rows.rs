@@ -16,7 +16,11 @@
 //!     and zero missed deadlines,
 //!   * oracle gap smoke: per-epoch lower-bound solve timing at L=16 and
 //!     L=48 plus a blocking soundness + ceiling check on a slit-carbon
-//!     run's recorded gaps.
+//!     run's recorded gaps,
+//!   * signal fallback overhead: the believed-panel resolve (feed observe
+//!     + robust view) per epoch, with a blocking no-fault bit-parity
+//!     check — both believed views must reproduce the truth exactly when
+//!     the feeds are healthy.
 //!
 //! Each test asserts bit/tolerance *parity* between the fast and reference
 //! paths (the correctness half of the bench) and prints the measured
@@ -475,6 +479,68 @@ fn row_oracle_gap_smoke() {
         t48 / t16.max(1e-12),
         t48 * 1e6,
         t16 * 1e6,
+    );
+}
+
+/// CI twin of the hot_path believed-panel row: the per-epoch cost of the
+/// degraded-signal feed (delivery + plausibility gates + fleet median +
+/// robust-view resolve). The correctness half is asserted — with zero
+/// faults both believed views reproduce the ground truth bit-for-bit and
+/// the whole fleet stays Fresh — so the resilience layer is provably free
+/// when the feeds are healthy; the timing is printed for eyeballing. The
+/// zero-heap-allocation pin for the warm resolve loop lives in
+/// alloc_hotpath.rs (the one binary with the counting allocator).
+#[test]
+fn row_signal_fallback_overhead() {
+    use slit::signals::{SignalFeed, SignalPolicy};
+
+    let cfg = SystemConfig::paper_default();
+    let epochs = 64;
+    let signals = GridSignals::generate(&cfg, epochs, 3);
+    // pre-resolve the truth rows so the timed loop measures the feed, not
+    // the signal generator
+    let truth: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+        (0..epochs).map(|t| signals.at(t)).collect();
+
+    let mut feed = SignalFeed::new(&cfg);
+    for (t, (ci, wi, tou)) in truth.iter().enumerate() {
+        feed.observe(t, ci, wi, tou);
+        // no-fault parity: both policies must hand schedulers the truth,
+        // bit-for-bit, at every site and epoch
+        for policy in [SignalPolicy::Trusting, SignalPolicy::Robust] {
+            let (bci, bwi, btou) = feed.view(policy);
+            for l in 0..feed.sites() {
+                for (b, t_) in [
+                    (bci[l], ci[l]),
+                    (bwi[l], wi[l]),
+                    (btou[l], tou[l]),
+                ] {
+                    assert_eq!(
+                        b.to_bits(),
+                        t_.to_bits(),
+                        "epoch {t} site {l}: healthy belief diverges"
+                    );
+                }
+            }
+        }
+        assert_eq!(feed.health_counts(), (feed.sites(), 0, 0));
+    }
+
+    let reps = 50;
+    let t = Instant::now();
+    for _ in 0..reps {
+        for (e, (ci, wi, tou)) in truth.iter().enumerate() {
+            feed.observe(e, ci, wi, tou);
+            core::hint::black_box(feed.view(SignalPolicy::Robust));
+        }
+    }
+    let resolve_s = t.elapsed().as_secs_f64() / (reps * epochs) as f64;
+    println!(
+        "| signals: believed-panel resolve | {:.2} us/epoch | ({} sites, {} epochs x {} reps, zero faults, bit-parity asserted) |",
+        resolve_s * 1e6,
+        feed.sites(),
+        epochs,
+        reps,
     );
 }
 

@@ -1,0 +1,327 @@
+//! Degraded-signal resilience properties (PR 9), at the feed and session
+//! level — `signals.rs` unit tests cover single transitions; these pin the
+//! system-wide guarantees the scenario matrix leans on:
+//!
+//! * under *arbitrary* fault schedules (random mixes of freeze, dropout,
+//!   spike — including NaN and sign-flip corruption — lag, and region
+//!   blackouts) every robust believed value stays finite and inside the
+//!   per-axis plausibility band, at every epoch, at every site;
+//! * quarantine round-trips: a spiked site is quarantined while corrupt,
+//!   then [`RECOVERY_STREAK`] plausible samples restore it to Fresh with
+//!   the believed value bit-identical to the live feed again;
+//! * with zero faults, `slit-robust` is bit-identical to its inner
+//!   framework (`slit-carbon`) — same plans, same ledgers — at every
+//!   thread count (1, 8, hardware default), so the resilience layer is
+//!   provably free when the feeds are healthy;
+//! * with zero faults, every registered framework's per-epoch ledger
+//!   reports zero believed-vs-truth divergence, zero stale/quarantined
+//!   site-epochs, and a full fresh count.
+
+use slit::cluster::ClusterAction;
+use slit::config::SystemConfig;
+use slit::power::GridSignals;
+use slit::registry;
+use slit::session::{ScenarioEvent, SimSession};
+use slit::signals::{
+    FallbackSource, FeedState, SignalFault, SignalFeed, SignalPolicy, AXES,
+    AXIS_CI, PLAUSIBLE_MAX, PLAUSIBLE_MIN, RECOVERY_STREAK,
+};
+use slit::sim::{simulate, SimResult};
+use slit::trace::Trace;
+use slit::util::propkit;
+use slit::util::threadpool;
+
+/// One randomly drawn fault: (start epoch, kind tag, site, span, spike
+/// factor, lag). Sites may be out of range on purpose — the feed must
+/// ignore those, not panic.
+type DrawnFault = (usize, u8, usize, usize, f64, usize);
+
+fn build_fault(kind: u8, site: usize, span: usize, factor: f64, lag: usize) -> SignalFault {
+    match kind {
+        0 => SignalFault::Freeze { site, epochs: span },
+        1 => SignalFault::Dropout { site, epochs: span },
+        2 => SignalFault::Spike {
+            site,
+            axis: site % AXES,
+            factor,
+            epochs: span,
+        },
+        3 => SignalFault::Lag {
+            site,
+            lag,
+            epochs: span,
+        },
+        _ => SignalFault::RegionBlackout {
+            region: site % 6,
+            epochs: span,
+        },
+    }
+}
+
+#[test]
+fn robust_believed_values_stay_finite_and_bounded_under_arbitrary_faults() {
+    propkit::check(
+        "robust_belief_bounded",
+        0x5349_4746,
+        24,
+        |rng| {
+            let epochs = 6 + rng.below(18);
+            let n_faults = 1 + rng.below(12);
+            let faults: Vec<DrawnFault> = (0..n_faults)
+                .map(|_| {
+                    (
+                        rng.below(epochs),
+                        rng.below(5) as u8,
+                        rng.below(14), // 12 real sites + 2 out-of-range
+                        1 + rng.below(epochs),
+                        // corruption magnitudes the plausibility gates
+                        // must survive: zero, negative, NaN, huge, tiny
+                        match rng.below(6) {
+                            0 => 0.0,
+                            1 => -4.0,
+                            2 => f64::NAN,
+                            3 => 1e9,
+                            4 => 1e-8,
+                            _ => 25.0,
+                        },
+                        1 + rng.below(4),
+                    )
+                })
+                .collect();
+            (epochs, faults, rng.next_u64())
+        },
+        |&(epochs, ref faults, seed)| {
+            let mut cfg = SystemConfig::small_test();
+            cfg.epochs = epochs;
+            let signals = GridSignals::generate(&cfg, epochs, seed);
+            let mut feed = SignalFeed::new(&cfg);
+            for &(at, kind, site, span, factor, lag) in faults {
+                feed.inject(at, &build_fault(kind, site, span, factor, lag));
+            }
+            for t in 0..epochs {
+                let (ci, wi, tou) = signals.at(t);
+                feed.observe(t, &ci, &wi, &tou);
+                let (bci, bwi, btou) = feed.view(SignalPolicy::Robust);
+                for (a, axis) in [bci, bwi, btou].iter().enumerate() {
+                    for (l, &v) in axis.iter().enumerate() {
+                        if !v.is_finite()
+                            || v < PLAUSIBLE_MIN[a]
+                            || v > PLAUSIBLE_MAX[a]
+                        {
+                            return Err(format!(
+                                "epoch {t} site {l} axis {a}: \
+                                 robust believed {v} escaped the band"
+                            ));
+                        }
+                    }
+                }
+                // health states always partition the fleet
+                let (fresh, stale, quar) = feed.health_counts();
+                propkit::mass_balance(
+                    feed.sites() as f64,
+                    &[fresh as f64, stale as f64, quar as f64],
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quarantine_round_trip_restores_fresh_and_bitwise_live_belief() {
+    const SITE: usize = 4; // melbourne, ci_base 0.60: x400 is wildly out of band
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 16;
+    let signals = GridSignals::generate(&cfg, 16, 21);
+    let mut feed = SignalFeed::new(&cfg);
+
+    let drive = |feed: &mut SignalFeed, t: usize| {
+        let (ci, wi, tou) = signals.at(t);
+        feed.observe(t, &ci, &wi, &tou);
+    };
+
+    drive(&mut feed, 0);
+    assert_eq!(feed.site_state(SITE), FeedState::Fresh);
+    feed.inject(
+        1,
+        &SignalFault::Spike {
+            site: SITE,
+            axis: AXIS_CI,
+            factor: 400.0,
+            epochs: 3,
+        },
+    );
+
+    // corrupt window [1, 4): the gate quarantines the site throughout,
+    // and the ladder keeps its believed value inside the band
+    for t in 1..4 {
+        drive(&mut feed, t);
+        assert_eq!(feed.site_state(SITE), FeedState::Quarantined, "epoch {t}");
+        let (bci, _, _) = feed.view(SignalPolicy::Robust);
+        assert!(
+            bci[SITE].is_finite() && bci[SITE] <= PLAUSIBLE_MAX[AXIS_CI],
+            "quarantined believed CI escaped the band: {}",
+            bci[SITE]
+        );
+    }
+
+    // recovery: RECOVERY_STREAK plausible samples are probation, the
+    // streak completing restores Fresh
+    let mut t = 4;
+    for _ in 1..RECOVERY_STREAK {
+        drive(&mut feed, t);
+        assert_eq!(feed.site_state(SITE), FeedState::Quarantined, "epoch {t}");
+        t += 1;
+    }
+    drive(&mut feed, t);
+    assert_eq!(feed.site_state(SITE), FeedState::Fresh);
+    assert_eq!(feed.site_age(SITE), 0);
+    assert_eq!(feed.site_source(SITE), FallbackSource::Live);
+
+    // once Fresh, robust belief collapses back to the live feed bit-for-bit
+    let (tci, twi, ttou) = signals.at(t);
+    let (bci, bwi, btou) = feed.view(SignalPolicy::Robust);
+    for (believed, truth) in
+        [(bci, &tci), (bwi, &twi), (btou, &ttou)]
+    {
+        assert_eq!(
+            believed[SITE].to_bits(),
+            truth[SITE].to_bits(),
+            "recovered belief diverges from truth"
+        );
+    }
+}
+
+#[test]
+fn no_fault_slit_robust_is_bit_identical_to_slit_carbon_at_any_thread_count() {
+    // wall-clock must never truncate the search, or timing differences
+    // between thread counts would leak into the comparison
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 3;
+    cfg.opt.budget_s = 1e9;
+    cfg.opt.generations = 3;
+    let trace = Trace::generate(&cfg, cfg.epochs, 42);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, 42);
+
+    let run = |name: &str| -> SimResult {
+        let mut sched = registry::build(name, &cfg, None).expect("framework");
+        simulate(&cfg, &trace, &signals, sched.as_mut(), 42)
+    };
+
+    let mut totals: Vec<(u64, u64, u64)> = Vec::new();
+    for threads in [1usize, 8, 0] {
+        threadpool::set_thread_override(threads);
+        let inner = run("slit-carbon");
+        let robust = run("slit-robust");
+        assert_eq!(robust.name, "slit-robust");
+        assert_eq!(robust.per_epoch.len(), inner.per_epoch.len());
+        for (a, b) in inner.per_epoch.iter().zip(&robust.per_epoch) {
+            assert_eq!(
+                a.plan, b.plan,
+                "plans diverge at epoch {} ({threads} threads)",
+                a.epoch
+            );
+            for (x, y, what) in [
+                (a.ledger.requests, b.ledger.requests, "requests"),
+                (a.ledger.carbon_kg, b.ledger.carbon_kg, "carbon_kg"),
+                (a.ledger.water_l, b.ledger.water_l, "water_l"),
+                (a.ledger.cost_usd, b.ledger.cost_usd, "cost_usd"),
+            ] {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what} diverges at epoch {} ({threads} threads)",
+                    a.epoch
+                );
+            }
+        }
+        totals.push((
+            robust.total.carbon_kg.to_bits(),
+            robust.total.water_l.to_bits(),
+            robust.total.cost_usd.to_bits(),
+        ));
+    }
+    threadpool::set_thread_override(0);
+    for w in totals.windows(2) {
+        assert_eq!(w[0], w[1], "thread count changed slit-robust totals");
+    }
+}
+
+#[test]
+fn every_framework_reports_zero_divergence_without_faults() {
+    assert!(
+        registry::names().contains(&"slit-robust"),
+        "slit-robust missing from the registry"
+    );
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 3;
+    cfg.opt.budget_s = 60.0;
+    cfg.opt.generations = 2;
+    let trace = Trace::generate(&cfg, cfg.epochs, 7);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, 7);
+    let full_fleet = cfg.datacenters.len() as f64;
+
+    for spec in registry::all() {
+        let mut sched =
+            registry::build(spec.name, &cfg, None).expect("framework");
+        let res = simulate(&cfg, &trace, &signals, sched.as_mut(), 7);
+        for r in &res.per_epoch {
+            assert_eq!(
+                r.ledger.signal_div,
+                [0.0; 3],
+                "{} epoch {}: believed diverged from truth with no faults",
+                spec.name,
+                r.epoch
+            );
+            assert_eq!(r.ledger.signal_stale, 0.0, "{}", spec.name);
+            assert_eq!(r.ledger.signal_quarantined, 0.0, "{}", spec.name);
+            assert_eq!(
+                r.ledger.signal_fresh, full_fleet,
+                "{} epoch {}: fresh count short of the fleet",
+                spec.name, r.epoch
+            );
+        }
+    }
+}
+
+#[test]
+fn session_routes_signal_events_into_feed_and_ledger() {
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 6;
+    cfg.opt.budget_s = 60.0;
+    cfg.opt.generations = 2;
+    let trace = Trace::generate(&cfg, cfg.epochs, 11);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, 11);
+    let mut sched = registry::build("slit-robust", &cfg, None).unwrap();
+    let events = vec![ScenarioEvent::at(
+        2,
+        ClusterAction::Signal(SignalFault::RegionBlackout {
+            region: 3,
+            epochs: 3,
+        }),
+    )];
+    let res = SimSession::new(&cfg, &trace, &signals, sched.as_mut(), 11)
+        .with_events(events)
+        .run();
+
+    // europe has 3 sites: the blackout window [2, 5) must surface as
+    // stale site-epochs and nonzero believed-vs-truth divergence
+    let darkened: usize = res
+        .per_epoch
+        .iter()
+        .filter(|r| r.ledger.signal_stale >= 3.0)
+        .count();
+    assert_eq!(darkened, 3, "blackout window never registered in the ledger");
+    let div: f64 =
+        res.per_epoch.iter().map(|r| r.ledger.signal_div[0]).sum();
+    assert!(
+        div > 0.0,
+        "believed CI never diverged from truth under blackout"
+    );
+    // epochs before the blackout are clean
+    assert_eq!(res.per_epoch[0].ledger.signal_stale, 0.0);
+    assert_eq!(res.per_epoch[0].ledger.signal_div, [0.0; 3]);
+    // a telemetry fault degrades information, never the served mass
+    assert!(res.total.requests > 0.0);
+    assert_eq!(res.total.dropped, 0.0);
+}

@@ -14,7 +14,8 @@
 # "shift: forecaster warm-start (one-time)",
 # "shift: planner step per epoch (forecast policy)",
 # "oracle: per-epoch solve (L=16)",
-# "oracle: per-epoch solve (L=48)") are greppable
+# "oracle: per-epoch solve (L=48)",
+# "signals: believed-panel resolve per epoch") are greppable
 # straight from EXPERIMENTS.md.
 
 set -euo pipefail
