@@ -66,6 +66,7 @@ fn main() {
             SlitOptions {
                 use_surrogate: true,
                 use_ea: true,
+                search_mode: None,
             },
         ),
         (
@@ -73,6 +74,7 @@ fn main() {
             SlitOptions {
                 use_surrogate: false,
                 use_ea: true,
+                search_mode: None,
             },
         ),
         (
@@ -80,6 +82,7 @@ fn main() {
             SlitOptions {
                 use_surrogate: true,
                 use_ea: false,
+                search_mode: None,
             },
         ),
         (
@@ -87,6 +90,7 @@ fn main() {
             SlitOptions {
                 use_surrogate: false,
                 use_ea: false,
+                search_mode: None,
             },
         ),
     ];

@@ -1,9 +1,10 @@
 //! Hot-path microbenchmarks: the plan evaluator (native scalar, native
 //! batch-parallel, AOT/PJRT), the GBDT surrogate, the MCMF solver, the
-//! predictor fit, a full optimizer generation, the temporal-shift
-//! planner's per-epoch overhead, and the optimality-gap oracle's
-//! per-epoch solve. These are the numbers the §Perf iteration log in
-//! EXPERIMENTS.md tracks.
+//! predictor fit, a full optimizer generation, the global-vs-region
+//! decomposed search at L=48/256/512, the temporal-shift planner's
+//! per-epoch overhead, and the optimality-gap oracle's per-epoch solve.
+//! These are the numbers the §Perf iteration log in EXPERIMENTS.md
+//! tracks.
 
 use slit::cluster::build_panels;
 use slit::config::{SystemConfig, EVAL_POPULATION};
@@ -482,6 +483,75 @@ fn main() {
         );
         core::hint::black_box(o.optimize(&ev).evaluations);
     });
+
+    // --- region-decomposed search --------------------------------------------
+    // the PR 10 tentpole: per-epoch SLIT search wall-clock, forced global
+    // walk vs the price-coordinated region decomposition on identical
+    // panels — at the planet-scale fleet (L=48, below the auto threshold)
+    // and the edge-fleet scales the decomposition exists for (L=256 and
+    // L=512, where the speedup target is >= 3x: the delta core shrinks to
+    // O(L/4) per move and the four subsearches run concurrently)
+    {
+        use slit::opt::{SearchMode, SlitOptions};
+        use slit::scenario::global_fleet_datacenters;
+
+        for (per_zone, l) in [(6usize, 48usize), (32, 256), (64, 512)] {
+            let mut c = SystemConfig::paper_default();
+            c.datacenters = global_fleet_datacenters(per_zone);
+            c.opt.generations = if quick { 1 } else { 2 };
+            c.opt.search_steps = if quick { 3 } else { 6 };
+            c.opt.budget_s = 600.0;
+            let signals = GridSignals::generate(&c, 8, 3);
+            let trace = Trace::generate(&c, 8, 3);
+            let (cp, dp) =
+                build_panels(&c, &signals, 4, &trace.epochs[4], 0.0);
+            let e = AnalyticEvaluator::new(
+                cp,
+                dp,
+                EvalConsts::from_physics(&c.physics),
+            );
+            let regions: Vec<usize> =
+                c.datacenters.iter().map(|d| d.region).collect();
+            let run = |mode: SearchMode| -> f64 {
+                let t = std::time::Instant::now();
+                let mut o = SlitOptimizer::new(
+                    c.opt.clone(),
+                    c.num_classes(),
+                    l,
+                    7,
+                )
+                .with_options(SlitOptions {
+                    search_mode: Some(mode),
+                    ..SlitOptions::default()
+                })
+                .with_regions(regions.clone());
+                core::hint::black_box(o.optimize(&e).evaluations);
+                t.elapsed().as_secs_f64()
+            };
+            let global_s = run(SearchMode::Global);
+            let region_s = run(SearchMode::RegionDecomposed);
+            bench.record_value(
+                &format!("search: global walk (L={l})"),
+                global_s * 1e3,
+                "ms",
+            );
+            bench.record_value(
+                &format!("search: region-decomposed (L={l})"),
+                region_s * 1e3,
+                "ms",
+            );
+            let name = if l >= 256 {
+                format!("search: region speedup L={l} (target >= 3x)")
+            } else {
+                format!("search: region speedup L={l}")
+            };
+            bench.record_value(
+                &name,
+                global_s / region_s.max(1e-12),
+                "x",
+            );
+        }
+    }
 
     // --- Helix MCMF ----------------------------------------------------------
     bench.bench("helix: mcmf plan for one epoch", || {

@@ -27,7 +27,7 @@ use crate::opt::SlitVariant;
 use crate::power::GridSignals;
 use crate::registry;
 use crate::runtime::{artifacts_dir, artifacts_present, Engine};
-use crate::scenario::{Scenario, ScenarioWorld};
+use crate::scenario::{partition_sites_by_region, Scenario, ScenarioWorld};
 use crate::session::CsvEpochObserver;
 use crate::sim::{Scheduler, SimResult};
 use crate::trace::Trace;
@@ -296,12 +296,28 @@ pub fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     // the config's own horizon so the column matches what `simulate` runs
     let epochs = base.epochs;
     println!(
-        "| scenario | stressed objective | sites | regions | deferrable | \
-         faults | description |"
+        "| scenario | stressed objective | sites | search | region sites | \
+         deferrable | faults | description |"
     );
-    println!("|---|---|---|---|---|---|---|");
+    println!("|---|---|---|---|---|---|---|---|");
     for s in Scenario::all() {
-        let (sites, regions) = s.fleet(&base);
+        let (sites, _regions) = s.fleet(&base);
+        // per-region site counts + the SLIT search mode the fleet size
+        // auto-selects (SlitOptions can still force either mode)
+        let mut cfg = base.clone();
+        s.apply_config(&mut cfg);
+        let tags: Vec<usize> =
+            cfg.datacenters.iter().map(|d| d.region).collect();
+        let region_sites = partition_sites_by_region(&tags)
+            .iter()
+            .map(|(tag, members)| format!("r{}:{}", tag, members.len()))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let search = if sites >= crate::opt::REGION_DECOMPOSE_THRESHOLD {
+            "region-decomposed"
+        } else {
+            "global"
+        };
         let (frac, slack) = s.deferrable(&base);
         let deferrable = if frac > 0.0 {
             format!("{:.0}% / {} ep", 100.0 * frac, slack)
@@ -309,11 +325,12 @@ pub fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
             "-".to_string()
         };
         println!(
-            "| {} | {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} |",
             s.name(),
             OBJ_NAMES[s.target_objective()],
             sites,
-            regions,
+            search,
+            region_sites,
             deferrable,
             s.fault_summary(epochs),
             s.description()

@@ -94,6 +94,16 @@ pub trait BatchEvaluator: Sync {
     fn backend(&self) -> &'static str {
         "analytic"
     }
+    /// Region decomposition support: a self-contained evaluator restricted
+    /// to the given global site indices, whose objectives are exactly this
+    /// evaluator's per-site contributions over those sites (they sum back
+    /// to the global objective across a partition — see
+    /// [`AnalyticEvaluator::restrict_to_sites`]). `None` means the backend
+    /// cannot be sliced (AOT HLO executables have a baked fleet shape) and
+    /// the decomposed SLIT search must fall back to the global walk.
+    fn region_evaluator(&self, _sites: &[usize]) -> Option<AnalyticEvaluator> {
+        None
+    }
 }
 
 impl BatchEvaluator for AnalyticEvaluator {
@@ -107,6 +117,10 @@ impl BatchEvaluator for AnalyticEvaluator {
 
     fn delta_scorer(&self) -> Option<&dyn DeltaScorer> {
         Some(self)
+    }
+
+    fn region_evaluator(&self, sites: &[usize]) -> Option<AnalyticEvaluator> {
+        Some(self.restrict_to_sites(sites))
     }
 }
 
@@ -411,6 +425,54 @@ impl AnalyticEvaluator {
 
     pub fn classes(&self) -> usize {
         self.cp.classes
+    }
+
+    /// A self-contained evaluator over a subset of sites (the per-region
+    /// subproblem of the decomposed SLIT search). Every objective is a sum
+    /// of per-site terms and the TTFT denominator `total_req` depends only
+    /// on the class panel (which is kept whole), so for any partition of
+    /// the fleet the restricted evaluators' objectives **sum to the global
+    /// objective** exactly, up to FP summation order — the property the
+    /// price-coordination loop and the final canonical rescore rely on.
+    pub fn restrict_to_sites(&self, sites: &[usize]) -> AnalyticEvaluator {
+        let k_n = self.cp.classes;
+        let l_n = self.cp.dcs;
+        let l_r = sites.len();
+        assert!(l_r > 0, "restrict_to_sites: empty site set");
+        debug_assert!(sites.iter().all(|&s| s < l_n));
+        let pick = |panel: &[f64]| -> Vec<f64> {
+            sites.iter().map(|&s| panel[s]).collect()
+        };
+        let pick_kl = |panel: &[f64]| -> Vec<f64> {
+            let mut out = Vec::with_capacity(k_n * l_r);
+            for k in 0..k_n {
+                let row = &panel[k * l_n..(k + 1) * l_n];
+                out.extend(sites.iter().map(|&s| row[s]));
+            }
+            out
+        };
+        let cp = ClassPanels {
+            classes: k_n,
+            dcs: l_r,
+            n_req: self.cp.n_req.clone(),
+            tok_out: self.cp.tok_out.clone(),
+            mem: self.cp.mem.clone(),
+            thr: pick_kl(&self.cp.thr),
+            proc: pick_kl(&self.cp.proc),
+            hops: pick_kl(&self.cp.hops),
+        };
+        let dp = DcPanels {
+            dcs: l_r,
+            nodes: pick(&self.dp.nodes),
+            tdp: pick(&self.dp.tdp),
+            cop: pick(&self.dp.cop),
+            tou: pick(&self.dp.tou),
+            ci: pick(&self.dp.ci),
+            wi: pick(&self.dp.wi),
+            bw: pick(&self.dp.bw),
+            unused_pr: pick(&self.dp.unused_pr),
+        };
+        AnalyticEvaluator::new(cp, dp, self.consts)
     }
 
     /// The TTFT denominator: `sum_k n_req[k]` clamped to >= 1 exactly as

@@ -12,4 +12,7 @@ pub use gbdt::{Gbdt, GbdtConfig};
 pub use oracle::{epoch_lower_bound, gap_reports, GapReport, OracleBound};
 pub use scheduler::{FeedbackMode, SlitScheduler, SlitStats, SlitVariant};
 pub use shift::{ShiftPolicy, ShiftScheduler, TemporalShifter};
-pub use slit::{select_population, SlitOptimizer, SlitOptions, SlitOutcome};
+pub use slit::{
+    select_population, SearchMode, SlitOptimizer, SlitOptions, SlitOutcome,
+    REGION_DECOMPOSE_THRESHOLD,
+};

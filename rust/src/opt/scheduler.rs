@@ -10,7 +10,7 @@ use crate::config::{OptConfig, PhysicsConfig, OBJ_CARBON, OBJ_COST, OBJ_TTFT, OB
 use crate::pareto::ParetoArchive;
 use crate::plan::Plan;
 use crate::sim::{EpochContext, Scheduler};
-use crate::opt::slit::{SlitOptimizer, SlitOptions};
+use crate::opt::slit::{SearchMode, SlitOptimizer, SlitOptions};
 
 /// Which showcased Pareto solution this scheduler deploys.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -214,6 +214,16 @@ impl SlitScheduler {
 
 impl Scheduler for SlitScheduler {
     fn name(&self) -> String {
+        // a *forced* region-decomposed search is the `slit-region`
+        // ablation row; auto-selection (search_mode: None) keeps the
+        // variant's identity — past the threshold every slit-* framework
+        // decomposes without being renamed
+        if self.options.search_mode == Some(SearchMode::RegionDecomposed) {
+            return match self.variant {
+                SlitVariant::Balance => "slit-region".into(),
+                v => format!("{}-region", v.name()),
+            };
+        }
         // the registered `slit-adaptive` framework is the balanced
         // variant; feedback on any other variant keeps its identity
         match (self.feedback, self.variant) {
@@ -261,7 +271,10 @@ impl Scheduler for SlitScheduler {
             ctx.cfg.datacenters.len(),
             self.seed ^ self.epoch_counter.wrapping_mul(0x9E37_79B9),
         )
-        .with_options(self.options);
+        .with_options(self.options)
+        .with_regions(
+            ctx.cfg.datacenters.iter().map(|d| d.region).collect(),
+        );
         let seeds = evaluator.greedy_seed_plans();
         // the AOT artifact pads exactly DC_SLOTS columns; fleets past it
         // run analytic-only (registry::build rejects the combination up
@@ -431,6 +444,33 @@ mod tests {
         let b = run();
         assert_eq!(a.total.carbon_kg, b.total.carbon_kg);
         assert_eq!(a.total.ttft_sum_s, b.total.ttft_sum_s);
+    }
+
+    #[test]
+    fn forced_region_mode_renames_and_simulates() {
+        let mut cfg = SystemConfig::small_test();
+        cfg.epochs = 2;
+        let trace = Trace::generate(&cfg, cfg.epochs, 8);
+        let signals = GridSignals::generate(&cfg, cfg.epochs, 8);
+        let mut s = SlitScheduler::new(&cfg, SlitVariant::Balance)
+            .with_options(SlitOptions {
+                search_mode: Some(SearchMode::RegionDecomposed),
+                ..SlitOptions::default()
+            });
+        assert_eq!(s.name(), "slit-region");
+        let res = simulate(&cfg, &trace, &signals, &mut s, 8);
+        assert_eq!(res.name, "slit-region");
+        assert!(res.total.requests > 0.0);
+        // non-balanced variants keep their identity under the suffix
+        let carbon = SlitScheduler::new(&cfg, SlitVariant::Carbon)
+            .with_options(SlitOptions {
+                search_mode: Some(SearchMode::RegionDecomposed),
+                ..SlitOptions::default()
+            });
+        assert_eq!(carbon.name(), "slit-carbon-region");
+        // auto-selection keeps the plain name
+        let auto = SlitScheduler::new(&cfg, SlitVariant::Balance);
+        assert_eq!(auto.name(), "slit-balance");
     }
 
     #[test]

@@ -14,10 +14,11 @@
 //!   * `update_population` keeps only dominant plans (pareto::ParetoArchive)
 //!     and the working population is refreshed by rank + crowding.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use crate::config::{OptConfig, N_OBJ};
-use crate::eval::{BatchEvaluator, MemoizedEvaluator, PlanAgg};
+use crate::eval::{AnalyticEvaluator, BatchEvaluator, MemoizedEvaluator, PlanAgg};
 use crate::opt::gbdt::{Gbdt, GbdtConfig};
 use crate::pareto::{
     crowding_distances, dominates, fast_nondominated_sort, ParetoArchive,
@@ -25,6 +26,7 @@ use crate::pareto::{
 };
 use crate::plan::{Plan, PlanBatch};
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
 /// Cap on the surrogate training-set size (most recent trajectories win).
 const MAX_TRAIN_SAMPLES: usize = 768;
@@ -35,6 +37,23 @@ const MAX_TRAIN_SAMPLES: usize = 768;
 /// scoring. Overrun is still detected within 8 slots, and the truncated
 /// batch keeps ranges and candidates aligned exactly as before.
 const BUDGET_CHECK_STRIDE: usize = 8;
+
+/// Fleets at/above this many sites auto-select the region-decomposed
+/// search (when region tags are known and the backend can be sliced).
+/// Set past the 48-site global-fleet scenario so every pre-existing
+/// regime keeps its bit-identical global walk; the 256/512-site edge
+/// fleets land well above it.
+pub const REGION_DECOMPOSE_THRESHOLD: usize = 64;
+
+/// Price/dual ascent sweeps per epoch in the decomposed search: each
+/// sweep runs every region's subsearch concurrently, merges + rescores
+/// the stitched plans, then updates the per-class demand shares against
+/// the clearing price.
+const PRICE_SWEEPS: usize = 3;
+
+/// Mirror-ascent step for the per-class demand-share update (the dual
+/// step on the demand-balance constraint).
+const PRICE_ETA: f64 = 0.5;
 
 /// Bounded ring of surrogate training trajectories: (plan features,
 /// scalarised score). Replaces the unbounded `Vec<(Vec<f64>, f64)>` that
@@ -105,6 +124,19 @@ impl TrainRing {
     }
 }
 
+/// Which search strategy `optimize` runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchMode {
+    /// The serial global neighbour walk (Algorithm 1 as written).
+    Global,
+    /// Per-region price-coordinated subsearches run concurrently on the
+    /// thread pool, merged and canonically rescored each sweep
+    /// (DESIGN.md §18). Requires region tags ([`SlitOptimizer::
+    /// with_regions`]) and a sliceable backend; falls back to the global
+    /// walk otherwise.
+    RegionDecomposed,
+}
+
 /// Ablation / instrumentation switches.
 #[derive(Clone, Copy, Debug)]
 pub struct SlitOptions {
@@ -112,6 +144,9 @@ pub struct SlitOptions {
     pub use_surrogate: bool,
     /// Run the EA phase.
     pub use_ea: bool,
+    /// Forced search mode; `None` auto-selects by fleet size
+    /// ([`REGION_DECOMPOSE_THRESHOLD`]).
+    pub search_mode: Option<SearchMode>,
 }
 
 impl Default for SlitOptions {
@@ -119,6 +154,7 @@ impl Default for SlitOptions {
         SlitOptions {
             use_surrogate: true,
             use_ea: true,
+            search_mode: None,
         }
     }
 }
@@ -149,6 +185,12 @@ pub struct SlitOptimizer {
     classes: usize,
     dcs: usize,
     rng: Rng,
+    /// The raw epoch seed, kept for deriving per-region RNG streams
+    /// (`seed ^ region tag`) independent of the main stream's position.
+    seed: u64,
+    /// Per-site region tags (empty = unknown; the decomposed mode then
+    /// falls back to the global walk).
+    regions: Vec<usize>,
 }
 
 impl SlitOptimizer {
@@ -159,12 +201,36 @@ impl SlitOptimizer {
             classes,
             dcs,
             rng: Rng::new(seed ^ 0x534C_4954), // "SLIT"
+            seed,
+            regions: Vec::new(),
         }
     }
 
     pub fn with_options(mut self, options: SlitOptions) -> Self {
         self.options = options;
         self
+    }
+
+    /// Supply per-site region tags (`cfg.datacenters[l].region`), enabling
+    /// the region-decomposed search mode.
+    pub fn with_regions(mut self, regions: Vec<usize>) -> Self {
+        debug_assert!(regions.is_empty() || regions.len() == self.dcs);
+        self.regions = regions;
+        self
+    }
+
+    /// The search mode that will be attempted: the explicit option if set,
+    /// else [`SearchMode::RegionDecomposed`] at/above
+    /// [`REGION_DECOMPOSE_THRESHOLD`] sites. (The decomposed mode still
+    /// needs region tags and a sliceable backend at run time.)
+    pub fn resolved_mode(&self) -> SearchMode {
+        match self.options.search_mode {
+            Some(m) => m,
+            None if self.dcs >= REGION_DECOMPOSE_THRESHOLD => {
+                SearchMode::RegionDecomposed
+            }
+            None => SearchMode::Global,
+        }
     }
 
     /// Run Algorithm 1 against `eval`; respects the per-epoch budget.
@@ -244,6 +310,33 @@ impl SlitOptimizer {
         for s in &population {
             update_bounds(&mut lo, &mut hi, &s.obj);
             archive.insert(s.clone());
+        }
+
+        // --- region-decomposed mode: hand the searched phase to the
+        //     price-coordinated per-region subsearches. Prerequisites
+        //     (region tags, a sliceable backend, >= 2 regions) missing ->
+        //     `None`, and the global walk below runs unchanged.
+        if self.resolved_mode() == SearchMode::RegionDecomposed {
+            if let Some((d_evals, sweeps)) = self.search_region_decomposed(
+                eval,
+                &memo,
+                &mut archive,
+                &population,
+                &mut lo,
+                &mut hi,
+                start,
+                budget,
+            ) {
+                return SlitOutcome {
+                    archive,
+                    evaluations: memo.misses() + d_evals,
+                    cache_hits: memo.hits(),
+                    delta_evals: d_evals,
+                    generations_run: sweeps,
+                    surrogate_trainings: 0,
+                    wall_s: start.elapsed().as_secs_f64(),
+                };
+            }
         }
 
         let mut generations_run = 0usize;
@@ -514,6 +607,392 @@ impl SlitOptimizer {
             wall_s: start.elapsed().as_secs_f64(),
         }
     }
+
+    /// The region-decomposed searched phase (DESIGN.md §18): partition
+    /// sites by region tag, run one price-coordinated subsearch per region
+    /// concurrently on the persistent thread pool, and per sweep stitch
+    /// the per-region rows into global plans that are canonically rescored
+    /// (`finish∘aggregate`, via the memoized evaluator) and inserted into
+    /// the global archive on the main thread.
+    ///
+    /// Determinism: each region's subsearch owns a derived RNG stream
+    /// (`seed ^ region tag`), its own arena/scratch, and writes only its
+    /// own position-stable `RegionSub` state, so results are bit-identical
+    /// regardless of worker count or scheduling order; the only shared
+    /// mutable state during a sweep is the budget trip flag, which cannot
+    /// change results under a non-binding budget and under a binding one
+    /// only truncates (exactly like the global walk's budget checks).
+    ///
+    /// Returns `None` when prerequisites are missing (no region tags,
+    /// fewer than two regions, or a backend that cannot be sliced) — the
+    /// caller then falls back to the global walk.
+    #[allow(clippy::too_many_arguments)]
+    fn search_region_decomposed(
+        &self,
+        eval: &dyn BatchEvaluator,
+        memo: &MemoizedEvaluator,
+        archive: &mut ParetoArchive,
+        population: &[Solution],
+        lo: &mut [f64; N_OBJ],
+        hi: &mut [f64; N_OBJ],
+        start: Instant,
+        budget: f64,
+    ) -> Option<(usize, usize)> {
+        if self.regions.len() != self.dcs {
+            return None;
+        }
+        let parts =
+            crate::scenario::partition_sites_by_region(&self.regions);
+        if parts.len() < 2 {
+            return None;
+        }
+        let k_n = self.classes;
+        let l_n = self.dcs;
+        let slots_n = N_OBJ + 1;
+
+        // Warm starts: for each objective-mix slot, the initial-population
+        // member best on that mix (the greedy seeds land here), sliced to
+        // each region's sites and renormalised.
+        let mut warm: Vec<&Plan> = Vec::with_capacity(slots_n);
+        for s in 0..slots_n {
+            let weights = slot_weights(s);
+            let best = population
+                .iter()
+                .min_by(|a, b| {
+                    scalarize_w(&a.obj, &weights, lo, hi)
+                        .partial_cmp(&scalarize_w(&b.obj, &weights, lo, hi))
+                        .unwrap()
+                })
+                .expect("non-empty initial population");
+            warm.push(&best.plan);
+        }
+
+        let mut regions: Vec<RegionSub> = Vec::with_capacity(parts.len());
+        for (tag, sites) in &parts {
+            let sub_eval = eval.region_evaluator(sites)?;
+            let l_r = sites.len();
+            let mut slots = Vec::with_capacity(slots_n);
+            for w in warm.iter().take(slots_n) {
+                let mut flat = vec![0.0; k_n * l_r];
+                for k in 0..k_n {
+                    for (j, &g) in sites.iter().enumerate() {
+                        flat[k * l_r + j] = w.get(k, g);
+                    }
+                }
+                slots.push(Plan::from_flat(k_n, l_r, flat));
+            }
+            let mut arena = PlanBatch::new(k_n, l_r);
+            arena.reserve(self.opt.neighbors.max(1));
+            regions.push(RegionSub {
+                sites: sites.clone(),
+                eval: sub_eval,
+                rng: Rng::new(self.seed ^ region_stream_tag(*tag)),
+                slots,
+                slot_objs: vec![[0.0; N_OBJ]; slots_n],
+                w: vec![l_r as f64 / l_n as f64; k_n],
+                aggs: (0..slots_n).map(|_| PlanAgg::zeros(l_r)).collect(),
+                scratch: PlanAgg::zeros(l_r),
+                arena,
+                scaled_flat: vec![0.0; k_n * l_r],
+                old_scaled: vec![0.0; l_r],
+                new_scaled: vec![0.0; l_r],
+                zero_row: vec![0.0; l_r],
+                unit_cost: vec![0.0; k_n],
+                delta_evals: 0,
+            });
+        }
+
+        // Satellite budget-cap hardening: ONE shared deadline (start
+        // instant + budget + atomic trip flag) across all concurrent
+        // subsearches — the first overrun observation trips the flag and
+        // every other region stops at its next stride check.
+        let tripped = AtomicBool::new(false);
+        let steps = self.opt.search_steps.max(1);
+        let neighbors = self.opt.neighbors.max(1);
+        let move_step = self.opt.step;
+        let mut sweeps_run = 0usize;
+        for sweep in 0..PRICE_SWEEPS {
+            let deadline = SharedDeadline {
+                start,
+                budget_s: budget,
+                tripped: &tripped,
+            };
+            if deadline.overrun() {
+                break;
+            }
+            sweeps_run = sweep + 1;
+
+            // fan out one task per region; each writes only its own
+            // position-stable RegionSub state
+            {
+                let lo_c = *lo;
+                let hi_c = *hi;
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(regions.len());
+                for r in regions.iter_mut() {
+                    let d = deadline;
+                    tasks.push(Box::new(move || {
+                        r.sweep(steps, neighbors, move_step, &lo_c, &hi_c, &d);
+                    }));
+                }
+                threadpool::run_tasks(tasks);
+            }
+
+            // merge: stitch per-region rows, weighted by the per-class
+            // demand shares, into one global plan per objective-mix slot
+            let mut merged: Vec<Plan> = Vec::with_capacity(slots_n);
+            for si in 0..slots_n {
+                let mut flat = vec![0.0; k_n * l_n];
+                for r in &regions {
+                    let l_r = r.sites.len();
+                    let sub = r.slots[si].as_slice();
+                    for k in 0..k_n {
+                        let wk = r.w[k];
+                        for (j, &g) in r.sites.iter().enumerate() {
+                            flat[k * l_n + g] = wk * sub[k * l_r + j];
+                        }
+                    }
+                }
+                merged.push(Plan::from_flat(k_n, l_n, flat));
+            }
+            // canonical global rescore on the main thread (evaluate ==
+            // finish∘aggregate bit-for-bit) + archive insert
+            let objs = memo.eval_batch(&merged);
+            for (plan, obj) in merged.into_iter().zip(objs) {
+                update_bounds(lo, hi, &obj);
+                archive.insert(Solution { plan, obj });
+            }
+
+            // price/dual ascent on per-class demand balance: the clearing
+            // price mu_k is the share-weighted marginal cost; shares move
+            // multiplicatively against (unit cost - price) and are exactly
+            // renormalised, so sum_r w[k][r] == 1 stays invariant
+            if sweep + 1 < PRICE_SWEEPS && !deadline.overrun() {
+                for k in 0..k_n {
+                    let mu: f64 = regions
+                        .iter()
+                        .map(|r| r.w[k] * r.unit_cost[k])
+                        .sum();
+                    let mut sum = 0.0;
+                    for r in regions.iter_mut() {
+                        let e = (-PRICE_ETA * (r.unit_cost[k] - mu))
+                            .clamp(-4.0, 4.0);
+                        r.w[k] *= e.exp();
+                        sum += r.w[k];
+                    }
+                    if sum <= 1e-15 {
+                        for r in regions.iter_mut() {
+                            r.w[k] = r.sites.len() as f64 / l_n as f64;
+                        }
+                    } else {
+                        for r in regions.iter_mut() {
+                            r.w[k] /= sum;
+                        }
+                    }
+                }
+            }
+        }
+
+        let delta: usize = regions.iter().map(|r| r.delta_evals).sum();
+        Some((delta, sweeps_run))
+    }
+}
+
+/// Stable per-region RNG stream tag: spreads the region id across the
+/// word so `seed ^ tag` streams are distinct per region and never collide
+/// with the main optimizer stream (`seed ^ "SLIT"`).
+fn region_stream_tag(region: usize) -> u64 {
+    0x5245_4749_4F4E_0000u64 // "REGION"
+        ^ (region as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One hard wall-clock cap shared by every concurrent region subsearch:
+/// a single start instant + budget + atomic trip flag (not per-region
+/// clocks). After any observer trips the flag, further checks cost one
+/// relaxed atomic load instead of a clock syscall.
+#[derive(Clone, Copy)]
+struct SharedDeadline<'a> {
+    start: Instant,
+    budget_s: f64,
+    tripped: &'a AtomicBool,
+}
+
+impl SharedDeadline<'_> {
+    fn overrun(&self) -> bool {
+        if self.tripped.load(Ordering::Relaxed) {
+            return true;
+        }
+        if self.start.elapsed().as_secs_f64() > self.budget_s {
+            self.tripped.store(true, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+}
+
+/// One region's subproblem state: a site-restricted evaluator, per-slot
+/// row-stochastic sub-plans over the region's sites, the per-class demand
+/// shares `w` (the coupling variables the price sweeps update), and all
+/// the arena/scratch buffers a sweep needs — sized once, so a warm
+/// subsearch step is allocation-free (pinned in alloc_hotpath.rs).
+struct RegionSub {
+    /// Global site indices, ascending.
+    sites: Vec<usize>,
+    eval: AnalyticEvaluator,
+    rng: Rng,
+    /// Per-objective-mix-slot sub-plans (rows stochastic over the
+    /// region's sites; the share `w[k]` scales them at scoring time).
+    slots: Vec<Plan>,
+    /// Canonical share-scaled objective contribution per slot.
+    slot_objs: Vec<[f64; N_OBJ]>,
+    /// Per-class demand share routed to this region (sums to 1 across
+    /// regions for every class).
+    w: Vec<f64>,
+    aggs: Vec<PlanAgg>,
+    scratch: PlanAgg,
+    arena: PlanBatch,
+    scaled_flat: Vec<f64>,
+    old_scaled: Vec<f64>,
+    new_scaled: Vec<f64>,
+    zero_row: Vec<f64>,
+    /// Marginal (per-unit-share) scalarised cost of each class in this
+    /// region, refreshed at the end of every sweep for the price update.
+    unit_cost: Vec<f64>,
+    delta_evals: usize,
+}
+
+impl RegionSub {
+    fn fill_scaled_flat(&mut self, si: usize) {
+        let l_r = self.sites.len();
+        let flat = self.slots[si].as_slice();
+        for (k, &wk) in self.w.iter().enumerate() {
+            for j in 0..l_r {
+                self.scaled_flat[k * l_r + j] = wk * flat[k * l_r + j];
+            }
+        }
+    }
+
+    /// Re-contract every slot's aggregates from scratch under the current
+    /// shares (also kills accumulated FP drift between sweeps).
+    fn recontract(&mut self) {
+        for si in 0..self.slots.len() {
+            self.fill_scaled_flat(si);
+            self.aggs[si] = self.eval.aggregate(&self.scaled_flat);
+            self.slot_objs[si] = self.eval.finish(&self.aggs[si]);
+        }
+    }
+
+    /// One price sweep's worth of local search: `steps` lockstep passes
+    /// over the objective-mix slots, each proposing `neighbors` arena
+    /// candidates delta-rescored in O(L_region), then a marginal-cost
+    /// refresh for the price update. The shared deadline is re-checked
+    /// every [`BUDGET_CHECK_STRIDE`] slot visits.
+    fn sweep(
+        &mut self,
+        steps: usize,
+        neighbors: usize,
+        move_step: f64,
+        lo: &[f64; N_OBJ],
+        hi: &[f64; N_OBJ],
+        deadline: &SharedDeadline<'_>,
+    ) {
+        self.recontract();
+        let k_n = self.w.len();
+        let l_r = self.sites.len();
+        let mut tick = 0usize;
+        for _ in 0..steps {
+            for si in 0..self.slots.len() {
+                if tick % BUDGET_CHECK_STRIDE == 0 && deadline.overrun() {
+                    return;
+                }
+                tick += 1;
+                self.arena.clear();
+                self.arena.push_neighbors_of(
+                    self.slots[si].as_slice(),
+                    neighbors,
+                    move_step,
+                    &mut self.rng,
+                );
+                let weights = slot_weights(si);
+                let cur_score =
+                    scalarize_w(&self.slot_objs[si], &weights, lo, hi);
+                let mut best: Option<(usize, [f64; N_OBJ], f64)> = None;
+                for ci in 0..self.arena.len() {
+                    self.scratch.copy_from(&self.aggs[si]);
+                    let mask = self.arena.touched(ci);
+                    for k in 0..k_n {
+                        if (mask >> k) & 1 == 1 {
+                            let wk = self.w[k];
+                            let old = self.slots[si].row(k);
+                            let new = self.arena.row(ci, k);
+                            for j in 0..l_r {
+                                self.old_scaled[j] = wk * old[j];
+                                self.new_scaled[j] = wk * new[j];
+                            }
+                            self.eval.apply_row_delta(
+                                &mut self.scratch,
+                                k,
+                                &self.old_scaled,
+                                &self.new_scaled,
+                            );
+                        }
+                    }
+                    let obj = self.eval.finish(&self.scratch);
+                    self.delta_evals += 1;
+                    let score = scalarize_w(&obj, &weights, lo, hi);
+                    let better = match &best {
+                        None => true,
+                        Some((_, _, b)) => score < *b,
+                    };
+                    if better {
+                        best = Some((ci, obj, score));
+                    }
+                }
+                if let Some((ci, obj, score)) = best {
+                    if dominates(&obj, &self.slot_objs[si])
+                        || score < cur_score
+                    {
+                        self.slots[si] = self.arena.to_plan(ci);
+                        // re-contract canonically so drift cannot
+                        // accumulate across accepted moves
+                        self.fill_scaled_flat(si);
+                        self.aggs[si] =
+                            self.eval.aggregate(&self.scaled_flat);
+                        self.slot_objs[si] =
+                            self.eval.finish(&self.aggs[si]);
+                    }
+                }
+            }
+        }
+        self.refresh_unit_costs(lo, hi);
+    }
+
+    /// Marginal scalarised cost per unit of demand share, per class — the
+    /// quantity the price update clears. Computed against the balanced
+    /// slot by removing the class's scaled row from the aggregates (one
+    /// O(L_region) delta per class).
+    fn refresh_unit_costs(&mut self, lo: &[f64; N_OBJ], hi: &[f64; N_OBJ]) {
+        let bi = self.slots.len() - 1;
+        let full = scalarize(&self.slot_objs[bi], lo, hi);
+        let l_r = self.sites.len();
+        for k in 0..self.w.len() {
+            self.scratch.copy_from(&self.aggs[bi]);
+            let wk = self.w[k];
+            let row = self.slots[bi].row(k);
+            for j in 0..l_r {
+                self.old_scaled[j] = wk * row[j];
+            }
+            self.eval.apply_row_delta(
+                &mut self.scratch,
+                k,
+                &self.old_scaled,
+                &self.zero_row,
+            );
+            let without = self.eval.finish(&self.scratch);
+            let attributed = full - scalarize(&without, lo, hi);
+            self.unit_cost[k] = attributed / wk.max(1e-9);
+        }
+    }
 }
 
 fn update_bounds(lo: &mut [f64; N_OBJ], hi: &mut [f64; N_OBJ], obj: &[f64; N_OBJ]) {
@@ -705,6 +1184,7 @@ mod tests {
             SlitOptions {
                 use_surrogate: false,
                 use_ea: true,
+                search_mode: None,
             },
             4,
         );
@@ -713,6 +1193,7 @@ mod tests {
             SlitOptions {
                 use_surrogate: true,
                 use_ea: false,
+                search_mode: None,
             },
             4,
         );
@@ -769,6 +1250,234 @@ mod tests {
         let sel = select_population(pool, 4);
         assert_eq!(sel.len(), 4);
         assert!(!sel.iter().any(|s| s.obj == [6.0, 6.0, 6.0, 6.0]));
+    }
+
+    fn region_mode() -> SlitOptions {
+        SlitOptions {
+            search_mode: Some(SearchMode::RegionDecomposed),
+            ..SlitOptions::default()
+        }
+    }
+
+    /// Like [`run_opt`] but with the paper fleet's region tags supplied,
+    /// so the decomposed mode actually decomposes.
+    fn run_opt_region(
+        options: SlitOptions,
+        seed: u64,
+    ) -> (SystemConfig, SlitOutcome) {
+        let (cfg, ev) = make_eval();
+        let mut opt_cfg = cfg.opt.clone();
+        opt_cfg.population = 12;
+        opt_cfg.generations = 5;
+        opt_cfg.search_steps = 3;
+        opt_cfg.neighbors = 6;
+        opt_cfg.gbdt_trees = 10;
+        opt_cfg.train_freq = 2;
+        let regions: Vec<usize> =
+            cfg.datacenters.iter().map(|d| d.region).collect();
+        let mut o =
+            SlitOptimizer::new(opt_cfg, cfg.num_classes(), ev.dcs(), seed)
+                .with_options(options)
+                .with_regions(regions);
+        let out = o.optimize(&ev);
+        (cfg, out)
+    }
+
+    #[test]
+    fn region_decomposed_runs_and_merges_a_consistent_archive() {
+        let (_, out) = run_opt_region(region_mode(), 21);
+        assert!(!out.archive.is_empty());
+        assert!(out.archive.is_consistent());
+        // the decomposed phase replaces the global walk entirely: no
+        // surrogate, PRICE_SWEEPS "generations", and every candidate goes
+        // through the region-local O(L_region) delta core — 4 regions x
+        // 3 sweeps x 3 steps x 5 slots x 6 neighbours
+        assert_eq!(out.surrogate_trainings, 0);
+        assert_eq!(out.generations_run, PRICE_SWEEPS);
+        assert_eq!(out.delta_evals, 4 * PRICE_SWEEPS * 3 * (N_OBJ + 1) * 6);
+        // merged plans are canonically rescored through the memo
+        assert!(out.evaluations > out.delta_evals);
+    }
+
+    #[test]
+    fn region_decomposed_is_bit_deterministic_across_runs() {
+        let (_, a) = run_opt_region(region_mode(), 33);
+        let (_, b) = run_opt_region(region_mode(), 33);
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.delta_evals, b.delta_evals);
+        let oa: Vec<_> = a.archive.solutions.iter().map(|s| s.obj).collect();
+        let ob: Vec<_> = b.archive.solutions.iter().map(|s| s.obj).collect();
+        assert_eq!(oa, ob, "decomposed search must be bit-deterministic");
+        // a different seed explores differently
+        let (_, c) = run_opt_region(region_mode(), 34);
+        let oc: Vec<_> = c.archive.solutions.iter().map(|s| s.obj).collect();
+        assert_ne!(oa, oc);
+    }
+
+    #[test]
+    fn region_mode_without_tags_falls_back_to_the_global_walk() {
+        // forced RegionDecomposed but no with_regions: prerequisites are
+        // missing, so the run must be bit-identical to the global walk
+        let (_, forced) = run_opt(region_mode(), 7);
+        let (_, global) = run_opt(SlitOptions::default(), 7);
+        assert_eq!(forced.delta_evals, global.delta_evals);
+        assert_eq!(forced.evaluations, global.evaluations);
+        assert_eq!(forced.surrogate_trainings, global.surrogate_trainings);
+        let of: Vec<_> =
+            forced.archive.solutions.iter().map(|s| s.obj).collect();
+        let og: Vec<_> =
+            global.archive.solutions.iter().map(|s| s.obj).collect();
+        assert_eq!(of, og);
+    }
+
+    #[test]
+    fn auto_mode_resolves_by_fleet_size_and_override_wins() {
+        let opt_cfg = SystemConfig::paper_default().opt;
+        let mk = |dcs: usize, options: SlitOptions| {
+            SlitOptimizer::new(opt_cfg.clone(), 8, dcs, 1)
+                .with_options(options)
+        };
+        assert_eq!(
+            mk(12, SlitOptions::default()).resolved_mode(),
+            SearchMode::Global
+        );
+        assert_eq!(
+            mk(REGION_DECOMPOSE_THRESHOLD, SlitOptions::default())
+                .resolved_mode(),
+            SearchMode::RegionDecomposed
+        );
+        assert_eq!(
+            mk(256, SlitOptions::default()).resolved_mode(),
+            SearchMode::RegionDecomposed
+        );
+        // explicit choice always wins, in both directions
+        assert_eq!(
+            mk(
+                256,
+                SlitOptions {
+                    search_mode: Some(SearchMode::Global),
+                    ..SlitOptions::default()
+                }
+            )
+            .resolved_mode(),
+            SearchMode::Global
+        );
+        assert_eq!(mk(12, region_mode()).resolved_mode(), SearchMode::RegionDecomposed);
+        // the 48-site global fleet stays on the bit-identical global walk
+        assert_eq!(
+            mk(48, SlitOptions::default()).resolved_mode(),
+            SearchMode::Global
+        );
+    }
+
+    #[test]
+    fn shared_deadline_hard_caps_the_decomposed_search_at_l256() {
+        // satellite regression: one atomic deadline across all concurrent
+        // region subsearches — a tiny budget must bound the whole epoch
+        // even at 256 sites, and still leave a usable archive (the initial
+        // population and at least the stride-truncated first sweep land)
+        let mut cfg = SystemConfig::paper_default();
+        cfg.datacenters = crate::scenario::global_fleet_datacenters(32);
+        cfg.validate().unwrap();
+        let signals = GridSignals::generate(&cfg, 6, 3);
+        let trace = Trace::generate(&cfg, 6, 3);
+        let (cp, dp) = build_panels(&cfg, &signals, 2, &trace.epochs[2], 0.05);
+        let ev = AnalyticEvaluator::new(
+            cp,
+            dp,
+            EvalConsts::from_physics(&cfg.physics),
+        );
+        let mut opt_cfg = cfg.opt.clone();
+        opt_cfg.generations = 10_000;
+        opt_cfg.search_steps = 10_000;
+        opt_cfg.budget_s = 0.2;
+        let regions: Vec<usize> =
+            cfg.datacenters.iter().map(|d| d.region).collect();
+        let mut o =
+            SlitOptimizer::new(opt_cfg, cfg.num_classes(), ev.dcs(), 5)
+                .with_regions(regions);
+        assert_eq!(o.resolved_mode(), SearchMode::RegionDecomposed);
+        let t = std::time::Instant::now();
+        let out = o.optimize(&ev);
+        assert!(
+            t.elapsed().as_secs_f64() < 5.0,
+            "decomposed search ignored the shared budget: {:.2}s",
+            t.elapsed().as_secs_f64()
+        );
+        assert!(!out.archive.is_empty());
+        assert!(out.archive.is_consistent());
+    }
+
+    #[test]
+    fn merged_region_plans_are_normalized_and_mass_conserving() {
+        use crate::util::propkit;
+        // property: stitching share-scaled per-region rows through
+        // Plan::from_flat always yields row-stochastic plans, and when the
+        // shares sum to 1 per class the pre-normalisation row mass is
+        // already 1 (the merge conserves demand mass exactly)
+        propkit::check(
+            "merged rows normalized + mass conserving",
+            0xC0DE,
+            64,
+            |rng| {
+                let k_n = 1 + rng.below(6);
+                let n_regions = 2 + rng.below(3);
+                // region sizes 1..=4
+                let sizes: Vec<usize> =
+                    (0..n_regions).map(|_| 1 + rng.below(4)).collect();
+                // per-class shares over regions, normalised to sum to 1
+                let mut shares = vec![vec![0.0; n_regions]; k_n];
+                for row in shares.iter_mut() {
+                    let mut sum = 0.0;
+                    for s in row.iter_mut() {
+                        *s = rng.range(0.01, 1.0);
+                        sum += *s;
+                    }
+                    for s in row.iter_mut() {
+                        *s /= sum;
+                    }
+                }
+                // random row-stochastic sub-plans per region
+                let subs: Vec<Plan> = sizes
+                    .iter()
+                    .map(|&l_r| Plan::random(k_n, l_r, 0.7, rng))
+                    .collect();
+                (sizes, shares, subs)
+            },
+            |(sizes, shares, subs)| {
+                let k_n = shares.len();
+                let l_n: usize = sizes.iter().sum();
+                let mut flat = vec![0.0; k_n * l_n];
+                let mut base = 0usize;
+                for (r, sub) in subs.iter().enumerate() {
+                    let l_r = sizes[r];
+                    for k in 0..k_n {
+                        let wk = shares[k][r];
+                        for j in 0..l_r {
+                            flat[k * l_n + base + j] = wk * sub.get(k, j);
+                        }
+                    }
+                    base += l_r;
+                }
+                // mass conservation before normalisation: every row's
+                // stitched mass is the share-weighted sum of unit rows
+                for k in 0..k_n {
+                    let mass: f64 =
+                        flat[k * l_n..(k + 1) * l_n].iter().sum();
+                    propkit::close(mass, 1.0, 1e-9)?;
+                }
+                let merged = Plan::from_flat(k_n, l_n, flat);
+                for k in 0..k_n {
+                    let row = merged.row(k);
+                    propkit::close(row.iter().sum::<f64>(), 1.0, 1e-9)?;
+                    if row.iter().any(|&v| !(0.0..=1.0 + 1e-12).contains(&v))
+                    {
+                        return Err(format!("row {k} out of range"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

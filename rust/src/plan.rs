@@ -116,6 +116,22 @@ impl Plan {
         p
     }
 
+    /// Build a plan directly from a flattened `[k * dcs + l]` matrix. The
+    /// region-decomposed search uses this to stitch per-region sub-rows
+    /// into one global plan before the canonical rescore; rows are
+    /// renormalised so the result is row-stochastic even when the merge
+    /// weights carry rounding slack.
+    pub fn from_flat(classes: usize, dcs: usize, a: Vec<f64>) -> Plan {
+        assert_eq!(
+            a.len(),
+            classes * dcs,
+            "from_flat: flat length must be classes * dcs"
+        );
+        let mut p = Plan { classes, dcs, a };
+        p.normalize();
+        p
+    }
+
     /// Random plan: Dirichlet(alpha)-distributed rows (sparse for small
     /// alpha, which matches how real schedulers concentrate load).
     pub fn random(classes: usize, dcs: usize, alpha: f64, rng: &mut Rng) -> Plan {

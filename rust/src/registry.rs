@@ -11,7 +11,9 @@ use std::sync::Arc;
 
 use crate::baselines::{HelixScheduler, RoundRobinScheduler, SplitwiseScheduler};
 use crate::config::SystemConfig;
-use crate::opt::{ShiftScheduler, SlitScheduler, SlitVariant};
+use crate::opt::{
+    SearchMode, ShiftScheduler, SlitOptions, SlitScheduler, SlitVariant,
+};
 use crate::runtime::Engine;
 use crate::signals::RobustScheduler;
 use crate::sim::Scheduler;
@@ -145,6 +147,31 @@ fn build_slit_robust_hlo(
     )
 }
 
+fn region_options() -> SlitOptions {
+    SlitOptions {
+        search_mode: Some(SearchMode::RegionDecomposed),
+        ..SlitOptions::default()
+    }
+}
+
+fn build_slit_region(cfg: &SystemConfig) -> Box<dyn Scheduler> {
+    Box::new(
+        SlitScheduler::new(cfg, SlitVariant::Balance)
+            .with_options(region_options()),
+    )
+}
+
+fn build_slit_region_hlo(
+    cfg: &SystemConfig,
+    engine: Arc<Engine>,
+) -> Box<dyn Scheduler> {
+    Box::new(
+        SlitScheduler::new(cfg, SlitVariant::Balance)
+            .with_engine(engine)
+            .with_options(region_options()),
+    )
+}
+
 /// The iterable framework table. Order is presentation order (baselines
 /// first, SLIT variants after, as in the paper's Fig. 4 rows).
 pub static FRAMEWORKS: &[FrameworkSpec] = &[
@@ -244,6 +271,14 @@ pub static FRAMEWORKS: &[FrameworkSpec] = &[
         build: build_slit_adaptive_level,
         build_hlo: Some(build_slit_adaptive_level_hlo),
     },
+    FrameworkSpec {
+        name: "slit-region",
+        aliases: &["region"],
+        description: "balanced SLIT with the region-decomposed price-coordinated search forced on — ablation row for the ≥256-site auto mode",
+        in_paper_set: false,
+        build: build_slit_region,
+        build_hlo: Some(build_slit_region_hlo),
+    },
 ];
 
 /// Every registered framework.
@@ -330,6 +365,7 @@ mod tests {
         );
         assert_eq!(find("shift").unwrap().name, "slit-shift");
         assert_eq!(find("robust").unwrap().name, "slit-robust");
+        assert_eq!(find("region").unwrap().name, "slit-region");
         assert!(find("nope").is_none());
     }
 

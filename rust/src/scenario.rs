@@ -20,7 +20,7 @@
 //! distorts what schedulers believe about the grid while the ledger keeps
 //! accounting against ground truth.
 //!
-//! The ten named regimes (plus the untouched baseline):
+//! The twelve named regimes (plus the untouched baseline):
 //!   * `diurnal` — sharpened day/night demand swing, no bursts: the
 //!     follow-the-sun routing case (cf. Fig. 1's diurnal trend).
 //!   * `bursty` — heavy-tailed demand spikes on top of frequent bursts:
@@ -50,6 +50,11 @@
 //!     until only north-america reports fresh data, while the frozen
 //!     clean sites' true CI climbs in the second half. The `slit-robust`
 //!     fallback ladder (DESIGN.md §17) is built for these two.
+//!   * `edge-fleet-256` / `edge-fleet-512` — the same 8 zone templates
+//!     stamped at 32 and 64 sites per zone: the 256/512-site fleets the
+//!     region-decomposed SLIT search (DESIGN.md §18) exists for. Past the
+//!     auto-decomposition threshold, SLIT runs price-coordinated
+//!     per-region subsearches instead of the global walk.
 
 use crate::cluster::ClusterAction;
 use crate::config::{
@@ -132,6 +137,13 @@ pub enum Scenario {
     /// north-america reports fresh data; the frozen clean sites' true CI
     /// climbs in the second half.
     StaleCreep,
+    /// 256-site fleet (32 sites per zone template): past the
+    /// region-decomposition threshold, so SLIT auto-selects the
+    /// price-coordinated per-region search.
+    EdgeFleet256,
+    /// 512-site fleet (64 sites per zone template): the largest stamped
+    /// regime, stressing region-decomposed search throughput.
+    EdgeFleet512,
 }
 
 /// A generated experiment world: config + matching trace, grid signals,
@@ -163,7 +175,7 @@ impl ScenarioWorld {
 
 impl Scenario {
     /// Every scenario including the baseline.
-    pub fn all() -> [Scenario; 11] {
+    pub fn all() -> [Scenario; 13] {
         [
             Scenario::Baseline,
             Scenario::Diurnal,
@@ -176,11 +188,13 @@ impl Scenario {
             Scenario::BatchOvernight,
             Scenario::FeedBlackout,
             Scenario::StaleCreep,
+            Scenario::EdgeFleet256,
+            Scenario::EdgeFleet512,
         ]
     }
 
     /// The named non-baseline regimes (the scenario-matrix set).
-    pub fn named() -> [Scenario; 10] {
+    pub fn named() -> [Scenario; 12] {
         [
             Scenario::Diurnal,
             Scenario::BurstyHeavyTail,
@@ -192,6 +206,8 @@ impl Scenario {
             Scenario::BatchOvernight,
             Scenario::FeedBlackout,
             Scenario::StaleCreep,
+            Scenario::EdgeFleet256,
+            Scenario::EdgeFleet512,
         ]
     }
 
@@ -208,6 +224,8 @@ impl Scenario {
             Scenario::BatchOvernight => "batch-overnight",
             Scenario::FeedBlackout => "feed-blackout",
             Scenario::StaleCreep => "stale-creep",
+            Scenario::EdgeFleet256 => "edge-fleet-256",
+            Scenario::EdgeFleet512 => "edge-fleet-512",
         }
     }
 
@@ -248,6 +266,14 @@ impl Scenario {
                 "feeds freeze one by one (cleanest first); frozen clean \
                  magnets' true CI climbs 6x in the second half"
             }
+            Scenario::EdgeFleet256 => {
+                "256-site fleet (32 per zone template); region-decomposed \
+                 SLIT search auto-selected"
+            }
+            Scenario::EdgeFleet512 => {
+                "512-site fleet (64 per zone template); region-decomposed \
+                 SLIT search auto-selected"
+            }
         }
     }
 
@@ -275,6 +301,9 @@ impl Scenario {
             // of believing bad signals lands on true carbon
             Scenario::FeedBlackout => OBJ_CARBON,
             Scenario::StaleCreep => OBJ_CARBON,
+            // same CI-spread story as global-fleet, at 256/512 sites
+            Scenario::EdgeFleet256 => OBJ_CARBON,
+            Scenario::EdgeFleet512 => OBJ_CARBON,
         }
     }
 
@@ -450,6 +479,12 @@ impl Scenario {
             // rotation happens in shape_signals
             Scenario::FeedBlackout => {}
             Scenario::StaleCreep => {}
+            Scenario::EdgeFleet256 => {
+                cfg.datacenters = global_fleet_datacenters(32);
+            }
+            Scenario::EdgeFleet512 => {
+                cfg.datacenters = global_fleet_datacenters(64);
+            }
         }
     }
 
@@ -683,6 +718,29 @@ pub fn global_fleet_datacenters(sites_per_zone: usize) -> Vec<DatacenterSpec> {
     fleet
 }
 
+/// Group site indices by region tag, ordered by ascending tag — the
+/// partition the region-decomposed SLIT search fans out over (one
+/// subproblem per routing region) and `slit scenarios` prints per row.
+/// Pure and deterministic; index order within a region is ascending.
+pub fn partition_sites_by_region(
+    regions: &[usize],
+) -> Vec<(usize, Vec<usize>)> {
+    let mut tags: Vec<usize> = regions.to_vec();
+    tags.sort_unstable();
+    tags.dedup();
+    tags.into_iter()
+        .map(|t| {
+            let sites: Vec<usize> = regions
+                .iter()
+                .enumerate()
+                .filter(|&(_, &r)| r == t)
+                .map(|(i, _)| i)
+                .collect();
+            (t, sites)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -703,7 +761,7 @@ mod tests {
             assert!(s.target_objective() < crate::config::N_OBJ);
         }
         assert_eq!(Scenario::from_name("nope"), None);
-        assert_eq!(Scenario::named().len(), 10);
+        assert_eq!(Scenario::named().len(), 12);
     }
 
     #[test]
@@ -953,6 +1011,68 @@ mod tests {
             .sum();
         assert!((res.total.requests - expected).abs() < 1e-6);
         assert!(res.total.e_tot_j > 0.0);
+    }
+
+    #[test]
+    fn edge_fleets_stamp_256_and_512_sites_across_all_regions() {
+        for (sc, sites, per_zone) in [
+            (Scenario::EdgeFleet256, 256usize, 32usize),
+            (Scenario::EdgeFleet512, 512, 64),
+        ] {
+            let w = sc.build(&base(), 4, 3);
+            w.cfg.validate().expect("edge fleet must validate");
+            assert_eq!(w.cfg.datacenters.len(), sites, "{}", sc.name());
+            assert!(w.cfg.validate_aot().is_err(), "analytic-only fleet");
+            assert!(w.events.is_empty());
+            assert_eq!(sc.fleet(&base()), (sites, 4));
+            // every routing region holds its two zones' worth of sites,
+            // so the region decomposition fans out over 4 balanced parts
+            for r in 0..crate::config::REGIONS {
+                let n =
+                    w.cfg.datacenters.iter().filter(|d| d.region == r).count();
+                assert_eq!(n, 2 * per_zone, "{} region {r}", sc.name());
+            }
+            // names stay unique at scale
+            let mut names: Vec<&str> =
+                w.cfg.datacenters.iter().map(|d| d.name.as_str()).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), sites, "duplicate site names");
+            // past the auto-decomposition threshold: SLIT switches modes
+            assert!(sites >= crate::opt::REGION_DECOMPOSE_THRESHOLD);
+        }
+        // the 48-site global fleet stays under the threshold, keeping
+        // its global-walk results bit-identical to earlier releases
+        assert!(48 < crate::opt::REGION_DECOMPOSE_THRESHOLD);
+    }
+
+    #[test]
+    fn partition_groups_sites_by_ascending_region_tag() {
+        let regions = [2usize, 0, 2, 1, 0, 2];
+        let parts = partition_sites_by_region(&regions);
+        assert_eq!(
+            parts,
+            vec![
+                (0, vec![1, 4]),
+                (1, vec![3]),
+                (2, vec![0, 2, 5]),
+            ]
+        );
+        // partition covers every site exactly once
+        let mut all: Vec<usize> =
+            parts.iter().flat_map(|(_, s)| s.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..regions.len()).collect::<Vec<_>>());
+        assert!(partition_sites_by_region(&[]).is_empty());
+
+        // the edge fleets split into the 4 routing regions, 64 sites each
+        let fleet = global_fleet_datacenters(32);
+        let tags: Vec<usize> = fleet.iter().map(|d| d.region).collect();
+        let parts = partition_sites_by_region(&tags);
+        assert_eq!(parts.len(), 4);
+        for (_, sites) in &parts {
+            assert_eq!(sites.len(), 64);
+        }
     }
 
     #[test]

@@ -237,6 +237,26 @@ fn run_scoped(tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
     }
 }
 
+/// Run a small batch of heterogeneous scoped tasks on the pool, blocking
+/// until every one has finished. Unlike [`par_map`], there is no
+/// minimum-size threshold: this exists for coarse-grained fan-outs (one
+/// task per *region* in the decomposed SLIT search) whose item counts sit
+/// far below `par_map`'s chunking cutoff. When the logical thread count is
+/// 1 or the caller is itself a pool worker, the tasks run serially **in
+/// submission order** on the calling thread — which, combined with each
+/// task writing only its own position-stable output slot, is what makes
+/// callers bit-deterministic regardless of thread count. A panic inside a
+/// task is re-raised here on both paths.
+pub fn run_tasks(tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    if must_run_serial() || tasks.len() < 2 {
+        for task in tasks {
+            task();
+        }
+        return;
+    }
+    run_scoped(tasks);
+}
+
 /// Parallel map over a slice preserving order.
 pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
 where
@@ -301,6 +321,9 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Serialises tests that mutate the process-global thread override.
+    static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn par_map_matches_serial() {
@@ -389,6 +412,7 @@ mod tests {
 
     #[test]
     fn thread_override_forces_serial_and_is_deterministic() {
+        let _g = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let xs: Vec<u64> = (0..4_096).collect();
         set_thread_override(1);
         let caller = std::thread::current().id();
@@ -420,6 +444,59 @@ mod tests {
         // the pool survives the panic and keeps serving
         let ok = par_map(&xs, |&x| x + 1);
         assert_eq!(ok.len(), 256);
+    }
+
+    #[test]
+    fn run_tasks_fills_position_stable_slots_on_both_paths() {
+        // the fan-out primitive behind the region-decomposed search: a
+        // handful of tasks (far below par_map's chunking cutoff) must run
+        // on the pool when threads are available and serially in
+        // submission order when forced single-threaded — with identical
+        // results either way
+        fn fan_out() -> Vec<u64> {
+            let mut out = vec![0u64; 5];
+            {
+                let mut rest = out.as_mut_slice();
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::new();
+                for i in 0..5u64 {
+                    let (head, tail) = rest.split_at_mut(1);
+                    rest = tail;
+                    tasks.push(Box::new(move || {
+                        head[0] = i * i + 7;
+                    }));
+                }
+                run_tasks(tasks);
+            }
+            out
+        }
+        let _g = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_thread_override(1);
+        let serial = fan_out();
+        set_thread_override(8);
+        let parallel = fan_out();
+        set_thread_override(0);
+        let auto = fan_out();
+        assert_eq!(serial, parallel);
+        assert_eq!(serial, auto);
+        assert_eq!(serial, vec![7, 8, 11, 16, 23]);
+    }
+
+    #[test]
+    fn run_tasks_propagates_panics_and_handles_empty() {
+        run_tasks(Vec::new()); // empty batch is a no-op
+        let result = std::panic::catch_unwind(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("region task boom")),
+                Box::new(|| {}),
+            ];
+            run_tasks(tasks);
+        });
+        assert!(result.is_err());
+        // the pool survives and keeps serving
+        let xs: Vec<u64> = (0..256).collect();
+        assert_eq!(par_map(&xs, |&x| x + 1).len(), 256);
     }
 
     #[test]

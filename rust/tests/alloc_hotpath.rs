@@ -14,6 +14,9 @@
 //!   * past the tile (L = 48), the search-loop delta rescore (scratch
 //!     `copy_from` + row delta + `finish`) is heap-silent once the spill
 //!     capacity is warm;
+//!   * at the edge-fleet scale (L = 256), one warm region subsearch step
+//!     — arena neighbour generation plus share-scaled delta rescoring on
+//!     the region-restricted evaluator — is heap-silent per candidate;
 //!   * the degraded-signal feed's per-epoch believed-panel resolve
 //!     (`SignalFeed::observe` + `view` + `health_counts`) performs zero
 //!     heap operations once the median scratch is warm.
@@ -120,6 +123,96 @@ fn spilled_delta_scoring_is_alloc_free_once_warm() {
     assert_eq!(
         ops, 0,
         "spilled delta rescoring must reuse the scratch allocation"
+    );
+}
+
+#[test]
+fn warm_region_subsearch_step_is_alloc_free_at_l256() {
+    // PR 10: inside one region subsearch at the edge-fleet scale (L=256,
+    // 64 sites per routing region), the per-candidate work — arena
+    // neighbour generation, share-scaling rows into preallocated
+    // buffers, scratch copy_from + masked row delta + finish on the
+    // region-restricted evaluator — must be heap-silent once every
+    // capacity (arena, spill scratch, row buffers) is warm. This is the
+    // invariant that keeps the decomposed search's inner loop at
+    // O(L_region) arithmetic with zero allocator traffic, exactly like
+    // the global walk's pin above.
+    let mut cfg = SystemConfig::paper_default();
+    cfg.datacenters = slit::scenario::global_fleet_datacenters(32);
+    cfg.validate().expect("256-site fleet validates");
+    assert_eq!(cfg.datacenters.len(), 256);
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+    let ev =
+        AnalyticEvaluator::new(cp, dp, EvalConsts::from_physics(&cfg.physics));
+
+    // one-time restriction (allocates its own panels, outside the pin)
+    let tags: Vec<usize> =
+        cfg.datacenters.iter().map(|d| d.region).collect();
+    let parts = slit::scenario::partition_sites_by_region(&tags);
+    let sub = ev.restrict_to_sites(&parts[0].1);
+    let l_r = sub.dcs();
+    assert_eq!(l_r, 64);
+    let classes = cfg.num_classes();
+
+    let mut rng = Rng::new(9);
+    let cur = Plan::random(classes, l_r, 0.5, &mut rng);
+    let w = 0.37; // the price loop's demand share scales rows at scoring
+    let mut scaled = vec![0.0; classes * l_r];
+    for (s, v) in scaled.iter_mut().zip(cur.as_slice()) {
+        *s = w * v;
+    }
+    let agg = sub.aggregate(&scaled);
+    let mut scratch = slit::eval::PlanAgg::zeros(l_r);
+    let mut old_scaled = vec![0.0; l_r];
+    let mut new_scaled = vec![0.0; l_r];
+    let neighbors = 8;
+    let mut arena = PlanBatch::new(classes, l_r);
+    arena.reserve(neighbors);
+
+    let step = |rng: &mut Rng,
+                    arena: &mut PlanBatch,
+                    scratch: &mut slit::eval::PlanAgg,
+                    old_scaled: &mut [f64],
+                    new_scaled: &mut [f64]| {
+        arena.clear();
+        arena.push_neighbors_of(cur.as_slice(), neighbors, 0.25, rng);
+        for i in 0..arena.len() {
+            let k = i % classes;
+            let cand = &arena.candidate(i)[k * l_r..(k + 1) * l_r];
+            for j in 0..l_r {
+                old_scaled[j] = w * cur.row(k)[j];
+                new_scaled[j] = w * cand[j];
+            }
+            scratch.copy_from(&agg);
+            sub.apply_row_delta(scratch, k, old_scaled, new_scaled);
+            core::hint::black_box(sub.finish(scratch));
+        }
+    };
+
+    // warm: arena fill + spill-scratch capacity established here
+    step(
+        &mut rng,
+        &mut arena,
+        &mut scratch,
+        &mut old_scaled,
+        &mut new_scaled,
+    );
+    let (ops, _) = count_allocs(|| {
+        for _ in 0..16 {
+            step(
+                &mut rng,
+                &mut arena,
+                &mut scratch,
+                &mut old_scaled,
+                &mut new_scaled,
+            );
+        }
+    });
+    assert_eq!(
+        ops, 0,
+        "warm region subsearch step must not touch the heap"
     );
 }
 

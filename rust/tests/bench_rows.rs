@@ -6,6 +6,10 @@
 //!   * sharded-vs-global memo cache under thread contention,
 //!   * L=48 tiled-DC smoke: the spilled `DcVec` path at planet scale —
 //!     delta-vs-full parity and the per-DC L=16 vs L=48 scaling row,
+//!   * region-decomposed search: forced global walk vs the
+//!     price-coordinated decomposition on the same L=128 panels —
+//!     bit-determinism and canonical-rescore parity asserted, the
+//!     speedup printed,
 //!   * loadgen smoke: closed-loop traffic over a real socket against the
 //!     sharded-worker TCP front — zero dropped replies, request mass
 //!     conserved end to end, finite TTFT p99,
@@ -235,6 +239,89 @@ fn row_l48_tiled_dc_smoke() {
         (t48 / 48.0) / (t16 / 16.0).max(1e-12),
         t48 * 1e9,
         t16 * 1e9,
+    );
+}
+
+/// CI twin of the hot_path region-decomposition rows (PR 10): one
+/// optimizer run per search mode on identical L=128 epoch panels (past
+/// the auto threshold, so this is the fleet scale the decomposition
+/// exists for, shrunk to CI size by the tiny search knobs). The blocking
+/// half asserts what must hold exactly: the decomposed run is
+/// bit-deterministic across repeats, its merged archive is mutually
+/// non-dominated, and every archived objective vector equals a fresh
+/// canonical rescore of its plan bit-for-bit (the merge really did go
+/// through `finish∘aggregate` on the whole fleet, not a per-region
+/// approximation). The wall-clock ratio is printed, never asserted.
+#[test]
+fn row_region_decomposed_speedup() {
+    use slit::opt::{
+        SearchMode, SlitOptimizer, SlitOptions, SlitOutcome,
+        REGION_DECOMPOSE_THRESHOLD,
+    };
+
+    let mut cfg = SystemConfig::paper_default();
+    cfg.datacenters = slit::scenario::global_fleet_datacenters(16);
+    cfg.validate().expect("fleet must validate");
+    let dcs = cfg.datacenters.len();
+    assert_eq!(dcs, 128);
+    assert!(dcs >= REGION_DECOMPOSE_THRESHOLD);
+    cfg.opt.population = 12;
+    cfg.opt.generations = 2;
+    cfg.opt.search_steps = 3;
+    cfg.opt.neighbors = 4;
+    cfg.opt.gbdt_trees = 10;
+    cfg.opt.train_freq = 2; // walk trains its surrogate at gen 1
+    cfg.opt.budget_s = 60.0;
+    let signals = GridSignals::generate(&cfg, 8, 3);
+    let trace = Trace::generate(&cfg, 8, 3);
+    let (cp, dp) = build_panels(&cfg, &signals, 4, &trace.epochs[4], 0.05);
+    let consts = EvalConsts::from_physics(&cfg.physics);
+    let ev = AnalyticEvaluator::new(cp, dp, consts);
+    let regions: Vec<usize> =
+        cfg.datacenters.iter().map(|d| d.region).collect();
+    let k_n = cfg.num_classes();
+
+    let run = |mode: SearchMode| -> (f64, SlitOutcome) {
+        let t = Instant::now();
+        let mut o = SlitOptimizer::new(cfg.opt.clone(), k_n, dcs, 7)
+            .with_options(SlitOptions {
+                search_mode: Some(mode),
+                ..SlitOptions::default()
+            })
+            .with_regions(regions.clone());
+        let out = o.optimize(&ev);
+        (t.elapsed().as_secs_f64(), out)
+    };
+
+    let (global_s, global) = run(SearchMode::Global);
+    let (region_s, region) = run(SearchMode::RegionDecomposed);
+    let (_, region_again) = run(SearchMode::RegionDecomposed);
+
+    // the decomposed phase really ran (no silent fallback to the walk)
+    assert_eq!(region.surrogate_trainings, 0, "fallback to global walk?");
+    assert!(global.surrogate_trainings > 0);
+    assert!(!region.archive.is_empty() && region.archive.is_consistent());
+    assert!(!global.archive.is_empty() && global.archive.is_consistent());
+
+    // bit-determinism across repeats on the same seed
+    let objs = |o: &SlitOutcome| -> Vec<[f64; N_OBJ]> {
+        o.archive.solutions.iter().map(|s| s.obj).collect()
+    };
+    assert_eq!(region.evaluations, region_again.evaluations);
+    assert_eq!(region.delta_evals, region_again.delta_evals);
+    assert_eq!(objs(&region), objs(&region_again));
+
+    // canonical-rescore parity: archived objectives are the whole-fleet
+    // evaluation of the merged plan, bit-for-bit
+    for (i, s) in region.archive.solutions.iter().enumerate() {
+        assert_eq!(ev.evaluate(&s.plan), s.obj, "solution {i} not canonical");
+    }
+
+    println!(
+        "| search: global vs region-decomposed (L=128) | {:.2}x | ({:.1} ms vs {:.1} ms per epoch search) |",
+        global_s / region_s.max(1e-12),
+        region_s * 1e3,
+        global_s * 1e3,
     );
 }
 

@@ -8,7 +8,7 @@
 //! cannot race with other tests.
 
 use slit::config::SystemConfig;
-use slit::opt::{SlitScheduler, SlitVariant};
+use slit::opt::{SearchMode, SlitOptions, SlitScheduler, SlitVariant};
 use slit::power::GridSignals;
 use slit::scenario::Scenario;
 use slit::sim::{simulate, SimResult};
@@ -52,6 +52,50 @@ fn same_seed_same_objectives_for_any_thread_count() {
     assert_eq!(serial.total.ttft_sum_s, parallel.total.ttft_sum_s);
     // per-epoch plans are bit-identical too
     for (a, b) in serial.per_epoch.iter().zip(&parallel.per_epoch) {
+        assert_eq!(a.plan, b.plan, "epoch {} plan diverged", a.epoch);
+    }
+}
+
+#[test]
+fn region_decomposed_search_is_thread_count_invariant() {
+    // the decomposed search fans region subsearches out over the pool;
+    // per-region RNG streams + position-stable RegionSub state + the
+    // main-thread merge must keep results bit-identical whether the
+    // subsearches run serially (override 1), on many workers, or on the
+    // hardware default — and across repeated runs
+    let _guard = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = SystemConfig::small_test();
+    cfg.epochs = 2;
+    cfg.opt.budget_s = 1e9;
+    let trace = Trace::generate(&cfg, cfg.epochs, 11);
+    let signals = GridSignals::generate(&cfg, cfg.epochs, 11);
+    let run = || {
+        let mut sched = SlitScheduler::new(&cfg, SlitVariant::Balance)
+            .with_options(SlitOptions {
+                search_mode: Some(SearchMode::RegionDecomposed),
+                ..SlitOptions::default()
+            });
+        simulate(&cfg, &trace, &signals, &mut sched, 11)
+    };
+
+    threadpool::set_thread_override(1);
+    let serial = run();
+    let serial_again = run();
+
+    threadpool::set_thread_override(threadpool::hardware_threads().max(4));
+    let parallel = run();
+
+    threadpool::set_thread_override(0);
+    let default = run();
+
+    assert_eq!(serial.name, "slit-region");
+    assert_eq!(serial.objectives(), serial_again.objectives());
+    assert_eq!(serial.objectives(), parallel.objectives());
+    assert_eq!(serial.objectives(), default.objectives());
+    for (a, b) in serial.per_epoch.iter().zip(&parallel.per_epoch) {
+        assert_eq!(a.plan, b.plan, "epoch {} plan diverged", a.epoch);
+    }
+    for (a, b) in serial.per_epoch.iter().zip(&default.per_epoch) {
         assert_eq!(a.plan, b.plan, "epoch {} plan diverged", a.epoch);
     }
 }

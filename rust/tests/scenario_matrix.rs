@@ -14,7 +14,10 @@ use slit::cluster::ClusterAction;
 use slit::config::{
     SystemConfig, OBJ_CARBON, OBJ_NAMES, OBJ_TTFT, OBJ_WATER, REGIONS,
 };
-use slit::opt::SlitVariant;
+use slit::opt::{
+    SearchMode, SlitOptions, SlitScheduler, SlitVariant,
+    REGION_DECOMPOSE_THRESHOLD,
+};
 use slit::pareto::dominates;
 use slit::registry;
 use slit::scenario::Scenario;
@@ -109,10 +112,13 @@ fn slit_stays_nondominated_on_target_objective_in_every_scenario() {
 /// on top of the interactive prediction) — get the wider ceiling, as do
 /// the telemetry-fault regimes (PR 9), whose fault-blind target variant
 /// plans on corrupt signals while the oracle scores against the truth.
+/// The edge fleets (PR 10) push the same per-site dilution that widens
+/// `global-fleet` out to 256/512 sites, so they sit at the widest rung.
 fn gap_ceiling(scenario: &str) -> f64 {
     match scenario {
         "global-fleet" | "batch-overnight" => 0.98,
         "feed-blackout" | "stale-creep" => 0.98,
+        "edge-fleet-256" | "edge-fleet-512" => 0.99,
         _ => 0.95,
     }
 }
@@ -194,6 +200,91 @@ fn global_fleet_matrix_really_runs_at_l48() {
     let res = world.run(sched.as_mut(), 42);
     assert_eq!(res.per_epoch[0].site_nodes.len(), 48);
     assert!(res.total.requests > 0.0);
+}
+
+#[test]
+fn edge_fleet_matrix_really_runs_at_l256_and_l512() {
+    // the matrix loops above cover edge-fleet-256/512 like any named
+    // regime; this pins that those worlds actually are the 256/512-site
+    // fleets (past the region-decomposition threshold, so the decomposed
+    // search auto-selects) and that a run still serves traffic. Two
+    // epochs keep this pin cheap — the full-length runs happen in the
+    // named() sweeps.
+    let mut base = pressured_config();
+    base.epochs = 2;
+    for (sc, sites) in
+        [(Scenario::EdgeFleet256, 256), (Scenario::EdgeFleet512, 512)]
+    {
+        let world = sc.build(&base, base.epochs, 42);
+        assert_eq!(world.cfg.datacenters.len(), sites, "{}", sc.name());
+        assert!(world.cfg.validate_aot().is_err(), "analytic-only fleet");
+        assert!(sites >= REGION_DECOMPOSE_THRESHOLD);
+        let mut sched = registry::build("slit-carbon", &world.cfg, None)
+            .expect("framework");
+        let res = world.run(sched.as_mut(), 42);
+        assert_eq!(res.per_epoch[0].site_nodes.len(), sites);
+        assert!(res.total.requests > 0.0, "{}", sc.name());
+    }
+}
+
+/// PR 10 parity pin: forcing the region-decomposed search on fleets far
+/// below its auto threshold must not wreck plan quality. On every
+/// small-fleet regime, the forced-decomposed variant matching the
+/// regime's target objective stays non-dominated against the plain
+/// global walk run on the identical world and seed.
+#[test]
+fn forced_region_search_stays_nondominated_vs_global_walk_on_small_fleets() {
+    let base = pressured_config();
+    for sc in Scenario::named() {
+        let world = sc.build(&base, base.epochs, 42);
+        if world.cfg.datacenters.len() >= REGION_DECOMPOSE_THRESHOLD {
+            // at these sizes both schedulers resolve to the decomposed
+            // search anyway — the comparison below would be vacuous
+            continue;
+        }
+        let target = sc.target_objective();
+        let variant = variant_for(target);
+
+        let mut global_sched = SlitScheduler::new(&world.cfg, variant);
+        let global = world.run(&mut global_sched, 42);
+
+        let mut region_sched = SlitScheduler::new(&world.cfg, variant)
+            .with_options(SlitOptions {
+                search_mode: Some(SearchMode::RegionDecomposed),
+                ..SlitOptions::default()
+            });
+        let region = world.run(&mut region_sched, 42);
+
+        assert!(
+            region.name.ends_with("-region") || region.name == "slit-region",
+            "{}: forced mode not reflected in name {}",
+            sc.name(),
+            region.name
+        );
+        assert_eq!(
+            global.total.requests,
+            region.total.requests,
+            "{}: request mass differs between search modes",
+            sc.name()
+        );
+        let go = global.objectives();
+        let ro = region.objectives();
+        assert!(ro.iter().all(|v| v.is_finite()), "{}", sc.name());
+        assert!(
+            !dominates(&go, &ro),
+            "{} ({}): global walk dominates decomposed search \
+             ({go:?} vs {ro:?})",
+            sc.name(),
+            OBJ_NAMES[target]
+        );
+        eprintln!(
+            "| {} | global {:.4} | region {:.4} | {} |",
+            sc.name(),
+            go[target],
+            ro[target],
+            OBJ_NAMES[target]
+        );
+    }
 }
 
 #[test]

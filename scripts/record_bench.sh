@@ -15,7 +15,13 @@
 # "shift: planner step per epoch (forecast policy)",
 # "oracle: per-epoch solve (L=16)",
 # "oracle: per-epoch solve (L=48)",
-# "signals: believed-panel resolve per epoch") are greppable
+# "signals: believed-panel resolve per epoch",
+# "search: global walk (L=48)", "search: region-decomposed (L=48)",
+# "search: region speedup L=48",
+# "search: global walk (L=256)", "search: region-decomposed (L=256)",
+# "search: region speedup L=256 (target >= 3x)",
+# "search: global walk (L=512)", "search: region-decomposed (L=512)",
+# "search: region speedup L=512 (target >= 3x)") are greppable
 # straight from EXPERIMENTS.md.
 
 set -euo pipefail
